@@ -1,0 +1,17 @@
+//! Fig. 4c scenario: what SATA adds when bolted onto published sparse
+//! attention accelerators, with a sensitivity sweep over the overlap
+//! factor and scheduler cost.
+use sata::baselines::{integrate_sata, SotaDesign};
+
+fn main() {
+    println!("SATA integration into SOTA accelerators (Fig. 4c scenario)");
+    for overlap in [1.1, 1.25, 1.5] {
+        for sched_cost in [0.022, 0.059] {
+            println!("-- overlap gain {overlap:.2}x, scheduler cost {:.1}%:", 100.0 * sched_cost);
+            for d in SotaDesign::all() {
+                let g = integrate_sata(d, overlap, sched_cost);
+                println!("   {:<8} energy {:.2}x throughput {:.2}x", d.name(), g.energy_eff, g.throughput);
+            }
+        }
+    }
+}

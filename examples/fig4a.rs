@@ -1,0 +1,24 @@
+//! Regenerate Fig. 4a (example form; see benches/fig4a_gains.rs).
+use sata::config::WorkloadSpec;
+use sata::engine::{gains, run_dense, run_sata, EngineOpts};
+use sata::hw::cim::CimConfig;
+use sata::hw::sched_rtl::SchedRtl;
+use sata::trace::synth::gen_traces;
+
+fn main() {
+    let rtl = SchedRtl::tsmc65();
+    for spec in WorkloadSpec::all_paper() {
+        let cim = CimConfig::default_65nm(spec.dk);
+        let traces = gen_traces(&spec, 4, 3);
+        let (mut thr, mut en) = (0.0, 0.0);
+        for t in &traces {
+            let g = gains(
+                &run_dense(&t.heads, &cim),
+                &run_sata(&t.heads, &cim, &rtl, EngineOpts { sf: spec.sf, ..Default::default() }),
+            );
+            thr += g.throughput;
+            en += g.energy_eff;
+        }
+        println!("{:<16} throughput {:.2}x  energy {:.2}x", spec.name, thr / 4.0, en / 4.0);
+    }
+}

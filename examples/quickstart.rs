@@ -1,0 +1,37 @@
+//! Quickstart: sort, classify, and schedule one selective-attention head,
+//! then simulate it on the CIM model and print the gains.
+//!
+//! Run: `cargo run --release --example quickstart`
+use sata::config::WorkloadSpec;
+use sata::engine::{gains, run_dense, run_sata, EngineOpts};
+use sata::hw::cim::CimConfig;
+use sata::hw::sched_rtl::SchedRtl;
+use sata::metrics::render_report;
+use sata::schedule::{schedule_sata, validate, HeadPlan};
+use sata::trace::synth::gen_trace;
+
+fn main() {
+    // 1. A workload: KVT-DeiT-Tiny from Table I, synthetic trace.
+    let spec = WorkloadSpec::kvt_deit_tiny();
+    let trace = gen_trace(&spec, 42);
+    println!("workload {}: N={}, K={}, {} heads", spec.name, spec.n_tokens, spec.topk, trace.heads.len());
+
+    // 2. Algo 1 + Algo 2 on the first head (whole-head mode for clarity).
+    let plan = HeadPlan::build(0, trace.heads[0].clone(), spec.n_tokens / 2, 1);
+    println!("head 0: type {:?}, S_h={}, {} concessions, GLOB queries {}",
+        plan.class.ht, plan.class.s_h, plan.class.decrements,
+        plan.class.count(sata::sort::classify::QType::Glob));
+    let sched = schedule_sata(&[plan.clone()]);
+    validate(&[plan], &sched).expect("schedule correctness");
+    println!("schedule: {} steps, peak resident Qs {}", sched.steps.len(), sched.peak_resident_q());
+
+    // 3. Simulate the full layer on the 65nm CIM system model.
+    let cim = CimConfig::default_65nm(spec.dk);
+    let rtl = SchedRtl::tsmc65();
+    let dense = run_dense(&trace.heads, &cim);
+    let sata = run_sata(&trace.heads, &cim, &rtl, EngineOpts { sf: spec.sf, ..Default::default() });
+    println!("{}", render_report("dense", &dense));
+    println!("{}", render_report("sata ", &sata));
+    let g = gains(&dense, &sata);
+    println!("gains: throughput {:.2}x, energy efficiency {:.2}x", g.throughput, g.energy_eff);
+}

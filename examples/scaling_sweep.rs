@@ -1,0 +1,27 @@
+//! Sec. IV-C scenario: long-sequence scaling — sweep N with tiling+zero-skip
+//! and report how SATA's gain and the zero-skip fraction evolve.
+use sata::config::WorkloadSpec;
+use sata::engine::{gains, run_dense, run_sata, EngineOpts};
+use sata::hw::cim::CimConfig;
+use sata::hw::sched_rtl::SchedRtl;
+use sata::mask::tile::{skip_stats, tile_mask};
+use sata::trace::synth::gen_trace;
+
+fn main() {
+    let rtl = SchedRtl::tsmc65();
+    println!("{:>6} {:>6} {:>10} {:>10} {:>10}", "N", "S_f", "thr gain", "en gain", "skip frac");
+    for n in [64usize, 128, 256, 512] {
+        let spec = WorkloadSpec {
+            name: format!("long-{n}"), n_tokens: n, topk: n / 4, dk: 64, n_heads: 2,
+            sf: Some((n / 9).max(8)), zero_skip: true, glob_frac: 0.25, spread: 1.2,
+        };
+        let cim = CimConfig::default_65nm(spec.dk);
+        let t = gen_trace(&spec, 3);
+        let dense = run_dense(&t.heads, &cim);
+        let sata = run_sata(&t.heads, &cim, &rtl, EngineOpts { sf: spec.sf, ..Default::default() });
+        let g = gains(&dense, &sata);
+        let sf = spec.sf.unwrap();
+        let skip: f64 = t.heads.iter().map(|m| skip_stats(&tile_mask(m, sf)).skip_fraction()).sum::<f64>() / t.heads.len() as f64;
+        println!("{:>6} {:>6} {:>9.2}x {:>9.2}x {:>10.3}", n, sf, g.throughput, g.energy_eff, skip);
+    }
+}

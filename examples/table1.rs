@@ -1,0 +1,16 @@
+//! Regenerate Table I from the CLI-facing library API (same content as
+//! `cargo bench --bench table1_stats`, example form).
+use sata::config::WorkloadSpec;
+use sata::metrics::schedule_stats;
+use sata::trace::synth::gen_trace;
+
+fn main() {
+    println!("{:<16} {:>8} {:>8} {:>10} {:>10} {:>10}", "model", "GlobQ%", "avgS_h", "(frac of)", "#S_h-=1", "heads");
+    for spec in WorkloadSpec::all_paper() {
+        let t = gen_trace(&spec, 7);
+        let s = schedule_stats(&t.heads, spec.sf, 7);
+        println!("{:<16} {:>8.1} {:>8.3} {:>10} {:>10.2} {:>10}",
+            spec.name, 100.0 * s.glob_q_frac, s.avg_sh_frac,
+            if spec.sf.is_some() { "S_f" } else { "N" }, s.avg_decrements, s.heads);
+    }
+}

@@ -1,0 +1,145 @@
+"""AOT entry point: lower the Layer-2 model to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); Python never appears on the
+Rust request path. Interchange is HLO **text**, not serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+the ``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts (written to ``artifacts/``):
+  - ``mha_<tag>.hlo.txt``   — MHA forward: (x, wq, wk, wv, wo) ->
+                              (out, masks); masks feed the Rust scheduler.
+  - ``block_<tag>.hlo.txt`` — full transformer block forward.
+  - ``manifest.json``       — shapes/config for each artifact so the Rust
+                              runtime can size its input literals.
+
+Each entry point is lowered with ``return_tuple=True``; the Rust side
+unwraps with ``to_tuple()``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default e2e configuration: KVT-DeiT-Tiny-flavoured but sized so the
+# CPU-interpret Pallas path stays fast (N=64 tokens, 4 heads of 16).
+DEFAULT_CFG = dict(n_tokens=64, d_model=64, n_heads=4, topk=16, d_ff=128)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the verified bridge)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_mha(cfg: dict) -> tuple[str, dict]:
+    """Lower mha_forward with weights as runtime parameters."""
+    n, dm = cfg["n_tokens"], cfg["d_model"]
+    xs = jax.ShapeDtypeStruct((n, dm), jnp.float32)
+    ws = jax.ShapeDtypeStruct((dm, dm), jnp.float32)
+
+    def fn(x, wq, wk, wv, wo):
+        return model.mha_forward(
+            x,
+            model.MhaParams(wq, wk, wv, wo),
+            n_heads=cfg["n_heads"],
+            topk=cfg["topk"],
+        )
+
+    lowered = jax.jit(fn).lower(xs, ws, ws, ws, ws)
+    meta = {
+        "entry": "mha",
+        "inputs": [
+            {"name": nm, "shape": list(s.shape), "dtype": "f32"}
+            for nm, s in [("x", xs), ("wq", ws), ("wk", ws), ("wv", ws), ("wo", ws)]
+        ],
+        "outputs": [
+            {"name": "out", "shape": [n, dm], "dtype": "f32"},
+            {"name": "masks", "shape": [cfg["n_heads"], n, n], "dtype": "f32"},
+        ],
+        "config": cfg,
+    }
+    return to_hlo_text(lowered), meta
+
+
+def lower_block(cfg: dict) -> tuple[str, dict]:
+    """Lower a full transformer block with baked (deterministic) weights.
+
+    Weights are folded as constants: the block artifact exists to exercise
+    a realistic whole-layer HLO from Rust, and baking keeps the Rust call
+    signature to a single activation input.
+    """
+    n, dm = cfg["n_tokens"], cfg["d_model"]
+    params = model.init_block(jax.random.PRNGKey(0), dm, cfg["d_ff"])
+    xs = jax.ShapeDtypeStruct((n, dm), jnp.float32)
+
+    def fn(x):
+        return model.block_forward(
+            x, params, n_heads=cfg["n_heads"], topk=cfg["topk"]
+        )
+
+    lowered = jax.jit(fn).lower(xs)
+    meta = {
+        "entry": "block",
+        "inputs": [{"name": "x", "shape": [n, dm], "dtype": "f32"}],
+        "outputs": [
+            {"name": "out", "shape": [n, dm], "dtype": "f32"},
+            {"name": "masks", "shape": [cfg["n_heads"], n, n], "dtype": "f32"},
+        ],
+        "config": cfg,
+    }
+    return to_hlo_text(lowered), meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n-tokens", type=int, default=DEFAULT_CFG["n_tokens"])
+    ap.add_argument("--d-model", type=int, default=DEFAULT_CFG["d_model"])
+    ap.add_argument("--n-heads", type=int, default=DEFAULT_CFG["n_heads"])
+    ap.add_argument("--topk", type=int, default=DEFAULT_CFG["topk"])
+    ap.add_argument("--d-ff", type=int, default=DEFAULT_CFG["d_ff"])
+    args = ap.parse_args()
+
+    cfg = dict(
+        n_tokens=args.n_tokens,
+        d_model=args.d_model,
+        n_heads=args.n_heads,
+        topk=args.topk,
+        d_ff=args.d_ff,
+    )
+    tag = f"n{cfg['n_tokens']}_d{cfg['d_model']}_h{cfg['n_heads']}_k{cfg['topk']}"
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"artifacts": []}
+    for name, (text, meta) in {
+        f"mha_{tag}": lower_mha(cfg),
+        f"block_{tag}": lower_block(cfg),
+    }.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["file"] = f"{name}.hlo.txt"
+        manifest["artifacts"].append(meta)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for SATA's selective-attention hot-spot.
+
+Submodules (import functions from them directly — the function names
+intentionally match their module names, so the package does not re-export
+them at top level):
+
+  - ``qk_scores.qk_scores``              — tiled scaled QK^T (Pallas)
+  - ``flash_select.selective_attention`` — online-softmax selective AV (Pallas)
+  - ``ref``                              — pure-jnp oracle (semantics + tests)
+"""
+
+from . import flash_select, qk_scores, ref  # noqa: F401

@@ -1,0 +1,116 @@
+"""Pallas online-softmax *selective* attention kernel.
+
+Computes ``softmax(mask ? QK^T/sqrt(D) : -inf) @ V`` one query-tile at a
+time with a flash-attention-style running (max, denominator) pair over key
+tiles — i.e. the A-V half of the paper's dynamic MatMul, restricted to the
+TopK-selected keys.
+
+Hardware adaptation: the CUDA flash kernels stage K/V tiles through shared
+memory per threadblock; the TPU/Pallas formulation stages them through VMEM
+per grid step and relies on the MXU for both contractions. The key-tile loop
+is a ``lax.fori_loop`` over dynamic slices of the VMEM-resident refs, which
+is the interpret-mode analogue of a double-buffered HBM->VMEM stream (the
+BlockSpec carries the Q-tile streaming; K/V streaming is expressed by the
+in-kernel slice schedule).
+
+VMEM budget per grid step: Tq*D (Q) + N*D (K) + N*D (V) + Tq*N (mask) +
+Tq*D (acc) f32 words. For the paper's workloads (N <= 198, D <= 64) this is
+< 256 KiB — comfortably under a TPU core's ~16 MiB VMEM; for long sequences
+the L3 scheduler tiles the head first (schedule/tiled.rs) so N here is the
+fold size S_f.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _flash_select_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, tile_k: int,
+                         scale: float):
+    """One Q-tile: stream K/V/mask tiles, maintain online softmax state."""
+    q = q_ref[...].astype(jnp.float32)  # (Tq, D)
+    tq, d = q.shape
+    n = k_ref.shape[0]
+    steps = n // tile_k
+
+    def body(j, carry):
+        acc, m_run, l_run = carry
+        ks = pl.load(k_ref, (pl.dslice(j * tile_k, tile_k), slice(None)))
+        vs = pl.load(v_ref, (pl.dslice(j * tile_k, tile_k), slice(None)))
+        ms = pl.load(m_ref, (slice(None), pl.dslice(j * tile_k, tile_k)))
+        s = jax.lax.dot_general(
+            q, ks.astype(jnp.float32),
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+        ) * scale                                   # (Tq, Tk)
+        s = jnp.where(ms > 0, s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))  # (Tq,)
+        alpha = jnp.exp(m_run - m_new)              # rescale old state
+        p = jnp.exp(s - m_new[:, None])             # (Tq, Tk)
+        l_new = l_run * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, vs.astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((tq, d), jnp.float32)
+    m0 = jnp.full((tq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((tq,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, steps, body, (acc0, m0, l0))
+    o_ref[...] = acc / l[:, None]
+
+
+def _pick_tile(n: int, want: int) -> int:
+    t = min(want, n)
+    while n % t:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_k"))
+def selective_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mask: jax.Array,
+    *,
+    tile_q: int = 32,
+    tile_k: int = 32,
+) -> jax.Array:
+    """Flash-style selective attention for one head.
+
+    Args:
+      q, k, v: ``(N, D)`` operands.
+      mask: ``(N, N)`` 0/1 selection mask (>=1 selected key per row —
+        guaranteed by TopK with k >= 1).
+      tile_q/tile_k: tile edges, snapped to divisors of N.
+
+    Returns:
+      ``(N, D)`` f32 output matching ``ref.selective_attention`` to ~1e-5
+      (online softmax reassociates the reduction).
+    """
+    n, d = q.shape
+    assert k.shape == (n, d) and v.shape == (n, d) and mask.shape == (n, n)
+    tq = _pick_tile(n, tile_q)
+    tk = _pick_tile(n, tile_k)
+    scale = 1.0 / float(d) ** 0.5
+
+    return pl.pallas_call(
+        functools.partial(_flash_select_kernel, tile_k=tk, scale=scale),
+        grid=(n // tq,),
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i: (i, 0)),   # Q tile streams
+            pl.BlockSpec((n, d), lambda i: (0, 0)),    # K resident
+            pl.BlockSpec((n, d), lambda i: (0, 0)),    # V resident
+            pl.BlockSpec((tq, n), lambda i: (i, 0)),   # mask rows stream
+        ],
+        out_specs=pl.BlockSpec((tq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(q, k, v, mask)

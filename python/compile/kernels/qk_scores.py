@@ -1,0 +1,86 @@
+"""Pallas tiled QK^T score kernel — the paper's dynamic-MatMul hot-spot.
+
+SATA schedules the Q-K score MatMul (Fig. 1, red box). On hardware this is
+the unit whose operand flow the scheduler reorders; here it is the Layer-1
+compute kernel that the Layer-2 JAX model lowers into its HLO.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper maps the
+MatMul onto 32x32 CIM subarrays; on TPU the natural analogue is MXU-shaped
+tiles staged through VMEM. The BlockSpec below expresses exactly the
+HBM->VMEM schedule the CIM system expresses with subarray loads:
+
+  grid = (N/Tq, N/Tk): each step holds a (Tq, D) Q panel and a (D, Tk) K^T
+  panel in VMEM and emits a (Tq, Tk) score tile. VMEM footprint per step is
+  Tq*D + Tk*D + Tq*Tk f32 words, independent of N.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that both pytest and
+the Rust runtime can run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qk_tile_kernel(q_ref, kt_ref, o_ref, *, scale: float):
+    """One grid step: o = (q @ k^T) * scale for the resident tiles.
+
+    q_ref:  (Tq, D) VMEM block of queries.
+    kt_ref: (D, Tk) VMEM block of transposed keys.
+    o_ref:  (Tq, Tk) output score tile.
+    """
+    q = q_ref[...].astype(jnp.float32)
+    kt = kt_ref[...].astype(jnp.float32)
+    # MXU-targeted contraction; on CPU-interpret this is a plain dot.
+    o_ref[...] = jax.lax.dot_general(
+        q, kt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+
+
+def _pick_tile(n: int, want: int) -> int:
+    """Largest divisor of ``n`` that is <= ``want`` (tiles must cover N)."""
+    t = min(want, n)
+    while n % t:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_k"))
+def qk_scores(
+    q: jax.Array, k: jax.Array, *, tile_q: int = 32, tile_k: int = 32
+) -> jax.Array:
+    """Tiled scaled QK^T via Pallas.
+
+    Args:
+      q: ``(N, D)`` queries.
+      k: ``(N, D)`` keys (transposed internally; the kernel consumes K^T so
+         the contraction is MXU-layout-friendly).
+      tile_q/tile_k: requested tile edge; snapped down to a divisor of N.
+
+    Returns:
+      ``(N, N)`` f32 score matrix, bit-identical in structure to
+      ``ref.qk_scores`` (same contraction order per tile).
+    """
+    n, d = q.shape
+    assert k.shape == (n, d), f"shape mismatch q={q.shape} k={k.shape}"
+    tq = _pick_tile(n, tile_q)
+    tk = _pick_tile(n, tile_k)
+    scale = 1.0 / float(d) ** 0.5
+    kt = k.T  # (D, N); keeps the kernel's inner layout contiguous in D
+
+    return pl.pallas_call(
+        functools.partial(_qk_tile_kernel, scale=scale),
+        grid=(n // tq, n // tk),
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, tk), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tq, tk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(q, kt)

@@ -1,0 +1,133 @@
+"""Pure-jnp reference oracle for the SATA selective-attention kernels.
+
+Every Pallas kernel in this package is validated against these functions by
+``python/tests/`` (exact math, no tiling tricks). The reference also defines
+the *semantics* the Rust scheduler assumes:
+
+- ``qk_scores``         : scaled dot-product score matrix S = Q K^T / sqrt(D)
+- ``topk_mask``         : per-query TopK key-selection mask (the paper's
+                          "Selective Mask QK in {0,1}^{N x N}", Algo 1 input)
+- ``selective_attention``: softmax restricted to the selected keys, then AV
+- ``mha_forward``       : multi-head wrapper returning (output, masks)
+
+Ties in TopK are broken toward the lower key index (stable argsort on
+negated scores); the Rust trace loader inherits that convention.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite "minus infinity": keeps bf16/f32 softmax NaN-free
+
+
+def qk_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """Scaled dot-product scores.
+
+    Args:
+      q: ``(N, D)`` queries.
+      k: ``(N, D)`` keys.
+
+    Returns:
+      ``(N, N)`` score matrix ``q @ k.T / sqrt(D)`` in f32.
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    return (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+
+
+def topk_mask(scores: jax.Array, k: int) -> jax.Array:
+    """Per-query TopK selection mask.
+
+    Args:
+      scores: ``(N, N)`` score matrix (query rows, key columns).
+      k: number of keys each query attends to.
+
+    Returns:
+      ``(N, N)`` f32 mask of 0/1 with exactly ``k`` ones per row.
+    """
+    n = scores.shape[-1]
+    if not 0 < k <= n:
+        raise ValueError(f"topk k={k} out of range for N={n}")
+    # argsort-based selection instead of lax.top_k: the `topk` HLO op
+    # carries a `largest` attribute that xla_extension 0.5.1's text parser
+    # rejects, while `sort` round-trips fine (see rust/src/runtime).
+    # Stable argsort on negated scores preserves lax.top_k's low-index
+    # tie-break.
+    idx = jnp.argsort(-scores, axis=-1, stable=True)[..., :k]
+    mask = jax.nn.one_hot(idx, n, dtype=jnp.float32).sum(axis=-2)
+    # one_hot.sum is safe: indices within a row are distinct.
+    return mask
+
+
+def selective_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Masked softmax(QK^T/sqrt(D)) @ V with attention limited to the mask.
+
+    Args:
+      q, k, v: ``(N, D)`` operands.
+      mask: ``(N, N)`` 0/1 selection (1 = key visible to the query).
+
+    Returns:
+      ``(N, D)`` attention output in f32.
+    """
+    s = qk_scores(q, k)
+    s = jnp.where(mask > 0, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v.astype(jnp.float32)
+
+
+def topk_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, topk: int
+) -> tuple[jax.Array, jax.Array]:
+    """TopK selective attention for one head: scores -> mask -> AV.
+
+    Returns:
+      ``(out, mask)`` with ``out`` ``(N, D)`` f32 and ``mask`` ``(N, N)`` f32.
+    """
+    s = qk_scores(q, k)
+    mask = topk_mask(s, topk)
+    s = jnp.where(mask > 0, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v.astype(jnp.float32), mask
+
+
+def mha_forward(
+    x: jax.Array,
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    wo: jax.Array,
+    n_heads: int,
+    topk: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Multi-head TopK selective attention (reference).
+
+    Args:
+      x: ``(N, d_model)`` token embeddings.
+      wq/wk/wv: ``(d_model, d_model)`` projection weights.
+      wo: ``(d_model, d_model)`` output projection.
+      n_heads: number of heads; ``d_model % n_heads == 0``.
+      topk: keys attended per query.
+
+    Returns:
+      ``(out, masks)``: ``(N, d_model)`` f32 output and ``(n_heads, N, N)``
+      f32 selection masks (the SATA scheduler input).
+    """
+    n, d_model = x.shape
+    if d_model % n_heads:
+        raise ValueError(f"d_model={d_model} not divisible by heads={n_heads}")
+    dh = d_model // n_heads
+    xf = x.astype(jnp.float32)
+
+    def split(w):
+        return (xf @ w.astype(jnp.float32)).reshape(n, n_heads, dh).transpose(1, 0, 2)
+
+    q, k, v = split(wq), split(wk), split(wv)
+    outs, masks = jax.vmap(lambda qh, kh, vh: topk_attention(qh, kh, vh, topk))(
+        q, k, v
+    )
+    out = outs.transpose(1, 0, 2).reshape(n, d_model) @ wo.astype(jnp.float32)
+    return out, masks

@@ -1,0 +1,160 @@
+"""Layer-2 JAX model: multi-head TopK selective attention (KVT/TTST-style).
+
+This is the compute graph SATA schedules. The forward pass returns both the
+attention output *and* the per-head TopK selection masks — the masks are the
+scheduler input (Algo 1's ``Selective Mask QK``), which the Rust coordinator
+reads back from the PJRT execution and feeds to the SATA sort/classify/
+schedule pipeline.
+
+The hot-spots (QK^T scores, selective softmax-AV) call the Layer-1 Pallas
+kernels; everything lowers into a single HLO module via ``aot.py`` so the
+Rust runtime executes one artifact per model configuration.
+
+All functions are pure and jit-friendly; parameters are explicit pytrees
+(no flax dependency — build-time python stays dependency-light).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_select, ref
+from .kernels.qk_scores import qk_scores
+
+
+class MhaParams(NamedTuple):
+    """Projection weights for one multi-head attention layer."""
+
+    wq: jax.Array  # (d_model, d_model)
+    wk: jax.Array  # (d_model, d_model)
+    wv: jax.Array  # (d_model, d_model)
+    wo: jax.Array  # (d_model, d_model)
+
+
+class BlockParams(NamedTuple):
+    """Transformer block: MHA + 2-layer FFN + 2 layernorm gains/biases."""
+
+    mha: MhaParams
+    w1: jax.Array  # (d_model, d_ff)
+    b1: jax.Array  # (d_ff,)
+    w2: jax.Array  # (d_ff, d_model)
+    b2: jax.Array  # (d_model,)
+    g1: jax.Array  # (d_model,) pre-attn layernorm gain
+    g2: jax.Array  # (d_model,) pre-ffn layernorm gain
+
+
+def init_mha(key: jax.Array, d_model: int) -> MhaParams:
+    """Xavier-ish init for the four projections."""
+    ks = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(jnp.asarray(d_model, jnp.float32))
+    return MhaParams(
+        *(jax.random.normal(k, (d_model, d_model), jnp.float32) * s for k in ks)
+    )
+
+
+def init_block(key: jax.Array, d_model: int, d_ff: int) -> BlockParams:
+    """Init one transformer block."""
+    k0, k1, k2 = jax.random.split(key, 3)
+    s1 = 1.0 / jnp.sqrt(jnp.asarray(d_model, jnp.float32))
+    s2 = 1.0 / jnp.sqrt(jnp.asarray(d_ff, jnp.float32))
+    return BlockParams(
+        mha=init_mha(k0, d_model),
+        w1=jax.random.normal(k1, (d_model, d_ff), jnp.float32) * s1,
+        b1=jnp.zeros((d_ff,), jnp.float32),
+        w2=jax.random.normal(k2, (d_ff, d_model), jnp.float32) * s2,
+        b2=jnp.zeros((d_model,), jnp.float32),
+        g1=jnp.ones((d_model,), jnp.float32),
+        g2=jnp.ones((d_model,), jnp.float32),
+    )
+
+
+def _layernorm(x: jax.Array, g: jax.Array) -> jax.Array:
+    m = x.mean(axis=-1, keepdims=True)
+    v = x.var(axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + 1e-6) * g
+
+
+def head_topk_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, topk: int
+) -> tuple[jax.Array, jax.Array]:
+    """One head of TopK selective attention via the Pallas kernels.
+
+    Scores come from the tiled Pallas QK kernel; TopK selection is a plain
+    ``lax.top_k`` (the index-acquisition step whose hardware cost the
+    evaluation charges separately, Sec. IV-A); the masked softmax-AV is the
+    flash-style Pallas kernel.
+    """
+    s = qk_scores(q, k)
+    mask = ref.topk_mask(s, topk)
+    out = flash_select.selective_attention(q, k, v, mask)
+    return out, mask
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "topk"))
+def mha_forward(
+    x: jax.Array, params: MhaParams, *, n_heads: int, topk: int
+) -> tuple[jax.Array, jax.Array]:
+    """Multi-head TopK selective attention.
+
+    Args:
+      x: ``(N, d_model)`` token embeddings.
+      params: projection weights.
+      n_heads: head count (``d_model % n_heads == 0``).
+      topk: selected keys per query.
+
+    Returns:
+      ``(out, masks)``: ``(N, d_model)`` output, ``(n_heads, N, N)`` masks.
+    """
+    n, d_model = x.shape
+    dh = d_model // n_heads
+    xf = x.astype(jnp.float32)
+
+    def split(w):
+        return (xf @ w).reshape(n, n_heads, dh).transpose(1, 0, 2)
+
+    q, k, v = split(params.wq), split(params.wk), split(params.wv)
+    outs, masks = jax.vmap(
+        lambda qh, kh, vh: head_topk_attention(qh, kh, vh, topk)
+    )(q, k, v)
+    out = outs.transpose(1, 0, 2).reshape(n, d_model) @ params.wo
+    return out, masks
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "topk"))
+def block_forward(
+    x: jax.Array, params: BlockParams, *, n_heads: int, topk: int
+) -> tuple[jax.Array, jax.Array]:
+    """Pre-norm transformer block with TopK selective attention.
+
+    Returns ``(out, masks)`` like :func:`mha_forward`; the FFN half is the
+    paper's "Static MatMul" (Fig. 1) and is charged to the baseline cost
+    model unchanged.
+    """
+    a, masks = mha_forward(
+        _layernorm(x, params.g1), params.mha, n_heads=n_heads, topk=topk
+    )
+    x = x + a
+    h = _layernorm(x, params.g2)
+    h = jax.nn.gelu(h @ params.w1 + params.b1)
+    x = x + (h @ params.w2 + params.b2)
+    return x, masks
+
+
+def encoder_forward(
+    x: jax.Array,
+    blocks: list[BlockParams],
+    *,
+    n_heads: int,
+    topk: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Stack of TopK blocks; masks from every layer are returned stacked
+    ``(n_layers, n_heads, N, N)`` — one SATA trace per (layer, head)."""
+    all_masks = []
+    for p in blocks:
+        x, m = block_forward(x, p, n_heads=n_heads, topk=topk)
+        all_masks.append(m)
+    return x, jnp.stack(all_masks)

@@ -1,0 +1,176 @@
+"""Kernel-vs-oracle correctness: the CORE signal for Layer 1.
+
+Hypothesis sweeps shapes/dtypes/tile sizes of the Pallas kernels and
+asserts allclose against the pure-jnp reference in ``kernels/ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qk_scores as qk_mod
+from compile.kernels import flash_select, ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(
+        dtype
+    )
+
+
+# ---------------------------------------------------------------- qk_scores
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([4, 16, 30, 48, 64, 96]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    tile=st.sampled_from([8, 16, 32, 33]),
+    seed=st.integers(0, 2**16),
+)
+def test_qk_scores_matches_ref(n, d, tile, seed):
+    q = rand(seed, (n, d), jnp.float32)
+    k = rand(seed + 1, (n, d), jnp.float32)
+    got = qk_mod.qk_scores(q, k, tile_q=tile, tile_k=tile)
+    want = ref.qk_scores(q, k)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_qk_scores_bf16_inputs(n, d, seed):
+    """bf16 operands accumulate in f32 inside the kernel (MXU contract)."""
+    q = rand(seed, (n, d), jnp.bfloat16)
+    k = rand(seed + 1, (n, d), jnp.bfloat16)
+    got = qk_mod.qk_scores(q, k)
+    want = ref.qk_scores(q, k)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_qk_scores_non_divisible_tile_snaps():
+    """Requested tile that doesn't divide N snaps to a divisor (N=30)."""
+    q = rand(0, (30, 16), jnp.float32)
+    k = rand(1, (30, 16), jnp.float32)
+    got = qk_mod.qk_scores(q, k, tile_q=32, tile_k=7)
+    np.testing.assert_allclose(got, ref.qk_scores(q, k), rtol=1e-5, atol=1e-5)
+
+
+def test_qk_scores_scale_is_rsqrt_d():
+    """Identity embeddings make the scale factor directly observable."""
+    d = 16
+    q = jnp.eye(d, dtype=jnp.float32)
+    s = qk_mod.qk_scores(q, q)
+    np.testing.assert_allclose(np.diag(s), np.full(d, 1.0 / np.sqrt(d)), rtol=1e-6)
+
+
+def test_qk_scores_rejects_mismatched_shapes():
+    q = rand(0, (16, 8), jnp.float32)
+    k = rand(1, (16, 16), jnp.float32)
+    with pytest.raises(AssertionError):
+        qk_mod.qk_scores(q, k)
+
+
+# ---------------------------------------------------- selective attention
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([8, 16, 30, 48, 64]),
+    d=st.sampled_from([8, 16, 32]),
+    kfrac=st.sampled_from([0.25, 0.5, 1.0]),
+    tile=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_selective_attention_matches_ref(n, d, kfrac, tile, seed):
+    q = rand(seed, (n, d), jnp.float32)
+    k = rand(seed + 1, (n, d), jnp.float32)
+    v = rand(seed + 2, (n, d), jnp.float32)
+    topk = max(1, int(n * kfrac))
+    mask = ref.topk_mask(ref.qk_scores(q, k), topk)
+    got = flash_select.selective_attention(q, k, v, mask, tile_q=tile, tile_k=tile)
+    want = ref.selective_attention(q, k, v, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_selective_attention_k1_copies_best_value():
+    """TopK=1 attention returns exactly the best key's value row."""
+    n, d = 16, 8
+    q = rand(0, (n, d), jnp.float32)
+    k = rand(1, (n, d), jnp.float32)
+    v = rand(2, (n, d), jnp.float32)
+    s = ref.qk_scores(q, k)
+    mask = ref.topk_mask(s, 1)
+    got = flash_select.selective_attention(q, k, v, mask)
+    best = jnp.argmax(jnp.where(mask > 0, s, ref.NEG_INF), axis=-1)
+    np.testing.assert_allclose(got, v[best], rtol=1e-5, atol=1e-5)
+
+
+def test_selective_attention_full_mask_is_dense_attention():
+    """mask = all-ones reduces to ordinary softmax attention."""
+    n, d = 32, 16
+    q = rand(0, (n, d), jnp.float32)
+    k = rand(1, (n, d), jnp.float32)
+    v = rand(2, (n, d), jnp.float32)
+    mask = jnp.ones((n, n), jnp.float32)
+    got = flash_select.selective_attention(q, k, v, mask)
+    p = jax.nn.softmax(ref.qk_scores(q, k), axis=-1)
+    np.testing.assert_allclose(got, p @ v, rtol=1e-4, atol=1e-4)
+
+
+def test_selective_attention_rows_are_convex_combinations():
+    """Each output row lies in the convex hull of selected value rows."""
+    n, d = 24, 8
+    q = rand(3, (n, d), jnp.float32)
+    k = rand(4, (n, d), jnp.float32)
+    v = jnp.abs(rand(5, (n, d), jnp.float32))  # positive values
+    mask = ref.topk_mask(ref.qk_scores(q, k), 6)
+    out = np.asarray(flash_select.selective_attention(q, k, v, mask))
+    vmin, vmax = np.asarray(v).min(0), np.asarray(v).max(0)
+    assert (out >= vmin - 1e-4).all() and (out <= vmax + 1e-4).all()
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_selective_attention_tile_size_invariance(seed):
+    """Output must not depend on the (tq, tk) tiling choice."""
+    n, d = 48, 16
+    q = rand(seed, (n, d), jnp.float32)
+    k = rand(seed + 1, (n, d), jnp.float32)
+    v = rand(seed + 2, (n, d), jnp.float32)
+    mask = ref.topk_mask(ref.qk_scores(q, k), 12)
+    a = flash_select.selective_attention(q, k, v, mask, tile_q=8, tile_k=48)
+    b = flash_select.selective_attention(q, k, v, mask, tile_q=48, tile_k=8)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------------- topk_mask
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([8, 30, 64, 198]),
+    seed=st.integers(0, 2**16),
+    data=st.data(),
+)
+def test_topk_mask_row_sums(n, seed, data):
+    topk = data.draw(st.integers(1, n))
+    s = rand(seed, (n, n), jnp.float32)
+    m = np.asarray(ref.topk_mask(s, topk))
+    assert set(np.unique(m)) <= {0.0, 1.0}
+    np.testing.assert_array_equal(m.sum(-1), np.full(n, topk))
+
+
+def test_topk_mask_selects_argmax():
+    s = rand(7, (16, 16), jnp.float32)
+    m = np.asarray(ref.topk_mask(s, 3))
+    top1 = np.asarray(jnp.argmax(s, axis=-1))
+    assert all(m[i, top1[i]] == 1.0 for i in range(16))
+
+
+def test_topk_mask_rejects_bad_k():
+    s = rand(0, (8, 8), jnp.float32)
+    for bad in (0, 9, -1):
+        with pytest.raises(ValueError):
+            ref.topk_mask(s, bad)

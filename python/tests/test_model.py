@@ -1,0 +1,114 @@
+"""Layer-2 model tests: shapes, mask semantics, block/encoder composition."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+def make_x(n, dm, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, dm), jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([16, 48]),
+    n_heads=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_mha_shapes_and_mask_topk(n, n_heads, dh, seed):
+    dm = n_heads * dh
+    topk = max(1, n // 4)
+    p = model.init_mha(jax.random.PRNGKey(seed), dm)
+    out, masks = model.mha_forward(make_x(n, dm, seed), p, n_heads=n_heads, topk=topk)
+    assert out.shape == (n, dm) and masks.shape == (n_heads, n, n)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_array_equal(
+        np.asarray(masks).sum(-1), np.full((n_heads, n), topk)
+    )
+
+
+def test_mha_matches_pure_reference():
+    """Pallas-backed MHA == pure-jnp reference MHA end to end."""
+    n, dm, h, topk = 32, 32, 4, 8
+    p = model.init_mha(jax.random.PRNGKey(3), dm)
+    x = make_x(n, dm, 3)
+    out_k, masks_k = model.mha_forward(x, p, n_heads=h, topk=topk)
+    out_r, masks_r = ref.mha_forward(x, p.wq, p.wk, p.wv, p.wo, h, topk)
+    np.testing.assert_array_equal(np.asarray(masks_k), np.asarray(masks_r))
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-4, atol=1e-4)
+
+
+def test_mha_mask_is_input_dependent():
+    """Different inputs must yield different selections (dynamic MatMul)."""
+    n, dm = 32, 32
+    p = model.init_mha(jax.random.PRNGKey(0), dm)
+    _, m1 = model.mha_forward(make_x(n, dm, 1), p, n_heads=4, topk=8)
+    _, m2 = model.mha_forward(make_x(n, dm, 2), p, n_heads=4, topk=8)
+    assert not np.array_equal(np.asarray(m1), np.asarray(m2))
+
+
+def test_mha_deterministic():
+    n, dm = 16, 32
+    p = model.init_mha(jax.random.PRNGKey(0), dm)
+    x = make_x(n, dm)
+    a, ma = model.mha_forward(x, p, n_heads=2, topk=4)
+    b, mb = model.mha_forward(x, p, n_heads=2, topk=4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb))
+
+
+def test_mha_rejects_indivisible_heads():
+    with pytest.raises(ValueError):
+        ref.mha_forward(
+            make_x(8, 30),
+            *(jnp.eye(30),) * 4,
+            n_heads=4,
+            topk=2,
+        )
+
+
+def test_block_residual_path():
+    """Zero FFN/attention weights reduce the block to identity + residual."""
+    n, dm, dff = 16, 32, 64
+    p = model.init_block(jax.random.PRNGKey(0), dm, dff)
+    z = model.BlockParams(
+        mha=model.MhaParams(*(jnp.zeros_like(w) for w in p.mha)),
+        w1=jnp.zeros_like(p.w1),
+        b1=p.b1,
+        w2=jnp.zeros_like(p.w2),
+        b2=p.b2,
+        g1=p.g1,
+        g2=p.g2,
+    )
+    x = make_x(n, dm)
+    out, _ = model.block_forward(x, z, n_heads=4, topk=4)
+    np.testing.assert_allclose(out, x, rtol=1e-5, atol=1e-5)
+
+
+def test_block_forward_finite_and_shaped():
+    n, dm, dff = 48, 64, 128
+    p = model.init_block(jax.random.PRNGKey(1), dm, dff)
+    out, masks = model.block_forward(make_x(n, dm, 2), p, n_heads=4, topk=12)
+    assert out.shape == (n, dm) and masks.shape == (4, n, n)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_encoder_stacks_masks_per_layer():
+    n, dm, dff, layers = 16, 32, 64, 3
+    keys = jax.random.split(jax.random.PRNGKey(0), layers)
+    blocks = [model.init_block(k, dm, dff) for k in keys]
+    out, masks = model.encoder_forward(make_x(n, dm), blocks, n_heads=2, topk=4)
+    assert out.shape == (n, dm)
+    assert masks.shape == (layers, 2, n, n)
+    # every layer/head obeys the TopK row-sum invariant
+    np.testing.assert_array_equal(
+        np.asarray(masks).sum(-1), np.full((layers, 2, n), 4)
+    )

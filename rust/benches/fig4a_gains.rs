@@ -1,0 +1,43 @@
+//! E2 — Fig. 4a regenerator: QK throughput and energy-efficiency gains
+//! (index-compute + scheduler costs incorporated).
+use sata::config::WorkloadSpec;
+use sata::engine::{gains, run_dense, run_sata, EngineOpts};
+use sata::hw::cim::CimConfig;
+use sata::hw::sched_rtl::SchedRtl;
+use sata::metrics::{render_gain_table, GainRow};
+use sata::trace::synth::gen_traces;
+use sata::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let rtl = SchedRtl::tsmc65();
+    let paper = [(1.47, 1.81), (1.76, 2.1), (1.59, 1.85), (1.5, 2.94)];
+    let mut rows = Vec::new();
+    for (spec, p) in WorkloadSpec::all_paper().iter().zip(paper) {
+        let cim = CimConfig::default_65nm(spec.dk);
+        let traces = gen_traces(spec, 4, 3);
+        let (mut thr, mut en) = (0.0, 0.0);
+        for t in &traces {
+            let dense = run_dense(&t.heads, &cim);
+            let sata = run_sata(&t.heads, &cim, &rtl, EngineOpts { sf: spec.sf, ..Default::default() });
+            let g = gains(&dense, &sata);
+            thr += g.throughput;
+            en += g.energy_eff;
+        }
+        rows.push(GainRow {
+            name: spec.name.clone(),
+            throughput: thr / traces.len() as f64,
+            energy_eff: en / traces.len() as f64,
+            paper_throughput: p.0,
+            paper_energy: p.1,
+        });
+    }
+    println!("Fig. 4a — QK throughput & energy-efficiency gain of SATA vs dense CIM engine");
+    print!("{}", render_gain_table(&rows));
+    let spec = WorkloadSpec::drsformer();
+    let t = &gen_traces(&spec, 1, 3)[0];
+    let cim = CimConfig::default_65nm(spec.dk);
+    b.run("sata end-to-end schedule+simulate drsformer", || {
+        std::hint::black_box(run_sata(&t.heads, &cim, &rtl, EngineOpts { sf: spec.sf, ..Default::default() }));
+    });
+}

@@ -1,0 +1,20 @@
+//! E4 — Fig. 4c regenerator: energy-efficiency/throughput gain from
+//! integrating SATA into A3 / SpAtten / Energon / ELSA.
+use sata::baselines::fig4c_gains;
+use sata::util::bench::Bench;
+use sata::util::stats::geomean;
+
+fn main() {
+    let b = Bench::new();
+    println!("Fig. 4c — gains from integrating SATA into SOTA accelerators (paper avg: 1.34x energy, 1.3x throughput)");
+    println!("{:<10} {:>14} {:>14}", "design", "energy gain", "throughput");
+    let gs = fig4c_gains();
+    for g in &gs {
+        println!("{:<10} {:>13.2}x {:>13.2}x", g.design.name(), g.energy_eff, g.throughput);
+    }
+    let e = geomean(&gs.iter().map(|g| g.energy_eff).collect::<Vec<_>>());
+    let t = geomean(&gs.iter().map(|g| g.throughput).collect::<Vec<_>>());
+    println!("{:<10} {:>13.2}x {:>13.2}x", "average", e, t);
+    b.report_metric("fig4c.avg_energy_gain", e, "x");
+    b.report_metric("fig4c.avg_throughput_gain", t, "x");
+}

@@ -1,0 +1,26 @@
+//! E7 — Sec. IV-D scheduler overhead: latency/energy vs D_k and S_f.
+//! Paper anchors: <5% latency when D_k>=64 or S_f<=24; energy <5% fails
+//! when D_k<32 or S_f>28; 2.2% typical.
+use sata::hw::cim::CimConfig;
+use sata::hw::sched_rtl::SchedRtl;
+use sata::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let rtl = SchedRtl::tsmc65();
+    println!("Sec. IV-D — scheduler overhead vs optimized digital CIM core");
+    println!("{:>6} {:>6} {:>14} {:>14}", "S_f", "D_k", "latency ovh", "energy ovh");
+    for &dk in &[16usize, 32, 64, 128, 4800] {
+        for &m in &[16usize, 22, 24, 28, 32, 48] {
+            let c = CimConfig::digital_core_65nm(dk).op_costs();
+            let compute_ns = m as f64 * (c.k_dt_ns + c.k_comp_ns);
+            let compute_pj = (m * m) as f64 * c.k_mac_per_row_pj;
+            let lat = rtl.latency_overhead(m, dk, compute_ns);
+            let en = rtl.energy_overhead(m, 1, compute_pj);
+            println!("{:>6} {:>6} {:>13.2}% {:>13.2}%", m, dk, 100.0 * lat, 100.0 * en);
+        }
+    }
+    b.run("schedule_cost(S_f=22)", || {
+        std::hint::black_box(rtl.schedule_cost(22, 1));
+    });
+}

@@ -1,0 +1,28 @@
+//! E6 — Sec. IV-C scaling study: throughput gain vs fold size S_f.
+//! Gain first rises as S_f shrinks (higher utilization), then zero-skip
+//! dominates (>50% trivial operands) and scheduling contributions fade.
+use sata::config::WorkloadSpec;
+use sata::engine::{gains, run_dense, run_sata, EngineOpts};
+use sata::hw::cim::CimConfig;
+use sata::hw::sched_rtl::SchedRtl;
+use sata::mask::tile::{skip_stats, tile_mask};
+use sata::trace::synth::gen_trace;
+use sata::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new();
+    let spec = WorkloadSpec::kvt_deit_tiny();
+    let cim = CimConfig::default_65nm(spec.dk);
+    let rtl = SchedRtl::tsmc65();
+    let t = gen_trace(&spec, 9);
+    let dense = run_dense(&t.heads, &cim);
+    println!("Sec. IV-C — S_f sweep on KVT-DeiT-Tiny (paper optimum S_f = 0.11N = 22)");
+    println!("{:>6} {:>12} {:>12} {:>12}", "S_f", "thr gain", "en gain", "0-skip frac");
+    for sf in [6usize, 11, 16, 22, 33, 44, 66, 99, 198] {
+        let sata = run_sata(&t.heads, &cim, &rtl, EngineOpts { sf: Some(sf), ..Default::default() });
+        let g = gains(&dense, &sata);
+        let skip: f64 = t.heads.iter().map(|m| skip_stats(&tile_mask(m, sf)).skip_fraction()).sum::<f64>() / t.heads.len() as f64;
+        println!("{:>6} {:>11.2}x {:>11.2}x {:>12.3}", sf, g.throughput, g.energy_eff, skip);
+        b.report_metric(&format!("scaling.sf{sf}.thr"), g.throughput, "x");
+    }
+}

@@ -1,0 +1,22 @@
+//! E8 — Sec. III-E ablation: Psum-register sort (Eq. 2) vs naive
+//! dummy-dot sort (Eq. 1); identical output, very different cost.
+use sata::mask::SelectiveMask;
+use sata::sort::{sort_keys_naive, sort_keys_psum};
+use sata::util::bench::Bench;
+use sata::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    println!("Sec. III-E — sorting engine ablation (Eq. 1 naive vs Eq. 2 Psum)");
+    for &n in &[30usize, 64, 128, 198, 256] {
+        let mut rng = Rng::new(1);
+        let m = SelectiveMask::random_topk(n, n / 4, &mut rng);
+        let naive = b.run(&format!("sort naive (Eq.1) N={n}"), || {
+            std::hint::black_box(sort_keys_naive(&m, &mut Rng::new(2)));
+        });
+        let psum = b.run(&format!("sort psum  (Eq.2) N={n}"), || {
+            std::hint::black_box(sort_keys_psum(&m, &mut Rng::new(2)));
+        });
+        b.report_metric(&format!("sort.n{n}.speedup"), naive.median_ns / psum.median_ns, "x");
+    }
+}

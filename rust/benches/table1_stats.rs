@@ -1,0 +1,32 @@
+//! E1 — Table I regenerator: workload spec + post-schedule statistics.
+use sata::config::WorkloadSpec;
+use sata::metrics::schedule_stats;
+use sata::trace::synth::gen_traces;
+use sata::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    println!("Table I — Workload Specification & Post-Schedule Statistics (paper values in parens)");
+    println!("{:<16} {:>6} {:>9} {:>8} {:>16} {:>18} {:>14}", "model", "N", "K/#Tok", "S_f", "GlobQ% (paper)", "avg S_h (paper)", "#S_h-=1 (paper)");
+    let paper = [(0.242, 0.463, 1.55), (0.333, 0.053, 0.62), (0.464, 0.051, 1.38), (0.148, 0.062, 0.05)];
+    for (spec, p) in WorkloadSpec::all_paper().iter().zip(paper) {
+        let traces = gen_traces(spec, 6, 7);
+        let mut g = 0.0; let mut sh = 0.0; let mut d = 0.0;
+        for t in &traces {
+            let s = schedule_stats(&t.heads, spec.sf, 7);
+            g += s.glob_q_frac; sh += s.avg_sh_frac; d += s.avg_decrements;
+        }
+        let n = traces.len() as f64;
+        // tiled workloads report S_h relative to N like Table I does
+        let sh_n = if let Some(sf) = spec.sf { (sh / n) * sf as f64 / spec.n_tokens as f64 } else { sh / n };
+        println!("{:<16} {:>6} {:>6}/{:<3} {:>8} {:>8.1} ({:>4.1}) {:>9.3}N ({:.3}N) {:>8.2} ({:.2})",
+            spec.name, spec.n_tokens, spec.topk, spec.n_tokens,
+            spec.sf.map(|s| s.to_string()).unwrap_or_else(|| "N".into()),
+            100.0 * g / n, 100.0 * p.0, sh_n, p.1, d / n, p.2);
+    }
+    let spec = WorkloadSpec::kvt_deit_tiny();
+    let t = gen_traces(&spec, 1, 7).pop().unwrap();
+    b.run("algo1 sort+classify kvt-tiny head (tiled)", || {
+        std::hint::black_box(schedule_stats(&t.heads[..1], spec.sf, 7));
+    });
+}

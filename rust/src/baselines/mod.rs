@@ -1,0 +1,184 @@
+//! SOTA sparse-attention accelerator models (Fig. 4c substitution).
+//!
+//! A3 / SpAtten / Energon / ELSA all "execute sparse Q-K MAC after index
+//! acquisition" (Sec. IV-E); their sparsified operand flow remains
+//! fragmented, which is the inefficiency SATA's front-end removes. Each
+//! design is modeled behaviourally by the two quantities Fig. 4c depends
+//! on:
+//!
+//! * `index_overhead` — fraction of runtime/energy spent acquiring TopK
+//!   indices (A3's recursive successive approximation dominates runtime —
+//!   "A3's recursive search dominates runtime overhead and shows limited
+//!   improvement");
+//! * `frag_penalty`   — energy/time multiplier of scattered operand
+//!   gathers relative to sorted sequential access.
+//!
+//! Integrating SATA sorts the access stream (removing `frag_penalty`'s
+//! sorted share) and overlaps Q staging with K MACs; the index engine is
+//! untouched. Average reported by the paper after integration: 1.34×
+//! energy efficiency, 1.3× throughput.
+
+/// A published accelerator SATA can front-end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SotaDesign {
+    /// A3 (HPCA'20): approximation-based candidate search.
+    A3,
+    /// SpAtten (HPCA'21): cascade token/head pruning + TopK engine.
+    SpAtten,
+    /// Energon (TCAD'22): mix-precision progressive filtering.
+    Energon,
+    /// ELSA (ISCA'21): sign-random-projection candidate hashing.
+    Elsa,
+}
+
+impl SotaDesign {
+    pub fn all() -> [SotaDesign; 4] {
+        [SotaDesign::A3, SotaDesign::SpAtten, SotaDesign::Energon, SotaDesign::Elsa]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SotaDesign::A3 => "A3",
+            SotaDesign::SpAtten => "SpAtten",
+            SotaDesign::Energon => "Energon",
+            SotaDesign::Elsa => "ELSA",
+        }
+    }
+
+    /// Fraction of the design's baseline *runtime* spent in index
+    /// acquisition (unimprovable by SATA). A3's recursive search is the
+    /// outlier the paper calls out.
+    pub fn index_runtime_frac(&self) -> f64 {
+        match self {
+            SotaDesign::A3 => 0.55,
+            SotaDesign::SpAtten => 0.18,
+            SotaDesign::Energon => 0.22,
+            SotaDesign::Elsa => 0.15,
+        }
+    }
+
+    /// Fraction of baseline *energy* spent in index acquisition.
+    pub fn index_energy_frac(&self) -> f64 {
+        match self {
+            SotaDesign::A3 => 0.40,
+            SotaDesign::SpAtten => 0.15,
+            SotaDesign::Energon => 0.20,
+            SotaDesign::Elsa => 0.12,
+        }
+    }
+
+    /// Multiplier on the execution (non-index) portion paid for
+    /// fragmented operand access (gathers, bank conflicts, refetches).
+    pub fn frag_penalty(&self) -> f64 {
+        match self {
+            SotaDesign::A3 => 1.35,
+            SotaDesign::SpAtten => 1.45,
+            SotaDesign::Energon => 1.5,
+            SotaDesign::Elsa => 1.4,
+        }
+    }
+}
+
+/// Gains from bolting SATA onto a design (Fig. 4c's two bar groups).
+#[derive(Clone, Copy, Debug)]
+pub struct IntegrationGain {
+    pub design: SotaDesign,
+    pub energy_eff: f64,
+    pub throughput: f64,
+}
+
+/// Estimate integration gains.
+///
+/// Execution portion: SATA removes the fragmentation penalty (sorted
+/// streams) and overlaps Q staging with K MACs (utilization factor
+/// `overlap_gain` on time). The index portion is untouched — which is why
+/// index-dominated A3 "shows limited improvement".
+pub fn integrate_sata(design: SotaDesign, overlap_gain: f64, sched_cost_frac: f64) -> IntegrationGain {
+    // Baseline normalized to 1.0 runtime / 1.0 energy.
+    let it = design.index_runtime_frac();
+    let ie = design.index_energy_frac();
+    let exec_t = 1.0 - it;
+    let exec_e = 1.0 - ie;
+
+    // With SATA: fragmentation removed, overlap applied, scheduler added.
+    let exec_t_sata = exec_t / design.frag_penalty() / overlap_gain;
+    let exec_e_sata = exec_e / design.frag_penalty();
+    let t_sata = it + exec_t_sata + sched_cost_frac * exec_t;
+    let e_sata = ie + exec_e_sata + sched_cost_frac * exec_e;
+
+    IntegrationGain {
+        design,
+        throughput: 1.0 / t_sata,
+        energy_eff: 1.0 / e_sata,
+    }
+}
+
+/// Fig. 4c with the paper's nominal overlap/scheduler parameters.
+pub fn fig4c_gains() -> Vec<IntegrationGain> {
+    SotaDesign::all()
+        .into_iter()
+        .map(|d| integrate_sata(d, 1.25, 0.022))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::geomean;
+
+    #[test]
+    fn all_designs_benefit_from_sata() {
+        for g in fig4c_gains() {
+            assert!(g.energy_eff > 1.0, "{}: energy {:.2}", g.design.name(), g.energy_eff);
+            assert!(g.throughput > 1.0, "{}: thr {:.2}", g.design.name(), g.throughput);
+        }
+    }
+
+    #[test]
+    fn a3_shows_limited_improvement() {
+        // Paper: "A3's recursive search dominates runtime overhead and
+        // shows limited improvement."
+        let gains = fig4c_gains();
+        let a3 = gains.iter().find(|g| g.design == SotaDesign::A3).unwrap();
+        for g in &gains {
+            if g.design != SotaDesign::A3 {
+                assert!(
+                    g.throughput > a3.throughput,
+                    "{} ({:.2}) should beat A3 ({:.2})",
+                    g.design.name(),
+                    g.throughput,
+                    a3.throughput
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn average_gains_match_paper_class() {
+        // Paper: on average 1.34× energy efficiency and 1.3× throughput.
+        let gains = fig4c_gains();
+        let e = geomean(&gains.iter().map(|g| g.energy_eff).collect::<Vec<_>>());
+        let t = geomean(&gains.iter().map(|g| g.throughput).collect::<Vec<_>>());
+        assert!((1.15..1.6).contains(&e), "avg energy gain {e:.2}");
+        assert!((1.15..1.6).contains(&t), "avg throughput gain {t:.2}");
+    }
+
+    #[test]
+    fn deeper_overlap_helps_but_not_index_bound_designs_much() {
+        let lo = integrate_sata(SotaDesign::A3, 1.0, 0.022);
+        let hi = integrate_sata(SotaDesign::A3, 2.0, 0.022);
+        let lo_s = integrate_sata(SotaDesign::SpAtten, 1.0, 0.022);
+        let hi_s = integrate_sata(SotaDesign::SpAtten, 2.0, 0.022);
+        let a3_delta = hi.throughput / lo.throughput;
+        let sp_delta = hi_s.throughput / lo_s.throughput;
+        assert!(sp_delta > a3_delta, "index-bound A3 should respond less");
+    }
+
+    #[test]
+    fn scheduler_cost_reduces_gain_monotonically() {
+        let free = integrate_sata(SotaDesign::Energon, 1.25, 0.0);
+        let paid = integrate_sata(SotaDesign::Energon, 1.25, 0.059);
+        assert!(free.energy_eff > paid.energy_eff);
+        assert!(free.throughput > paid.throughput);
+    }
+}

@@ -1,0 +1,255 @@
+//! Workload + system configuration (Table I presets, JSON round-trip).
+//!
+//! `WorkloadSpec` carries exactly the columns of the paper's Table I plus
+//! the mask-locality statistics the synthetic trace generator needs;
+//! `SystemConfig` parameterizes the CIM substrate. Both serialize through
+//! the in-tree JSON codec so experiments are launchable from files
+//! (`sata --workload cfg.json …`).
+
+use crate::hw::cim::CimConfig;
+use crate::util::json::Json;
+
+/// One evaluation workload (a Table I row).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadSpec {
+    pub name: String,
+    /// Sequence length N (tokens per head).
+    pub n_tokens: usize,
+    /// Selected keys per query (TopK K).
+    pub topk: usize,
+    /// Embedding dimension D_k.
+    pub dk: usize,
+    /// Heads per layer.
+    pub n_heads: usize,
+    /// Fold size S_f; `None` = whole-head scheduling (Table I "N").
+    pub sf: Option<usize>,
+    /// Zero-skip enabled (Table I "0-Skip").
+    pub zero_skip: bool,
+    /// Target GLOB-query fraction (Table I "GlobQ%").
+    pub glob_frac: f64,
+    /// Locality spread: selected keys concentrate in a window of
+    /// `spread × topk` consecutive (hidden-order) keys.
+    pub spread: f64,
+}
+
+impl WorkloadSpec {
+    /// Table I row 1: TTST (remote-sensing SR transformer, NWPU-RESISC45).
+    pub fn ttst() -> Self {
+        WorkloadSpec {
+            name: "TTST".into(),
+            n_tokens: 30,
+            topk: 15,
+            dk: 65536,
+            n_heads: 6,
+            sf: None, // Tile Size = N
+            zero_skip: false,
+            glob_frac: 0.242,
+            spread: 1.05,
+        }
+    }
+
+    /// Table I row 2: KVT-DeiT-Tiny (k-NN attention ViT, ImageNet).
+    pub fn kvt_deit_tiny() -> Self {
+        WorkloadSpec {
+            name: "KVT-DeiT-Tiny".into(),
+            n_tokens: 198,
+            topk: 50,
+            dk: 64,
+            n_heads: 3,
+            sf: Some(22), // 0.11 N
+            zero_skip: true,
+            glob_frac: 0.333,
+            spread: 1.2,
+        }
+    }
+
+    /// Table I row 3: KVT-DeiT-Base.
+    pub fn kvt_deit_base() -> Self {
+        WorkloadSpec {
+            name: "KVT-DeiT-Base".into(),
+            n_tokens: 198,
+            topk: 64,
+            dk: 64,
+            n_heads: 12,
+            sf: Some(22),
+            zero_skip: true,
+            glob_frac: 0.464,
+            spread: 1.3,
+        }
+    }
+
+    /// Table I row 4: DRSformer (image deraining, Rain100).
+    pub fn drsformer() -> Self {
+        WorkloadSpec {
+            name: "DRSformer".into(),
+            n_tokens: 48,
+            topk: 12,
+            dk: 4800,
+            n_heads: 6,
+            sf: Some(6), // 0.125 N
+            zero_skip: true,
+            glob_frac: 0.148,
+            spread: 1.15,
+        }
+    }
+
+    /// All four Table I workloads in paper order.
+    pub fn all_paper() -> Vec<WorkloadSpec> {
+        vec![
+            Self::ttst(),
+            Self::kvt_deit_tiny(),
+            Self::kvt_deit_base(),
+            Self::drsformer(),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("n_tokens", Json::num(self.n_tokens as f64)),
+            ("topk", Json::num(self.topk as f64)),
+            ("dk", Json::num(self.dk as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            (
+                "sf",
+                self.sf.map(|s| Json::num(s as f64)).unwrap_or(Json::Null),
+            ),
+            ("zero_skip", Json::Bool(self.zero_skip)),
+            ("glob_frac", Json::num(self.glob_frac)),
+            ("spread", Json::num(self.spread)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let req = |k: &str| -> Result<usize, String> {
+            j.get(k).as_usize().ok_or_else(|| format!("missing/invalid '{k}'"))
+        };
+        Ok(WorkloadSpec {
+            name: j
+                .get("name")
+                .as_str()
+                .ok_or("missing 'name'")?
+                .to_string(),
+            n_tokens: req("n_tokens")?,
+            topk: req("topk")?,
+            dk: req("dk")?,
+            n_heads: req("n_heads")?,
+            sf: j.get("sf").as_usize(),
+            zero_skip: j.get("zero_skip").as_bool().unwrap_or(false),
+            glob_frac: j.get("glob_frac").as_f64().unwrap_or(0.0),
+            spread: j.get("spread").as_f64().unwrap_or(1.5),
+        })
+    }
+}
+
+/// System-level configuration: substrate + scheduler knobs.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    /// Embedding dim the CIM system is provisioned for.
+    pub dk: usize,
+    pub n_tiles: usize,
+    pub precision_bits: usize,
+    /// θ as fraction of N.
+    pub theta_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            dk: 64,
+            n_tiles: 16,
+            precision_bits: 8,
+            theta_frac: 0.5,
+            seed: 0x5A7A_2026,
+        }
+    }
+}
+
+impl SystemConfig {
+    pub fn cim(&self) -> CimConfig {
+        let mut c = CimConfig::default_65nm(self.dk);
+        c.n_tiles = self.n_tiles;
+        c.precision_bits = self.precision_bits;
+        c
+    }
+
+    pub fn for_workload(w: &WorkloadSpec) -> Self {
+        SystemConfig { dk: w.dk, ..Default::default() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dk", Json::num(self.dk as f64)),
+            ("n_tiles", Json::num(self.n_tiles as f64)),
+            ("precision_bits", Json::num(self.precision_bits as f64)),
+            ("theta_frac", Json::num(self.theta_frac)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let d = SystemConfig::default();
+        Ok(SystemConfig {
+            dk: j.get("dk").as_usize().unwrap_or(d.dk),
+            n_tiles: j.get("n_tiles").as_usize().unwrap_or(d.n_tiles),
+            precision_bits: j
+                .get("precision_bits")
+                .as_usize()
+                .unwrap_or(d.precision_bits),
+            theta_frac: j.get("theta_frac").as_f64().unwrap_or(d.theta_frac),
+            seed: j.get("seed").as_f64().map(|v| v as u64).unwrap_or(d.seed),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_presets_match_table1() {
+        let ws = WorkloadSpec::all_paper();
+        assert_eq!(ws.len(), 4);
+        let ttst = &ws[0];
+        assert_eq!((ttst.n_tokens, ttst.topk, ttst.dk), (30, 15, 65536));
+        assert_eq!(ttst.sf, None);
+        let kvt = &ws[1];
+        assert_eq!((kvt.n_tokens, kvt.topk), (198, 50));
+        assert_eq!(kvt.sf, Some(22)); // 0.11 N
+        let drs = &ws[3];
+        assert_eq!(drs.sf, Some(6)); // 0.125 N
+        assert!(drs.zero_skip && !ttst.zero_skip);
+    }
+
+    #[test]
+    fn workload_json_roundtrip() {
+        for w in WorkloadSpec::all_paper() {
+            let j = w.to_json();
+            let back = WorkloadSpec::from_json(&j).unwrap();
+            assert_eq!(w, back);
+        }
+    }
+
+    #[test]
+    fn workload_json_rejects_missing_fields() {
+        let j = Json::parse(r#"{"name": "x"}"#).unwrap();
+        assert!(WorkloadSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn system_json_roundtrip_and_defaults() {
+        let s = SystemConfig { dk: 128, ..Default::default() };
+        let back = SystemConfig::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.dk, 128);
+        let empty = SystemConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(empty.dk, SystemConfig::default().dk);
+    }
+
+    #[test]
+    fn cim_config_respects_workload_dk() {
+        let w = WorkloadSpec::drsformer();
+        let sys = SystemConfig::for_workload(&w);
+        assert_eq!(sys.cim().dk, 4800);
+    }
+}

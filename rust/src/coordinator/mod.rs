@@ -1,0 +1,205 @@
+//! Layer-3 coordinator: the runtime service around the SATA pipeline.
+//!
+//! Owns a pool of worker threads (one per simulated CIM engine / chip
+//! tile group), a bounded job queue with backpressure, and the metrics
+//! sink. Jobs are *layers of selective-attention heads* (one `MaskTrace`
+//! each); each worker runs Algo 1 + Algo 2 + the engine simulation and
+//! reports the run. This is the process shape a hardware testbench or a
+//! serving frontend would drive.
+//!
+//! No `tokio` offline — std threads + `mpsc` channels; the queue bound
+//! gives backpressure exactly like a bounded async channel would.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::config::SystemConfig;
+use crate::engine::{gains, run_dense, run_sata, EngineOpts, RunReport};
+use crate::hw::cim::CimConfig;
+use crate::hw::sched_rtl::SchedRtl;
+use crate::trace::MaskTrace;
+
+/// One unit of coordinator work: schedule + simulate a trace.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: usize,
+    pub trace: MaskTrace,
+    /// Fold size override; `None` = whole-head.
+    pub sf: Option<usize>,
+}
+
+/// Result of one job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: usize,
+    pub model: String,
+    pub sata: RunReport,
+    pub dense: RunReport,
+    pub throughput_gain: f64,
+    pub energy_gain: f64,
+}
+
+/// Aggregated coordinator metrics.
+#[derive(Clone, Debug, Default)]
+pub struct CoordinatorMetrics {
+    pub jobs_done: usize,
+    pub total_latency_ns: f64,
+    pub total_energy_pj: f64,
+    pub mean_throughput_gain: f64,
+    pub mean_energy_gain: f64,
+}
+
+/// Multi-worker scheduling/simulation service.
+pub struct Coordinator {
+    tx: Option<SyncSender<Job>>,
+    results_rx: Receiver<JobResult>,
+    workers: Vec<JoinHandle<()>>,
+    submitted: Arc<AtomicUsize>,
+}
+
+impl Coordinator {
+    /// Spawn `n_workers` workers with a queue bound of `queue_cap`
+    /// (submitting beyond the bound blocks — backpressure).
+    pub fn new(n_workers: usize, queue_cap: usize, sys: SystemConfig) -> Self {
+        let (tx, rx) = sync_channel::<Job>(queue_cap);
+        let (res_tx, results_rx) = sync_channel::<JobResult>(queue_cap.max(64));
+        let rx = Arc::new(Mutex::new(rx));
+        let submitted = Arc::new(AtomicUsize::new(0));
+
+        let workers = (0..n_workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let res_tx = res_tx.clone();
+                let sys = sys.clone();
+                std::thread::spawn(move || {
+                    let rtl = SchedRtl::tsmc65();
+                    loop {
+                        // hold the lock only to receive
+                        let job = match rx.lock().unwrap().recv() {
+                            Ok(j) => j,
+                            Err(_) => break, // queue closed
+                        };
+                        let mut cim: CimConfig = sys.cim();
+                        cim.dk = job.trace.dk.max(1);
+                        let opts = EngineOpts {
+                            sf: job.sf,
+                            theta_frac: sys.theta_frac,
+                            seed: sys.seed,
+                            ..Default::default()
+                        };
+                        let sata = run_sata(&job.trace.heads, &cim, &rtl, opts);
+                        let dense = run_dense(&job.trace.heads, &cim);
+                        let g = gains(&dense, &sata);
+                        let _ = res_tx.send(JobResult {
+                            id: job.id,
+                            model: job.trace.model.clone(),
+                            sata,
+                            dense,
+                            throughput_gain: g.throughput,
+                            energy_gain: g.energy_eff,
+                        });
+                    }
+                })
+            })
+            .collect();
+
+        Coordinator { tx: Some(tx), results_rx, workers, submitted }
+    }
+
+    /// Submit a job; blocks when the queue is full (backpressure).
+    pub fn submit(&self, job: Job) {
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .as_ref()
+            .expect("coordinator already drained")
+            .send(job)
+            .expect("workers gone");
+    }
+
+    /// Close the queue, wait for all workers, and aggregate metrics.
+    pub fn drain(mut self) -> (Vec<JobResult>, CoordinatorMetrics) {
+        drop(self.tx.take()); // close queue → workers exit after drain
+        let expected = self.submitted.load(Ordering::SeqCst);
+        let mut results = Vec::with_capacity(expected);
+        for _ in 0..expected {
+            match self.results_rx.recv() {
+                Ok(r) => results.push(r),
+                Err(_) => break,
+            }
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        results.sort_by_key(|r| r.id);
+
+        let mut m = CoordinatorMetrics { jobs_done: results.len(), ..Default::default() };
+        if !results.is_empty() {
+            m.total_latency_ns = results.iter().map(|r| r.sata.latency_ns).sum();
+            m.total_energy_pj = results.iter().map(|r| r.sata.total_pj()).sum();
+            m.mean_throughput_gain = results.iter().map(|r| r.throughput_gain).sum::<f64>()
+                / results.len() as f64;
+            m.mean_energy_gain =
+                results.iter().map(|r| r.energy_gain).sum::<f64>() / results.len() as f64;
+        }
+        (results, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadSpec;
+    use crate::trace::synth::gen_traces;
+
+    fn jobs(spec: &WorkloadSpec, count: usize) -> Vec<Job> {
+        gen_traces(spec, count, 5)
+            .into_iter()
+            .enumerate()
+            .map(|(id, trace)| Job { id, trace, sf: spec.sf })
+            .collect()
+    }
+
+    #[test]
+    fn coordinator_processes_all_jobs_in_order() {
+        let spec = WorkloadSpec::drsformer();
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::new(2, 4, sys);
+        let js = jobs(&spec, 6);
+        for j in js {
+            coord.submit(j);
+        }
+        let (results, metrics) = coord.drain();
+        assert_eq!(results.len(), 6);
+        assert_eq!(metrics.jobs_done, 6);
+        assert!(results.windows(2).all(|w| w[0].id < w[1].id), "sorted by id");
+        assert!(metrics.mean_throughput_gain > 1.0);
+        assert!(metrics.total_energy_pj > 0.0);
+    }
+
+    #[test]
+    fn single_worker_coordinator_works() {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::new(1, 2, sys);
+        for j in jobs(&spec, 3) {
+            coord.submit(j);
+        }
+        let (results, _) = coord.drain();
+        assert_eq!(results.len(), 3);
+        for r in &results {
+            assert!(r.sata.latency_ns > 0.0);
+            assert!(r.dense.latency_ns >= r.sata.latency_ns);
+        }
+    }
+
+    #[test]
+    fn drain_with_no_jobs_is_empty() {
+        let sys = SystemConfig::default();
+        let coord = Coordinator::new(2, 2, sys);
+        let (results, metrics) = coord.drain();
+        assert!(results.is_empty());
+        assert_eq!(metrics.jobs_done, 0);
+    }
+}

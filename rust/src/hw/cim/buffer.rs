@@ -1,0 +1,64 @@
+//! On-chip SRAM buffer model.
+//!
+//! Access energy/latency scale with capacity roughly as √size (bitline/
+//! wordline growth) — the standard CACTI-style first-order law NeuroSim
+//! also uses. At 65 nm a 256 KB SRAM costs ~0.6–1 pJ/bit per access.
+
+/// Global/fold SRAM buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct SramBuffer {
+    /// Capacity in KB (scaling anchor).
+    pub size_kb: f64,
+    /// Access energy per bit at the reference size (pJ).
+    pub ref_pj_per_bit: f64,
+    /// Port width in bits (per-cycle transfer granularity).
+    pub port_bits: f64,
+}
+
+impl SramBuffer {
+    /// Buffer of `size_kb` with 65 nm reference energies (anchored at
+    /// 256 KB → 0.8 pJ/bit, √-scaled).
+    pub fn kb(size_kb: f64) -> Self {
+        SramBuffer { size_kb, ref_pj_per_bit: 0.15, port_bits: 256.0 }
+    }
+
+    fn scale(&self) -> f64 {
+        (self.size_kb / 256.0).sqrt()
+    }
+
+    /// Cycles (converted to ns via `cyc`) to stream `bits` through the port.
+    pub fn access_ns(&self, bits: f64, cyc_ns: f64) -> f64 {
+        (bits / self.port_bits).ceil() * cyc_ns * self.scale().max(1.0)
+    }
+
+    /// Energy to read or write `bits` (pJ).
+    pub fn access_pj(&self, bits: f64) -> f64 {
+        bits * self.ref_pj_per_bit * self.scale()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bigger_buffers_cost_more_per_bit() {
+        let small = SramBuffer::kb(64.0);
+        let big = SramBuffer::kb(1024.0);
+        assert!(big.access_pj(512.0) > small.access_pj(512.0));
+    }
+
+    #[test]
+    fn access_time_quantized_by_port() {
+        let b = SramBuffer::kb(256.0);
+        assert_eq!(b.access_ns(1.0, 1.0), 1.0);
+        assert_eq!(b.access_ns(257.0, 1.0), 2.0);
+    }
+
+    #[test]
+    fn sram_far_cheaper_than_dram_per_bit() {
+        let b = SramBuffer::kb(256.0);
+        let d = super::super::dram::Dram::lpddr4_65nm();
+        assert!(d.energy_pj(512.0) > 10.0 * b.access_pj(512.0));
+    }
+}

@@ -1,0 +1,65 @@
+//! Off-chip DRAM model: bandwidth-limited bursts + per-bit access energy.
+//!
+//! LPDDR4-class numbers at the 65 nm-era system level: ~12.8 GB/s per
+//! channel, ~20 pJ/bit end-to-end access energy (I/O + activation
+//! amortized), ~40 ns first-word latency. SATA's energy story is largely
+//! "fewer DRAM touches through locality", so `energy_pj` is the single most
+//! gain-relevant constant in the stack.
+
+/// DRAM channel model.
+#[derive(Clone, Copy, Debug)]
+pub struct Dram {
+    /// Sustained bandwidth in bits per ns (GB/s × 8 / 1e9 ≡ bits/ns).
+    pub bw_bits_per_ns: f64,
+    /// First-word access latency (ns), amortized per burst.
+    pub latency_ns: f64,
+    /// Access energy per bit (pJ).
+    pub pj_per_bit: f64,
+}
+
+impl Dram {
+    /// LPDDR4-class channel as used in 65 nm accelerator studies.
+    pub fn lpddr4_65nm() -> Self {
+        Dram {
+            bw_bits_per_ns: 12.8 * 8.0, // 12.8 GB/s
+            latency_ns: 40.0,
+            pj_per_bit: 20.0,
+        }
+    }
+
+    /// Time to move `bits` in one burst (latency amortized over the burst;
+    /// the scheduler pipelines bursts, so we charge latency once per
+    /// vector, damped by the burst length).
+    pub fn transfer_ns(&self, bits: f64) -> f64 {
+        let stream = bits / self.bw_bits_per_ns;
+        // Amortize the row-activation latency across the burst: long
+        // vectors (DRSformer D_k=4800) hide it; short ones don't.
+        let amortized = self.latency_ns / (1.0 + bits / 512.0);
+        stream + amortized
+    }
+
+    /// Energy to move `bits` (pJ).
+    pub fn energy_pj(&self, bits: f64) -> f64 {
+        bits * self.pj_per_bit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn long_bursts_amortize_latency() {
+        let d = Dram::lpddr4_65nm();
+        let short = d.transfer_ns(64.0);
+        let long = d.transfer_ns(65536.0);
+        // per-bit time must be far better for the long burst
+        assert!(long / 65536.0 < short / 64.0 / 10.0);
+    }
+
+    #[test]
+    fn energy_linear_in_bits() {
+        let d = Dram::lpddr4_65nm();
+        assert!((d.energy_pj(1000.0) - 10.0 * d.energy_pj(100.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,217 @@
+//! CIM system model — NeuroSim-flavoured (Fig. 3c substitution).
+//!
+//! A homogeneous multi-level compute-in-memory system: DRAM → global buffer
+//! → H-tree interconnect → tiles → 32×32 subarrays. Input activations (K
+//! vectors) start from DRAM, MAC against array-resident weights (Q vectors),
+//! and results return to DRAM — the NeuroSim dataflow the paper describes.
+//!
+//! Constants are 65 nm-class figures in the range published for
+//! DNN+NeuroSim V2.x and the validation paper (Lu et al., Front. AI 2021):
+//! ~pJ/bit SRAM, tens of pJ/bit DRAM, ~fJ/bit-MAC digital CIM cells, 1 GHz
+//! system clock. Absolute numbers are *calibration knobs* (`CimConfig` is
+//! fully parameterized and JSON-loadable); SATA's reported gains are ratios
+//! over the same substrate, which is what the reproduction must preserve.
+
+pub mod buffer;
+pub mod dram;
+pub mod interconnect;
+pub mod subarray;
+
+use super::OpCosts;
+use buffer::SramBuffer;
+use dram::Dram;
+use interconnect::HTree;
+use subarray::Subarray;
+
+/// Full CIM system configuration.
+#[derive(Clone, Debug)]
+pub struct CimConfig {
+    /// Embedding dimension D_k (elements per Q/K vector).
+    pub dk: usize,
+    /// Operand precision in bits (paper-class CIM: 8b activations).
+    pub precision_bits: usize,
+    /// Subarray geometry (paper: 32×32).
+    pub subarray_rows: usize,
+    pub subarray_cols: usize,
+    /// Number of tiles on the chip (parallelism for multi-head work).
+    pub n_tiles: usize,
+    /// Subarrays per tile (capacity: how many Q vectors stay resident).
+    pub subarrays_per_tile: usize,
+    /// System clock in GHz (paper: 1 GHz for both CIM and scheduler).
+    pub clock_ghz: f64,
+    /// DRAM: bandwidth and energy.
+    pub dram: Dram,
+    /// Global SRAM buffer.
+    pub buffer: SramBuffer,
+    /// H-tree interconnect.
+    pub htree: HTree,
+    /// Subarray PPA.
+    pub subarray: Subarray,
+}
+
+impl CimConfig {
+    /// 65 nm defaults sized for the paper's system (32×32 subarrays, 1 GHz,
+    /// ADC-inclusive per-op energy — the Fig. 4a evaluation profile).
+    pub fn default_65nm(dk: usize) -> Self {
+        CimConfig {
+            dk,
+            precision_bits: 8,
+            subarray_rows: 32,
+            subarray_cols: 32,
+            n_tiles: 16,
+            subarrays_per_tile: 64,
+            clock_ghz: 1.0,
+            dram: Dram::lpddr4_65nm(),
+            buffer: SramBuffer::kb(256.0),
+            htree: HTree::levels(4),
+            subarray: Subarray::adc_65nm(32, 32),
+        }
+    }
+
+    /// Lean digital-core profile (Sec. IV-D scheduler-overhead reference).
+    pub fn digital_core_65nm(dk: usize) -> Self {
+        CimConfig {
+            subarray: Subarray::digital_65nm(32, 32),
+            ..Self::default_65nm(dk)
+        }
+    }
+
+    /// Bits per operand vector.
+    pub fn vector_bits(&self) -> usize {
+        self.dk * self.precision_bits
+    }
+
+    /// Subarrays a single operand vector spans along the column dimension.
+    pub fn cols_per_vector(&self) -> usize {
+        self.dk.div_ceil(self.subarray_cols)
+    }
+
+    /// How many Q vectors the chip's arrays hold resident at once.
+    ///
+    /// Total cells across tiles at `precision_bits` per element, divided
+    /// by the vector footprint. TTST's D_k = 65536 collapses this to a
+    /// handful of queries — which is exactly why the dense flow refetches
+    /// keys per Q-chunk and why SATA's sorted locality pays off there.
+    pub fn q_capacity(&self) -> usize {
+        let cells =
+            self.n_tiles * self.subarrays_per_tile * self.subarray_rows * self.subarray_cols;
+        let elems = cells / self.precision_bits;
+        (elems / self.dk).max(1)
+    }
+
+    /// Derive the per-op cost table (Eq. 3 inputs + energy knobs) for a
+    /// head whose Q rows occupy the arrays.
+    ///
+    /// Q/K vectors are *projection outputs*: they are staged in the global
+    /// buffer when the layer starts (that ingress DRAM cost is identical
+    /// for every flow and excluded from the QK comparison, matching the
+    /// paper's Fig. 4a scope). Per-op costs are therefore on-chip:
+    ///
+    /// * K DT   = global-buffer read + H-tree traversal (streamed).
+    /// * K COMP = subarray MAC read: `precision_bits` input-bit cycles ×
+    ///   the column folds the vector spans (row direction is parallel).
+    /// * Q DT   = same staging path as K.
+    /// * Q ARR  = weight-write across the spanned subarrays.
+    ///
+    /// Energy: `k_fetch_dram_pj` is the *global staging fetch* (buffer +
+    /// tree — the expensive far path, also what a capacity-chunk refetch
+    /// pays); `k_fetch_buf_pj` is a *local fold-buffer* hit (tiled reuse).
+    pub fn op_costs(&self) -> OpCosts {
+        let bits = self.vector_bits() as f64;
+        let cyc = 1.0 / self.clock_ghz; // ns per cycle
+
+        let tree_ns = self.htree.traverse_ns(bits, cyc);
+        let buf_ns = self.buffer.access_ns(bits, cyc);
+        let k_dt_ns = tree_ns + buf_ns;
+
+        let folds = self.cols_per_vector() as f64;
+        let k_comp_ns = self.subarray.mac_read_ns(self.precision_bits, cyc) * folds;
+
+        let q_dt_ns = k_dt_ns; // symmetric staging path
+        let q_arr_ns = self.subarray.row_write_ns(cyc) * folds;
+
+        // Far fetch: global buffer read + full H-tree traversal.
+        let k_fetch_dram_pj = self.buffer.access_pj(bits) + self.htree.traverse_pj(bits);
+        // Near fetch: small fold buffer (1/8 the per-bit cost of global).
+        let k_fetch_buf_pj = self.buffer.access_pj(bits) / 8.0;
+        // Input staging registers at the array edge.
+        let k_dt_pj = bits * 0.01;
+        // MAC energy for one K vector against ONE active Q row:
+        // dk cell-MACs at `precision_bits` input bits each.
+        let k_mac_per_row_pj =
+            self.subarray.mac_pj_per_cell(self.precision_bits) * self.dk as f64;
+        let q_dt_pj = self.buffer.access_pj(bits) + self.htree.traverse_pj(bits);
+        let q_arr_pj = self.subarray.row_write_pj() * folds;
+
+        OpCosts {
+            k_dt_ns,
+            k_comp_ns,
+            q_dt_ns,
+            q_arr_ns,
+            k_fetch_dram_pj,
+            k_fetch_buf_pj,
+            k_dt_pj,
+            k_mac_per_row_pj,
+            q_dt_pj,
+            q_arr_pj,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_costs_are_positive_and_ordered() {
+        let c = CimConfig::default_65nm(64).op_costs();
+        for v in [
+            c.k_dt_ns,
+            c.k_comp_ns,
+            c.q_dt_ns,
+            c.q_arr_ns,
+            c.k_fetch_dram_pj,
+            c.k_fetch_buf_pj,
+            c.k_dt_pj,
+            c.k_mac_per_row_pj,
+            c.q_dt_pj,
+            c.q_arr_pj,
+        ] {
+            assert!(v > 0.0, "cost must be positive: {c:?}");
+        }
+        // DRAM energy per fetch dominates buffer hits (locality matters).
+        assert!(c.k_fetch_dram_pj > 5.0 * c.k_fetch_buf_pj);
+    }
+
+    #[test]
+    fn costs_scale_with_embedding_dim() {
+        let small = CimConfig::default_65nm(64).op_costs();
+        let large = CimConfig::default_65nm(4800).op_costs();
+        assert!(large.k_dt_ns > small.k_dt_ns * 10.0);
+        assert!(large.k_mac_per_row_pj > small.k_mac_per_row_pj * 10.0);
+    }
+
+    #[test]
+    fn q_capacity_collapses_for_huge_embeddings() {
+        // KVT-class D_k fits hundreds of queries; TTST's D_k=65536 fits 2.
+        assert!(CimConfig::default_65nm(64).q_capacity() >= 198);
+        let ttst = CimConfig::default_65nm(65536).q_capacity();
+        assert!(ttst <= 4, "TTST capacity {ttst} should be tiny");
+        assert!(ttst >= 1);
+    }
+
+    #[test]
+    fn vector_spans_expected_subarrays() {
+        let c = CimConfig::default_65nm(64);
+        assert_eq!(c.cols_per_vector(), 2);
+        let c = CimConfig::default_65nm(65536);
+        assert_eq!(c.cols_per_vector(), 2048);
+    }
+
+    #[test]
+    fn mac_latency_scales_with_column_folds() {
+        let c64 = CimConfig::default_65nm(64).op_costs();
+        let c128 = CimConfig::default_65nm(128).op_costs();
+        assert!((c128.k_comp_ns / c64.k_comp_ns - 2.0).abs() < 1e-9);
+    }
+}

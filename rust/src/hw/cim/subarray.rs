@@ -1,0 +1,92 @@
+//! CIM subarray model (the paper's 32×32 macro).
+//!
+//! Digital CIM at 65 nm: input bits stream serially (bit-serial MAC), all
+//! rows compute in parallel, column folds serialize. Weight (Q) update
+//! writes one row per cycle-group. Energy anchors: ~2 fJ/cell-op/bit-pair
+//! digital CIM at 65 nm → `mac_pj_per_cell(8) ≈ 0.016 pJ` per 8-bit
+//! cell-MAC; row write ~0.5 pJ per 32-cell row segment.
+
+/// One CIM subarray's PPA.
+#[derive(Clone, Copy, Debug)]
+pub struct Subarray {
+    pub rows: usize,
+    pub cols: usize,
+    /// fJ per cell per input-bit of MAC work.
+    pub fj_per_cell_bit: f64,
+    /// Cycles per input-bit of a MAC read (bit-serial).
+    pub cycles_per_input_bit: f64,
+    /// Cycles to write one row segment (weight update).
+    pub row_write_cycles: f64,
+    /// pJ to write one row segment.
+    pub row_write_pj_seg: f64,
+}
+
+impl Subarray {
+    /// 65 nm digital CIM defaults (lean MAC core — the Sec. IV-D
+    /// "optimized CIM core" the scheduler overhead is compared against).
+    pub fn digital_65nm(rows: usize, cols: usize) -> Self {
+        Subarray {
+            rows,
+            cols,
+            fj_per_cell_bit: 2.0,
+            cycles_per_input_bit: 1.0,
+            row_write_cycles: 2.0,
+            row_write_pj_seg: 0.5,
+        }
+    }
+
+    /// 65 nm CIM with ADC/accumulation/periphery energy folded in —
+    /// the NeuroSim-style *system* profile used for Fig. 4a evaluation.
+    /// (NeuroSim-validated silicon reports per-op energies an order of
+    /// magnitude above the bare MAC cell; see DESIGN.md §calibration.)
+    pub fn adc_65nm(rows: usize, cols: usize) -> Self {
+        Subarray {
+            rows,
+            cols,
+            fj_per_cell_bit: 20.0,
+            cycles_per_input_bit: 1.0,
+            row_write_cycles: 2.0,
+            row_write_pj_seg: 0.5,
+        }
+    }
+
+    /// MAC read latency for one vector fold (ns): bit-serial input stream.
+    pub fn mac_read_ns(&self, precision_bits: usize, cyc_ns: f64) -> f64 {
+        precision_bits as f64 * self.cycles_per_input_bit * cyc_ns
+    }
+
+    /// Energy of one cell-MAC at the given input precision (pJ).
+    pub fn mac_pj_per_cell(&self, precision_bits: usize) -> f64 {
+        self.fj_per_cell_bit * precision_bits as f64 / 1000.0
+    }
+
+    /// Row write (weight update) latency per fold (ns).
+    pub fn row_write_ns(&self, cyc_ns: f64) -> f64 {
+        self.row_write_cycles * cyc_ns
+    }
+
+    /// Row write energy per fold (pJ).
+    pub fn row_write_pj(&self) -> f64 {
+        self.row_write_pj_seg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_scales_mac_cost() {
+        let s = Subarray::digital_65nm(32, 32);
+        assert!((s.mac_pj_per_cell(8) / s.mac_pj_per_cell(4) - 2.0).abs() < 1e-12);
+        assert!((s.mac_read_ns(8, 1.0) / s.mac_read_ns(4, 1.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_are_65nm_class() {
+        let s = Subarray::digital_65nm(32, 32);
+        // 8-bit cell MAC in the tens-of-fJ range.
+        let pj = s.mac_pj_per_cell(8);
+        assert!(pj > 0.001 && pj < 0.1, "cell MAC {pj} pJ out of class");
+    }
+}

@@ -1,0 +1,42 @@
+//! # SATA — Sparsity-Aware Scheduling for Selective Token Attention
+//!
+//! Full-system reproduction of *SATA: Sparsity-Aware Scheduling for
+//! Selective Token Attention* (CS.AR 2026): a locality-centric dynamic
+//! scheduler for TopK selective Query-Key attention on tiled MatMul
+//! engines, plus every substrate its evaluation needs.
+//!
+//! ## Layer map (see DESIGN.md)
+//!
+//! * [`mask`]      - bit-packed selective masks, tiling, zero-skip
+//! * [`sort`]      - Algo 1: key sorting (Eq. 1 naive / Eq. 2 Psum) and
+//!   query classification with S_h concession
+//! * [`schedule`]  - Algo 2: the inter-head FSM scheduler + tiled sub-heads
+//! * [`hw`]        - hardware substrates: CIM system model (NeuroSim-
+//!   flavoured), systolic array (ScaleSIM-flavoured), scheduler RTL PPA
+//! * [`engine`]    - executes a schedule on a hardware model (Eq. 3 timing,
+//!   active-row energy), producing run reports
+//! * [`baselines`] - A3 / SpAtten / Energon / ELSA behavioural models for
+//!   the integration study (Fig. 4c)
+//! * [`trace`]     - selective-mask traces: synthetic generator calibrated
+//!   to Table I plus loaders for model-emitted masks
+//! * [`config`]    - workload + system configuration (JSON)
+//! * [`coordinator`] - the Layer-3 runtime: job queue, worker pool,
+//!   batching, backpressure, metrics
+//! * [`runtime`]   - PJRT bridge: load AOT HLO-text artifacts and execute
+//!   the Layer-2 JAX model from Rust
+//! * [`metrics`]   - reports and gain tables
+//! * [`util`]      - in-tree RNG / JSON / stats / property-test / bench
+//!   infrastructure (offline build: no external crates)
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod hw;
+pub mod mask;
+pub mod metrics;
+pub mod runtime;
+pub mod schedule;
+pub mod trace;
+pub mod sort;
+pub mod util;

@@ -1,0 +1,198 @@
+//! `sata` — CLI launcher for the SATA reproduction.
+//!
+//! Subcommands (no `clap` offline; hand-rolled parsing):
+//!
+//! ```text
+//! sata trace-gen  --workload <name> --count <n> --seed <s> --out <dir>
+//! sata schedule   --workload <name> [--seed <s>]      # Table-I stats
+//! sata simulate   --workload <name> [--traces <n>]    # Fig-4a gains
+//! sata serve      --workload <name> --jobs <n> --workers <w>
+//! sata e2e        [--artifacts <dir>]                 # PJRT end-to-end
+//! ```
+
+use std::collections::HashMap;
+
+use sata::config::{SystemConfig, WorkloadSpec};
+use sata::coordinator::{Coordinator, Job};
+use sata::engine::{gains, run_dense, run_sata, EngineOpts};
+use sata::hw::cim::CimConfig;
+use sata::hw::sched_rtl::SchedRtl;
+use sata::metrics::{render_report, schedule_stats};
+use sata::trace::synth::{gen_trace, gen_traces};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            m.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn workload(flags: &HashMap<String, String>) -> WorkloadSpec {
+    match flags.get("workload").map(|s| s.to_lowercase()).as_deref() {
+        Some("ttst") | None => WorkloadSpec::ttst(),
+        Some("kvt-tiny") | Some("kvt-deit-tiny") => WorkloadSpec::kvt_deit_tiny(),
+        Some("kvt-base") | Some("kvt-deit-base") => WorkloadSpec::kvt_deit_base(),
+        Some("drsformer") => WorkloadSpec::drsformer(),
+        Some(other) => {
+            eprintln!("unknown workload '{other}' (ttst|kvt-tiny|kvt-base|drsformer)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn usize_flag(flags: &HashMap<String, String>, key: &str, default: usize) -> usize {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    let seed = usize_flag(&flags, "seed", 1) as u64;
+
+    match cmd {
+        "trace-gen" => {
+            let spec = workload(&flags);
+            let count = usize_flag(&flags, "count", 8);
+            let out = flags.get("out").cloned().unwrap_or_else(|| "traces".into());
+            std::fs::create_dir_all(&out).expect("mkdir");
+            for (i, t) in gen_traces(&spec, count, seed).iter().enumerate() {
+                let path = format!("{out}/{}_{i:04}.json", spec.name.to_lowercase());
+                t.save(std::path::Path::new(&path)).expect("write trace");
+                println!("wrote {path}");
+            }
+        }
+        "schedule" => {
+            let spec = workload(&flags);
+            let t = gen_trace(&spec, seed);
+            let s = schedule_stats(&t.heads, spec.sf, seed);
+            println!(
+                "{}: GlobQ% {:.1} | avg S_h {:.3}{} | avg #(S_h-=1) {:.2} ({} heads)",
+                spec.name,
+                100.0 * s.glob_q_frac,
+                s.avg_sh_frac,
+                if spec.sf.is_some() { "·S_f" } else { "·N" },
+                s.avg_decrements,
+                s.heads
+            );
+        }
+        "simulate" => {
+            let spec = workload(&flags);
+            let n_traces = usize_flag(&flags, "traces", 4);
+            let cim = CimConfig::default_65nm(spec.dk);
+            let rtl = SchedRtl::tsmc65();
+            let mut thr = 0.0;
+            let mut en = 0.0;
+            for (i, t) in gen_traces(&spec, n_traces, seed).iter().enumerate() {
+                let dense = run_dense(&t.heads, &cim);
+                let sata = run_sata(
+                    &t.heads,
+                    &cim,
+                    &rtl,
+                    EngineOpts { sf: spec.sf, ..Default::default() },
+                );
+                let g = gains(&dense, &sata);
+                thr += g.throughput;
+                en += g.energy_eff;
+                if i == 0 {
+                    println!("{}", render_report("dense", &dense));
+                    println!("{}", render_report("sata ", &sata));
+                }
+            }
+            println!(
+                "{}: mean throughput gain {:.2}x, mean energy-efficiency gain {:.2}x over {n_traces} traces",
+                spec.name,
+                thr / n_traces as f64,
+                en / n_traces as f64
+            );
+        }
+        "serve" => {
+            let spec = workload(&flags);
+            let jobs = usize_flag(&flags, "jobs", 16);
+            let workers = usize_flag(&flags, "workers", 2);
+            let sys = SystemConfig::for_workload(&spec);
+            let coord = Coordinator::new(workers, 8, sys);
+            let t0 = std::time::Instant::now();
+            for (id, trace) in gen_traces(&spec, jobs, seed).into_iter().enumerate() {
+                coord.submit(Job { id, trace, sf: spec.sf });
+            }
+            let (results, metrics) = coord.drain();
+            println!(
+                "served {} jobs in {:.1} ms wall ({} workers): mean gains thr {:.2}x en {:.2}x; simulated latency {:.2} ms, energy {:.2} µJ",
+                results.len(),
+                t0.elapsed().as_secs_f64() * 1e3,
+                workers,
+                metrics.mean_throughput_gain,
+                metrics.mean_energy_gain,
+                metrics.total_latency_ns / 1e6,
+                metrics.total_energy_pj / 1e6,
+            );
+        }
+        "e2e" => {
+            let dir = flags
+                .get("artifacts")
+                .cloned()
+                .unwrap_or_else(|| "artifacts".into());
+            let dir = std::path::PathBuf::from(dir);
+            let metas =
+                sata::runtime::load_manifest(&dir).expect("manifest (run `make artifacts`)");
+            let meta = metas.iter().find(|m| m.entry == "mha").expect("mha artifact");
+            let rt = sata::runtime::Runtime::cpu().expect("pjrt cpu");
+            println!("PJRT platform: {}", rt.platform());
+            let model = rt.load(&dir, meta).expect("compile artifact");
+            let n = meta.n_tokens;
+            let dm = meta.d_model;
+            let mut rng = sata::util::rng::Rng::new(seed);
+            let gen = |len: usize, rng: &mut sata::util::rng::Rng| -> Vec<f32> {
+                (0..len).map(|_| rng.normal() as f32 * 0.5).collect()
+            };
+            let (x, wq, wk, wv, wo) = (
+                gen(n * dm, &mut rng),
+                gen(dm * dm, &mut rng),
+                gen(dm * dm, &mut rng),
+                gen(dm * dm, &mut rng),
+                gen(dm * dm, &mut rng),
+            );
+            let out = model
+                .run_mha(&[
+                    (&x, (n, dm)),
+                    (&wq, (dm, dm)),
+                    (&wk, (dm, dm)),
+                    (&wv, (dm, dm)),
+                    (&wo, (dm, dm)),
+                ])
+                .expect("execute");
+            println!(
+                "model output {:?}, {} masks extracted",
+                out.out_shape,
+                out.masks.len()
+            );
+            let cim = CimConfig::default_65nm(dm / meta.n_heads);
+            let rtl = SchedRtl::tsmc65();
+            let dense = run_dense(&out.masks, &cim);
+            let sata = run_sata(&out.masks, &cim, &rtl, EngineOpts::default());
+            let g = gains(&dense, &sata);
+            println!("{}", render_report("dense", &dense));
+            println!("{}", render_report("sata ", &sata));
+            println!(
+                "e2e gains: throughput {:.2}x, energy {:.2}x",
+                g.throughput, g.energy_eff
+            );
+        }
+        _ => {
+            println!(
+                "sata — SATA reproduction CLI\n\
+                 usage: sata <trace-gen|schedule|simulate|serve|e2e> \
+                 [--workload ttst|kvt-tiny|kvt-base|drsformer] [--seed N] …"
+            );
+        }
+    }
+}

@@ -1,0 +1,349 @@
+//! Selective mask representation — Algo 1's input `QK ∈ {0,1}^{N×N}`.
+//!
+//! Row `q` / column `k` is 1 iff query `q` attends key `k` (TopK-selected).
+//! The mask is stored **bit-packed in both orientations**:
+//!
+//! * row-major  (`rows`): fast per-query tests — classification asks
+//!   "does query q touch any of the first/last S_h *sorted* keys?"
+//! * col-major  (`cols`): fast per-key column ops — the sorter's inner loop
+//!   is binary dot-products between key columns (Eq. 2), which become
+//!   `AND` + `popcount` over packed words.
+//!
+//! Mirrors the hardware: the paper's scheduler streams mask columns through
+//! a binary dot-product engine; a 64-bit word here plays the role of a
+//! 64-lane popcount tree.
+
+pub mod tile;
+
+use crate::util::rng::Rng;
+
+/// Number of u64 words to hold `n` bits.
+#[inline]
+pub(crate) fn words_for(n: usize) -> usize {
+    n.div_ceil(64)
+}
+
+/// Bit-packed N×N selective attention mask (square; queries × keys).
+#[derive(Clone, PartialEq, Eq)]
+pub struct SelectiveMask {
+    n: usize,
+    w: usize,             // words per row/col
+    rows: Vec<u64>,       // n * w words; bit k of row q = QK[q][k]
+    cols: Vec<u64>,       // n * w words; bit q of col k = QK[q][k]
+}
+
+impl std::fmt::Debug for SelectiveMask {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "SelectiveMask(n={})", self.n)?;
+        for q in 0..self.n.min(32) {
+            let row: String =
+                (0..self.n.min(64)).map(|k| if self.get(q, k) { '1' } else { '.' }).collect();
+            writeln!(f, "  {row}")?;
+        }
+        Ok(())
+    }
+}
+
+impl SelectiveMask {
+    /// All-zero mask.
+    pub fn zeros(n: usize) -> Self {
+        assert!(n > 0, "empty mask");
+        let w = words_for(n);
+        SelectiveMask { n, w, rows: vec![0; n * w], cols: vec![0; n * w] }
+    }
+
+    /// Build from a dense row-major `bool` matrix (test/interop helper).
+    pub fn from_dense(dense: &[Vec<bool>]) -> Self {
+        let n = dense.len();
+        let mut m = Self::zeros(n);
+        for (q, row) in dense.iter().enumerate() {
+            assert_eq!(row.len(), n, "mask must be square");
+            for (k, &v) in row.iter().enumerate() {
+                if v {
+                    m.set(q, k);
+                }
+            }
+        }
+        m
+    }
+
+    /// Build from per-query selected-key index lists (TopK output layout —
+    /// what the L2 model's `masks` tensor reduces to).
+    pub fn from_topk_indices(n: usize, topk: &[Vec<usize>]) -> Self {
+        assert_eq!(topk.len(), n);
+        let mut m = Self::zeros(n);
+        for (q, ks) in topk.iter().enumerate() {
+            for &k in ks {
+                assert!(k < n, "key index {k} out of range n={n}");
+                m.set(q, k);
+            }
+        }
+        m
+    }
+
+    /// Build from a dense f32 0/1 buffer in row-major order (the layout the
+    /// PJRT runtime reads back from the model's `masks` output).
+    pub fn from_f32_rowmajor(n: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), n * n, "mask buffer must be n*n");
+        let mut m = Self::zeros(n);
+        for q in 0..n {
+            for k in 0..n {
+                if data[q * n + k] > 0.5 {
+                    m.set(q, k);
+                }
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, q: usize, k: usize) -> bool {
+        debug_assert!(q < self.n && k < self.n);
+        self.rows[q * self.w + k / 64] >> (k % 64) & 1 == 1
+    }
+
+    /// Set QK[q][k] = 1 (keeps both orientations coherent).
+    #[inline]
+    pub fn set(&mut self, q: usize, k: usize) {
+        assert!(q < self.n && k < self.n, "set({q},{k}) out of range {}", self.n);
+        self.rows[q * self.w + k / 64] |= 1 << (k % 64);
+        self.cols[k * self.w + q / 64] |= 1 << (q % 64);
+    }
+
+    /// Packed words of row `q` (bits over keys).
+    #[inline]
+    pub fn row_words(&self, q: usize) -> &[u64] {
+        &self.rows[q * self.w..(q + 1) * self.w]
+    }
+
+    /// Packed words of column `k` (bits over queries).
+    #[inline]
+    pub fn col_words(&self, k: usize) -> &[u64] {
+        &self.cols[k * self.w..(k + 1) * self.w]
+    }
+
+    /// Selected-key count of query `q` (row popcount). For a TopK mask this
+    /// equals K for every row — the "low variance of arithmetic intensity"
+    /// that justifies Q-stationary scheduling (Sec. III-C).
+    pub fn row_popcount(&self, q: usize) -> usize {
+        self.row_words(q).iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Popularity of key `k` (column popcount) — Ks "behave otherwise".
+    pub fn col_popcount(&self, k: usize) -> usize {
+        self.col_words(k).iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Total selected pairs (= MAC vector ops the selective workload needs).
+    pub fn total_selected(&self) -> usize {
+        self.rows.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Binary dot product of key columns `a` and `b` over queries —
+    /// the hardware dot-product engine primitive (Eq. 2).
+    #[inline]
+    pub fn col_dot(&self, a: usize, b: usize) -> usize {
+        let (wa, wb) = (self.col_words(a), self.col_words(b));
+        wa.iter().zip(wb).map(|(x, y)| (x & y).count_ones() as usize).sum()
+    }
+
+    /// Does query `q` touch any key in `keys`?
+    pub fn row_touches(&self, q: usize, keys: &[usize]) -> bool {
+        keys.iter().any(|&k| self.get(q, k))
+    }
+
+    /// Pack an arbitrary key set into row-word layout (for fast repeated
+    /// `row intersects set` tests — the classification hot path).
+    pub fn pack_key_set(&self, keys: &[usize]) -> Vec<u64> {
+        let mut w = vec![0u64; self.w];
+        for &k in keys {
+            debug_assert!(k < self.n);
+            w[k / 64] |= 1 << (k % 64);
+        }
+        w
+    }
+
+    /// Does query `q`'s row intersect a packed key set? O(N/64) words.
+    #[inline]
+    pub fn row_intersects(&self, q: usize, packed: &[u64]) -> bool {
+        self.row_words(q).iter().zip(packed).any(|(r, w)| r & w != 0)
+    }
+
+    /// Random TopK mask: each query selects `k` distinct keys uniformly.
+    /// (Worst-case locality — useful as an adversarial workload.)
+    pub fn random_topk(n: usize, k: usize, rng: &mut Rng) -> Self {
+        assert!(k <= n);
+        let mut m = Self::zeros(n);
+        for q in 0..n {
+            for idx in rng.sample_indices(n, k) {
+                m.set(q, idx);
+            }
+        }
+        m
+    }
+
+    /// Extract the sub-mask for query fold `qf` × key fold `kf` with fold
+    /// size `sf` (Sec. III-D tiling). Out-of-range tail tokens pad to zero
+    /// rows/cols, which zero-skip then removes.
+    pub fn tile(&self, qf: usize, kf: usize, sf: usize) -> SelectiveMask {
+        let mut t = SelectiveMask::zeros(sf);
+        for dq in 0..sf {
+            let q = qf * sf + dq;
+            if q >= self.n {
+                break;
+            }
+            for dk in 0..sf {
+                let k = kf * sf + dk;
+                if k >= self.n {
+                    break;
+                }
+                if self.get(q, k) {
+                    t.set(dq, dk);
+                }
+            }
+        }
+        t
+    }
+
+    /// Rebuild the column-major half from rows (consistency check helper).
+    #[cfg(test)]
+    fn cols_from_rows(&self) -> Vec<u64> {
+        let mut cols = vec![0u64; self.n * self.w];
+        for q in 0..self.n {
+            for k in 0..self.n {
+                if self.get(q, k) {
+                    cols[k * self.w + q / 64] |= 1 << (q % 64);
+                }
+            }
+        }
+        cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut m = SelectiveMask::zeros(100);
+        m.set(3, 97);
+        m.set(99, 0);
+        assert!(m.get(3, 97) && m.get(99, 0));
+        assert!(!m.get(3, 96) && !m.get(0, 0));
+    }
+
+    #[test]
+    fn orientations_stay_coherent() {
+        check("rows/cols coherence", 50, |rng| {
+            let n = 1 + rng.gen_range(130);
+            let k = 1 + rng.gen_range(n);
+            let m = SelectiveMask::random_topk(n, k, rng);
+            if m.cols != m.cols_from_rows() {
+                return Err(format!("cols desynced for n={n} k={k}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn random_topk_row_sums_exact() {
+        check("topk row sums", 30, |rng| {
+            let n = 2 + rng.gen_range(120);
+            let k = 1 + rng.gen_range(n);
+            let m = SelectiveMask::random_topk(n, k, rng);
+            for q in 0..n {
+                if m.row_popcount(q) != k {
+                    return Err(format!("row {q} popcount != {k}"));
+                }
+            }
+            if m.total_selected() != n * k {
+                return Err("total != n*k".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn col_dot_matches_naive() {
+        check("col_dot vs naive", 40, |rng| {
+            let n = 2 + rng.gen_range(100);
+            let k = 1 + rng.gen_range(n);
+            let m = SelectiveMask::random_topk(n, k, rng);
+            let a = rng.gen_range(n);
+            let b = rng.gen_range(n);
+            let naive =
+                (0..n).filter(|&q| m.get(q, a) && m.get(q, b)).count();
+            if m.col_dot(a, b) != naive {
+                return Err(format!("col_dot({a},{b}) mismatch"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn from_dense_and_from_topk_agree() {
+        let n = 8;
+        let idx = vec![
+            vec![0, 1], vec![1, 2], vec![2, 3], vec![3, 4],
+            vec![4, 5], vec![5, 6], vec![6, 7], vec![7, 0],
+        ];
+        let a = SelectiveMask::from_topk_indices(n, &idx);
+        let dense: Vec<Vec<bool>> = (0..n)
+            .map(|q| (0..n).map(|k| idx[q].contains(&k)).collect())
+            .collect();
+        let b = SelectiveMask::from_dense(&dense);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn from_f32_rowmajor_parses_model_output() {
+        let n = 4;
+        let mut buf = vec![0.0f32; 16];
+        buf[0 * 4 + 1] = 1.0;
+        buf[3 * 4 + 2] = 1.0;
+        let m = SelectiveMask::from_f32_rowmajor(n, &buf);
+        assert!(m.get(0, 1) && m.get(3, 2));
+        assert_eq!(m.total_selected(), 2);
+    }
+
+    #[test]
+    fn tile_extracts_subblock() {
+        let mut m = SelectiveMask::zeros(10);
+        m.set(5, 7);
+        m.set(9, 9);
+        let t = m.tile(1, 1, 5); // queries 5..10, keys 5..10
+        assert!(t.get(0, 2)); // (5,7)
+        assert!(t.get(4, 4)); // (9,9)
+        assert_eq!(t.total_selected(), 2);
+    }
+
+    #[test]
+    fn tile_pads_out_of_range_with_zeros() {
+        let m = SelectiveMask::random_topk(10, 3, &mut Rng::new(0));
+        let t = m.tile(1, 1, 8); // queries 8..16 — rows 10..16 out of range
+        for q in 2..8 {
+            assert_eq!(t.row_popcount(q), 0, "padded row {q} must be zero");
+        }
+    }
+
+    #[test]
+    fn row_touches() {
+        let mut m = SelectiveMask::zeros(6);
+        m.set(2, 4);
+        assert!(m.row_touches(2, &[0, 4]));
+        assert!(!m.row_touches(2, &[0, 1, 3]));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn set_out_of_range_panics() {
+        SelectiveMask::zeros(4).set(0, 4);
+    }
+}

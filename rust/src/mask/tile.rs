@@ -1,0 +1,198 @@
+//! Tiling + zero-skip (Sec. III-D): scale SATA to long sequences.
+//!
+//! A head's N×N mask is cut into an `F×F` grid of `S_f×S_f` sub-masks
+//! ("sub-heads"). Each tile schedules like an independent head, but — unlike
+//! the full head, where TopK guarantees every query/key is live — a tile may
+//! contain queries that select nothing and keys nobody selects. The
+//! **zero-skip** unit detects those with row/column-wise reduction (the
+//! paper's "reduction AND"; over selection bits this is an OR-reduce ==
+//! popcount>0 test) and drops them before they enter the FIFOs.
+
+use super::SelectiveMask;
+
+/// One tile of a head's mask plus its zero-skip survivor lists.
+#[derive(Clone, Debug)]
+pub struct MaskTile {
+    /// Fold coordinates within the head (query fold, key fold).
+    pub qf: usize,
+    pub kf: usize,
+    /// Fold size S_f.
+    pub sf: usize,
+    /// The S_f×S_f sub-mask (local indices).
+    pub mask: SelectiveMask,
+    /// Local query indices with ≥1 selected key in this tile.
+    pub live_q: Vec<usize>,
+    /// Local key indices selected by ≥1 query in this tile.
+    pub live_k: Vec<usize>,
+}
+
+impl MaskTile {
+    /// Fraction of rows+cols removed by zero-skip (the "trivial operand"
+    /// fraction of Sec. IV-C; >50% means zero-skip dominates the benefit).
+    pub fn skip_fraction(&self) -> f64 {
+        let total = 2.0 * self.sf as f64;
+        let live = (self.live_q.len() + self.live_k.len()) as f64;
+        (total - live) / total
+    }
+
+    /// True when the entire tile is empty (skipped outright).
+    pub fn is_empty(&self) -> bool {
+        self.live_q.is_empty()
+    }
+}
+
+/// Cut `mask` into ceil(N/sf)² tiles with zero-skip metadata.
+///
+/// Tail tiles (when `sf ∤ N`) are padded with zero rows/cols, which
+/// zero-skip removes again — so padding never costs compute.
+pub fn tile_mask(mask: &SelectiveMask, sf: usize) -> Vec<MaskTile> {
+    assert!(sf > 0, "fold size must be positive");
+    let n = mask.n();
+    let folds = n.div_ceil(sf);
+    let mut out = Vec::with_capacity(folds * folds);
+    for qf in 0..folds {
+        for kf in 0..folds {
+            let sub = mask.tile(qf, kf, sf);
+            let live_q: Vec<usize> =
+                (0..sf).filter(|&q| sub.row_popcount(q) > 0).collect();
+            let live_k: Vec<usize> =
+                (0..sf).filter(|&k| sub.col_popcount(k) > 0).collect();
+            out.push(MaskTile { qf, kf, sf, mask: sub, live_q, live_k });
+        }
+    }
+    out
+}
+
+/// Zero-skip statistics across a tiling (reported by the scaling bench).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SkipStats {
+    pub tiles: usize,
+    pub empty_tiles: usize,
+    pub total_rows: usize,
+    pub skipped_rows: usize,
+    pub total_cols: usize,
+    pub skipped_cols: usize,
+}
+
+impl SkipStats {
+    pub fn skip_fraction(&self) -> f64 {
+        let tot = (self.total_rows + self.total_cols) as f64;
+        if tot == 0.0 {
+            return 0.0;
+        }
+        (self.skipped_rows + self.skipped_cols) as f64 / tot
+    }
+}
+
+/// Aggregate zero-skip statistics for a tiling.
+pub fn skip_stats(tiles: &[MaskTile]) -> SkipStats {
+    let mut s = SkipStats { tiles: tiles.len(), ..Default::default() };
+    for t in tiles {
+        s.total_rows += t.sf;
+        s.total_cols += t.sf;
+        s.skipped_rows += t.sf - t.live_q.len();
+        s.skipped_cols += t.sf - t.live_k.len();
+        if t.is_empty() {
+            s.empty_tiles += 1;
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tiling_covers_all_selected_pairs() {
+        check("tiling preserves selection", 30, |rng| {
+            let n = 8 + rng.gen_range(120);
+            let k = 1 + rng.gen_range(n / 2);
+            let sf = 1 + rng.gen_range(n);
+            let m = SelectiveMask::random_topk(n, k, rng);
+            let tiles = tile_mask(&m, sf);
+            let sum: usize = tiles.iter().map(|t| t.mask.total_selected()).sum();
+            if sum != m.total_selected() {
+                return Err(format!(
+                    "tiles hold {sum} pairs, mask has {} (n={n} sf={sf})",
+                    m.total_selected()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_skip_lists_are_exact() {
+        check("zero-skip exactness", 30, |rng| {
+            let n = 8 + rng.gen_range(64);
+            let k = 1 + rng.gen_range(n / 2);
+            let sf = 2 + rng.gen_range(n / 2);
+            let m = SelectiveMask::random_topk(n, k, rng);
+            for t in tile_mask(&m, sf) {
+                for q in 0..sf {
+                    let live = t.live_q.contains(&q);
+                    if live != (t.mask.row_popcount(q) > 0) {
+                        return Err(format!("live_q wrong at tile ({},{})", t.qf, t.kf));
+                    }
+                }
+                for kk in 0..sf {
+                    let live = t.live_k.contains(&kk);
+                    if live != (t.mask.col_popcount(kk) > 0) {
+                        return Err(format!("live_k wrong at tile ({},{})", t.qf, t.kf));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn full_size_fold_is_single_tile_no_skip() {
+        let mut rng = Rng::new(1);
+        let n = 32;
+        let m = SelectiveMask::random_topk(n, 8, &mut rng);
+        let tiles = tile_mask(&m, n);
+        assert_eq!(tiles.len(), 1);
+        // TopK over the whole head: every query is live; keys may not be.
+        assert_eq!(tiles[0].live_q.len(), n);
+    }
+
+    #[test]
+    fn skip_stats_aggregate() {
+        let mut m = SelectiveMask::zeros(8);
+        m.set(0, 0); // only one live pair; everything else skippable
+        let tiles = tile_mask(&m, 4);
+        let s = skip_stats(&tiles);
+        assert_eq!(s.tiles, 4);
+        assert_eq!(s.empty_tiles, 3);
+        assert_eq!(s.total_rows, 16);
+        assert_eq!(s.skipped_rows, 15);
+        assert!(s.skip_fraction() > 0.9);
+    }
+
+    #[test]
+    fn banded_mask_yields_empty_offdiagonal_tiles() {
+        // Perfectly local mask: query q selects keys in its own fold only.
+        let n = 16;
+        let sf = 4;
+        let idx: Vec<Vec<usize>> = (0..n)
+            .map(|q| {
+                let base = (q / sf) * sf;
+                (base..base + sf).collect()
+            })
+            .collect();
+        let m = SelectiveMask::from_topk_indices(n, &idx);
+        let tiles = tile_mask(&m, sf);
+        for t in &tiles {
+            if t.qf == t.kf {
+                assert!(!t.is_empty());
+                assert_eq!(t.skip_fraction(), 0.0);
+            } else {
+                assert!(t.is_empty(), "off-diagonal tile must be empty");
+            }
+        }
+    }
+}

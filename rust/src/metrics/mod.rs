@@ -1,0 +1,204 @@
+//! Reports and paper-style tables: gain aggregation, Table I statistics,
+//! BERT runtime breakdown (Fig. 4b), and fixed-width text rendering used
+//! by the benches and the CLI.
+
+use crate::engine::RunReport;
+use crate::mask::SelectiveMask;
+use crate::sort::classify::{classify, QType};
+use crate::sort::sort_keys;
+use crate::util::stats;
+
+/// Post-schedule statistics for one workload (Table I right half).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScheduleStats {
+    pub glob_q_frac: f64,
+    /// Average S_h as a fraction of N (or of the tile size in tiled mode).
+    pub avg_sh_frac: f64,
+    pub avg_decrements: f64,
+    pub heads: usize,
+}
+
+/// Run Algo 1 over a set of head masks and aggregate Table I statistics.
+///
+/// In tiled mode (`sf = Some(..)`) statistics are collected per tile (the
+/// paper's S_h column for tiled workloads is a per-sub-head figure), but
+/// GlobQ% stays head-scoped, matching Table I.
+pub fn schedule_stats(masks: &[SelectiveMask], sf: Option<usize>, seed: u64) -> ScheduleStats {
+    let mut glob_fracs = Vec::new();
+    let mut sh_fracs = Vec::new();
+    let mut decs = Vec::new();
+
+    for (h, m) in masks.iter().enumerate() {
+        let n = m.n();
+        let ord = sort_keys(m, seed ^ h as u64);
+        let c = classify(m, &ord, n / 2);
+        glob_fracs.push(c.count(QType::Glob) as f64 / n as f64);
+
+        match sf {
+            None => {
+                sh_fracs.push(c.s_h as f64 / n as f64);
+                decs.push(c.decrements as f64);
+            }
+            Some(sf) => {
+                // per-tile statistics over live tiles
+                let ts = crate::schedule::tiled::schedule_tiled(m, sf, 0.5, seed);
+                for t in &ts.tiles {
+                    let msize = t.global_q.len().max(t.global_k.len()).max(1);
+                    let sub = m.tile(t.qf, t.kf, sf);
+                    let live_q: Vec<usize> =
+                        (0..sf).filter(|&q| sub.row_popcount(q) > 0).collect();
+                    let live_k: Vec<usize> =
+                        (0..sf).filter(|&k| sub.col_popcount(k) > 0).collect();
+                    // rebuild compressed tile plan to get its classification
+                    let mut cm = SelectiveMask::zeros(msize);
+                    for (ci, &q) in live_q.iter().enumerate() {
+                        for (cj, &k) in live_k.iter().enumerate() {
+                            if sub.get(q, k) {
+                                cm.set(ci, cj);
+                            }
+                        }
+                    }
+                    let co = sort_keys(&cm, seed);
+                    let cc = classify(&cm, &co, msize / 2);
+                    sh_fracs.push(cc.s_h as f64 / sf as f64);
+                    decs.push(cc.decrements as f64);
+                }
+            }
+        }
+    }
+    ScheduleStats {
+        glob_q_frac: stats::mean(&glob_fracs),
+        avg_sh_frac: stats::mean(&sh_fracs),
+        avg_decrements: stats::mean(&decs),
+        heads: masks.len(),
+    }
+}
+
+/// One row of a rendered gain table.
+#[derive(Clone, Debug)]
+pub struct GainRow {
+    pub name: String,
+    pub throughput: f64,
+    pub energy_eff: f64,
+    pub paper_throughput: f64,
+    pub paper_energy: f64,
+}
+
+/// Render a Fig. 4a-style table (measured vs paper) as text.
+pub fn render_gain_table(rows: &[GainRow]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<16} {:>10} {:>12} {:>12} {:>14}\n",
+        "workload", "thr gain", "paper thr", "energy gain", "paper energy"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<16} {:>9.2}x {:>11.2}x {:>11.2}x {:>13.2}x\n",
+            r.name, r.throughput, r.paper_throughput, r.energy_eff, r.paper_energy
+        ));
+    }
+    let thr: Vec<f64> = rows.iter().map(|r| r.throughput).collect();
+    let en: Vec<f64> = rows.iter().map(|r| r.energy_eff).collect();
+    s.push_str(&format!(
+        "{:<16} {:>9.2}x {:>12} {:>11.2}x\n",
+        "geomean",
+        stats::geomean(&thr),
+        "",
+        stats::geomean(&en)
+    ));
+    s
+}
+
+/// Fig. 4b: normalized BERT-Base self-attention runtime with SATA applied
+/// to the dynamic (QK + AV) portion.
+///
+/// Published profiles (SpAtten/Energon-style breakdowns at N=384) put the
+/// dynamic MatMuls at roughly a third of self-attention runtime, the rest
+/// being projections + FFN-adjacent static MatMul and softmax/misc.
+#[derive(Clone, Copy, Debug)]
+pub struct BertBreakdown {
+    pub static_matmul: f64,
+    pub dynamic_matmul: f64,
+    pub softmax_misc: f64,
+}
+
+impl BertBreakdown {
+    pub fn bert_base() -> Self {
+        // normalized to 1.0 total
+        BertBreakdown { static_matmul: 0.52, dynamic_matmul: 0.36, softmax_misc: 0.12 }
+    }
+
+    /// Total runtime after accelerating the dynamic portion by `gain`.
+    pub fn with_dynamic_gain(&self, gain: f64) -> f64 {
+        self.static_matmul + self.dynamic_matmul / gain + self.softmax_misc
+    }
+}
+
+/// Pretty-print an engine report (CLI + examples).
+pub fn render_report(name: &str, r: &RunReport) -> String {
+    format!(
+        "{name}: latency {:.3} µs | energy {:.3} nJ (mac {:.1}% fetch {:.1}% qload {:.1}% sched {:.2}% index {:.1}%) | util {:.1}% | {} K-ops, {} Q-loads, {} steps",
+        r.latency_ns / 1e3,
+        r.total_pj() / 1e3,
+        100.0 * r.mac_pj / r.total_pj(),
+        100.0 * r.k_fetch_pj / r.total_pj(),
+        100.0 * r.q_load_pj / r.total_pj(),
+        100.0 * r.sched_pj / r.total_pj(),
+        100.0 * r.index_pj / r.total_pj(),
+        100.0 * r.utilization(),
+        r.k_vec_ops,
+        r.q_loads,
+        r.steps,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadSpec;
+    use crate::trace::synth::gen_trace;
+
+    #[test]
+    fn ttst_stats_land_near_table1() {
+        let spec = WorkloadSpec::ttst();
+        let t = gen_trace(&spec, 11);
+        let s = schedule_stats(&t.heads, None, 1);
+        // Table I: GlobQ 24.2%, avg S_h 0.463N, avg decr 1.55.
+        assert!((0.05..0.5).contains(&s.glob_q_frac), "glob {:.3}", s.glob_q_frac);
+        // Paper reports 0.463N on real TTST traces; synthetic traces sort
+        // less cleanly (documented in EXPERIMENTS.md E1).
+        assert!((0.10..0.50).contains(&s.avg_sh_frac), "sh {:.3}", s.avg_sh_frac);
+        assert!(s.avg_decrements < 12.0, "decr {:.2}", s.avg_decrements);
+    }
+
+    #[test]
+    fn tiled_stats_produce_per_tile_sh() {
+        let spec = WorkloadSpec::drsformer();
+        let t = gen_trace(&spec, 3);
+        let s = schedule_stats(&t.heads, spec.sf, 1);
+        assert!(s.avg_sh_frac > 0.0 && s.avg_sh_frac <= 0.5);
+    }
+
+    #[test]
+    fn gain_table_renders_all_rows() {
+        let rows = vec![GainRow {
+            name: "TTST".into(),
+            throughput: 1.42,
+            energy_eff: 1.33,
+            paper_throughput: 1.47,
+            paper_energy: 1.81,
+        }];
+        let out = render_gain_table(&rows);
+        assert!(out.contains("TTST") && out.contains("geomean"));
+    }
+
+    #[test]
+    fn bert_breakdown_normalized_and_bounded() {
+        let b = BertBreakdown::bert_base();
+        let total = b.static_matmul + b.dynamic_matmul + b.softmax_misc;
+        assert!((total - 1.0).abs() < 1e-9);
+        // Amdahl: even infinite dynamic gain can't beat the static floor.
+        assert!(b.with_dynamic_gain(1e9) > b.static_matmul);
+        assert!(b.with_dynamic_gain(1.5) < 1.0);
+    }
+}

@@ -1,0 +1,586 @@
+//! Algorithm 2: **sparsity-aware inter-head scheduling** (Sec. III-C).
+//!
+//! SATA keeps Qs stationary (constant per-query arithmetic intensity under
+//! TopK) and streams sorted Ks. The FSM walks local heads and pairs each
+//! head's K-MAC phases with Q-load work of the *same or next* head, so the
+//! data-transfer network and the array write ports are both busy:
+//!
+//! ```text
+//!  init    : load major Qs of head 0                (array-write only)
+//!  intoHD  : MAC eff-first S_h Ks  ∥ load minor Qs   (major Qs suffice:
+//!            minor Qs provably don't select these keys)
+//!  midstHD : MAC middle Ks [S_h, N−S_h) against all Qs (skipped when
+//!            S_h == N/2 — "perfectly sorted")
+//!  outtaHD : MAC eff-last S_h Ks   ∥ load next head's major Qs
+//!            (dominant-direction Qs retire *early* here — they provably
+//!            don't select these keys — freeing array capacity)
+//!  wrapGLOB: conventional load-then-MAC for heads stuck in GLOB state
+//! ```
+//!
+//! "eff" = the per-head effective key order: `Kid` for HEAD-type heads,
+//! `Kid` reversed for TAIL-type heads (a TAIL-dominant head consumes the
+//! sorted spectrum from the other end — same FSM, mirrored sequence).
+//!
+//! The correctness contract (tested as a property): **whenever key k of
+//! head h is MAC'd, every query that selects (h, q, k) is resident** —
+//! loaded and not yet retired. This is what "without sacrificing model
+//! accuracy" means operationally.
+
+pub mod tiled;
+
+use crate::mask::SelectiveMask;
+use crate::sort::classify::{classify, Classified, HeadType, QType};
+use crate::sort::{sort_keys, KeyOrder};
+
+/// FSM phase that emitted a step (kept for reporting/debug).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Init,
+    IntoHd,
+    MidstHd,
+    OuttaHd,
+    WrapGlobLoad,
+    WrapGlobMac,
+    /// Baseline-only phases (sequential load / MAC, no overlap).
+    SeqLoad,
+    SeqMac,
+}
+
+/// One scheduled time step: a batch of K MACs overlapped with Q loads.
+/// Timing follows Eq. 3 (see `engine`); energy follows the active-row model.
+#[derive(Clone, Debug)]
+pub struct Step {
+    /// Head whose keys are MAC'd this step (also the load target for
+    /// `Init`/`WrapGlobLoad`, where `k_macs` is empty).
+    pub head: usize,
+    pub phase: Phase,
+    /// Original key indices MAC'd this step (sorted-order slice).
+    pub k_macs: Vec<usize>,
+    /// Q rows the MACs broadcast to (dense-within-active-tiles energy
+    /// model, Sec. IV-A-b: bypassed Qs don't burn MAC energy).
+    pub active_q: usize,
+    /// `(head, q)` loads overlapped into this step.
+    pub q_loads: Vec<(usize, usize)>,
+    /// `(head, q)` retirements at the end of this step.
+    pub q_retires: Vec<(usize, usize)>,
+    /// True selected (q, k) pairs covered (sparse-MAC accounting).
+    pub selected_macs: usize,
+}
+
+impl Step {
+    /// `x` of Eq. 3: K vectors read+MAC'd this step.
+    pub fn x(&self) -> usize {
+        self.k_macs.len()
+    }
+    /// `y` of Eq. 3: Q vectors loaded this step.
+    pub fn y(&self) -> usize {
+        self.q_loads.len()
+    }
+}
+
+/// Sorted + classified plan for one head — the unit the scheduler consumes.
+#[derive(Clone, Debug)]
+pub struct HeadPlan {
+    pub head: usize,
+    pub mask: SelectiveMask,
+    pub order: KeyOrder,
+    pub class: Classified,
+}
+
+impl HeadPlan {
+    /// Run Algo 1 (Psum sort + classification) on one head's mask.
+    pub fn build(head: usize, mask: SelectiveMask, theta: usize, seed: u64) -> Self {
+        let order = sort_keys(&mask, seed ^ head as u64);
+        let class = classify(&mask, &order, theta);
+        HeadPlan { head, mask, order, class }
+    }
+
+    /// Effective key order: TAIL-type heads consume the spectrum reversed.
+    pub fn effective_kid(&self) -> Vec<usize> {
+        match self.class.ht {
+            HeadType::Tail => self.order.kid.iter().rev().copied().collect(),
+            _ => self.order.kid.clone(),
+        }
+    }
+
+    /// Is this head schedulable by the local FSM (vs wrapGLOB)?
+    ///
+    /// A head is local if it escaped GLOB state with a usable heavy size.
+    /// `s_h == 0` degenerates to the conventional flow, so it wraps.
+    pub fn is_local(&self) -> bool {
+        self.class.ht != HeadType::Glob && self.class.s_h > 0
+    }
+
+    fn n(&self) -> usize {
+        self.mask.n()
+    }
+
+    fn selected_for_keys(&self, keys: &[usize]) -> usize {
+        keys.iter().map(|&k| self.mask.col_popcount(k)).sum()
+    }
+}
+
+/// A complete schedule over a set of heads.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub steps: Vec<Step>,
+    /// Token count N (uniform across heads of one layer).
+    pub n: usize,
+    pub n_heads: usize,
+}
+
+impl Schedule {
+    /// Flattened Q-load sequence (Algo 2's `QSeq`).
+    pub fn q_seq(&self) -> Vec<(usize, usize)> {
+        self.steps.iter().flat_map(|s| s.q_loads.iter().copied()).collect()
+    }
+
+    /// Flattened K-MAC sequence (Algo 2's `KSeq`) as `(head, key)`.
+    pub fn k_seq(&self) -> Vec<(usize, usize)> {
+        self.steps
+            .iter()
+            .flat_map(|s| s.k_macs.iter().map(move |&k| (s.head, k)))
+            .collect()
+    }
+
+    /// Total selected MAC vector-ops covered.
+    pub fn total_selected_macs(&self) -> usize {
+        self.steps.iter().map(|s| s.selected_macs).sum()
+    }
+
+    /// Peak number of resident Q vectors (array/buffer pressure), by replay.
+    pub fn peak_resident_q(&self) -> usize {
+        let mut live = 0usize;
+        let mut peak = 0usize;
+        for s in &self.steps {
+            live += s.q_loads.len();
+            peak = peak.max(live);
+            live -= s.q_retires.len();
+        }
+        peak
+    }
+}
+
+/// Build the SATA schedule (Algo 2) over per-head plans.
+///
+/// Local heads run through the overlapped FSM in the given order; GLOB
+/// heads are deferred to the end and wrapped conventionally. The first
+/// local head's major-Q load is the lone non-overlapped `init` step.
+pub fn schedule_sata(plans: &[HeadPlan]) -> Schedule {
+    assert!(!plans.is_empty(), "no heads to schedule");
+    let n = plans[0].n();
+    let mut steps = Vec::new();
+
+    let local: Vec<&HeadPlan> = plans.iter().filter(|p| p.is_local()).collect();
+    let glob: Vec<&HeadPlan> = plans.iter().filter(|p| !p.is_local()).collect();
+
+    for (li, p) in local.iter().enumerate() {
+        let hn = p.n(); // per-head size (tiled sub-heads vary)
+        let s_h = p.class.s_h;
+        let kid = p.effective_kid();
+        let major = p.class.major_queries();
+        let minor = p.class.minor_queries();
+        let dominant = match p.class.ht {
+            HeadType::Tail => p.class.queries(QType::Tail),
+            _ => p.class.queries(QType::Head),
+        };
+        let non_dominant: Vec<usize> = {
+            // minor + GLOB (everything still resident after early retire)
+            let mut v = minor.clone();
+            v.extend(p.class.queries(QType::Glob));
+            v
+        };
+
+        if li == 0 {
+            // init: nothing to overlap with yet.
+            steps.push(Step {
+                head: p.head,
+                phase: Phase::Init,
+                k_macs: vec![],
+                active_q: 0,
+                q_loads: major.iter().map(|&q| (p.head, q)).collect(),
+                q_retires: vec![],
+                selected_macs: 0,
+            });
+        }
+
+        // intoHD: first S_h effective Ks ∥ minor-Q loads.
+        let phase1: Vec<usize> = kid[..s_h].to_vec();
+        let sel1 = p.selected_for_keys(&phase1);
+        steps.push(Step {
+            head: p.head,
+            phase: Phase::IntoHd,
+            active_q: major.len(),
+            selected_macs: sel1,
+            k_macs: phase1,
+            q_loads: minor.iter().map(|&q| (p.head, q)).collect(),
+            q_retires: vec![],
+        });
+
+        // midstHD: middle Ks against all Qs (absent when S_h == N/2).
+        if hn > 2 * s_h {
+            let mid: Vec<usize> = kid[s_h..hn - s_h].to_vec();
+            let selm = p.selected_for_keys(&mid);
+            // dominant-direction Qs retire after the middle band: they
+            // provably don't select the trailing S_h effective keys.
+            steps.push(Step {
+                head: p.head,
+                phase: Phase::MidstHd,
+                active_q: hn,
+                selected_macs: selm,
+                k_macs: mid,
+                q_loads: vec![],
+                q_retires: dominant.iter().map(|&q| (p.head, q)).collect(),
+            });
+        }
+
+        // outtaHD: last S_h effective Ks ∥ next local head's major Qs.
+        let phase3: Vec<usize> = kid[hn - s_h..].to_vec();
+        let sel3 = p.selected_for_keys(&phase3);
+        let next_loads: Vec<(usize, usize)> = match local.get(li + 1) {
+            Some(np) => np.class.major_queries().iter().map(|&q| (np.head, q)).collect(),
+            // last local head: overlap the first GLOB head's full load
+            None => glob
+                .first()
+                .map(|gp| (0..gp.n()).map(|q| (gp.head, q)).collect())
+                .unwrap_or_default(),
+        };
+        let mut retires: Vec<(usize, usize)> =
+            non_dominant.iter().map(|&q| (p.head, q)).collect();
+        if hn <= 2 * s_h {
+            // no midstHD step happened; dominant Qs retire here instead
+            retires.extend(dominant.iter().map(|&q| (p.head, q)));
+        }
+        steps.push(Step {
+            head: p.head,
+            phase: Phase::OuttaHd,
+            active_q: hn - dominant.len(),
+            selected_macs: sel3,
+            k_macs: phase3,
+            q_loads: next_loads,
+            q_retires: retires,
+        });
+    }
+
+    // wrapGLOB: conventional flow for heads that never escaped GLOB.
+    for (gi, p) in glob.iter().enumerate() {
+        let gn = p.n();
+        // Loads are overlapped into the previous MAC step for every GLOB
+        // head except the very first when there were no local heads.
+        let load_overlapped = gi > 0 || !local.is_empty();
+        if !load_overlapped {
+            steps.push(Step {
+                head: p.head,
+                phase: Phase::WrapGlobLoad,
+                k_macs: vec![],
+                active_q: 0,
+                q_loads: (0..gn).map(|q| (p.head, q)).collect(),
+                q_retires: vec![],
+                selected_macs: 0,
+            });
+        }
+        let keys: Vec<usize> = (0..gn).collect();
+        let sel = p.selected_for_keys(&keys);
+        // overlap the *next* GLOB head's loads into this MAC step
+        let next_loads: Vec<(usize, usize)> = glob
+            .get(gi + 1)
+            .map(|np| (0..np.n()).map(|q| (np.head, q)).collect())
+            .unwrap_or_default();
+        steps.push(Step {
+            head: p.head,
+            phase: Phase::WrapGlobMac,
+            active_q: gn,
+            selected_macs: sel,
+            k_macs: keys,
+            q_loads: next_loads,
+            q_retires: (0..gn).map(|q| (p.head, q)).collect(),
+        });
+    }
+
+    Schedule { steps, n, n_heads: plans.len() }
+}
+
+/// Baseline: strictly sequential per-head load-then-MAC, original key
+/// order, no overlap, no early retirement.
+///
+/// * `selective = false` → the dense NeuroSim-style engine (all N×N MACs).
+/// * `selective = true`  → "gated pruning": MACs only on selected pairs but
+///   the flow is unchanged (the marginal-benefit strawman of Sec. III-C).
+pub fn schedule_sequential(plans: &[HeadPlan], selective: bool) -> Schedule {
+    assert!(!plans.is_empty());
+    let n = plans[0].n();
+    let mut steps = Vec::new();
+    for p in plans {
+        steps.push(Step {
+            head: p.head,
+            phase: Phase::SeqLoad,
+            k_macs: vec![],
+            active_q: 0,
+            q_loads: (0..n).map(|q| (p.head, q)).collect(),
+            q_retires: vec![],
+            selected_macs: 0,
+        });
+        let keys: Vec<usize> = (0..n).collect();
+        let sel = if selective {
+            p.selected_for_keys(&keys)
+        } else {
+            n * n
+        };
+        steps.push(Step {
+            head: p.head,
+            phase: Phase::SeqMac,
+            active_q: n,
+            selected_macs: sel,
+            k_macs: keys,
+            q_loads: vec![],
+            q_retires: (0..n).map(|q| (p.head, q)).collect(),
+        });
+    }
+    Schedule { steps, n, n_heads: plans.len() }
+}
+
+/// Validate the correctness contract; returns a human-readable violation.
+///
+/// Checks (per head): every Q loaded exactly once and retired exactly once
+/// (load before retire); every K MAC'd exactly once; and residency — every
+/// query selecting a MAC'd key is live at that step.
+pub fn validate(plans: &[HeadPlan], sched: &Schedule) -> Result<(), String> {
+    use std::collections::HashMap;
+    let plan_by_head: HashMap<usize, &HeadPlan> =
+        plans.iter().map(|p| (p.head, p)).collect();
+
+    #[derive(Clone, Copy, PartialEq)]
+    enum QState {
+        Unloaded,
+        Live,
+        Retired,
+    }
+    let mut qstate: HashMap<(usize, usize), QState> = HashMap::new();
+    let mut k_done: HashMap<(usize, usize), usize> = HashMap::new();
+
+    for (si, step) in sched.steps.iter().enumerate() {
+        // MACs first: loads land *during* the step; a key MAC'd in the same
+        // step as a load must not rely on that load (the FSM guarantees it
+        // doesn't — phase keys never touch concurrently-loading Qs).
+        for &k in &step.k_macs {
+            *k_done.entry((step.head, k)).or_insert(0) += 1;
+            let p = plan_by_head
+                .get(&step.head)
+                .ok_or_else(|| format!("step {si}: unknown head {}", step.head))?;
+            for q in 0..p.n() {
+                if p.mask.get(q, k) {
+                    match qstate.get(&(step.head, q)).copied().unwrap_or(QState::Unloaded)
+                    {
+                        QState::Live => {}
+                        QState::Unloaded => {
+                            return Err(format!(
+                                "step {si} ({:?}): head {} key {k} MAC'd but query {q} not loaded",
+                                step.phase, step.head
+                            ))
+                        }
+                        QState::Retired => {
+                            return Err(format!(
+                                "step {si} ({:?}): head {} key {k} MAC'd but query {q} already retired",
+                                step.phase, step.head
+                            ))
+                        }
+                    }
+                }
+            }
+        }
+        for &(h, q) in &step.q_loads {
+            let st = qstate.entry((h, q)).or_insert(QState::Unloaded);
+            if *st != QState::Unloaded {
+                return Err(format!("step {si}: query ({h},{q}) loaded twice"));
+            }
+            *st = QState::Live;
+        }
+        for &(h, q) in &step.q_retires {
+            let st = qstate.entry((h, q)).or_insert(QState::Unloaded);
+            if *st != QState::Live {
+                return Err(format!("step {si}: query ({h},{q}) retired while not live"));
+            }
+            *st = QState::Retired;
+        }
+    }
+
+    for p in plans {
+        for k in 0..p.n() {
+            let c = k_done.get(&(p.head, k)).copied().unwrap_or(0);
+            if c != 1 {
+                return Err(format!("head {} key {k} MAC'd {c} times", p.head));
+            }
+        }
+        for q in 0..p.n() {
+            let st = qstate.get(&(p.head, q)).copied();
+            if !matches!(st, Some(QState::Retired)) {
+                return Err(format!("head {} query {q} not loaded+retired", p.head));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn random_plans(rng: &mut Rng, n: usize, heads: usize, k: usize) -> Vec<HeadPlan> {
+        (0..heads)
+            .map(|h| {
+                let m = SelectiveMask::random_topk(n, k, rng);
+                HeadPlan::build(h, m, n / 2, rng.next_u64())
+            })
+            .collect()
+    }
+
+    fn clustered_plan(h: usize, n: usize) -> HeadPlan {
+        let half = n / 2;
+        let idx: Vec<Vec<usize>> = (0..n)
+            .map(|q| if q < half { (0..half).collect() } else { (half..n).collect() })
+            .collect();
+        HeadPlan::build(h, SelectiveMask::from_topk_indices(n, &idx), n / 2, 7)
+    }
+
+    #[test]
+    fn sata_schedule_validates_on_random_masks() {
+        check("sata schedule correctness", 40, |rng| {
+            let n = 4 + rng.gen_range(60);
+            let heads = 1 + rng.gen_range(6);
+            let k = 1 + rng.gen_range(n);
+            let plans = random_plans(rng, n, heads, k);
+            let s = schedule_sata(&plans);
+            validate(&plans, &s)
+        });
+    }
+
+    #[test]
+    fn sequential_schedules_validate() {
+        check("sequential schedule correctness", 20, |rng| {
+            let n = 4 + rng.gen_range(40);
+            let kk = 1 + rng.gen_range(n);
+            let plans = random_plans(rng, n, 3, kk);
+            validate(&plans, &schedule_sequential(&plans, true))?;
+            validate(&plans, &schedule_sequential(&plans, false))
+        });
+    }
+
+    #[test]
+    fn every_key_mac_exactly_once() {
+        check("k_seq covers heads × keys", 30, |rng| {
+            let n = 4 + rng.gen_range(50);
+            let heads = 1 + rng.gen_range(5);
+            let kk = 1 + rng.gen_range(n);
+            let plans = random_plans(rng, n, heads, kk);
+            let s = schedule_sata(&plans);
+            let mut ks = s.k_seq();
+            ks.sort_unstable();
+            let mut want: Vec<(usize, usize)> =
+                (0..heads).flat_map(|h| (0..n).map(move |k| (h, k))).collect();
+            want.sort_unstable();
+            if ks != want {
+                return Err("k_seq is not heads × keys exactly once".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn perfectly_sorted_head_has_no_midst_step() {
+        let n = 16;
+        let plans = vec![clustered_plan(0, n), clustered_plan(1, n)];
+        assert!(plans.iter().all(|p| p.class.s_h == n / 2), "expect S_h = N/2");
+        let s = schedule_sata(&plans);
+        assert!(
+            s.steps.iter().all(|st| st.phase != Phase::MidstHd),
+            "S_h = N/2 heads must skip midstHD (Fig. 2c, heads 0 and 2)"
+        );
+        validate(&plans, &s).unwrap();
+    }
+
+    #[test]
+    fn overlap_exists_between_consecutive_local_heads() {
+        let n = 16;
+        let plans = vec![clustered_plan(0, n), clustered_plan(1, n)];
+        let s = schedule_sata(&plans);
+        // Some step must MAC head-0 keys while loading head-1 queries.
+        let overlapped = s.steps.iter().any(|st| {
+            st.head == 0
+                && !st.k_macs.is_empty()
+                && st.q_loads.iter().any(|&(h, _)| h == 1)
+        });
+        assert!(overlapped, "no inter-head overlap found:\n{:#?}", s.steps);
+    }
+
+    #[test]
+    fn selective_mac_count_matches_mask_totals() {
+        check("selected MACs conserved", 30, |rng| {
+            let n = 4 + rng.gen_range(48);
+            let heads = 1 + rng.gen_range(4);
+            let kk = 1 + rng.gen_range(n);
+            let plans = random_plans(rng, n, heads, kk);
+            let want: usize = plans.iter().map(|p| p.mask.total_selected()).sum();
+            let s = schedule_sata(&plans);
+            if s.total_selected_macs() != want {
+                return Err(format!(
+                    "selected {} != mask total {want}",
+                    s.total_selected_macs()
+                ));
+            }
+            // gated baseline covers the same selected pairs
+            let g = schedule_sequential(&plans, true);
+            if g.total_selected_macs() != want {
+                return Err("gated baseline selected mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn early_retirement_reduces_peak_residency() {
+        // With clustered heads, SATA retires dominant Qs before loading the
+        // next head, so peak residency stays below 2 full heads.
+        let n = 32;
+        let plans: Vec<HeadPlan> = (0..4).map(|h| clustered_plan(h, n)).collect();
+        let sata = schedule_sata(&plans);
+        validate(&plans, &sata).unwrap();
+        assert!(
+            sata.peak_resident_q() < 2 * n,
+            "peak {} not below 2 heads ({})",
+            sata.peak_resident_q(),
+            2 * n
+        );
+    }
+
+    #[test]
+    fn dense_baseline_counts_n_squared_macs() {
+        let mut rng = Rng::new(0);
+        let plans = random_plans(&mut rng, 16, 2, 4);
+        let d = schedule_sequential(&plans, false);
+        assert_eq!(d.total_selected_macs(), 2 * 16 * 16);
+    }
+
+    #[test]
+    fn glob_heads_fall_back_to_wrap() {
+        // Dense mask with θ = 0 forces deep concession; craft a head that
+        // bottoms out (all keys selected by all queries but θ below glob
+        // count at every s_h > 0 — only s_h = 0 escapes, hence wrap).
+        let n = 8;
+        let m = SelectiveMask::from_dense(&vec![vec![true; n]; n]);
+        let order = sort_keys(&m, 0);
+        let class = classify(&m, &order, 0);
+        let p = HeadPlan { head: 0, mask: m, order, class };
+        assert!(!p.is_local());
+        let s = schedule_sata(&[p.clone()]);
+        assert!(s.steps.iter().any(|st| st.phase == Phase::WrapGlobMac));
+        validate(&[p], &s).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "no heads")]
+    fn empty_plan_list_panics() {
+        schedule_sata(&[]);
+    }
+}

@@ -1,0 +1,306 @@
+//! Tiled sub-head scheduling (Sec. III-D): long sequences.
+//!
+//! Each head's N×N mask is cut into S_f×S_f tiles; every non-empty tile is
+//! scheduled like a sub-head through the same Algo 1 + Algo 2 machinery.
+//! Tiles are walked **K-fold-major** ("sorting is conducted across Q-folds
+//! while fold-wise Ks are reused; the process then repeats across K-folds"):
+//! all Q-folds of K-fold 0, then K-fold 1, … — so a K-fold's key vectors
+//! stay in the on-chip buffer across consecutive Q-folds and only the first
+//! tile of each K-fold pays DRAM fetches for those keys.
+//!
+//! **Zero-skip** (the column/row reduction unit of Sec. III-D/III-E): dead
+//! queries/keys inside a tile never enter the FIFOs — realized here by
+//! compressing each tile to its live rows/cols before sorting, then
+//! remapping back to global token ids at emission.
+
+use super::{schedule_sata, HeadPlan, Schedule, Step};
+use crate::mask::tile::{skip_stats, tile_mask, SkipStats};
+use crate::mask::SelectiveMask;
+
+/// Metadata for one scheduled tile (sub-head).
+#[derive(Clone, Debug)]
+pub struct TileInfo {
+    /// Sub-head id used in the schedule's `Step::head`.
+    pub tile_id: usize,
+    pub qf: usize,
+    pub kf: usize,
+    /// Global query ids live in this tile.
+    pub global_q: Vec<usize>,
+    /// Global key ids live in this tile.
+    pub global_k: Vec<usize>,
+}
+
+/// A tiled schedule: steps carry *global* token ids; `tiles` records the
+/// fold structure the engine uses for K-reuse (buffer-hit) accounting.
+#[derive(Clone, Debug)]
+pub struct TiledSchedule {
+    pub schedule: Schedule,
+    pub tiles: Vec<TileInfo>,
+    pub skip: SkipStats,
+    pub sf: usize,
+    pub n: usize,
+}
+
+impl TiledSchedule {
+    /// Keys of step `s` that are *fresh* (first use within their K-fold) —
+    /// these pay DRAM; the rest hit the fold buffer. Engine helper.
+    pub fn fresh_k_fraction(&self) -> f64 {
+        let mut total = 0usize;
+        let mut fresh = 0usize;
+        let mut seen_in_fold: std::collections::HashSet<(usize, usize)> =
+            std::collections::HashSet::new();
+        for step in &self.schedule.steps {
+            let Some(t) = self.tiles.get(step.head) else { continue };
+            for &k in &step.k_macs {
+                total += 1;
+                if seen_in_fold.insert((t.kf, k)) {
+                    fresh += 1;
+                }
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            fresh as f64 / total as f64
+        }
+    }
+}
+
+/// Compress a tile's mask to its live rows/cols, padding square.
+///
+/// Returns `(compressed mask, live_q, live_k)`; pad rows/cols are zero and
+/// are dropped again at emission (`remap`), so they cost nothing.
+fn compress(
+    mask: &SelectiveMask,
+    live_q: &[usize],
+    live_k: &[usize],
+) -> SelectiveMask {
+    let m = live_q.len().max(live_k.len()).max(1);
+    let mut c = SelectiveMask::zeros(m);
+    for (ci, &q) in live_q.iter().enumerate() {
+        for (cj, &k) in live_k.iter().enumerate() {
+            if mask.get(q, k) {
+                c.set(ci, cj);
+            }
+        }
+    }
+    c
+}
+
+/// Remap one step's local (compressed) ids to global token ids, dropping
+/// pad slots (zero-skip at emission).
+fn remap(step: &Step, tiles: &[TileInfo]) -> Step {
+    let t = &tiles[step.head];
+    let map_k = |k: usize| t.global_k.get(k).copied();
+    let k_macs: Vec<usize> = step.k_macs.iter().filter_map(|&k| map_k(k)).collect();
+    let q_loads: Vec<(usize, usize)> = step
+        .q_loads
+        .iter()
+        .filter_map(|&(h, q)| tiles[h].global_q.get(q).map(|&g| (h, g)))
+        .collect();
+    let q_retires: Vec<(usize, usize)> = step
+        .q_retires
+        .iter()
+        .filter_map(|&(h, q)| tiles[h].global_q.get(q).map(|&g| (h, g)))
+        .collect();
+    Step {
+        head: step.head,
+        phase: step.phase,
+        active_q: step.active_q.min(t.global_q.len()),
+        selected_macs: step.selected_macs,
+        k_macs,
+        q_loads,
+        q_retires,
+    }
+}
+
+/// Build the tiled SATA schedule for one head's mask.
+///
+/// * `sf`    — fold (tile) size S_f.
+/// * `theta_frac` — GLOB tolerance as a fraction of the tile's live size
+///   (the paper uses θ = N/2 at head scope; tiles scale it down).
+/// * `seed`  — sorting seed.
+pub fn schedule_tiled(
+    mask: &SelectiveMask,
+    sf: usize,
+    theta_frac: f64,
+    seed: u64,
+) -> TiledSchedule {
+    let n = mask.n();
+    let all_tiles = tile_mask(mask, sf);
+    let skip = skip_stats(&all_tiles);
+    let folds = n.div_ceil(sf);
+
+    // K-fold-major walk over non-empty tiles.
+    let mut plans: Vec<HeadPlan> = Vec::new();
+    let mut infos: Vec<TileInfo> = Vec::new();
+    for kf in 0..folds {
+        for qf in 0..folds {
+            let t = &all_tiles[qf * folds + kf];
+            if t.is_empty() {
+                continue;
+            }
+            let global_q: Vec<usize> =
+                t.live_q.iter().map(|&q| t.qf * sf + q).collect();
+            let global_k: Vec<usize> =
+                t.live_k.iter().map(|&k| t.kf * sf + k).collect();
+            let cmask = compress(&t.mask, &t.live_q, &t.live_k);
+            let theta = ((cmask.n() as f64) * theta_frac).floor() as usize;
+            let tile_id = plans.len();
+            plans.push(HeadPlan::build(tile_id, cmask, theta, seed ^ (tile_id as u64)));
+            infos.push(TileInfo { tile_id, qf: t.qf, kf: t.kf, global_q, global_k });
+        }
+    }
+
+    if plans.is_empty() {
+        // Degenerate: empty mask. Emit an empty schedule.
+        return TiledSchedule {
+            schedule: Schedule { steps: vec![], n, n_heads: 0 },
+            tiles: vec![],
+            skip,
+            sf,
+            n,
+        };
+    }
+
+    let local = schedule_sata(&plans);
+    let steps: Vec<Step> = local.steps.iter().map(|s| remap(s, &infos)).collect();
+    TiledSchedule {
+        schedule: Schedule { steps, n, n_heads: plans.len() },
+        tiles: infos,
+        skip,
+        sf,
+        n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tiled_covers_every_selected_pair_exactly_once() {
+        check("tiled MAC coverage", 30, |rng| {
+            let n = 16 + rng.gen_range(120);
+            let k = 1 + rng.gen_range(n / 2);
+            let sf = 4 + rng.gen_range(n / 2);
+            let mask = SelectiveMask::random_topk(n, k, rng);
+            let ts = schedule_tiled(&mask, sf, 0.5, rng.next_u64());
+            // Each (tile, key) MAC'd once; selected pairs conserved.
+            let sel: usize =
+                ts.schedule.steps.iter().map(|s| s.selected_macs).sum();
+            if sel != mask.total_selected() {
+                return Err(format!(
+                    "selected {sel} != {} (n={n} k={k} sf={sf})",
+                    mask.total_selected()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tiled_k_macs_match_live_keys_per_tile() {
+        check("tiled k coverage per tile", 20, |rng| {
+            let n = 16 + rng.gen_range(64);
+            let k = 1 + rng.gen_range(n / 2);
+            let sf = 4 + rng.gen_range(n / 2);
+            let mask = SelectiveMask::random_topk(n, k, rng);
+            let ts = schedule_tiled(&mask, sf, 0.5, 1);
+            let mut per_tile: Vec<Vec<usize>> = vec![vec![]; ts.tiles.len()];
+            for s in &ts.schedule.steps {
+                per_tile[s.head].extend(&s.k_macs);
+            }
+            for t in &ts.tiles {
+                let mut got = per_tile[t.tile_id].clone();
+                got.sort_unstable();
+                let mut want = t.global_k.clone();
+                want.sort_unstable();
+                if got != want {
+                    return Err(format!(
+                        "tile {} K coverage mismatch: got {got:?} want {want:?}",
+                        t.tile_id
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kfold_major_order_improves_k_reuse() {
+        // With several Q-folds per K-fold, most K uses after the first
+        // Q-fold hit the fold buffer: fresh fraction well below 1.
+        let mut rng = Rng::new(3);
+        let n = 64;
+        let mask = SelectiveMask::random_topk(n, 32, &mut rng);
+        let ts = schedule_tiled(&mask, 16, 0.5, 0);
+        let fresh = ts.fresh_k_fraction();
+        assert!(fresh < 0.75, "fresh K fraction {fresh} too high");
+        assert!(fresh > 0.0);
+    }
+
+    #[test]
+    fn banded_mask_skips_offdiagonal_tiles_entirely() {
+        let n = 32;
+        let sf = 8;
+        let idx: Vec<Vec<usize>> = (0..n)
+            .map(|q| {
+                let base = (q / sf) * sf;
+                (base..base + sf).collect()
+            })
+            .collect();
+        let mask = SelectiveMask::from_topk_indices(n, &idx);
+        let ts = schedule_tiled(&mask, sf, 0.5, 0);
+        assert_eq!(ts.tiles.len(), n / sf, "only diagonal tiles survive");
+        assert!(ts.skip.empty_tiles > 0);
+    }
+
+    #[test]
+    fn pad_slots_never_emitted() {
+        check("no pad ids in output", 20, |rng| {
+            let n = 16 + rng.gen_range(48);
+            let k = 1 + rng.gen_range(n / 3);
+            let sf = 4 + rng.gen_range(12);
+            let mask = SelectiveMask::random_topk(n, k, rng);
+            let ts = schedule_tiled(&mask, sf, 0.5, 2);
+            for s in &ts.schedule.steps {
+                for &(h, q) in &s.q_loads {
+                    if !ts.tiles[h].global_q.contains(&q) {
+                        return Err(format!("pad query {q} emitted"));
+                    }
+                    if q >= n {
+                        return Err("query id out of range".into());
+                    }
+                }
+                for &kk in &s.k_macs {
+                    if kk >= n {
+                        return Err("key id out of range".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_mask_yields_empty_schedule() {
+        let mask = SelectiveMask::zeros(16);
+        let ts = schedule_tiled(&mask, 4, 0.5, 0);
+        assert!(ts.schedule.steps.is_empty());
+        assert_eq!(ts.skip.empty_tiles, 16);
+    }
+
+    #[test]
+    fn sf_equal_n_is_single_subhead() {
+        let mut rng = Rng::new(9);
+        let n = 24;
+        let mask = SelectiveMask::random_topk(n, 6, &mut rng);
+        let ts = schedule_tiled(&mask, n, 0.5, 0);
+        assert_eq!(ts.tiles.len(), 1);
+        let sel: usize = ts.schedule.steps.iter().map(|s| s.selected_macs).sum();
+        assert_eq!(sel, mask.total_selected());
+    }
+}

@@ -1,0 +1,352 @@
+//! Algorithm 1, second half: **query classification** with S_h concession
+//! (Sec. III-B, Algo 1 lines 14–27).
+//!
+//! Given the sorted key order, each query is tagged by which end of the
+//! sorted spectrum it avoids:
+//!
+//! * `Head` — touches none of the **last** `S_h` sorted keys,
+//! * `Tail` — touches none of the **first** `S_h` sorted keys,
+//! * `Glob` — touches both ends (poor locality).
+//!
+//! A query avoiding *both* ends satisfies either tag; we resolve it to the
+//! end with more remaining margin (cheap, deterministic, and keeps the
+//! HEAD/TAIL split balanced — the hardware resolves by FIFO arrival order).
+//!
+//! If GLOB queries exceed θ, the head is in a GLOB state; `S_h` decrements
+//! ("conceding") and classification reruns. S_h = 0 trivially classifies
+//! every query as HEAD (no keys to avoid), so the loop always terminates —
+//! but a zero/near-zero S_h head schedules like the conventional flow, which
+//! is exactly the paper's `wrapGLOB` fallback.
+
+use super::KeyOrder;
+use crate::mask::SelectiveMask;
+
+/// Per-query tag (Algo 1 `QT`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QType {
+    Head,
+    Tail,
+    Glob,
+}
+
+/// Head-level type (Algo 1 `HT`): dominant local direction, or Glob if the
+/// concession loop bottomed out with GLOB queries still dominating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeadType {
+    Head,
+    Tail,
+    Glob,
+}
+
+/// Classification output for one head.
+#[derive(Clone, Debug)]
+pub struct Classified {
+    /// Per-query tags, indexed by original query id.
+    pub qt: Vec<QType>,
+    /// Final heavy size after concession.
+    pub s_h: usize,
+    /// Head type.
+    pub ht: HeadType,
+    /// Number of `S_h -= 1` concessions (Table I's "Avg #(S_h-=1)").
+    pub decrements: usize,
+}
+
+impl Classified {
+    /// Query ids with the given tag, ascending.
+    pub fn queries(&self, t: QType) -> Vec<usize> {
+        (0..self.qt.len()).filter(|&q| self.qt[q] == t).collect()
+    }
+
+    pub fn count(&self, t: QType) -> usize {
+        self.qt.iter().filter(|&&x| x == t).count()
+    }
+
+    /// Fraction of GLOB queries (Table I's `GlobQ%`).
+    pub fn glob_frac(&self) -> f64 {
+        self.count(QType::Glob) as f64 / self.qt.len() as f64
+    }
+
+    /// "Major" queries for Algo 2's `init`/`intoHD`: the dominant-direction
+    /// set plus GLOB (they need the full key range anyway).
+    pub fn major_queries(&self) -> Vec<usize> {
+        let dom = match self.ht {
+            HeadType::Head | HeadType::Glob => QType::Head,
+            HeadType::Tail => QType::Tail,
+        };
+        (0..self.qt.len())
+            .filter(|&q| self.qt[q] == dom || self.qt[q] == QType::Glob)
+            .collect()
+    }
+
+    /// "Minor" queries (loaded during `intoHD`, retired early).
+    pub fn minor_queries(&self) -> Vec<usize> {
+        let min = match self.ht {
+            HeadType::Head | HeadType::Glob => QType::Tail,
+            HeadType::Tail => QType::Head,
+        };
+        self.queries(min)
+    }
+}
+
+/// Tag one query against a sorted key order with heavy size `s_h`.
+///
+/// `first`/`last` are the first/last `s_h` entries of `kid`.
+#[cfg(test)]
+fn classify_query(
+    mask: &SelectiveMask,
+    q: usize,
+    first: &[usize],
+    last: &[usize],
+) -> QType {
+    let touches_first = mask.row_touches(q, first);
+    let touches_last = mask.row_touches(q, last);
+    match (touches_first, touches_last) {
+        (_, false) if touches_first => QType::Head, // avoids last only
+        (false, _) if touches_last => QType::Tail,  // avoids first only
+        (false, false) => QType::Head, // avoids both; resolved below by caller
+        _ => QType::Glob,
+    }
+}
+
+/// Classify all queries at a fixed `s_h` (one pass of Algo 1 lines 16–19).
+pub fn classify_at(mask: &SelectiveMask, order: &KeyOrder, s_h: usize) -> Vec<QType> {
+    let n = mask.n();
+    let s_h = s_h.min(n / 2); // first/last windows must not overlap
+    let first = &order.kid[..s_h];
+    let last = &order.kid[n - s_h..];
+    // Perf: pack both windows once, then each query is two O(N/64)
+    // word-AND tests instead of O(S_h) bit probes — this is the mirror of
+    // the hardware's parallel window comparators (see EXPERIMENTS.md §Perf).
+    let pf = mask.pack_key_set(first);
+    let pl = mask.pack_key_set(last);
+    (0..n)
+        .map(|q| {
+            let tf = mask.row_intersects(q, &pf);
+            let tl = mask.row_intersects(q, &pl);
+            match (tf, tl) {
+                (_, false) if tf => QType::Head,
+                (false, _) if tl => QType::Tail,
+                (false, false) => QType::Head,
+                _ => QType::Glob,
+            }
+        })
+        .collect()
+}
+
+/// Reference (unpacked) classification — kept for the equivalence test.
+#[cfg(test)]
+pub(crate) fn classify_at_ref(
+    mask: &SelectiveMask,
+    order: &KeyOrder,
+    s_h: usize,
+) -> Vec<QType> {
+    let n = mask.n();
+    let s_h = s_h.min(n / 2);
+    let first = &order.kid[..s_h];
+    let last = &order.kid[n - s_h..];
+    (0..n).map(|q| classify_query(mask, q, first, last)).collect()
+}
+
+/// Full Algo 1 classification with the concession loop.
+///
+/// * `theta` — GLOB tolerance (#GLOB > θ triggers `S_h -= 1`); the paper
+///   evaluates with θ = N/2.
+/// * Initial S_h = N/2 ("the optimistic case").
+///
+/// Ties between #HEAD and #TAIL resolve to HEAD (Fig. 2 caption).
+pub fn classify(mask: &SelectiveMask, order: &KeyOrder, theta: usize) -> Classified {
+    let n = mask.n();
+    let mut s_h = n / 2;
+    let mut decrements = 0usize;
+
+    loop {
+        let qt = classify_at(mask, order, s_h);
+        let glob = qt.iter().filter(|&&t| t == QType::Glob).count();
+        if glob > theta && s_h > 0 {
+            s_h -= 1;
+            decrements += 1;
+            continue;
+        }
+        let heads = qt.iter().filter(|&&t| t == QType::Head).count();
+        let tails = qt.iter().filter(|&&t| t == QType::Tail).count();
+        let ht = if glob > theta {
+            // bottomed out (s_h == 0) with GLOB still dominating
+            HeadType::Glob
+        } else if heads >= tails {
+            HeadType::Head // tie → HEAD per the paper
+        } else {
+            HeadType::Tail
+        };
+        return Classified { qt, s_h, ht, decrements };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::sort_keys;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    /// Build the perfectly-sortable two-cluster mask from Fig. 2's spirit.
+    fn clustered_mask(n: usize) -> SelectiveMask {
+        let half = n / 2;
+        let idx: Vec<Vec<usize>> = (0..n)
+            .map(|q| {
+                if q < half {
+                    (0..half).collect()
+                } else {
+                    (half..n).collect()
+                }
+            })
+            .collect();
+        SelectiveMask::from_topk_indices(n, &idx)
+    }
+
+    #[test]
+    fn clustered_mask_classifies_perfectly_local() {
+        let n = 16;
+        let m = clustered_mask(n);
+        let ord = sort_keys(&m, 1);
+        let c = classify(&m, &ord, n / 2);
+        // Perfect locality: no GLOB queries, no concession, S_h = N/2.
+        assert_eq!(c.count(QType::Glob), 0);
+        assert_eq!(c.decrements, 0);
+        assert_eq!(c.s_h, n / 2);
+        // Half the queries in each direction, head type HEAD on tie.
+        assert_eq!(c.count(QType::Head), 8);
+        assert_eq!(c.count(QType::Tail), 8);
+        assert_eq!(c.ht, HeadType::Head);
+    }
+
+    #[test]
+    fn dense_mask_is_all_glob_until_sh_zero() {
+        // Every query touches every key: only S_h = 0 escapes GLOB.
+        let n = 12;
+        let m = SelectiveMask::from_dense(&vec![vec![true; n]; n]);
+        let ord = sort_keys(&m, 0);
+        let c = classify(&m, &ord, 0); // θ=0: any GLOB forces concession
+        assert_eq!(c.s_h, 0);
+        assert_eq!(c.decrements, n / 2);
+        // At S_h = 0 every query avoids the (empty) ends → all HEAD.
+        assert_eq!(c.count(QType::Head), n);
+        assert_eq!(c.ht, HeadType::Head);
+    }
+
+    #[test]
+    fn theta_bounds_glob_count() {
+        check("post-classification #GLOB <= theta or s_h == 0", 60, |rng| {
+            let n = 4 + rng.gen_range(100);
+            let k = 1 + rng.gen_range(n);
+            let theta = rng.gen_range(n + 1);
+            let m = SelectiveMask::random_topk(n, k, rng);
+            let ord = sort_keys_seeded(&m, rng);
+            let c = classify(&m, &ord, theta);
+            let glob = c.count(QType::Glob);
+            if glob > theta && c.s_h != 0 {
+                return Err(format!(
+                    "glob={glob} > theta={theta} with s_h={} (n={n},k={k})",
+                    c.s_h
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    fn sort_keys_seeded(m: &SelectiveMask, rng: &mut Rng) -> crate::sort::KeyOrder {
+        sort_keys(m, rng.next_u64())
+    }
+
+    #[test]
+    fn classification_is_exhaustive_and_consistent() {
+        check("every query gets exactly one tag consistent with mask", 40, |rng| {
+            let n = 4 + rng.gen_range(80);
+            let k = 1 + rng.gen_range(n);
+            let m = SelectiveMask::random_topk(n, k, rng);
+            let ord = sort_keys_seeded(&m, rng);
+            let c = classify(&m, &ord, n / 2);
+            let s_h = c.s_h;
+            let first = &ord.kid[..s_h];
+            let last = &ord.kid[n - s_h..];
+            for q in 0..n {
+                let tf = m.row_touches(q, first);
+                let tl = m.row_touches(q, last);
+                match c.qt[q] {
+                    QType::Head => {
+                        if tl {
+                            return Err(format!("HEAD q={q} touches last window"));
+                        }
+                    }
+                    QType::Tail => {
+                        if tf {
+                            return Err(format!("TAIL q={q} touches first window"));
+                        }
+                    }
+                    QType::Glob => {
+                        if !(tf && tl) {
+                            return Err(format!("GLOB q={q} avoids an end"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn major_minor_partition_covers_all_queries() {
+        check("major + minor == all queries", 40, |rng| {
+            let n = 4 + rng.gen_range(64);
+            let k = 1 + rng.gen_range(n);
+            let m = SelectiveMask::random_topk(n, k, rng);
+            let ord = sort_keys_seeded(&m, rng);
+            let c = classify(&m, &ord, n / 2);
+            let mut all = c.major_queries();
+            all.extend(c.minor_queries());
+            all.sort_unstable();
+            if all != (0..n).collect::<Vec<_>>() {
+                return Err("major/minor not a partition".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sh_never_exceeds_half_n() {
+        check("s_h <= n/2", 30, |rng| {
+            let n = 2 + rng.gen_range(64);
+            let k = 1 + rng.gen_range(n);
+            let m = SelectiveMask::random_topk(n, k, rng);
+            let ord = sort_keys_seeded(&m, rng);
+            let c = classify(&m, &ord, n / 2);
+            if c.s_h > n / 2 {
+                return Err(format!("s_h={} > n/2", c.s_h));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_classification_matches_reference() {
+        check("classify_at packed == reference", 60, |rng| {
+            let n = 2 + rng.gen_range(128);
+            let k = 1 + rng.gen_range(n);
+            let m = SelectiveMask::random_topk(n, k, rng);
+            let ord = sort_keys(&m, rng.next_u64());
+            let s_h = rng.gen_range(n / 2 + 1);
+            if classify_at(&m, &ord, s_h) != classify_at_ref(&m, &ord, s_h) {
+                return Err(format!("divergence at n={n} k={k} s_h={s_h}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn glob_frac_matches_counts() {
+        let m = clustered_mask(8);
+        let ord = sort_keys(&m, 2);
+        let c = classify(&m, &ord, 4);
+        assert_eq!(c.glob_frac(), 0.0);
+        assert_eq!(c.queries(QType::Head).len() + c.queries(QType::Tail).len(), 8);
+    }
+}

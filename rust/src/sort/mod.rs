@@ -1,0 +1,281 @@
+//! Algorithm 1, first half: intra-head **key sorting** (Sec. III-B, III-E).
+//!
+//! Greedy max-similarity chain over mask columns: starting from a random
+//! seed key, repeatedly append the unsorted key whose access pattern is most
+//! similar to the running `Dummy` accumulator of already-sorted columns.
+//!
+//! Two implementations with identical output:
+//!
+//! * [`sort_keys_naive`]  — Eq. 1 verbatim: recompute `Dummy · QK[:,i]` for
+//!   every unsorted column each step (`O(N²)` column dot-products).
+//! * [`sort_keys_psum`]   — Eq. 2, the paper's hardware optimization: keep a
+//!   per-column partial-sum register and increment it with the *newly
+//!   sorted* column only (`O(N)` column dot-products per step). This is the
+//!   form the scheduler RTL implements and the form benchmarked in E8.
+//!
+//! `Dummy.update(col)` accumulates counts (saturating add of the binary
+//! column), so `Dummy·QK[:,i] == Σ_{j∈sorted} QK[:,j]·QK[:,i]` — which is
+//! why the Psum recurrence is exact, not an approximation.
+
+pub mod classify;
+
+use crate::mask::SelectiveMask;
+use crate::util::rng::Rng;
+
+/// Result of sorting one head's keys.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KeyOrder {
+    /// Sorted key indices, most-locality-first (`Kid` in Algo 1).
+    pub kid: Vec<usize>,
+}
+
+impl KeyOrder {
+    /// Inverse permutation: `pos[k]` = sorted position of original key `k`.
+    pub fn positions(&self) -> Vec<usize> {
+        let mut pos = vec![0; self.kid.len()];
+        for (p, &k) in self.kid.iter().enumerate() {
+            pos[k] = p;
+        }
+        pos
+    }
+}
+
+/// Seed-key selection. Algo 1 line 6 picks uniformly at random; we refine
+/// it: seed from the **most-popular key** (maximum column popcount, ties to
+/// the lower index). A popular key sits at the core of a locality cluster,
+/// so the greedy chain consumes that whole cluster — including its
+/// low-popularity stragglers, which still overlap the accumulated Dummy —
+/// before jumping to the other cluster. A random mid-spectrum seed instead
+/// strands stragglers at the wrong end of the order, collapsing S_h (see
+/// benches/sort_ablation.rs for the measured difference). The RNG stays in
+/// the signature for replayability of the paper-faithful variant.
+fn seed_key(mask: &SelectiveMask, rng: &mut Rng) -> usize {
+    let n = mask.n();
+    let _ = rng.next_u64(); // keep stream position stable across variants
+    (0..n).max_by_key(|&k| (mask.col_popcount(k), usize::MAX - k)).unwrap_or(0)
+}
+
+/// Eq. 1 verbatim: recompute all similarities against `Dummy` each step.
+///
+/// `Dummy` is a per-query *count* vector (how many sorted keys each query
+/// has touched); similarity with binary column i is a masked sum of counts.
+pub fn sort_keys_naive(mask: &SelectiveMask, rng: &mut Rng) -> KeyOrder {
+    let n = mask.n();
+    let mut dummy = vec![0u32; n]; // per-query accumulation counts
+    let mut sorted = vec![false; n];
+    let mut kid = Vec::with_capacity(n);
+
+    let s = seed_key(mask, rng);
+    update_dummy(&mut dummy, mask, s);
+    sorted[s] = true;
+    kid.push(s);
+
+    for _ in 0..n - 1 {
+        let mut best = usize::MAX;
+        let mut best_score = 0u64;
+        for i in 0..n {
+            if sorted[i] {
+                continue;
+            }
+            // Dummy^T · QK[:, i] over query bits of column i
+            let mut score = 0u64;
+            for (q, &d) in dummy.iter().enumerate() {
+                if d > 0 && mask.get(q, i) {
+                    score += d as u64;
+                }
+            }
+            // tie-break toward the lower key index (deterministic; matches
+            // a priority encoder scanning index-ascending)
+            if best == usize::MAX || score > best_score {
+                best = i;
+                best_score = score;
+            }
+        }
+        update_dummy(&mut dummy, mask, best);
+        sorted[best] = true;
+        kid.push(best);
+    }
+    KeyOrder { kid }
+}
+
+fn update_dummy(dummy: &mut [u32], mask: &SelectiveMask, k: usize) {
+    for (q, d) in dummy.iter_mut().enumerate() {
+        if mask.get(q, k) {
+            *d += 1;
+        }
+    }
+}
+
+/// Eq. 2: Psum-register sort. `psum[i]` accumulates `Σ_j QK[:,i]·QK[:,j]`
+/// over sorted `j`; each step costs one packed column-AND-popcount per
+/// unsorted column against only the newly sorted column.
+pub fn sort_keys_psum(mask: &SelectiveMask, rng: &mut Rng) -> KeyOrder {
+    let n = mask.n();
+    let mut psum = vec![0u64; n]; // Psum-Reg[i]
+    let mut unsorted: Vec<usize> = (0..n).collect();
+    let mut kid = Vec::with_capacity(n);
+
+    let s = seed_key(mask, rng);
+    kid.push(s);
+    unsorted.swap_remove(unsorted.iter().position(|&x| x == s).unwrap());
+    let mut last = s;
+
+    for _ in 0..n - 1 {
+        // Psum-Reg[i] += QK[:,i]^T · QK[:,last]  (bit-packed AND+popcount)
+        for &i in &unsorted {
+            psum[i] += mask.col_dot(i, last) as u64;
+        }
+        // argmax with low-index tie-break: scan ascending, strict `>`
+        let mut best_pos = 0;
+        for (p, &i) in unsorted.iter().enumerate() {
+            let b = unsorted[best_pos];
+            if psum[i] > psum[b] || (psum[i] == psum[b] && i < b) {
+                best_pos = p;
+            }
+        }
+        last = unsorted.swap_remove(best_pos);
+        kid.push(last);
+    }
+    KeyOrder { kid }
+}
+
+/// Weakest-link polish: the greedy chain from a cluster-core seed emits
+/// `core → edge` within the first cluster, then jumps to the second — but
+/// classification wants *shared/core* keys mid-spectrum and *exclusive*
+/// keys at the ends. Find the weakest adjacent link (the inter-cluster
+/// jump, detected as the minimum consecutive column overlap) and reverse
+/// the prefix, turning `core₁→edge₁ | cluster₂` into `edge₁→core₁ |
+/// cluster₂`. One extra O(N) popcount pass in hardware (the Psum engine
+/// already holds the pairwise dots); measurably higher post-sort S_h.
+pub fn polish_order(mask: &SelectiveMask, order: &mut KeyOrder) {
+    let kid = &mut order.kid;
+    if kid.len() < 3 {
+        return;
+    }
+    // Search the middle band only: glob-noise keys at the chain's tail
+    // also have weak links, but the inter-cluster jump sits mid-chain
+    // (the two local populations are comparably sized, Fig. 2).
+    let n = kid.len();
+    let lo = n / 4;
+    let hi = (3 * n) / 4;
+    let mut weakest = lo;
+    let mut weakest_dot = usize::MAX;
+    for i in lo..hi.min(n - 1) {
+        let d = mask.col_dot(kid[i], kid[i + 1]);
+        if d < weakest_dot {
+            weakest_dot = d;
+            weakest = i;
+        }
+    }
+    kid[..=weakest].reverse();
+}
+
+/// Convenience: Psum sort + weakest-link polish with the RNG seeded per
+/// head id — the production entry point used by the scheduler pipeline.
+pub fn sort_keys(mask: &SelectiveMask, seed: u64) -> KeyOrder {
+    let mut ord = sort_keys_psum(mask, &mut Rng::new(seed));
+    polish_order(mask, &mut ord);
+    ord
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn is_permutation(kid: &[usize], n: usize) -> bool {
+        let mut seen = vec![false; n];
+        for &k in kid {
+            if k >= n || seen[k] {
+                return false;
+            }
+            seen[k] = true;
+        }
+        kid.len() == n
+    }
+
+    #[test]
+    fn naive_output_is_permutation() {
+        check("naive sort permutation", 40, |rng| {
+            let n = 2 + rng.gen_range(64);
+            let k = 1 + rng.gen_range(n);
+            let m = SelectiveMask::random_topk(n, k, rng);
+            let ord = sort_keys_naive(&m, rng);
+            if !is_permutation(&ord.kid, n) {
+                return Err(format!("not a permutation (n={n})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn psum_matches_naive_exactly() {
+        // The paper's Eq.2 optimization must be *exact* (Sec. III-E says it
+        // "essentially eliminates the repetitive MAC", not approximates it).
+        check("psum == naive", 60, |rng| {
+            let n = 2 + rng.gen_range(72);
+            let k = 1 + rng.gen_range(n);
+            let m = SelectiveMask::random_topk(n, k, rng);
+            let seed = rng.next_u64();
+            let a = sort_keys_naive(&m, &mut Rng::new(seed));
+            let b = sort_keys_psum(&m, &mut Rng::new(seed));
+            if a != b {
+                return Err(format!("orders differ for n={n} k={k} seed={seed:#x}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let m = SelectiveMask::random_topk(48, 12, &mut Rng::new(7));
+        assert_eq!(sort_keys(&m, 99), sort_keys(&m, 99));
+    }
+
+    #[test]
+    fn banded_mask_sorts_contiguously() {
+        // Two disjoint key clusters: queries 0..8 use keys 0..8, queries
+        // 8..16 use keys 8..16. After sorting, each cluster must stay
+        // contiguous (greedy similarity cannot jump clusters mid-way).
+        let n = 16;
+        let idx: Vec<Vec<usize>> = (0..n)
+            .map(|q| {
+                let base = if q < 8 { 0 } else { 8 };
+                (base..base + 8).collect()
+            })
+            .collect();
+        let m = SelectiveMask::from_topk_indices(n, &idx);
+        let ord = sort_keys(&m, 3);
+        let first_cluster: Vec<bool> = ord.kid.iter().map(|&k| k < 8).collect();
+        let transitions = first_cluster.windows(2).filter(|w| w[0] != w[1]).count();
+        assert_eq!(transitions, 1, "clusters interleaved: {:?}", ord.kid);
+    }
+
+    #[test]
+    fn positions_is_inverse() {
+        let m = SelectiveMask::random_topk(32, 8, &mut Rng::new(5));
+        let ord = sort_keys(&m, 1);
+        let pos = ord.positions();
+        for (p, &k) in ord.kid.iter().enumerate() {
+            assert_eq!(pos[k], p);
+        }
+    }
+
+    #[test]
+    fn single_token_head() {
+        let mut m = SelectiveMask::zeros(1);
+        m.set(0, 0);
+        let ord = sort_keys(&m, 0);
+        assert_eq!(ord.kid, vec![0]);
+    }
+
+    #[test]
+    fn dense_mask_any_order_valid() {
+        // All-ones mask: every order is equally good; just require a perm.
+        let n = 24;
+        let dense: Vec<Vec<bool>> = vec![vec![true; n]; n];
+        let m = SelectiveMask::from_dense(&dense);
+        let ord = sort_keys(&m, 11);
+        assert!(is_permutation(&ord.kid, n));
+    }
+}

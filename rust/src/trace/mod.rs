@@ -1,0 +1,145 @@
+//! Selective-mask traces: the scheduler's input corpus.
+//!
+//! A trace is the set of per-head TopK selection masks one inference
+//! produced — the paper extracts these from TTST/KVT/DRSformer runs; we
+//! obtain them from (a) the calibrated synthetic generator ([`synth`],
+//! matched to Table I statistics) and (b) the Layer-2 JAX model executed
+//! through PJRT (`runtime::extract_masks`), which yields genuinely
+//! input-dependent masks for the end-to-end example.
+//!
+//! On-disk format: JSON with per-query selected-key index lists (compact
+//! enough for N ≤ a few hundred, diff-able, and parseable by the in-tree
+//! codec).
+
+pub mod synth;
+
+use crate::mask::SelectiveMask;
+use crate::util::json::Json;
+
+/// One layer's worth of selective masks (one per head) plus metadata.
+#[derive(Clone, Debug)]
+pub struct MaskTrace {
+    pub model: String,
+    pub n: usize,
+    pub dk: usize,
+    pub topk: usize,
+    pub heads: Vec<SelectiveMask>,
+}
+
+impl MaskTrace {
+    pub fn to_json(&self) -> Json {
+        let heads: Vec<Json> = self
+            .heads
+            .iter()
+            .map(|m| {
+                Json::Arr(
+                    (0..m.n())
+                        .map(|q| {
+                            Json::arr_usize(
+                                &(0..m.n()).filter(|&k| m.get(q, k)).collect::<Vec<_>>(),
+                            )
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("n", Json::num(self.n as f64)),
+            ("dk", Json::num(self.dk as f64)),
+            ("topk", Json::num(self.topk as f64)),
+            ("heads", Json::Arr(heads)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let n = j.get("n").as_usize().ok_or("missing 'n'")?;
+        if n == 0 {
+            return Err("trace with n = 0 tokens".into());
+        }
+        let heads_j = j.get("heads").as_arr().ok_or("missing 'heads'")?;
+        let mut heads = Vec::with_capacity(heads_j.len());
+        for hj in heads_j {
+            let rows = hj.as_arr().ok_or("head must be an array of rows")?;
+            if rows.len() != n {
+                return Err(format!("head has {} rows, expected {n}", rows.len()));
+            }
+            let idx: Vec<Vec<usize>> = rows
+                .iter()
+                .map(|r| {
+                    r.as_arr()
+                        .ok_or("row must be an index array".to_string())?
+                        .iter()
+                        .map(|v| v.as_usize().ok_or("bad index".to_string()))
+                        .collect()
+                })
+                .collect::<Result<_, _>>()?;
+            heads.push(SelectiveMask::from_topk_indices(n, &idx));
+        }
+        Ok(MaskTrace {
+            model: j.get("model").as_str().unwrap_or("unknown").to_string(),
+            n,
+            dk: j.get("dk").as_usize().unwrap_or(0),
+            topk: j.get("topk").as_usize().unwrap_or(0),
+            heads,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().emit())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_trace() -> MaskTrace {
+        let mut rng = Rng::new(4);
+        MaskTrace {
+            model: "test".into(),
+            n: 24,
+            dk: 64,
+            topk: 6,
+            heads: (0..3).map(|_| SelectiveMask::random_topk(24, 6, &mut rng)).collect(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_masks() {
+        let t = sample_trace();
+        let back = MaskTrace::from_json(&t.to_json()).unwrap();
+        assert_eq!(back.model, "test");
+        assert_eq!(back.heads.len(), 3);
+        for (a, b) in t.heads.iter().zip(&back.heads) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = sample_trace();
+        let dir = std::env::temp_dir().join("sata_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        t.save(&path).unwrap();
+        let back = MaskTrace::load(&path).unwrap();
+        assert_eq!(back.n, t.n);
+        assert_eq!(back.heads[0], t.heads[0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        assert!(MaskTrace::from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad = Json::parse(r#"{"n": 4, "heads": [[[0],[1]]]}"#).unwrap();
+        assert!(MaskTrace::from_json(&bad).is_err(), "row count mismatch");
+    }
+}

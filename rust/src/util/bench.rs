@@ -1,0 +1,153 @@
+//! In-tree micro-benchmark harness (no `criterion` offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this runner. It
+//! does warmup, adaptive iteration-count calibration to a target time,
+//! multiple measurement samples, and reports median/mean/p10/p90 — enough
+//! for the §Perf before/after tracking and the paper-table regenerators.
+//!
+//! Set `SATA_BENCH_FAST=1` to shrink sample counts (CI smoke mode).
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One benchmark measurement summary (nanoseconds per iteration).
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl Sample {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} median {:>12}  mean {:>12}  p10 {:>12}  p90 {:>12}  ({} iters x {} samples)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+            self.iters_per_sample,
+            self.samples
+        );
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner; collects samples for a final summary table.
+pub struct Bench {
+    fast: bool,
+    target_sample: Duration,
+    pub results: Vec<Sample>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        let fast = std::env::var("SATA_BENCH_FAST").is_ok();
+        Bench {
+            fast,
+            target_sample: if fast {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(120)
+            },
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, which must consume/produce observable work. Use
+    /// `std::hint::black_box` inside to defeat constant folding.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> Sample {
+        // Warmup + calibration: find iters such that one sample ~ target.
+        let mut iters: u64 = 1;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed();
+            if dt >= self.target_sample / 4 || iters >= 1 << 24 {
+                let per = dt.as_nanos().max(1) as f64 / iters as f64;
+                iters = ((self.target_sample.as_nanos() as f64 / per) as u64).max(1);
+                break;
+            }
+            iters *= 4;
+        }
+
+        let n_samples = if self.fast { 5 } else { 12 };
+        let mut per_iter = Vec::with_capacity(n_samples);
+        for _ in 0..n_samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+
+        let s = Sample {
+            name: name.to_string(),
+            median_ns: stats::percentile(&per_iter, 50.0),
+            mean_ns: stats::mean(&per_iter),
+            p10_ns: stats::percentile(&per_iter, 10.0),
+            p90_ns: stats::percentile(&per_iter, 90.0),
+            iters_per_sample: iters,
+            samples: n_samples,
+        };
+        s.print();
+        self.results.push(s.clone());
+        s
+    }
+
+    /// Print a `name: value` line that table-regenerator benches use for
+    /// paper-figure rows (kept distinct from timing samples).
+    pub fn report_metric(&self, key: &str, value: f64, unit: &str) {
+        println!("metric {key:<52} {value:>14.4} {unit}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("SATA_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let mut acc = 0u64;
+        let s = b.run("noop-ish", || {
+            acc = std::hint::black_box(acc.wrapping_add(1));
+        });
+        assert!(s.median_ns > 0.0);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("µs"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

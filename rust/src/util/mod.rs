@@ -1,0 +1,10 @@
+//! Dependency-free infrastructure: RNG, JSON, stats, property testing, and
+//! the benchmark harness. The offline build has only the `xla` crate's
+//! closure available, so these stand in for `rand`/`serde_json`/`proptest`/
+//! `criterion` respectively (see DESIGN.md).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

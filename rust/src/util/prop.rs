@@ -1,0 +1,87 @@
+//! Miniature property-testing harness (no `proptest` offline).
+//!
+//! `check` runs a property over many seeded RNG draws and, on failure,
+//! reports the failing *seed* so the case replays exactly:
+//!
+//! ```rust,no_run
+//! use sata::util::prop::check;
+//! check("sorted order is a permutation", 200, |rng| {
+//!     let n = 1 + rng.gen_range(64);
+//!     // ... build inputs from rng, return Err(msg) on violation ...
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Coordinator/scheduler invariants use this throughout `rust/tests/`.
+
+use super::rng::Rng;
+
+/// Run `prop` with `iters` independently seeded RNGs; panic with the seed
+/// and message on the first failure. Base seed is fixed for reproducibility
+/// and can be overridden with `SATA_PROP_SEED`.
+pub fn check<F>(name: &str, iters: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base: u64 = std::env::var("SATA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5A7A_2026);
+    for i in 0..iters {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at iteration {i} (seed {seed:#x}): {msg}\n\
+                 replay with SATA_PROP_SEED={base} (case index {i})"
+            );
+        }
+    }
+}
+
+/// Assert-style helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err(format!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let mut count = 0;
+        check("trivial", 50, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |rng| {
+            let v = rng.gen_range(100);
+            if v < 1000 {
+                Err(format!("v={v}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn prop_assert_macro_shortcircuits() {
+        check("macro", 5, |rng| {
+            let v = rng.gen_range(10);
+            prop_assert!(v < 10, "v out of range: {v}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,106 @@
+//! Cross-module integration tests: trace → Algo 1/2 → engine → metrics,
+//! plus coordinator wiring and failure-injection on malformed inputs.
+use sata::config::{SystemConfig, WorkloadSpec};
+use sata::coordinator::{Coordinator, Job};
+use sata::engine::{gains, run_dense, run_gated, run_sata, EngineOpts};
+use sata::hw::cim::CimConfig;
+use sata::hw::sched_rtl::SchedRtl;
+use sata::schedule::{schedule_sata, validate, HeadPlan};
+use sata::trace::synth::{gen_trace, gen_traces};
+use sata::trace::MaskTrace;
+use sata::util::json::Json;
+use sata::util::prop::check;
+
+#[test]
+fn full_pipeline_all_paper_workloads() {
+    let rtl = SchedRtl::tsmc65();
+    for spec in WorkloadSpec::all_paper() {
+        let t = gen_trace(&spec, 3);
+        let cim = CimConfig::default_65nm(spec.dk);
+        let dense = run_dense(&t.heads, &cim);
+        let gated = run_gated(&t.heads, &cim, EngineOpts::default());
+        let sata = run_sata(&t.heads, &cim, &rtl, EngineOpts { sf: spec.sf, ..Default::default() });
+        // SATA must beat dense on both axes; gated saves energy vs dense.
+        let g = gains(&dense, &sata);
+        assert!(g.throughput > 1.0, "{}: {:.2}", spec.name, g.throughput);
+        assert!(g.energy_eff > 1.0, "{}: {:.2}", spec.name, g.energy_eff);
+        assert!(gated.total_pj() < dense.total_pj(), "{}", spec.name);
+    }
+}
+
+#[test]
+fn schedule_correctness_on_generated_traces() {
+    check("generated-trace schedule correctness", 10, |rng| {
+        let spec = WorkloadSpec::drsformer();
+        let t = gen_trace(&spec, rng.next_u64());
+        let plans: Vec<HeadPlan> = t
+            .heads
+            .iter()
+            .enumerate()
+            .map(|(h, m)| HeadPlan::build(h, m.clone(), m.n() / 2, 1))
+            .collect();
+        let s = schedule_sata(&plans);
+        validate(&plans, &s)
+    });
+}
+
+#[test]
+fn trace_roundtrip_preserves_engine_results() {
+    let spec = WorkloadSpec::ttst();
+    let t = gen_trace(&spec, 9);
+    let dir = std::env::temp_dir().join("sata_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ttst.json");
+    t.save(&path).unwrap();
+    let loaded = MaskTrace::load(&path).unwrap();
+    let cim = CimConfig::default_65nm(spec.dk);
+    let a = run_dense(&t.heads, &cim);
+    let b = run_dense(&loaded.heads, &cim);
+    assert_eq!(a.latency_ns, b.latency_ns);
+    assert_eq!(a.total_pj(), b.total_pj());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn coordinator_end_to_end_with_mixed_workloads() {
+    let sys = SystemConfig::default();
+    let coord = Coordinator::new(2, 4, sys);
+    let mut id = 0;
+    for spec in [WorkloadSpec::ttst(), WorkloadSpec::drsformer()] {
+        for t in gen_traces(&spec, 2, 3) {
+            coord.submit(Job { id, trace: t, sf: spec.sf });
+            id += 1;
+        }
+    }
+    let (results, metrics) = coord.drain();
+    assert_eq!(results.len(), 4);
+    assert!(metrics.mean_throughput_gain > 1.0);
+}
+
+#[test]
+fn malformed_trace_files_are_rejected_not_panicking() {
+    for bad in [
+        "",
+        "{",
+        r#"{"n": 0, "heads": []}"#,
+        r#"{"n": 4, "heads": [[[9]]]}"#, // wrong row count
+    ] {
+        if let Ok(j) = Json::parse(bad) {
+            assert!(MaskTrace::from_json(&j).is_err(), "accepted: {bad}");
+        }
+    }
+}
+
+#[test]
+fn engine_is_deterministic_given_seed() {
+    let spec = WorkloadSpec::kvt_deit_tiny();
+    let t = gen_trace(&spec, 4);
+    let cim = CimConfig::default_65nm(spec.dk);
+    let rtl = SchedRtl::tsmc65();
+    let opts = EngineOpts { sf: spec.sf, seed: 77, ..Default::default() };
+    let a = run_sata(&t.heads, &cim, &rtl, opts);
+    let b = run_sata(&t.heads, &cim, &rtl, opts);
+    assert_eq!(a.latency_ns, b.latency_ns);
+    assert_eq!(a.total_pj(), b.total_pj());
+    assert_eq!(a.steps, b.steps);
+}
