@@ -1,7 +1,12 @@
 //! E2 — Fig. 4a regenerator: QK throughput and energy-efficiency gains
 //! (index-compute + scheduler costs incorporated).
+//!
+//! Routed through the `FlowBackend` registry: Algo 1 runs once per trace
+//! (shared `PlanSet`), then the dense baseline and SATA execute from the
+//! same plans.
 use sata::config::WorkloadSpec;
-use sata::engine::{gains, run_dense, run_sata, EngineOpts};
+use sata::engine::backend::{self, FlowBackend, PlanSet};
+use sata::engine::{gains, EngineOpts};
 use sata::hw::cim::CimConfig;
 use sata::hw::sched_rtl::SchedRtl;
 use sata::metrics::{render_gain_table, GainRow};
@@ -15,11 +20,13 @@ fn main() {
     let mut rows = Vec::new();
     for (spec, p) in WorkloadSpec::all_paper().iter().zip(paper) {
         let cim = CimConfig::default_65nm(spec.dk);
+        let opts = EngineOpts { sf: spec.sf, ..Default::default() };
         let traces = gen_traces(spec, 4, 3);
         let (mut thr, mut en) = (0.0, 0.0);
         for t in &traces {
-            let dense = run_dense(&t.heads, &cim);
-            let sata = run_sata(&t.heads, &cim, &rtl, EngineOpts { sf: spec.sf, ..Default::default() });
+            let plans = PlanSet::build(&t.heads, opts);
+            let dense = backend::DENSE.run_planned(&plans, &cim, &rtl);
+            let sata = backend::SATA.run_planned(&plans, &cim, &rtl);
             let g = gains(&dense, &sata);
             thr += g.throughput;
             en += g.energy_eff;
@@ -35,9 +42,19 @@ fn main() {
     println!("Fig. 4a — QK throughput & energy-efficiency gain of SATA vs dense CIM engine");
     print!("{}", render_gain_table(&rows));
     let spec = WorkloadSpec::drsformer();
-    let t = &gen_traces(&spec, 1, 3)[0];
+    let traces = gen_traces(&spec, 1, 3);
+    let t = &traces[0];
     let cim = CimConfig::default_65nm(spec.dk);
+    let opts = EngineOpts { sf: spec.sf, ..Default::default() };
     b.run("sata end-to-end schedule+simulate drsformer", || {
-        std::hint::black_box(run_sata(&t.heads, &cim, &rtl, EngineOpts { sf: spec.sf, ..Default::default() }));
+        std::hint::black_box(backend::SATA.run(&t.heads, &cim, &rtl, opts));
+    });
+    // The shared-PlanSet path amortizes Algo 1 across flows: measure the
+    // fan-out of all seven registered flows from one plan set.
+    let plans = PlanSet::build(&t.heads, opts);
+    b.run("all 7 flows from one shared PlanSet (drsformer)", || {
+        for be in backend::all() {
+            std::hint::black_box(be.run_planned(&plans, &cim, &rtl));
+        }
     });
 }

@@ -1,9 +1,20 @@
 //! E7 — Sec. IV-D scheduler overhead: latency/energy vs D_k and S_f.
 //! Paper anchors: <5% latency when D_k>=64 or S_f<=24; energy <5% fails
 //! when D_k<32 or S_f>28; 2.2% typical.
+//!
+//! Also tracks the engine's capacity-chunking hot path: the word-level
+//! `chunked_k_uses` union vs the retained bit-by-bit reference, and the
+//! per-flow scheduling-cost share reported through the `FlowBackend`
+//! registry.
+use sata::config::WorkloadSpec;
+use sata::engine::backend::{self, FlowBackend, PlanSet};
+use sata::engine::{chunked_k_uses, chunked_k_uses_ref, EngineOpts};
 use sata::hw::cim::CimConfig;
 use sata::hw::sched_rtl::SchedRtl;
+use sata::mask::SelectiveMask;
+use sata::trace::synth::gen_trace;
 use sata::util::bench::Bench;
+use sata::util::rng::Rng;
 
 fn main() {
     let mut b = Bench::new();
@@ -23,4 +34,34 @@ fn main() {
     b.run("schedule_cost(S_f=22)", || {
         std::hint::black_box(rtl.schedule_cost(22, 1));
     });
+
+    // Per-flow scheduler-cost share on a DRSformer trace, through the
+    // registry (dense carries none; SATA and the integrations pay it).
+    let spec = WorkloadSpec::drsformer();
+    let trace = gen_trace(&spec, 7);
+    let cim = CimConfig::default_65nm(spec.dk);
+    let plans = PlanSet::build(&trace.heads, EngineOpts { sf: spec.sf, ..Default::default() });
+    println!("per-flow scheduler energy share (DRSformer, via FlowBackend registry):");
+    for be in backend::all() {
+        let rep = be.run_planned(&plans, &cim, &rtl);
+        println!(
+            "  {:<14} sched {:>6.3}% of {:>10.1} nJ",
+            be.name(),
+            100.0 * rep.sched_pj / rep.total_pj(),
+            rep.total_pj() / 1e3
+        );
+    }
+
+    // Hot path: capacity-chunk key unions on an N=1024 mask. The engine's
+    // word-level OR+popcount over packed rows vs the bit-by-bit reference.
+    let n = 1024;
+    let mask = SelectiveMask::random_topk(n, n / 4, &mut Rng::new(1));
+    let order: Vec<usize> = (0..n).collect();
+    let fast = b.run("chunked_k_uses word-level (N=1024, cap=8)", || {
+        std::hint::black_box(chunked_k_uses(&mask, &order, 8, false));
+    });
+    let slow = b.run("chunked_k_uses bit-by-bit ref (N=1024, cap=8)", || {
+        std::hint::black_box(chunked_k_uses_ref(&mask, &order, 8, false));
+    });
+    b.report_metric("chunk_union.n1024.speedup", slow.median_ns / fast.median_ns, "x");
 }

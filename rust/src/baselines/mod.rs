@@ -45,6 +45,17 @@ impl SotaDesign {
         }
     }
 
+    /// Registry name of the SATA-integrated flow for this design (the
+    /// `engine::backend` port of the Fig. 4c study).
+    pub fn flow_name(&self) -> &'static str {
+        match self {
+            SotaDesign::A3 => "a3+sata",
+            SotaDesign::SpAtten => "spatten+sata",
+            SotaDesign::Energon => "energon+sata",
+            SotaDesign::Elsa => "elsa+sata",
+        }
+    }
+
     /// Fraction of the design's baseline *runtime* spent in index
     /// acquisition (unimprovable by SATA). A3's recursive search is the
     /// outlier the paper calls out.

@@ -3,9 +3,11 @@
 //! Owns a pool of worker threads (one per simulated CIM engine / chip
 //! tile group), a bounded job queue with backpressure, and the metrics
 //! sink. Jobs are *layers of selective-attention heads* (one `MaskTrace`
-//! each); each worker runs Algo 1 + Algo 2 + the engine simulation and
-//! reports the run. This is the process shape a hardware testbench or a
-//! serving frontend would drive.
+//! each) tagged with a flow name; each worker resolves the flow through
+//! the [`backend`] registry, runs Algo 1 **once** per trace (the shared
+//! [`PlanSet`]), executes both the requested flow and the dense baseline
+//! from those plans, and reports the run. This is the process shape a
+//! hardware testbench or a serving frontend would drive.
 //!
 //! No `tokio` offline — std threads + `mpsc` channels; the queue bound
 //! gives backpressure exactly like a bounded async channel would.
@@ -16,7 +18,8 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::config::SystemConfig;
-use crate::engine::{gains, run_dense, run_sata, EngineOpts, RunReport};
+use crate::engine::backend::{self, FlowBackend, PlanSet};
+use crate::engine::{gains, EngineOpts, RunReport};
 use crate::hw::cim::CimConfig;
 use crate::hw::sched_rtl::SchedRtl;
 use crate::trace::MaskTrace;
@@ -28,6 +31,16 @@ pub struct Job {
     pub trace: MaskTrace,
     /// Fold size override; `None` = whole-head.
     pub sf: Option<usize>,
+    /// Flow name resolved through the backend registry; unknown names fall
+    /// back to `sata`.
+    pub flow: String,
+}
+
+impl Job {
+    /// Job running the default (SATA) flow.
+    pub fn new(id: usize, trace: MaskTrace, sf: Option<usize>) -> Self {
+        Job { id, trace, sf, flow: "sata".into() }
+    }
 }
 
 /// Result of one job.
@@ -35,7 +48,9 @@ pub struct Job {
 pub struct JobResult {
     pub id: usize,
     pub model: String,
-    pub sata: RunReport,
+    /// Flow the report below was produced by.
+    pub flow: String,
+    pub report: RunReport,
     pub dense: RunReport,
     pub throughput_gain: f64,
     pub energy_gain: f64,
@@ -89,13 +104,18 @@ impl Coordinator {
                             seed: sys.seed,
                             ..Default::default()
                         };
-                        let sata = run_sata(&job.trace.heads, &cim, &rtl, opts);
-                        let dense = run_dense(&job.trace.heads, &cim);
-                        let g = gains(&dense, &sata);
+                        let flow: &dyn FlowBackend = backend::by_name(&job.flow)
+                            .unwrap_or(&backend::SATA);
+                        // Algo 1 once per trace; both flows share the plans.
+                        let plans = flow.plan(&job.trace.heads, opts);
+                        let report = flow.run_planned(&plans, &cim, &rtl);
+                        let dense = backend::DENSE.run_planned(&plans, &cim, &rtl);
+                        let g = gains(&dense, &report);
                         let _ = res_tx.send(JobResult {
                             id: job.id,
                             model: job.trace.model.clone(),
-                            sata,
+                            flow: flow.name().to_string(),
+                            report,
                             dense,
                             throughput_gain: g.throughput,
                             energy_gain: g.energy_eff,
@@ -136,8 +156,8 @@ impl Coordinator {
 
         let mut m = CoordinatorMetrics { jobs_done: results.len(), ..Default::default() };
         if !results.is_empty() {
-            m.total_latency_ns = results.iter().map(|r| r.sata.latency_ns).sum();
-            m.total_energy_pj = results.iter().map(|r| r.sata.total_pj()).sum();
+            m.total_latency_ns = results.iter().map(|r| r.report.latency_ns).sum();
+            m.total_energy_pj = results.iter().map(|r| r.report.total_pj()).sum();
             m.mean_throughput_gain = results.iter().map(|r| r.throughput_gain).sum::<f64>()
                 / results.len() as f64;
             m.mean_energy_gain =
@@ -157,7 +177,7 @@ mod tests {
         gen_traces(spec, count, 5)
             .into_iter()
             .enumerate()
-            .map(|(id, trace)| Job { id, trace, sf: spec.sf })
+            .map(|(id, trace)| Job::new(id, trace, spec.sf))
             .collect()
     }
 
@@ -189,9 +209,51 @@ mod tests {
         let (results, _) = coord.drain();
         assert_eq!(results.len(), 3);
         for r in &results {
-            assert!(r.sata.latency_ns > 0.0);
-            assert!(r.dense.latency_ns >= r.sata.latency_ns);
+            assert_eq!(r.flow, "sata");
+            assert!(r.report.latency_ns > 0.0);
+            assert!(r.dense.latency_ns >= r.report.latency_ns);
         }
+    }
+
+    #[test]
+    fn coordinator_serves_every_registered_flow() {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let names = backend::flow_names();
+        let coord = Coordinator::new(2, 4, sys);
+        let traces = gen_traces(&spec, 1, 9);
+        let trace = &traces[0];
+        for (id, name) in names.iter().enumerate() {
+            coord.submit(Job {
+                id,
+                trace: trace.clone(),
+                sf: spec.sf,
+                flow: name.to_string(),
+            });
+        }
+        let (results, metrics) = coord.drain();
+        assert_eq!(results.len(), names.len());
+        assert_eq!(metrics.jobs_done, names.len());
+        for (r, name) in results.iter().zip(&names) {
+            assert_eq!(&r.flow.as_str(), name);
+            assert!(r.report.latency_ns > 0.0, "{name}");
+            assert!(r.report.total_pj() > 0.0, "{name}");
+        }
+        // dense vs itself is exactly 1.0 on both axes
+        assert!((results[0].throughput_gain - 1.0).abs() < 1e-12);
+        assert!((results[0].energy_gain - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_flow_falls_back_to_sata() {
+        let spec = WorkloadSpec::drsformer();
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::new(1, 2, sys);
+        let trace = gen_traces(&spec, 1, 2).pop().unwrap();
+        coord.submit(Job { id: 0, trace, sf: spec.sf, flow: "no-such-flow".into() });
+        let (results, _) = coord.drain();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].flow, "sata");
     }
 
     #[test]

@@ -1,0 +1,827 @@
+//! The `FlowBackend` execution layer: one plan → schedule → execute
+//! pipeline for every flow (DESIGN.md §Execution-pipeline).
+//!
+//! The paper positions SATA as a *front-end* any selective-attention
+//! engine can adopt (Sec. IV-E bolts it onto A3 / SpAtten / Energon /
+//! ELSA). Operationally every flow decomposes into the same three stages:
+//!
+//! 1. **plan**     — Algo 1: sort keys + classify queries per head,
+//!    producing [`HeadPlan`]s. Planning is flow-independent, so one
+//!    [`PlanSet`] per trace is shared by every backend — Algo-1 sorting
+//!    runs once per trace, not once per flow.
+//! 2. **schedule** — Algo 2 variants: strictly sequential (dense/gated),
+//!    the SATA inter-head FSM, or tiled sub-heads when `sf` is set.
+//! 3. **execute**  — Eq. 3 timing + the active-row energy accounting on a
+//!    CIM system model, yielding a [`RunReport`].
+//!
+//! Backends register under a flow name (`by_name`/`all`), which is what
+//! the CLI's `--flow`, the coordinator, and the benches resolve. Adding a
+//! backend is a one-file change: implement [`FlowBackend`], add a static,
+//! list it in [`all`].
+
+use std::collections::HashMap;
+
+use crate::baselines::SotaDesign;
+use crate::hw::cim::CimConfig;
+use crate::hw::sched_rtl::SchedRtl;
+use crate::hw::OpCosts;
+use crate::mask::SelectiveMask;
+use crate::schedule::tiled::{schedule_tiled, validate_tiled, TiledSchedule};
+use crate::schedule::{schedule_sata, schedule_sequential, validate, HeadPlan, Schedule};
+
+use super::{chunked_k_uses, EngineOpts, RunReport};
+
+/// Algo-1 output for one trace: per-head sorted + classified plans, built
+/// once and shared by every backend that simulates the trace.
+#[derive(Clone, Debug)]
+pub struct PlanSet {
+    pub plans: Vec<HeadPlan>,
+    /// Engine options the plans were built with (θ, seed, fold size).
+    pub opts: EngineOpts,
+}
+
+impl PlanSet {
+    /// Run Algo 1 over every head mask (θ = `theta_frac · N`).
+    pub fn build(masks: &[SelectiveMask], opts: EngineOpts) -> Self {
+        assert!(!masks.is_empty(), "no heads to plan");
+        let n = masks[0].n();
+        let theta = (n as f64 * opts.theta_frac) as usize;
+        let plans = masks
+            .iter()
+            .enumerate()
+            .map(|(h, m)| HeadPlan::build(h, m.clone(), theta, opts.seed))
+            .collect();
+        PlanSet { plans, opts }
+    }
+
+    /// Token count N (uniform across heads of one trace).
+    pub fn n(&self) -> usize {
+        self.plans[0].mask.n()
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.plans.len()
+    }
+}
+
+/// What the schedule stage produced: one whole-head step stream, or one
+/// tiled sub-head schedule per head (Sec. III-D).
+#[derive(Clone, Debug)]
+pub enum FlowSchedule {
+    Whole(Schedule),
+    Tiled(Vec<TiledSchedule>),
+}
+
+impl FlowSchedule {
+    /// Check the correctness contract (every query selecting a MAC'd key
+    /// is resident) for whichever schedule shape the backend produced.
+    pub fn validate(&self, plans: &PlanSet) -> Result<(), String> {
+        match self {
+            FlowSchedule::Whole(s) => validate(&plans.plans, s),
+            FlowSchedule::Tiled(tss) => {
+                if plans.plans.len() != tss.len() {
+                    return Err(format!(
+                        "tiled schedule covers {} heads, plan set has {}",
+                        tss.len(),
+                        plans.plans.len()
+                    ));
+                }
+                for (p, ts) in plans.plans.iter().zip(tss.iter()) {
+                    validate_tiled(&p.mask, ts)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Selected (q, k) pairs covered by the schedule.
+    pub fn total_selected_macs(&self) -> usize {
+        match self {
+            FlowSchedule::Whole(s) => s.total_selected_macs(),
+            FlowSchedule::Tiled(tss) => {
+                tss.iter().map(|ts| ts.schedule.total_selected_macs()).sum()
+            }
+        }
+    }
+}
+
+/// One execution flow behind the plan → schedule → execute pipeline.
+pub trait FlowBackend: Sync {
+    /// Registry name (the CLI's `--flow <name>`).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for help text.
+    fn describe(&self) -> &'static str {
+        ""
+    }
+
+    /// Stage 1 — Algo 1. Flow-independent by default; a backend only
+    /// overrides this if it needs extra per-trace preprocessing.
+    fn plan(&self, masks: &[SelectiveMask], opts: EngineOpts) -> PlanSet {
+        PlanSet::build(masks, opts)
+    }
+
+    /// Stage 2 — Algo 2 variant over the shared plans.
+    fn schedule(&self, plans: &PlanSet) -> FlowSchedule;
+
+    /// Stage 3 — Eq. 3 timing + energy accumulation.
+    fn execute(
+        &self,
+        plans: &PlanSet,
+        sched: &FlowSchedule,
+        cim: &CimConfig,
+        rtl: &SchedRtl,
+    ) -> RunReport;
+
+    /// Full pipeline for standalone callers.
+    fn run(
+        &self,
+        masks: &[SelectiveMask],
+        cim: &CimConfig,
+        rtl: &SchedRtl,
+        opts: EngineOpts,
+    ) -> RunReport {
+        let plans = self.plan(masks, opts);
+        self.run_planned(&plans, cim, rtl)
+    }
+
+    /// Schedule + execute over an existing [`PlanSet`] — the shared-plan
+    /// path the coordinator and benches use (sort once, run every flow).
+    fn run_planned(&self, plans: &PlanSet, cim: &CimConfig, rtl: &SchedRtl) -> RunReport {
+        let sched = self.schedule(plans);
+        self.execute(plans, &sched, cim, rtl)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared execution cores (Eq. 3 + energy accounting)
+// ---------------------------------------------------------------------------
+
+/// Accumulate one schedule's steps into a report.
+///
+/// * `overlap`      — Eq. 3 overlapped timing (SATA) vs serial (baselines).
+/// * `fresh_k_frac` — fraction of K reads paying the far (global) fetch.
+/// * `k_factor`     — per-head K-traffic multiplier from capacity
+///   chunking (`chunked_k_uses / N`); scales K transfer/compute time and
+///   fetch energy, but NOT row-MAC energy (total row-MACs are invariant —
+///   chunking splits rows across passes).
+pub(crate) fn accumulate(
+    sched: &Schedule,
+    c: &OpCosts,
+    overlap: bool,
+    fresh_k_frac: f64,
+    k_factor: &HashMap<usize, f64>,
+    rep: &mut RunReport,
+) {
+    for step in &sched.steps {
+        let f = k_factor.get(&step.head).copied().unwrap_or(1.0);
+        let x = step.x();
+        let y = step.y();
+        let xe = x as f64 * f; // effective K traffic incl. refetch
+        let step_ns = if overlap {
+            f64::max(c.k_dt_ns * xe, c.q_arr_ns * y as f64)
+                + f64::max(c.k_comp_ns * xe, c.q_dt_ns * y as f64)
+        } else {
+            (c.k_dt_ns + c.k_comp_ns) * xe + (c.q_dt_ns + c.q_arr_ns) * y as f64
+        };
+        rep.latency_ns += step_ns;
+        rep.compute_busy_ns += c.k_comp_ns * xe;
+        // Energy: dense-within-active-rows MAC model (Sec. IV-A-b).
+        rep.mac_pj += x as f64 * step.active_q as f64 * c.k_mac_per_row_pj;
+        rep.k_fetch_pj += xe
+            * (fresh_k_frac * c.k_fetch_dram_pj
+                + (1.0 - fresh_k_frac) * c.k_fetch_buf_pj
+                + c.k_dt_pj);
+        rep.q_load_pj += y as f64 * (c.q_dt_pj + c.q_arr_pj);
+        rep.k_vec_ops += x;
+        rep.q_loads += y;
+        rep.selected_pairs += step.selected_macs;
+        rep.steps += 1;
+    }
+}
+
+/// Index-acquisition cost: a low-precision progressive pass over the N×N
+/// score matrix per head (the [23]/[24]-style pre-compute whose cost
+/// Fig. 4a incorporates). Scales with `index_bits / precision_bits`; the
+/// factor 2 models progressive early-exit filtering (Energon's philosophy:
+/// most candidates are rejected before full evaluation).
+pub(crate) fn index_cost_pj(cim: &CimConfig, n: usize, index_bits: usize) -> f64 {
+    let c = cim.op_costs();
+    let frac = index_bits as f64 / cim.precision_bits as f64;
+    (n * n) as f64 * c.k_mac_per_row_pj * frac / 2.0
+}
+
+/// Dense flow: all N×N MACs, serial timing, every capacity chunk streams
+/// all N keys again.
+fn execute_dense_core(plans: &PlanSet, sched: &Schedule, cim: &CimConfig) -> RunReport {
+    let c = cim.op_costs();
+    let cap = cim.q_capacity();
+    let factors: HashMap<usize, f64> = plans
+        .plans
+        .iter()
+        .map(|p| {
+            let m = &p.mask;
+            let order: Vec<usize> = (0..m.n()).collect();
+            let uses = chunked_k_uses(m, &order, cap, true);
+            (p.head, uses as f64 / m.n() as f64)
+        })
+        .collect();
+    let mut rep = RunReport::default();
+    accumulate(sched, &c, false, 1.0, &factors, &mut rep);
+    rep
+}
+
+/// Gated flow core: serial selective flow with the conventional (unsorted)
+/// query order; MAC energy on selected pairs only. No index charge — the
+/// caller decides which index engine pays.
+fn execute_gated_core(plans: &PlanSet, sched: &Schedule, cim: &CimConfig) -> RunReport {
+    let c = cim.op_costs();
+    let cap = cim.q_capacity();
+    // Gated pruning keeps the conventional (unsorted) query order: its
+    // chunk unions stay large — the "marginal benefit" of Sec. III-C.
+    let factors: HashMap<usize, f64> = plans
+        .plans
+        .iter()
+        .map(|p| {
+            let m = &p.mask;
+            let order: Vec<usize> = (0..m.n()).collect();
+            let uses = chunked_k_uses(m, &order, cap, false);
+            (p.head, uses as f64 / m.n() as f64)
+        })
+        .collect();
+    let mut rep = RunReport::default();
+    accumulate(sched, &c, false, 1.0, &factors, &mut rep);
+    // Gating: MAC energy only on selected pairs (not dense-active rows).
+    rep.mac_pj = sched.total_selected_macs() as f64 * c.k_mac_per_row_pj;
+    rep
+}
+
+/// SATA flow core: overlapped Eq. 3 timing + scheduler RTL cost, whole-head
+/// or tiled depending on the schedule shape. No index charge (caller adds).
+fn execute_sata_core(
+    plans: &PlanSet,
+    sched: &FlowSchedule,
+    cim: &CimConfig,
+    rtl: &SchedRtl,
+) -> RunReport {
+    let c = cim.op_costs();
+    let mut rep = RunReport::default();
+    match sched {
+        FlowSchedule::Whole(sched) => {
+            let cap = cim.q_capacity();
+            // SATA's load order groups queries with overlapping sorted-key
+            // windows, shrinking each chunk's key union.
+            let factors: HashMap<usize, f64> = plans
+                .plans
+                .iter()
+                .map(|p| {
+                    let mut order = p.class.major_queries();
+                    order.extend(p.class.minor_queries());
+                    let uses = chunked_k_uses(&p.mask, &order, cap, false);
+                    (p.head, uses as f64 / p.mask.n() as f64)
+                })
+                .collect();
+            accumulate(sched, &c, true, 1.0, &factors, &mut rep);
+            for p in &plans.plans {
+                let sc = rtl.schedule_cost(p.mask.n(), p.class.decrements);
+                rep.sched_pj += sc.energy_pj;
+            }
+            // Scheduling latency pipelines against compute; charge excess +
+            // handoff per head (Sec. IV-D).
+            let per_head_ns = rep.latency_ns / plans.plans.len() as f64;
+            for p in &plans.plans {
+                rep.latency_ns +=
+                    per_head_ns * rtl.latency_overhead(p.mask.n(), cim.dk, per_head_ns);
+            }
+        }
+        FlowSchedule::Tiled(tss) => {
+            // Tiled mode (Sec. III-D): tiling bounds the *sorter* hardware
+            // (S_f-sized masks) and enables zero-skip; it is NOT an array
+            // residency constraint. Physically:
+            //
+            //  * every query loads once (arrays hold the head — all of
+            //    Table I's tiled workloads fit `q_capacity`);
+            //  * every *globally live* key is broadcast once, MACing all
+            //    resident Q-folds in parallel;
+            //  * MAC energy is live-dense per tile with HEAD/TAIL bypass —
+            //    taken from the tiled sub-head schedule's active-row sums;
+            //  * Q loads of the next head overlap the current head's key
+            //    broadcasts (the inter-head FSM at fold granularity).
+            let mut carry_q: usize = 0;
+            for (h, (p, ts)) in plans.plans.iter().zip(tss.iter()).enumerate() {
+                let m = &p.mask;
+                let n_h = m.n();
+                let sf = ts.sf;
+
+                // MAC energy + selected-pair accounting from the tiled
+                // sub-head schedule (live-dense with bypass).
+                for step in &ts.schedule.steps {
+                    rep.mac_pj +=
+                        step.x() as f64 * step.active_q as f64 * c.k_mac_per_row_pj;
+                    rep.selected_pairs += step.selected_macs;
+                }
+
+                // Globally live keys, grouped per K-fold (broadcast units).
+                let folds = n_h.div_ceil(sf);
+                let mut live_per_kf = vec![0usize; folds];
+                let mut live_total = 0usize;
+                for k in 0..n_h {
+                    if m.col_popcount(k) > 0 {
+                        live_per_kf[k / sf] += 1;
+                        live_total += 1;
+                    }
+                }
+
+                // Timing: stream K-folds; h=0 loads its own Qs (init),
+                // later heads' loads were overlapped into the previous
+                // head's stream, and this head carries the next head's.
+                let y_total = if h == 0 { n_h } else { carry_q };
+                let mut y_left = y_total;
+                for (i, &x) in live_per_kf.iter().enumerate() {
+                    let remaining = (folds - i).max(1);
+                    let y = y_left.div_ceil(remaining).min(y_left);
+                    y_left -= y;
+                    let xe = x as f64;
+                    rep.latency_ns += f64::max(c.k_dt_ns * xe, c.q_arr_ns * y as f64)
+                        + f64::max(c.k_comp_ns * xe, c.q_dt_ns * y as f64);
+                    rep.compute_busy_ns += c.k_comp_ns * xe;
+                    rep.steps += 1;
+                }
+                carry_q = n_h;
+
+                // Energy: far fetch per live-key broadcast + Q loads once.
+                rep.k_fetch_pj += live_total as f64 * (c.k_fetch_dram_pj + c.k_dt_pj);
+                rep.q_load_pj += n_h as f64 * (c.q_dt_pj + c.q_arr_pj);
+                rep.k_vec_ops += live_total;
+                rep.q_loads += n_h;
+
+                // Scheduler cost per live tile + pipelined latency excess.
+                for t in &ts.tiles {
+                    let msize = t.global_q.len().max(t.global_k.len()).max(1);
+                    rep.sched_pj += rtl.schedule_cost(msize, 1).energy_pj;
+                }
+                let head_ns = live_total as f64 * (c.k_dt_ns + c.k_comp_ns);
+                rep.latency_ns +=
+                    head_ns * rtl.latency_overhead(sf.min(n_h), cim.dk, head_ns.max(1e-9));
+            }
+        }
+    }
+    rep
+}
+
+// ---------------------------------------------------------------------------
+// Backends
+// ---------------------------------------------------------------------------
+
+/// Dense CIM engine (NeuroSim original): all N×N MACs, serial flow, no
+/// index compute.
+pub struct DenseBackend;
+
+impl FlowBackend for DenseBackend {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn describe(&self) -> &'static str {
+        "dense CIM engine: all NxN MACs, serial flow"
+    }
+
+    fn schedule(&self, plans: &PlanSet) -> FlowSchedule {
+        FlowSchedule::Whole(schedule_sequential(&plans.plans, false))
+    }
+
+    fn execute(
+        &self,
+        plans: &PlanSet,
+        sched: &FlowSchedule,
+        cim: &CimConfig,
+        _rtl: &SchedRtl,
+    ) -> RunReport {
+        match sched {
+            FlowSchedule::Whole(s) => execute_dense_core(plans, s, cim),
+            FlowSchedule::Tiled(_) => unreachable!("dense flow schedules whole-head"),
+        }
+    }
+}
+
+/// Gated pruning (the "straightforward approach" of Sec. III-C): selective
+/// MACs, conventional serial flow, generic index cost charged.
+pub struct GatedBackend;
+
+impl FlowBackend for GatedBackend {
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+
+    fn describe(&self) -> &'static str {
+        "compute-gated pruning: selective MACs, conventional serial flow"
+    }
+
+    fn schedule(&self, plans: &PlanSet) -> FlowSchedule {
+        FlowSchedule::Whole(schedule_sequential(&plans.plans, true))
+    }
+
+    fn execute(
+        &self,
+        plans: &PlanSet,
+        sched: &FlowSchedule,
+        cim: &CimConfig,
+        _rtl: &SchedRtl,
+    ) -> RunReport {
+        let mut rep = match sched {
+            FlowSchedule::Whole(s) => execute_gated_core(plans, s, cim),
+            FlowSchedule::Tiled(_) => unreachable!("gated flow schedules whole-head"),
+        };
+        for p in &plans.plans {
+            rep.index_pj += index_cost_pj(cim, p.mask.n(), plans.opts.index_bits);
+        }
+        rep
+    }
+}
+
+/// SATA: Algo 1 + Algo 2 (+ tiling when `opts.sf` is set), overlapped
+/// Eq. 3 timing, scheduler + index costs charged.
+pub struct SataBackend;
+
+impl FlowBackend for SataBackend {
+    fn name(&self) -> &'static str {
+        "sata"
+    }
+
+    fn describe(&self) -> &'static str {
+        "SATA: sorted + classified, overlapped inter-head FSM flow"
+    }
+
+    fn schedule(&self, plans: &PlanSet) -> FlowSchedule {
+        match plans.opts.sf {
+            None => FlowSchedule::Whole(schedule_sata(&plans.plans)),
+            Some(sf) => FlowSchedule::Tiled(
+                plans
+                    .plans
+                    .iter()
+                    .map(|p| {
+                        schedule_tiled(
+                            &p.mask,
+                            sf,
+                            plans.opts.theta_frac,
+                            plans.opts.seed ^ p.head as u64,
+                        )
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    fn execute(
+        &self,
+        plans: &PlanSet,
+        sched: &FlowSchedule,
+        cim: &CimConfig,
+        rtl: &SchedRtl,
+    ) -> RunReport {
+        let mut rep = execute_sata_core(plans, sched, cim, rtl);
+        for p in &plans.plans {
+            rep.index_pj += index_cost_pj(cim, p.mask.n(), plans.opts.index_bits);
+        }
+        rep
+    }
+}
+
+/// A published selective-attention accelerator with SATA as its front-end
+/// (Sec. IV-E): SATA's sorted, overlapped operand flow feeds the design's
+/// own sparse-MAC engine; the design's index-acquisition machinery is
+/// untouched and its cost is charged on top.
+pub struct SotaSataBackend {
+    design: SotaDesign,
+    name: &'static str,
+}
+
+impl SotaSataBackend {
+    pub fn design(&self) -> SotaDesign {
+        self.design
+    }
+
+    /// The design running *without* SATA: its sparse-MAC engine behind a
+    /// fragmented gather path and a conventional serial flow. Execution
+    /// portion only (no index engine).
+    fn baseline_exec(&self, plans: &PlanSet, cim: &CimConfig) -> RunReport {
+        let sched = schedule_sequential(&plans.plans, true);
+        let mut rep = execute_gated_core(plans, &sched, cim);
+        // Fragmented operand access: scattered gathers, bank conflicts and
+        // refetches stretch the flow and the fetch energy (Sec. IV-E).
+        let f = self.design.frag_penalty();
+        rep.latency_ns *= f;
+        rep.k_fetch_pj *= f;
+        rep
+    }
+
+    /// Index-engine cost, sized from the design's published runtime/energy
+    /// index fractions relative to its own execution portion.
+    fn index_costs(&self, base: &RunReport) -> (f64, f64) {
+        let it = self.design.index_runtime_frac();
+        let ie = self.design.index_energy_frac();
+        (base.latency_ns * it / (1.0 - it), base.total_pj() * ie / (1.0 - ie))
+    }
+
+    /// SATA-front-ended execution with the design's index engine charged
+    /// on top (`base_exec` sizes the index cost).
+    fn integrated_from(
+        &self,
+        plans: &PlanSet,
+        sched: &FlowSchedule,
+        cim: &CimConfig,
+        rtl: &SchedRtl,
+        base_exec: &RunReport,
+    ) -> RunReport {
+        let c = cim.op_costs();
+        let mut rep = execute_sata_core(plans, sched, cim, rtl);
+        // The design's sparse-MAC engine pays MAC energy on selected pairs
+        // only ("execute sparse Q-K MAC after index acquisition"); SATA
+        // replaces the fragmented gather flow, not the MAC datapath.
+        rep.mac_pj = rep.selected_pairs as f64 * c.k_mac_per_row_pj;
+        let (idx_ns, idx_pj) = self.index_costs(base_exec);
+        rep.latency_ns += idx_ns;
+        rep.index_pj += idx_pj;
+        rep
+    }
+
+    /// Complete a baseline-execution report with the index engine's cost.
+    fn baseline_from(&self, mut base: RunReport) -> RunReport {
+        let (idx_ns, idx_pj) = self.index_costs(&base);
+        base.latency_ns += idx_ns;
+        base.index_pj += idx_pj;
+        base
+    }
+
+    /// Full report of the design running alone — the per-design baseline
+    /// the Fig. 4c integration gains are measured against.
+    pub fn baseline_report(&self, plans: &PlanSet, cim: &CimConfig) -> RunReport {
+        self.baseline_from(self.baseline_exec(plans, cim))
+    }
+
+    /// Integrated run and the design's own baseline from one shared plan
+    /// set, computing the baseline execution only once — use this when
+    /// measuring integration gains (Fig. 4c).
+    pub fn run_with_baseline(
+        &self,
+        plans: &PlanSet,
+        cim: &CimConfig,
+        rtl: &SchedRtl,
+    ) -> (RunReport, RunReport) {
+        let sched = self.schedule(plans);
+        let base_exec = self.baseline_exec(plans, cim);
+        let integrated = self.integrated_from(plans, &sched, cim, rtl, &base_exec);
+        (integrated, self.baseline_from(base_exec))
+    }
+}
+
+impl FlowBackend for SotaSataBackend {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn describe(&self) -> &'static str {
+        "published accelerator with SATA front-ending its operand flow"
+    }
+
+    fn schedule(&self, plans: &PlanSet) -> FlowSchedule {
+        // SATA is the front-end: same sorted, overlapped schedule.
+        SATA.schedule(plans)
+    }
+
+    fn execute(
+        &self,
+        plans: &PlanSet,
+        sched: &FlowSchedule,
+        cim: &CimConfig,
+        rtl: &SchedRtl,
+    ) -> RunReport {
+        // The index engine stays: its cost is sized from the design's own
+        // (un-sorted) execution — which is why index-dominated A3 "shows
+        // limited improvement".
+        let base_exec = self.baseline_exec(plans, cim);
+        self.integrated_from(plans, sched, cim, rtl, &base_exec)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+pub static DENSE: DenseBackend = DenseBackend;
+pub static GATED: GatedBackend = GatedBackend;
+pub static SATA: SataBackend = SataBackend;
+pub static A3_SATA: SotaSataBackend =
+    SotaSataBackend { design: SotaDesign::A3, name: "a3+sata" };
+pub static SPATTEN_SATA: SotaSataBackend =
+    SotaSataBackend { design: SotaDesign::SpAtten, name: "spatten+sata" };
+pub static ENERGON_SATA: SotaSataBackend =
+    SotaSataBackend { design: SotaDesign::Energon, name: "energon+sata" };
+pub static ELSA_SATA: SotaSataBackend =
+    SotaSataBackend { design: SotaDesign::Elsa, name: "elsa+sata" };
+
+/// The four SOTA-integration backends (Fig. 4c), in paper order.
+pub fn sota_backends() -> [&'static SotaSataBackend; 4] {
+    [&A3_SATA, &SPATTEN_SATA, &ENERGON_SATA, &ELSA_SATA]
+}
+
+/// Every registered backend, in presentation order.
+pub fn all() -> [&'static dyn FlowBackend; 7] {
+    [&DENSE, &GATED, &SATA, &A3_SATA, &SPATTEN_SATA, &ENERGON_SATA, &ELSA_SATA]
+}
+
+/// Registered flow names (CLI help text).
+pub fn flow_names() -> Vec<&'static str> {
+    all().iter().map(|b| b.name()).collect()
+}
+
+/// Resolve a backend by flow name. Case-insensitive; the `+sata` suffix of
+/// the integration flows may be dropped (`a3` == `a3+sata`).
+pub fn by_name(name: &str) -> Option<&'static dyn FlowBackend> {
+    let k = name.trim().to_lowercase();
+    all()
+        .into_iter()
+        .find(|b| k == b.name() || k == b.name().trim_end_matches("+sata"))
+}
+
+impl dyn FlowBackend {
+    /// Registry listing: `<dyn FlowBackend>::all()`.
+    pub fn all() -> [&'static dyn FlowBackend; 7] {
+        self::all()
+    }
+
+    /// Registry lookup: `<dyn FlowBackend>::by_name("spatten+sata")`.
+    pub fn by_name(name: &str) -> Option<&'static dyn FlowBackend> {
+        self::by_name(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadSpec;
+    use crate::trace::synth::gen_trace;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn report_eq(a: &RunReport, b: &RunReport) -> bool {
+        a.latency_ns == b.latency_ns
+            && a.compute_busy_ns == b.compute_busy_ns
+            && a.mac_pj == b.mac_pj
+            && a.k_fetch_pj == b.k_fetch_pj
+            && a.q_load_pj == b.q_load_pj
+            && a.sched_pj == b.sched_pj
+            && a.index_pj == b.index_pj
+            && a.k_vec_ops == b.k_vec_ops
+            && a.q_loads == b.q_loads
+            && a.selected_pairs == b.selected_pairs
+            && a.steps == b.steps
+    }
+
+    #[test]
+    fn registry_has_all_seven_flows() {
+        let names = flow_names();
+        assert_eq!(
+            names,
+            vec![
+                "dense",
+                "gated",
+                "sata",
+                "a3+sata",
+                "spatten+sata",
+                "energon+sata",
+                "elsa+sata"
+            ]
+        );
+        for n in names {
+            assert!(by_name(n).is_some(), "{n} not resolvable");
+        }
+    }
+
+    #[test]
+    fn sota_backend_names_match_design_flow_names() {
+        for b in sota_backends() {
+            assert_eq!(b.name(), b.design().flow_name());
+            assert_eq!(by_name(b.design().flow_name()).unwrap().name(), b.name());
+        }
+    }
+
+    #[test]
+    fn by_name_is_case_insensitive_and_aliases_sota() {
+        assert_eq!(by_name("SATA").unwrap().name(), "sata");
+        assert_eq!(by_name(" Dense ").unwrap().name(), "dense");
+        assert_eq!(by_name("a3").unwrap().name(), "a3+sata");
+        assert_eq!(by_name("Energon").unwrap().name(), "energon+sata");
+        assert!(by_name("nonsense").is_none());
+        assert_eq!(<dyn FlowBackend>::by_name("sata").unwrap().name(), "sata");
+        assert_eq!(<dyn FlowBackend>::all().len(), 7);
+    }
+
+    #[test]
+    fn shared_planset_matches_standalone_runs() {
+        // Planning once per trace and fanning out must not change any
+        // backend's report vs planning per flow.
+        let spec = WorkloadSpec::ttst();
+        let t = gen_trace(&spec, 3);
+        let cim = CimConfig::default_65nm(spec.dk);
+        let rtl = SchedRtl::tsmc65();
+        let opts = EngineOpts::default();
+        let plans = PlanSet::build(&t.heads, opts);
+        for b in all() {
+            let shared = b.run_planned(&plans, &cim, &rtl);
+            let standalone = b.run(&t.heads, &cim, &rtl, opts);
+            assert!(report_eq(&shared, &standalone), "{} diverged", b.name());
+        }
+    }
+
+    #[test]
+    fn every_backend_schedule_validates() {
+        check("backend residency (whole-head)", 8, |rng| {
+            let n = 8 + rng.gen_range(40);
+            let k = 1 + rng.gen_range(n / 2);
+            let masks: Vec<SelectiveMask> =
+                (0..3).map(|_| SelectiveMask::random_topk(n, k, rng)).collect();
+            let plans = PlanSet::build(&masks, EngineOpts::default());
+            for b in all() {
+                let sched = b.schedule(&plans);
+                sched.validate(&plans).map_err(|e| format!("{}: {e}", b.name()))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tiled_backend_schedule_validates() {
+        let mut rng = Rng::new(11);
+        let masks: Vec<SelectiveMask> =
+            (0..2).map(|_| SelectiveMask::random_topk(48, 12, &mut rng)).collect();
+        let opts = EngineOpts { sf: Some(8), ..Default::default() };
+        let plans = PlanSet::build(&masks, opts);
+        let sched = SATA.schedule(&plans);
+        assert!(matches!(sched, FlowSchedule::Tiled(_)));
+        sched.validate(&plans).unwrap();
+    }
+
+    #[test]
+    fn selective_backends_conserve_selected_pairs() {
+        let mut rng = Rng::new(5);
+        let masks: Vec<SelectiveMask> =
+            (0..3).map(|_| SelectiveMask::random_topk(32, 8, &mut rng)).collect();
+        let want: usize = masks.iter().map(|m| m.total_selected()).sum();
+        let cim = CimConfig::default_65nm(64);
+        let rtl = SchedRtl::tsmc65();
+        let plans = PlanSet::build(&masks, EngineOpts::default());
+        for b in all() {
+            let rep = b.run_planned(&plans, &cim, &rtl);
+            if b.name() == "dense" {
+                assert_eq!(rep.selected_pairs, 3 * 32 * 32);
+            } else {
+                assert_eq!(rep.selected_pairs, want, "{}", b.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sota_integration_beats_its_own_baseline() {
+        let spec = WorkloadSpec::ttst();
+        let t = gen_trace(&spec, 7);
+        let cim = CimConfig::default_65nm(spec.dk);
+        let rtl = SchedRtl::tsmc65();
+        let plans = PlanSet::build(&t.heads, EngineOpts::default());
+        for b in sota_backends() {
+            let (integrated, base) = b.run_with_baseline(&plans, &cim, &rtl);
+            // run_with_baseline must agree with the two single-shot paths.
+            assert!(report_eq(&integrated, &b.run_planned(&plans, &cim, &rtl)));
+            assert!(report_eq(&base, &b.baseline_report(&plans, &cim)));
+            assert!(
+                base.latency_ns > integrated.latency_ns,
+                "{}: no throughput gain",
+                b.name()
+            );
+            assert!(
+                base.total_pj() > integrated.total_pj(),
+                "{}: no energy gain",
+                b.name()
+            );
+        }
+    }
+
+    #[test]
+    fn a3_shows_least_throughput_gain_among_integrations() {
+        // Paper: "A3's recursive search dominates runtime overhead and
+        // shows limited improvement."
+        let spec = WorkloadSpec::ttst();
+        let t = gen_trace(&spec, 9);
+        let cim = CimConfig::default_65nm(spec.dk);
+        let rtl = SchedRtl::tsmc65();
+        let plans = PlanSet::build(&t.heads, EngineOpts::default());
+        let gain = |b: &SotaSataBackend| {
+            let (integrated, base) = b.run_with_baseline(&plans, &cim, &rtl);
+            base.latency_ns / integrated.latency_ns
+        };
+        let a3 = gain(&A3_SATA);
+        for b in [&SPATTEN_SATA, &ENERGON_SATA, &ELSA_SATA] {
+            assert!(gain(b) > a3, "{} should beat A3's gain", b.name());
+        }
+    }
+}

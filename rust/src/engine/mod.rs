@@ -1,4 +1,4 @@
-//! Execution engine: runs a [`Schedule`] on a hardware model.
+//! Execution engine: runs a schedule on a hardware model.
 //!
 //! Timing follows Eq. 3 per scheduled step (overlapped form for SATA,
 //! serial form for the baselines); energy follows the paper's accounting
@@ -7,15 +7,19 @@
 //! paths, and the QK-index acquisition + scheduler costs are charged to
 //! every selective configuration (Fig. 4a: "the cost … has been
 //! incorporated").
+//!
+//! Flows are implemented by [`backend::FlowBackend`]s behind the
+//! plan → schedule → execute pipeline (see DESIGN.md §Execution-pipeline);
+//! [`run_dense`] / [`run_gated`] / [`run_sata`] remain as thin wrappers
+//! over the registry for source compatibility.
 
-use std::collections::HashMap;
+pub mod backend;
 
 use crate::hw::cim::CimConfig;
 use crate::hw::sched_rtl::SchedRtl;
-use crate::hw::OpCosts;
 use crate::mask::SelectiveMask;
-use crate::schedule::tiled::schedule_tiled;
-use crate::schedule::{schedule_sata, schedule_sequential, HeadPlan, Schedule};
+
+use self::backend::{FlowBackend, DENSE, GATED, SATA};
 
 /// Per-chunk K traffic under finite array capacity.
 ///
@@ -28,7 +32,39 @@ use crate::schedule::{schedule_sata, schedule_sequential, HeadPlan, Schedule};
 /// SATA's sorted/classified `q_order` groups queries with overlapping key
 /// windows, so its chunk unions are far smaller — this is the "early fetch
 /// and retirement" locality win of the abstract, made mask-exact.
+///
+/// The union is computed word-level on the bit-packed mask rows: each
+/// chunk `OR`s its rows' `u64` words and popcounts the result — O(N/64)
+/// per resident query instead of O(N) single-bit probes. This is the hot
+/// path of every capacity-chunked run (see `benches/overhead.rs`).
 pub fn chunked_k_uses(
+    mask: &SelectiveMask,
+    q_order: &[usize],
+    cap: usize,
+    dense: bool,
+) -> usize {
+    let n = mask.n();
+    let cap = cap.max(1);
+    if dense {
+        // every chunk streams all N keys again
+        return q_order.chunks(cap).count() * n;
+    }
+    let mut union = vec![0u64; mask.row_words(0).len()];
+    let mut uses = 0usize;
+    for chunk in q_order.chunks(cap) {
+        union.iter_mut().for_each(|w| *w = 0);
+        for &q in chunk {
+            mask.row_union_into(q, &mut union);
+        }
+        uses += union.iter().map(|w| w.count_ones() as usize).sum::<usize>();
+    }
+    uses
+}
+
+/// Bit-by-bit reference for [`chunked_k_uses`] — the pre-optimization
+/// implementation, retained for the equivalence property test and the
+/// before/after timing in `benches/overhead.rs`.
+pub fn chunked_k_uses_ref(
     mask: &SelectiveMask,
     q_order: &[usize],
     cap: usize,
@@ -53,17 +89,6 @@ pub fn chunked_k_uses(
         }
     }
     uses
-}
-
-/// Which execution flow produced a report.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Flow {
-    /// Dense CIM engine (NeuroSim original): all N×N MACs, serial flow.
-    Dense,
-    /// Gated pruning: selective MACs, conventional (serial) flow.
-    Gated,
-    /// SATA: sorted, classified, overlapped flow.
-    Sata,
 }
 
 /// Energy/latency report for one workload run. Energies in pJ, time in ns.
@@ -131,242 +156,33 @@ impl Default for EngineOpts {
     }
 }
 
-/// Accumulate one schedule's steps into a report.
-///
-/// * `overlap`      — Eq. 3 overlapped timing (SATA) vs serial (baselines).
-/// * `fresh_k_frac` — fraction of K reads paying the far (global) fetch.
-/// * `k_factor`     — per-head K-traffic multiplier from capacity
-///   chunking (`chunked_k_uses / N`); scales K transfer/compute time and
-///   fetch energy, but NOT row-MAC energy (total row-MACs are invariant —
-///   chunking splits rows across passes).
-fn accumulate(
-    sched: &Schedule,
-    c: &OpCosts,
-    overlap: bool,
-    fresh_k_frac: f64,
-    k_factor: &HashMap<usize, f64>,
-    rep: &mut RunReport,
-) {
-    for step in &sched.steps {
-        let f = k_factor.get(&step.head).copied().unwrap_or(1.0);
-        let x = step.x();
-        let y = step.y();
-        let xe = x as f64 * f; // effective K traffic incl. refetch
-        let step_ns = if overlap {
-            f64::max(c.k_dt_ns * xe, c.q_arr_ns * y as f64)
-                + f64::max(c.k_comp_ns * xe, c.q_dt_ns * y as f64)
-        } else {
-            (c.k_dt_ns + c.k_comp_ns) * xe + (c.q_dt_ns + c.q_arr_ns) * y as f64
-        };
-        rep.latency_ns += step_ns;
-        rep.compute_busy_ns += c.k_comp_ns * xe;
-        // Energy: dense-within-active-rows MAC model (Sec. IV-A-b).
-        rep.mac_pj += x as f64 * step.active_q as f64 * c.k_mac_per_row_pj;
-        rep.k_fetch_pj += xe
-            * (fresh_k_frac * c.k_fetch_dram_pj
-                + (1.0 - fresh_k_frac) * c.k_fetch_buf_pj
-                + c.k_dt_pj);
-        rep.q_load_pj += y as f64 * (c.q_dt_pj + c.q_arr_pj);
-        rep.k_vec_ops += x;
-        rep.q_loads += y;
-        rep.selected_pairs += step.selected_macs;
-        rep.steps += 1;
-    }
-}
-
-/// Index-acquisition cost: a low-precision progressive pass over the N×N
-/// score matrix per head (the [23]/[24]-style pre-compute whose cost
-/// Fig. 4a incorporates). Scales with `index_bits / precision_bits`; the
-/// factor 2 models progressive early-exit filtering (Energon's philosophy:
-/// most candidates are rejected before full evaluation).
-fn index_cost_pj(cim: &CimConfig, n: usize, index_bits: usize) -> f64 {
-    let c = cim.op_costs();
-    let frac = index_bits as f64 / cim.precision_bits as f64;
-    (n * n) as f64 * c.k_mac_per_row_pj * frac / 2.0
-}
-
 /// Run the **dense** baseline: all N×N MACs, serial flow, no index compute.
+///
+/// Thin wrapper over [`backend::DENSE`].
 pub fn run_dense(masks: &[SelectiveMask], cim: &CimConfig) -> RunReport {
-    let c = cim.op_costs();
-    let cap = cim.q_capacity();
-    let plans: Vec<HeadPlan> = masks
-        .iter()
-        .enumerate()
-        .map(|(h, m)| HeadPlan::build(h, m.clone(), m.n() / 2, 0))
-        .collect();
-    let sched = schedule_sequential(&plans, false);
-    // Capacity chunking: every chunk streams all N keys again.
-    let factors: HashMap<usize, f64> = masks
-        .iter()
-        .enumerate()
-        .map(|(h, m)| {
-            let order: Vec<usize> = (0..m.n()).collect();
-            let uses = chunked_k_uses(m, &order, cap, true);
-            (h, uses as f64 / m.n() as f64)
-        })
-        .collect();
-    let mut rep = RunReport::default();
-    accumulate(&sched, &c, false, 1.0, &factors, &mut rep);
-    rep
+    DENSE.run(masks, cim, &SchedRtl::tsmc65(), EngineOpts::default())
 }
 
 /// Run the **gated pruning** baseline: selective MACs (only selected pairs
 /// burn MAC energy — compute-gating), conventional serial flow, index cost
 /// charged. This is the "straightforward approach" of Sec. III-C.
+///
+/// Thin wrapper over [`backend::GATED`].
 pub fn run_gated(masks: &[SelectiveMask], cim: &CimConfig, opts: EngineOpts) -> RunReport {
-    let c = cim.op_costs();
-    let n = masks[0].n();
-    let theta = (n as f64 * opts.theta_frac) as usize;
-    let plans: Vec<HeadPlan> = masks
-        .iter()
-        .enumerate()
-        .map(|(h, m)| HeadPlan::build(h, m.clone(), theta, opts.seed))
-        .collect();
-    let sched = schedule_sequential(&plans, true);
-    // Gated pruning keeps the conventional (unsorted) query order: its
-    // chunk unions stay large — the "marginal benefit" of Sec. III-C.
-    let cap = cim.q_capacity();
-    let factors: HashMap<usize, f64> = masks
-        .iter()
-        .enumerate()
-        .map(|(h, m)| {
-            let order: Vec<usize> = (0..m.n()).collect();
-            let uses = chunked_k_uses(m, &order, cap, false);
-            (h, uses as f64 / m.n() as f64)
-        })
-        .collect();
-    let mut rep = RunReport::default();
-    accumulate(&sched, &c, false, 1.0, &factors, &mut rep);
-    // Gating: MAC energy only on selected pairs (not dense-active rows).
-    rep.mac_pj = sched.total_selected_macs() as f64 * c.k_mac_per_row_pj;
-    for m in masks {
-        rep.index_pj += index_cost_pj(cim, m.n(), opts.index_bits);
-    }
-    rep
+    GATED.run(masks, cim, &SchedRtl::tsmc65(), opts)
 }
 
 /// Run **SATA**: Algo 1 + Algo 2 (+ tiling when `opts.sf` is set),
 /// overlapped Eq. 3 timing, scheduler + index costs charged.
+///
+/// Thin wrapper over [`backend::SATA`].
 pub fn run_sata(
     masks: &[SelectiveMask],
     cim: &CimConfig,
     rtl: &SchedRtl,
     opts: EngineOpts,
 ) -> RunReport {
-    let c = cim.op_costs();
-    let n = masks[0].n();
-    let mut rep = RunReport::default();
-
-    match opts.sf {
-        None => {
-            let theta = (n as f64 * opts.theta_frac) as usize;
-            let cap = cim.q_capacity();
-            let plans: Vec<HeadPlan> = masks
-                .iter()
-                .enumerate()
-                .map(|(h, m)| HeadPlan::build(h, m.clone(), theta, opts.seed))
-                .collect();
-            let sched = schedule_sata(&plans);
-            // SATA's load order groups queries with overlapping sorted-key
-            // windows, shrinking each chunk's key union.
-            let factors: HashMap<usize, f64> = plans
-                .iter()
-                .map(|p| {
-                    let mut order = p.class.major_queries();
-                    order.extend(p.class.minor_queries());
-                    let uses = chunked_k_uses(&p.mask, &order, cap, false);
-                    (p.head, uses as f64 / p.mask.n() as f64)
-                })
-                .collect();
-            accumulate(&sched, &c, true, 1.0, &factors, &mut rep);
-            for p in &plans {
-                let sc = rtl.schedule_cost(p.mask.n(), p.class.decrements);
-                rep.sched_pj += sc.energy_pj;
-            }
-            // Scheduling latency pipelines against compute; charge excess +
-            // handoff per head (Sec. IV-D).
-            let per_head_ns = rep.latency_ns / masks.len() as f64;
-            for p in &plans {
-                rep.latency_ns +=
-                    per_head_ns * rtl.latency_overhead(p.mask.n(), cim.dk, per_head_ns);
-            }
-        }
-        Some(sf) => {
-            // Tiled mode (Sec. III-D): tiling bounds the *sorter* hardware
-            // (S_f-sized masks) and enables zero-skip; it is NOT an array
-            // residency constraint. Physically:
-            //
-            //  * every query loads once (arrays hold the head — all of
-            //    Table I's tiled workloads fit `q_capacity`);
-            //  * every *globally live* key is broadcast once, MACing all
-            //    resident Q-folds in parallel;
-            //  * MAC energy is live-dense per tile with HEAD/TAIL bypass —
-            //    taken from the tiled sub-head schedule's active-row sums;
-            //  * Q loads of the next head overlap the current head's key
-            //    broadcasts (the inter-head FSM at fold granularity).
-            let mut carry_q: usize = 0;
-            for (h, m) in masks.iter().enumerate() {
-                let n_h = m.n();
-                let ts = schedule_tiled(m, sf, opts.theta_frac, opts.seed ^ h as u64);
-
-                // MAC energy + selected-pair accounting from the tiled
-                // sub-head schedule (live-dense with bypass).
-                for step in &ts.schedule.steps {
-                    rep.mac_pj +=
-                        step.x() as f64 * step.active_q as f64 * c.k_mac_per_row_pj;
-                    rep.selected_pairs += step.selected_macs;
-                }
-
-                // Globally live keys, grouped per K-fold (broadcast units).
-                let folds = n_h.div_ceil(sf);
-                let mut live_per_kf = vec![0usize; folds];
-                let mut live_total = 0usize;
-                for k in 0..n_h {
-                    if m.col_popcount(k) > 0 {
-                        live_per_kf[k / sf] += 1;
-                        live_total += 1;
-                    }
-                }
-
-                // Timing: stream K-folds; h=0 loads its own Qs (init),
-                // later heads' loads were overlapped into the previous
-                // head's stream, and this head carries the next head's.
-                let y_total = if h == 0 { n_h } else { carry_q };
-                let mut y_left = y_total;
-                for (i, &x) in live_per_kf.iter().enumerate() {
-                    let remaining = (folds - i).max(1);
-                    let y = y_left.div_ceil(remaining).min(y_left);
-                    y_left -= y;
-                    let xe = x as f64;
-                    rep.latency_ns += f64::max(c.k_dt_ns * xe, c.q_arr_ns * y as f64)
-                        + f64::max(c.k_comp_ns * xe, c.q_dt_ns * y as f64);
-                    rep.compute_busy_ns += c.k_comp_ns * xe;
-                    rep.steps += 1;
-                }
-                carry_q = n_h;
-
-                // Energy: far fetch per live-key broadcast + Q loads once.
-                rep.k_fetch_pj += live_total as f64 * (c.k_fetch_dram_pj + c.k_dt_pj);
-                rep.q_load_pj += n_h as f64 * (c.q_dt_pj + c.q_arr_pj);
-                rep.k_vec_ops += live_total;
-                rep.q_loads += n_h;
-
-                // Scheduler cost per live tile + pipelined latency excess.
-                for t in &ts.tiles {
-                    let msize = t.global_q.len().max(t.global_k.len()).max(1);
-                    rep.sched_pj += rtl.schedule_cost(msize, 1).energy_pj;
-                }
-                let head_ns = live_total as f64 * (c.k_dt_ns + c.k_comp_ns);
-                rep.latency_ns +=
-                    head_ns * rtl.latency_overhead(sf.min(n_h), cim.dk, head_ns.max(1e-9));
-            }
-        }
-    }
-
-    for m in masks {
-        rep.index_pj += index_cost_pj(cim, m.n(), opts.index_bits);
-    }
-    rep
+    SATA.run(masks, cim, rtl, opts)
 }
 
 /// Gains of one flow over another (throughput = inverse latency; energy
@@ -510,6 +326,54 @@ mod tests {
         assert!(u_grouped < u_orig, "grouped {u_grouped} !< original {u_orig}");
         // dense chunking is always N per chunk
         assert_eq!(chunked_k_uses(&m, &original, 8, true), 4 * n);
+    }
+
+    #[test]
+    fn chunked_k_uses_word_level_matches_reference() {
+        check("word-level chunk union == bit-by-bit", 60, |rng| {
+            let n = 1 + rng.gen_range(200);
+            let k = 1 + rng.gen_range(n);
+            let m = SelectiveMask::random_topk(n, k, rng);
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            let cap = 1 + rng.gen_range(n + 4); // sometimes > n
+            let dense = rng.chance(0.25);
+            let fast = chunked_k_uses(&m, &order, cap, dense);
+            let slow = chunked_k_uses_ref(&m, &order, cap, dense);
+            if fast != slow {
+                return Err(format!(
+                    "mismatch {fast} != {slow} (n={n} k={k} cap={cap} dense={dense})"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn chunked_k_uses_edge_cases() {
+        let mut rng = Rng::new(13);
+        let n = 40;
+        let m = SelectiveMask::random_topk(n, 10, &mut rng);
+        let order: Vec<usize> = (0..n).collect();
+        // cap >= n: one chunk — union over all queries (all keys a TopK
+        // mask touches), identical for both implementations.
+        let one_chunk = chunked_k_uses(&m, &order, n, false);
+        assert_eq!(one_chunk, chunked_k_uses(&m, &order, n + 100, false));
+        assert_eq!(one_chunk, chunked_k_uses_ref(&m, &order, n + 100, false));
+        // cap = 1: per-query chunks — sum of row popcounts.
+        let per_query = chunked_k_uses(&m, &order, 1, false);
+        let want: usize = (0..n).map(|q| m.row_popcount(q)).sum();
+        assert_eq!(per_query, want);
+        assert_eq!(per_query, chunked_k_uses_ref(&m, &order, 1, false));
+        // cap = 0 clamps to 1.
+        assert_eq!(chunked_k_uses(&m, &order, 0, false), per_query);
+        // dense flow edge cases: cap >= n → one chunk of N keys; cap = 1 →
+        // N chunks of N keys.
+        assert_eq!(chunked_k_uses(&m, &order, n + 5, true), n);
+        assert_eq!(chunked_k_uses(&m, &order, 1, true), n * n);
+        // empty query order → no chunks at all.
+        assert_eq!(chunked_k_uses(&m, &[], 4, false), 0);
+        assert_eq!(chunked_k_uses(&m, &[], 4, true), 0);
     }
 
     #[test]

@@ -5,19 +5,25 @@
 //! ```text
 //! sata trace-gen  --workload <name> --count <n> --seed <s> --out <dir>
 //! sata schedule   --workload <name> [--seed <s>]      # Table-I stats
-//! sata simulate   --workload <name> [--traces <n>]    # Fig-4a gains
-//! sata serve      --workload <name> --jobs <n> --workers <w>
+//! sata simulate   --workload <name> [--traces <n>] [--flow <name>]
+//! sata flows                                          # list registered flows
+//! sata serve      --workload <name> --jobs <n> --workers <w> [--flow <name>]
 //! sata e2e        [--artifacts <dir>]                 # PJRT end-to-end
 //! ```
+//!
+//! `--flow` resolves through the [`backend`] registry: `dense`, `gated`,
+//! `sata` (default), or a SOTA integration (`a3+sata`, `spatten+sata`,
+//! `energon+sata`, `elsa+sata`).
 
 use std::collections::HashMap;
 
 use sata::config::{SystemConfig, WorkloadSpec};
 use sata::coordinator::{Coordinator, Job};
+use sata::engine::backend::{self, FlowBackend, PlanSet};
 use sata::engine::{gains, run_dense, run_sata, EngineOpts};
 use sata::hw::cim::CimConfig;
 use sata::hw::sched_rtl::SchedRtl;
-use sata::metrics::{render_report, schedule_stats};
+use sata::metrics::{render_flow_comparison, render_report, schedule_stats};
 use sata::trace::synth::{gen_trace, gen_traces};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -43,6 +49,21 @@ fn workload(flags: &HashMap<String, String>) -> WorkloadSpec {
         Some("drsformer") => WorkloadSpec::drsformer(),
         Some(other) => {
             eprintln!("unknown workload '{other}' (ttst|kvt-tiny|kvt-base|drsformer)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Resolve `--flow` through the backend registry (default: `sata`).
+fn flow(flags: &HashMap<String, String>) -> &'static dyn FlowBackend {
+    let name = flags.get("flow").map(String::as_str).unwrap_or("sata");
+    match backend::by_name(name) {
+        Some(b) => b,
+        None => {
+            eprintln!(
+                "unknown flow '{name}' (registered: {})",
+                backend::flow_names().join("|")
+            );
             std::process::exit(2);
         }
     }
@@ -84,50 +105,60 @@ fn main() {
                 s.heads
             );
         }
+        "flows" => {
+            println!("registered flows (plan -> schedule -> execute backends):");
+            for b in backend::all() {
+                println!("  {:<14} {}", b.name(), b.describe());
+            }
+        }
         "simulate" => {
             let spec = workload(&flags);
+            let b = flow(&flags);
             let n_traces = usize_flag(&flags, "traces", 4);
             let cim = CimConfig::default_65nm(spec.dk);
             let rtl = SchedRtl::tsmc65();
+            let opts = EngineOpts { sf: spec.sf, ..Default::default() };
             let mut thr = 0.0;
             let mut en = 0.0;
             for (i, t) in gen_traces(&spec, n_traces, seed).iter().enumerate() {
-                let dense = run_dense(&t.heads, &cim);
-                let sata = run_sata(
-                    &t.heads,
-                    &cim,
-                    &rtl,
-                    EngineOpts { sf: spec.sf, ..Default::default() },
-                );
-                let g = gains(&dense, &sata);
+                // Algo 1 once per trace; baseline + flow share the plans.
+                let plans = PlanSet::build(&t.heads, opts);
+                let dense = backend::DENSE.run_planned(&plans, &cim, &rtl);
+                let rep = b.run_planned(&plans, &cim, &rtl);
+                let g = gains(&dense, &rep);
                 thr += g.throughput;
                 en += g.energy_eff;
                 if i == 0 {
-                    println!("{}", render_report("dense", &dense));
-                    println!("{}", render_report("sata ", &sata));
+                    print!(
+                        "{}",
+                        render_flow_comparison(&[("dense", &dense), (b.name(), &rep)])
+                    );
                 }
             }
             println!(
-                "{}: mean throughput gain {:.2}x, mean energy-efficiency gain {:.2}x over {n_traces} traces",
+                "{} [{}]: mean throughput gain {:.2}x, mean energy-efficiency gain {:.2}x over {n_traces} traces vs dense",
                 spec.name,
+                b.name(),
                 thr / n_traces as f64,
                 en / n_traces as f64
             );
         }
         "serve" => {
             let spec = workload(&flags);
+            let b = flow(&flags);
             let jobs = usize_flag(&flags, "jobs", 16);
             let workers = usize_flag(&flags, "workers", 2);
             let sys = SystemConfig::for_workload(&spec);
             let coord = Coordinator::new(workers, 8, sys);
             let t0 = std::time::Instant::now();
             for (id, trace) in gen_traces(&spec, jobs, seed).into_iter().enumerate() {
-                coord.submit(Job { id, trace, sf: spec.sf });
+                coord.submit(Job { id, trace, sf: spec.sf, flow: b.name().to_string() });
             }
             let (results, metrics) = coord.drain();
             println!(
-                "served {} jobs in {:.1} ms wall ({} workers): mean gains thr {:.2}x en {:.2}x; simulated latency {:.2} ms, energy {:.2} µJ",
+                "served {} jobs [{}] in {:.1} ms wall ({} workers): mean gains thr {:.2}x en {:.2}x; simulated latency {:.2} ms, energy {:.2} µJ",
                 results.len(),
+                b.name(),
                 t0.elapsed().as_secs_f64() * 1e3,
                 workers,
                 metrics.mean_throughput_gain,
@@ -190,8 +221,9 @@ fn main() {
         _ => {
             println!(
                 "sata — SATA reproduction CLI\n\
-                 usage: sata <trace-gen|schedule|simulate|serve|e2e> \
-                 [--workload ttst|kvt-tiny|kvt-base|drsformer] [--seed N] …"
+                 usage: sata <trace-gen|schedule|simulate|flows|serve|e2e> \
+                 [--workload ttst|kvt-tiny|kvt-base|drsformer] [--flow {}] [--seed N] …",
+                backend::flow_names().join("|")
             );
         }
     }

@@ -174,6 +174,17 @@ impl SelectiveMask {
         self.row_words(q).iter().zip(packed).any(|(r, w)| r & w != 0)
     }
 
+    /// `OR` row `q`'s packed words into `acc` — the word-level chunk-union
+    /// primitive: the engine's capacity-chunk key unions reduce to this
+    /// plus one popcount pass (see `engine::chunked_k_uses`).
+    #[inline]
+    pub fn row_union_into(&self, q: usize, acc: &mut [u64]) {
+        debug_assert!(q < self.n && acc.len() == self.w);
+        for (a, r) in acc.iter_mut().zip(self.row_words(q)) {
+            *a |= *r;
+        }
+    }
+
     /// Random TopK mask: each query selects `k` distinct keys uniformly.
     /// (Worst-case locality — useful as an adversarial workload.)
     pub fn random_topk(n: usize, k: usize, rng: &mut Rng) -> Self {
@@ -331,6 +342,27 @@ mod tests {
         for q in 2..8 {
             assert_eq!(t.row_popcount(q), 0, "padded row {q} must be zero");
         }
+    }
+
+    #[test]
+    fn row_union_into_matches_per_bit_or() {
+        check("row_union_into == bitwise OR", 30, |rng| {
+            let n = 1 + rng.gen_range(150);
+            let k = 1 + rng.gen_range(n);
+            let m = SelectiveMask::random_topk(n, k, rng);
+            let a = rng.gen_range(n);
+            let b = rng.gen_range(n);
+            let mut acc = vec![0u64; m.row_words(0).len()];
+            m.row_union_into(a, &mut acc);
+            m.row_union_into(b, &mut acc);
+            for key in 0..n {
+                let got = acc[key / 64] >> (key % 64) & 1 == 1;
+                if got != (m.get(a, key) || m.get(b, key)) {
+                    return Err(format!("union wrong at key {key} (n={n})"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -134,6 +134,30 @@ impl BertBreakdown {
     }
 }
 
+/// Render a baseline-vs-flows comparison, one [`render_report`] line per
+/// flow plus per-flow gains against the first (baseline) row. Row names
+/// come from the `FlowBackend` registry — this is the `simulate --flow`
+/// output path.
+pub fn render_flow_comparison(rows: &[(&str, &RunReport)]) -> String {
+    let mut s = String::new();
+    let Some(((base_name, base), rest)) = rows.split_first() else {
+        return s;
+    };
+    let width = rows.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+    s.push_str(&format!("{}\n", render_report(&format!("{base_name:<width$}"), base)));
+    for (name, r) in rest {
+        let g = crate::engine::gains(base, r);
+        s.push_str(&format!(
+            "{} | vs {}: thr {:.2}x en {:.2}x\n",
+            render_report(&format!("{name:<width$}"), r),
+            base_name,
+            g.throughput,
+            g.energy_eff,
+        ));
+    }
+    s
+}
+
 /// Pretty-print an engine report (CLI + examples).
 pub fn render_report(name: &str, r: &RunReport) -> String {
     format!(
@@ -190,6 +214,16 @@ mod tests {
         }];
         let out = render_gain_table(&rows);
         assert!(out.contains("TTST") && out.contains("geomean"));
+    }
+
+    #[test]
+    fn flow_comparison_renders_gains_vs_baseline() {
+        let base = RunReport { latency_ns: 2000.0, mac_pj: 100.0, ..Default::default() };
+        let fast = RunReport { latency_ns: 1000.0, mac_pj: 50.0, ..Default::default() };
+        let out = render_flow_comparison(&[("dense", &base), ("sata", &fast)]);
+        assert!(out.contains("dense"));
+        assert!(out.contains("vs dense: thr 2.00x en 2.00x"));
+        assert!(render_flow_comparison(&[]).is_empty());
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! Real PJRT backend (feature `pjrt`): compile HLO-text artifacts with the
+//! `xla` crate's PJRT CPU client and execute them. Only built when the
+//! crate is vendored — see the module docs in `runtime/mod.rs`.
+
+use std::path::{Path, PathBuf};
+
+use super::{err, ArtifactMeta, MhaOutput, Result, RuntimeError};
+use crate::mask::SelectiveMask;
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        err(format!("xla: {e:?}"))
+    }
+}
+
+/// A compiled model executable on the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One loaded artifact.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+impl Runtime {
+    /// Create a PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, dir: &Path, meta: &ArtifactMeta) -> Result<LoadedModel> {
+        let path: PathBuf = dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| err("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(LoadedModel { exe, meta: meta.clone() })
+    }
+}
+
+impl LoadedModel {
+    /// Execute the `mha` entry: inputs `(x, wq, wk, wv, wo)` row-major f32.
+    ///
+    /// Returns the attention output and the per-head selective masks —
+    /// the L3 scheduler's input, read straight out of the model.
+    pub fn run_mha(&self, inputs: &[(&[f32], (usize, usize))]) -> Result<MhaOutput> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, (r, c))| {
+                xla::Literal::vec1(data).reshape(&[*r as i64, *c as i64])
+            })
+            .collect::<std::result::Result<_, _>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        if tuple.len() != 2 {
+            return Err(err(format!("expected (out, masks) tuple, got {}", tuple.len())));
+        }
+        let out = tuple[0].to_vec::<f32>()?;
+        let masks_flat = tuple[1].to_vec::<f32>()?;
+
+        let n = self.meta.n_tokens;
+        let dm = self.meta.d_model;
+        let heads = self.meta.n_heads;
+        if masks_flat.len() != heads * n * n {
+            return Err(err(format!(
+                "mask buffer {} != heads*n*n {}",
+                masks_flat.len(),
+                heads * n * n
+            )));
+        }
+        let masks = (0..heads)
+            .map(|h| {
+                SelectiveMask::from_f32_rowmajor(n, &masks_flat[h * n * n..(h + 1) * n * n])
+            })
+            .collect();
+        Ok(MhaOutput { out, out_shape: (n, dm), masks })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::load_manifest;
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Full PJRT round-trip: load HLO text, execute, check the TopK
+    /// invariant on the returned masks. This is E9's core wiring.
+    #[test]
+    fn pjrt_executes_mha_artifact_and_masks_are_topk() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let metas = load_manifest(&dir).unwrap();
+        let meta = metas.iter().find(|m| m.entry == "mha").unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let model = rt.load(&dir, meta).unwrap();
+
+        let n = meta.n_tokens;
+        let dm = meta.d_model;
+        // deterministic pseudo-random inputs (no jax here)
+        let mut rng = crate::util::rng::Rng::new(42);
+        let gen = |len: usize, rng: &mut crate::util::rng::Rng| -> Vec<f32> {
+            (0..len).map(|_| rng.normal() as f32 * 0.5).collect()
+        };
+        let x = gen(n * dm, &mut rng);
+        let wq = gen(dm * dm, &mut rng);
+        let wk = gen(dm * dm, &mut rng);
+        let wv = gen(dm * dm, &mut rng);
+        let wo = gen(dm * dm, &mut rng);
+
+        let out = model
+            .run_mha(&[
+                (&x, (n, dm)),
+                (&wq, (dm, dm)),
+                (&wk, (dm, dm)),
+                (&wv, (dm, dm)),
+                (&wo, (dm, dm)),
+            ])
+            .unwrap();
+
+        assert_eq!(out.out.len(), n * dm);
+        assert!(out.out.iter().all(|v| v.is_finite()));
+        assert_eq!(out.masks.len(), meta.n_heads);
+        for m in &out.masks {
+            for q in 0..n {
+                assert_eq!(m.row_popcount(q), meta.topk, "TopK row invariant");
+            }
+        }
+    }
+}

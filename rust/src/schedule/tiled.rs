@@ -174,6 +174,92 @@ pub fn schedule_tiled(
     }
 }
 
+/// Validate the tiled correctness contract against the original head mask.
+///
+/// Mirrors [`super::validate`] at tile granularity, in global token ids:
+/// per tile, every live key is MAC'd exactly once and every live query is
+/// loaded then retired exactly once; and residency — whenever a key is
+/// MAC'd in a tile, every query of that tile selecting it is live.
+pub fn validate_tiled(mask: &SelectiveMask, ts: &TiledSchedule) -> Result<(), String> {
+    use std::collections::HashMap;
+
+    #[derive(Clone, Copy, PartialEq)]
+    enum QState {
+        Unloaded,
+        Live,
+        Retired,
+    }
+    // Keyed by (tile, global id): a token can be live in several tiles.
+    let mut qstate: HashMap<(usize, usize), QState> = HashMap::new();
+    let mut k_done: HashMap<(usize, usize), usize> = HashMap::new();
+
+    for (si, step) in ts.schedule.steps.iter().enumerate() {
+        let t = ts
+            .tiles
+            .get(step.head)
+            .ok_or_else(|| format!("step {si}: unknown tile {}", step.head))?;
+        for &k in &step.k_macs {
+            *k_done.entry((step.head, k)).or_insert(0) += 1;
+            for &q in &t.global_q {
+                if mask.get(q, k) {
+                    match qstate.get(&(step.head, q)).copied().unwrap_or(QState::Unloaded)
+                    {
+                        QState::Live => {}
+                        QState::Unloaded => {
+                            return Err(format!(
+                                "step {si}: tile {} key {k} MAC'd but query {q} not loaded",
+                                step.head
+                            ))
+                        }
+                        QState::Retired => {
+                            return Err(format!(
+                                "step {si}: tile {} key {k} MAC'd but query {q} already retired",
+                                step.head
+                            ))
+                        }
+                    }
+                }
+            }
+        }
+        for &(h, q) in &step.q_loads {
+            let st = qstate.entry((h, q)).or_insert(QState::Unloaded);
+            if *st != QState::Unloaded {
+                return Err(format!("step {si}: query ({h},{q}) loaded twice"));
+            }
+            *st = QState::Live;
+        }
+        for &(h, q) in &step.q_retires {
+            let st = qstate.entry((h, q)).or_insert(QState::Unloaded);
+            if *st != QState::Live {
+                return Err(format!("step {si}: query ({h},{q}) retired while not live"));
+            }
+            *st = QState::Retired;
+        }
+    }
+
+    for t in &ts.tiles {
+        for &k in &t.global_k {
+            let c = k_done.get(&(t.tile_id, k)).copied().unwrap_or(0);
+            if c != 1 {
+                return Err(format!("tile {} key {k} MAC'd {c} times", t.tile_id));
+            }
+        }
+        for &q in &t.global_q {
+            if !matches!(qstate.get(&(t.tile_id, q)), Some(QState::Retired)) {
+                return Err(format!("tile {} query {q} not loaded+retired", t.tile_id));
+            }
+        }
+    }
+    // No step may MAC a key its tile doesn't own (extra, unassigned MACs
+    // would corrupt the energy/latency accounting yet satisfy residency).
+    for (tile, k) in k_done.keys() {
+        if !ts.tiles[*tile].global_k.contains(k) {
+            return Err(format!("tile {tile} MAC'd foreign key {k}"));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -283,6 +369,54 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn tiled_schedules_validate_on_random_masks() {
+        check("tiled schedule residency", 20, |rng| {
+            let n = 12 + rng.gen_range(80);
+            let k = 1 + rng.gen_range(n / 2);
+            let sf = 4 + rng.gen_range(n / 2);
+            let mask = SelectiveMask::random_topk(n, k, rng);
+            let ts = schedule_tiled(&mask, sf, 0.5, rng.next_u64());
+            validate_tiled(&mask, &ts)
+        });
+    }
+
+    #[test]
+    fn validate_tiled_rejects_tampered_schedule() {
+        let mut rng = Rng::new(2);
+        let mask = SelectiveMask::random_topk(32, 8, &mut rng);
+        let mut ts = schedule_tiled(&mask, 8, 0.5, 0);
+        // Drop the retirements of one MAC step: its queries never retire.
+        let idx = ts
+            .schedule
+            .steps
+            .iter()
+            .position(|s| !s.q_retires.is_empty())
+            .expect("some step retires");
+        ts.schedule.steps[idx].q_retires.clear();
+        assert!(validate_tiled(&mask, &ts).is_err());
+    }
+
+    #[test]
+    fn validate_tiled_rejects_foreign_key_macs() {
+        let mut rng = Rng::new(4);
+        let mask = SelectiveMask::random_topk(32, 8, &mut rng);
+        let mut ts = schedule_tiled(&mask, 8, 0.5, 0);
+        // Append a key the tile does not own to some MAC step.
+        let idx = ts
+            .schedule
+            .steps
+            .iter()
+            .position(|s| !s.k_macs.is_empty())
+            .expect("some step MACs");
+        let tile = ts.schedule.steps[idx].head;
+        let foreign = (0..32)
+            .find(|k| !ts.tiles[tile].global_k.contains(k))
+            .expect("a key outside the tile");
+        ts.schedule.steps[idx].k_macs.push(foreign);
+        assert!(validate_tiled(&mask, &ts).is_err());
     }
 
     #[test]

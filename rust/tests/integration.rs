@@ -1,15 +1,334 @@
 //! Cross-module integration tests: trace → Algo 1/2 → engine → metrics,
-//! plus coordinator wiring and failure-injection on malformed inputs.
+//! plus coordinator wiring, the `FlowBackend` registry (golden equivalence
+//! against the pre-refactor `run_*` implementations, residency across all
+//! backends) and failure-injection on malformed inputs.
 use sata::config::{SystemConfig, WorkloadSpec};
 use sata::coordinator::{Coordinator, Job};
-use sata::engine::{gains, run_dense, run_gated, run_sata, EngineOpts};
+use sata::engine::backend::{self, FlowBackend, PlanSet};
+use sata::engine::{gains, run_dense, run_gated, run_sata, EngineOpts, RunReport};
 use sata::hw::cim::CimConfig;
 use sata::hw::sched_rtl::SchedRtl;
+use sata::mask::SelectiveMask;
 use sata::schedule::{schedule_sata, validate, HeadPlan};
 use sata::trace::synth::{gen_trace, gen_traces};
 use sata::trace::MaskTrace;
 use sata::util::json::Json;
 use sata::util::prop::check;
+
+/// Faithful copies of the pre-refactor free-function flows (the seed's
+/// `run_dense`/`run_gated`/`run_sata`), built on the retained bit-by-bit
+/// `chunked_k_uses_ref`. The `FlowBackend` ports must reproduce these
+/// bitwise — the golden contract of the refactor.
+mod legacy {
+    use std::collections::HashMap;
+
+    use sata::engine::{chunked_k_uses_ref, EngineOpts, RunReport};
+    use sata::hw::cim::CimConfig;
+    use sata::hw::sched_rtl::SchedRtl;
+    use sata::hw::OpCosts;
+    use sata::mask::SelectiveMask;
+    use sata::schedule::tiled::schedule_tiled;
+    use sata::schedule::{schedule_sata, schedule_sequential, HeadPlan, Schedule};
+
+    fn accumulate(
+        sched: &Schedule,
+        c: &OpCosts,
+        overlap: bool,
+        fresh_k_frac: f64,
+        k_factor: &HashMap<usize, f64>,
+        rep: &mut RunReport,
+    ) {
+        for step in &sched.steps {
+            let f = k_factor.get(&step.head).copied().unwrap_or(1.0);
+            let x = step.x();
+            let y = step.y();
+            let xe = x as f64 * f;
+            let step_ns = if overlap {
+                f64::max(c.k_dt_ns * xe, c.q_arr_ns * y as f64)
+                    + f64::max(c.k_comp_ns * xe, c.q_dt_ns * y as f64)
+            } else {
+                (c.k_dt_ns + c.k_comp_ns) * xe + (c.q_dt_ns + c.q_arr_ns) * y as f64
+            };
+            rep.latency_ns += step_ns;
+            rep.compute_busy_ns += c.k_comp_ns * xe;
+            rep.mac_pj += x as f64 * step.active_q as f64 * c.k_mac_per_row_pj;
+            rep.k_fetch_pj += xe
+                * (fresh_k_frac * c.k_fetch_dram_pj
+                    + (1.0 - fresh_k_frac) * c.k_fetch_buf_pj
+                    + c.k_dt_pj);
+            rep.q_load_pj += y as f64 * (c.q_dt_pj + c.q_arr_pj);
+            rep.k_vec_ops += x;
+            rep.q_loads += y;
+            rep.selected_pairs += step.selected_macs;
+            rep.steps += 1;
+        }
+    }
+
+    fn index_cost_pj(cim: &CimConfig, n: usize, index_bits: usize) -> f64 {
+        let c = cim.op_costs();
+        let frac = index_bits as f64 / cim.precision_bits as f64;
+        (n * n) as f64 * c.k_mac_per_row_pj * frac / 2.0
+    }
+
+    pub fn run_dense(masks: &[SelectiveMask], cim: &CimConfig) -> RunReport {
+        let c = cim.op_costs();
+        let cap = cim.q_capacity();
+        let plans: Vec<HeadPlan> = masks
+            .iter()
+            .enumerate()
+            .map(|(h, m)| HeadPlan::build(h, m.clone(), m.n() / 2, 0))
+            .collect();
+        let sched = schedule_sequential(&plans, false);
+        let factors: HashMap<usize, f64> = masks
+            .iter()
+            .enumerate()
+            .map(|(h, m)| {
+                let order: Vec<usize> = (0..m.n()).collect();
+                let uses = chunked_k_uses_ref(m, &order, cap, true);
+                (h, uses as f64 / m.n() as f64)
+            })
+            .collect();
+        let mut rep = RunReport::default();
+        accumulate(&sched, &c, false, 1.0, &factors, &mut rep);
+        rep
+    }
+
+    pub fn run_gated(
+        masks: &[SelectiveMask],
+        cim: &CimConfig,
+        opts: EngineOpts,
+    ) -> RunReport {
+        let c = cim.op_costs();
+        let n = masks[0].n();
+        let theta = (n as f64 * opts.theta_frac) as usize;
+        let plans: Vec<HeadPlan> = masks
+            .iter()
+            .enumerate()
+            .map(|(h, m)| HeadPlan::build(h, m.clone(), theta, opts.seed))
+            .collect();
+        let sched = schedule_sequential(&plans, true);
+        let cap = cim.q_capacity();
+        let factors: HashMap<usize, f64> = masks
+            .iter()
+            .enumerate()
+            .map(|(h, m)| {
+                let order: Vec<usize> = (0..m.n()).collect();
+                let uses = chunked_k_uses_ref(m, &order, cap, false);
+                (h, uses as f64 / m.n() as f64)
+            })
+            .collect();
+        let mut rep = RunReport::default();
+        accumulate(&sched, &c, false, 1.0, &factors, &mut rep);
+        rep.mac_pj = sched.total_selected_macs() as f64 * c.k_mac_per_row_pj;
+        for m in masks {
+            rep.index_pj += index_cost_pj(cim, m.n(), opts.index_bits);
+        }
+        rep
+    }
+
+    pub fn run_sata(
+        masks: &[SelectiveMask],
+        cim: &CimConfig,
+        rtl: &SchedRtl,
+        opts: EngineOpts,
+    ) -> RunReport {
+        let c = cim.op_costs();
+        let n = masks[0].n();
+        let mut rep = RunReport::default();
+
+        match opts.sf {
+            None => {
+                let theta = (n as f64 * opts.theta_frac) as usize;
+                let cap = cim.q_capacity();
+                let plans: Vec<HeadPlan> = masks
+                    .iter()
+                    .enumerate()
+                    .map(|(h, m)| HeadPlan::build(h, m.clone(), theta, opts.seed))
+                    .collect();
+                let sched = schedule_sata(&plans);
+                let factors: HashMap<usize, f64> = plans
+                    .iter()
+                    .map(|p| {
+                        let mut order = p.class.major_queries();
+                        order.extend(p.class.minor_queries());
+                        let uses = chunked_k_uses_ref(&p.mask, &order, cap, false);
+                        (p.head, uses as f64 / p.mask.n() as f64)
+                    })
+                    .collect();
+                accumulate(&sched, &c, true, 1.0, &factors, &mut rep);
+                for p in &plans {
+                    let sc = rtl.schedule_cost(p.mask.n(), p.class.decrements);
+                    rep.sched_pj += sc.energy_pj;
+                }
+                let per_head_ns = rep.latency_ns / masks.len() as f64;
+                for p in &plans {
+                    rep.latency_ns +=
+                        per_head_ns * rtl.latency_overhead(p.mask.n(), cim.dk, per_head_ns);
+                }
+            }
+            Some(sf) => {
+                let mut carry_q: usize = 0;
+                for (h, m) in masks.iter().enumerate() {
+                    let n_h = m.n();
+                    let ts = schedule_tiled(m, sf, opts.theta_frac, opts.seed ^ h as u64);
+
+                    for step in &ts.schedule.steps {
+                        rep.mac_pj +=
+                            step.x() as f64 * step.active_q as f64 * c.k_mac_per_row_pj;
+                        rep.selected_pairs += step.selected_macs;
+                    }
+
+                    let folds = n_h.div_ceil(sf);
+                    let mut live_per_kf = vec![0usize; folds];
+                    let mut live_total = 0usize;
+                    for k in 0..n_h {
+                        if m.col_popcount(k) > 0 {
+                            live_per_kf[k / sf] += 1;
+                            live_total += 1;
+                        }
+                    }
+
+                    let y_total = if h == 0 { n_h } else { carry_q };
+                    let mut y_left = y_total;
+                    for (i, &x) in live_per_kf.iter().enumerate() {
+                        let remaining = (folds - i).max(1);
+                        let y = y_left.div_ceil(remaining).min(y_left);
+                        y_left -= y;
+                        let xe = x as f64;
+                        rep.latency_ns += f64::max(c.k_dt_ns * xe, c.q_arr_ns * y as f64)
+                            + f64::max(c.k_comp_ns * xe, c.q_dt_ns * y as f64);
+                        rep.compute_busy_ns += c.k_comp_ns * xe;
+                        rep.steps += 1;
+                    }
+                    carry_q = n_h;
+
+                    rep.k_fetch_pj += live_total as f64 * (c.k_fetch_dram_pj + c.k_dt_pj);
+                    rep.q_load_pj += n_h as f64 * (c.q_dt_pj + c.q_arr_pj);
+                    rep.k_vec_ops += live_total;
+                    rep.q_loads += n_h;
+
+                    for t in &ts.tiles {
+                        let msize = t.global_q.len().max(t.global_k.len()).max(1);
+                        rep.sched_pj += rtl.schedule_cost(msize, 1).energy_pj;
+                    }
+                    let head_ns = live_total as f64 * (c.k_dt_ns + c.k_comp_ns);
+                    rep.latency_ns += head_ns
+                        * rtl.latency_overhead(sf.min(n_h), cim.dk, head_ns.max(1e-9));
+                }
+            }
+        }
+
+        for m in masks {
+            rep.index_pj += index_cost_pj(cim, m.n(), opts.index_bits);
+        }
+        rep
+    }
+}
+
+fn report_bitwise_eq(a: &RunReport, b: &RunReport) -> bool {
+    a.latency_ns == b.latency_ns
+        && a.compute_busy_ns == b.compute_busy_ns
+        && a.mac_pj == b.mac_pj
+        && a.k_fetch_pj == b.k_fetch_pj
+        && a.q_load_pj == b.q_load_pj
+        && a.sched_pj == b.sched_pj
+        && a.index_pj == b.index_pj
+        && a.k_vec_ops == b.k_vec_ops
+        && a.q_loads == b.q_loads
+        && a.selected_pairs == b.selected_pairs
+        && a.steps == b.steps
+}
+
+#[test]
+fn golden_backend_ports_match_prerefactor_flows_on_ttst() {
+    // The acceptance contract: per-flow RunReports (and hence gains) for
+    // the TTST workload are bitwise-identical to the pre-refactor `run_*`.
+    let spec = WorkloadSpec::ttst();
+    let rtl = SchedRtl::tsmc65();
+    let cim = CimConfig::default_65nm(spec.dk);
+    for seed in [1u64, 7, 42] {
+        let t = gen_trace(&spec, seed);
+        let opts = EngineOpts { sf: spec.sf, ..Default::default() };
+
+        let dense_new = run_dense(&t.heads, &cim);
+        let dense_old = legacy::run_dense(&t.heads, &cim);
+        assert!(report_bitwise_eq(&dense_new, &dense_old), "dense diverged");
+
+        let gated_new = run_gated(&t.heads, &cim, opts);
+        let gated_old = legacy::run_gated(&t.heads, &cim, opts);
+        assert!(report_bitwise_eq(&gated_new, &gated_old), "gated diverged");
+
+        let sata_new = run_sata(&t.heads, &cim, &rtl, opts);
+        let sata_old = legacy::run_sata(&t.heads, &cim, &rtl, opts);
+        assert!(report_bitwise_eq(&sata_new, &sata_old), "sata diverged");
+
+        let g_new = gains(&dense_new, &sata_new);
+        let g_old = gains(&dense_old, &sata_old);
+        assert!(g_new.throughput == g_old.throughput, "throughput gain diverged");
+        assert!(g_new.energy_eff == g_old.energy_eff, "energy gain diverged");
+    }
+}
+
+#[test]
+fn golden_backend_ports_match_prerefactor_tiled_flow() {
+    // Same contract for the tiled (S_f) path on the tiled Table-I rows.
+    let rtl = SchedRtl::tsmc65();
+    for spec in [WorkloadSpec::drsformer(), WorkloadSpec::kvt_deit_tiny()] {
+        let cim = CimConfig::default_65nm(spec.dk);
+        let t = gen_trace(&spec, 5);
+        let opts = EngineOpts { sf: spec.sf, ..Default::default() };
+        assert!(opts.sf.is_some());
+        let new = run_sata(&t.heads, &cim, &rtl, opts);
+        let old = legacy::run_sata(&t.heads, &cim, &rtl, opts);
+        assert!(report_bitwise_eq(&new, &old), "{}: tiled sata diverged", spec.name);
+    }
+}
+
+#[test]
+fn all_seven_flows_resolve_and_run_on_ttst() {
+    let spec = WorkloadSpec::ttst();
+    let t = gen_trace(&spec, 2);
+    let cim = CimConfig::default_65nm(spec.dk);
+    let rtl = SchedRtl::tsmc65();
+    let plans = PlanSet::build(&t.heads, EngineOpts::default());
+    let want: usize = t.heads.iter().map(|m| m.total_selected()).sum();
+    let names = backend::flow_names();
+    assert_eq!(names.len(), 7);
+    for name in names {
+        let b = backend::by_name(name).expect(name);
+        let rep = b.run_planned(&plans, &cim, &rtl);
+        assert!(rep.latency_ns > 0.0, "{name}: zero latency");
+        assert!(rep.total_pj() > 0.0, "{name}: zero energy");
+        if name != "dense" {
+            assert_eq!(rep.selected_pairs, want, "{name}: selected pairs");
+        }
+    }
+}
+
+#[test]
+fn residency_holds_for_every_registered_backend() {
+    // Extends the SATA-only residency property: every query that selects a
+    // MAC'd key must be resident, for *every* backend in the registry,
+    // whole-head and tiled.
+    check("registry-wide residency", 6, |rng| {
+        let n = 8 + rng.gen_range(40);
+        let k = 1 + rng.gen_range(n / 2);
+        let heads = 1 + rng.gen_range(3);
+        let masks: Vec<SelectiveMask> =
+            (0..heads).map(|_| SelectiveMask::random_topk(n, k, rng)).collect();
+        for sf in [None, Some(4 + rng.gen_range(n / 2))] {
+            let opts = EngineOpts { sf, ..Default::default() };
+            let plans = PlanSet::build(&masks, opts);
+            for b in backend::all() {
+                let sched = b.schedule(&plans);
+                sched
+                    .validate(&plans)
+                    .map_err(|e| format!("{} (sf={sf:?}): {e}", b.name()))?;
+            }
+        }
+        Ok(())
+    });
+}
 
 #[test]
 fn full_pipeline_all_paper_workloads() {
@@ -19,7 +338,8 @@ fn full_pipeline_all_paper_workloads() {
         let cim = CimConfig::default_65nm(spec.dk);
         let dense = run_dense(&t.heads, &cim);
         let gated = run_gated(&t.heads, &cim, EngineOpts::default());
-        let sata = run_sata(&t.heads, &cim, &rtl, EngineOpts { sf: spec.sf, ..Default::default() });
+        let sata =
+            run_sata(&t.heads, &cim, &rtl, EngineOpts { sf: spec.sf, ..Default::default() });
         // SATA must beat dense on both axes; gated saves energy vs dense.
         let g = gains(&dense, &sata);
         assert!(g.throughput > 1.0, "{}: {:.2}", spec.name, g.throughput);
@@ -68,7 +388,7 @@ fn coordinator_end_to_end_with_mixed_workloads() {
     let mut id = 0;
     for spec in [WorkloadSpec::ttst(), WorkloadSpec::drsformer()] {
         for t in gen_traces(&spec, 2, 3) {
-            coord.submit(Job { id, trace: t, sf: spec.sf });
+            coord.submit(Job::new(id, t, spec.sf));
             id += 1;
         }
     }
