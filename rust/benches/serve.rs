@@ -1,0 +1,85 @@
+//! Coordinator serving throughput: jobs/sec through the two-stage
+//! pipeline, cold plans vs a warm plan cache.
+//!
+//! Submits the same Table-I trace set `REPEATS` times. With the cache
+//! disabled every submission re-runs Algo 1 (the dominant CPU cost, see
+//! `benches/overhead.rs`); with it enabled only the first pass plans and
+//! the rest execute from shared `Arc<PlanSet>`s — the speedup column is
+//! the serving win of the fingerprint-keyed cache.
+//!
+//! `SATA_BENCH_FAST=1` shrinks the job counts (CI smoke mode).
+
+use sata::config::{SystemConfig, WorkloadSpec};
+use sata::coordinator::{Coordinator, CoordinatorConfig, Job};
+use sata::trace::synth::gen_traces;
+use sata::util::bench::Bench;
+
+fn serve_pass(
+    spec: &WorkloadSpec,
+    traces: usize,
+    repeats: usize,
+    flows: &[&str],
+    cache_capacity: usize,
+) -> (f64, sata::coordinator::CoordinatorMetrics) {
+    let sys = SystemConfig::for_workload(spec);
+    let coord = Coordinator::with_config(
+        sys,
+        CoordinatorConfig { cache_capacity, ..Default::default() },
+    );
+    let base = gen_traces(spec, traces, 7);
+    let t0 = std::time::Instant::now();
+    let total = traces * repeats;
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut id = 0;
+            for _ in 0..repeats {
+                for t in &base {
+                    let flows = flows.iter().map(|f| f.to_string()).collect();
+                    if coord.submit(Job::with_flows(id, t.clone(), spec.sf, flows)).is_err()
+                    {
+                        return;
+                    }
+                    id += 1;
+                }
+            }
+        });
+        for r in coord.results().take(total) {
+            assert!(r.is_ok(), "{:?}", r.error);
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let metrics = coord.finish();
+    (total as f64 / wall_s, metrics)
+}
+
+fn main() {
+    let b = Bench::new();
+    let fast = std::env::var("SATA_BENCH_FAST").is_ok();
+    let (traces, repeats) = if fast { (4, 3) } else { (16, 6) };
+    let flows = ["sata", "spatten+sata"];
+
+    println!(
+        "serve pipeline: {traces} traces x {repeats} submissions x {} flows, cold vs warm plan cache",
+        flows.len()
+    );
+    for spec in [WorkloadSpec::ttst(), WorkloadSpec::kvt_deit_tiny()] {
+        let (cold_jps, cold_m) = serve_pass(&spec, traces, repeats, &flows, 0);
+        let (warm_jps, warm_m) = serve_pass(&spec, traces, repeats, &flows, 256);
+        assert_eq!(cold_m.cache_hits, 0, "disabled cache must never hit");
+        assert!(warm_m.cache_hits > 0, "warm pass must hit");
+        let tag = spec.name.to_lowercase();
+        b.report_metric(&format!("serve.{tag}.cold.jobs_per_s"), cold_jps, "jobs/s");
+        b.report_metric(&format!("serve.{tag}.warm.jobs_per_s"), warm_jps, "jobs/s");
+        b.report_metric(&format!("serve.{tag}.warm.speedup"), warm_jps / cold_jps, "x");
+        b.report_metric(
+            &format!("serve.{tag}.warm.hit_rate"),
+            warm_m.cache_hit_rate(),
+            "frac",
+        );
+        b.report_metric(
+            &format!("serve.{tag}.warm.p99_wall"),
+            warm_m.wall_p99_ns / 1e6,
+            "ms",
+        );
+    }
+}

@@ -1,21 +1,48 @@
-//! Layer-3 coordinator: the runtime service around the SATA pipeline.
+//! Layer-3 coordinator: a streaming plan/execute service around the SATA
+//! pipeline.
 //!
-//! Owns a pool of worker threads (one per simulated CIM engine / chip
-//! tile group), a bounded job queue with backpressure, and the metrics
-//! sink. Jobs are *layers of selective-attention heads* (one `MaskTrace`
-//! each) tagged with a flow name; each worker resolves the flow through
-//! the [`backend`] registry, runs Algo 1 **once** per trace (the shared
-//! [`PlanSet`]), executes both the requested flow and the dense baseline
-//! from those plans, and reports the run. This is the process shape a
-//! hardware testbench or a serving frontend would drive.
+//! The paper's thesis — reorder work so operands are fetched early and
+//! retired early — applied one level up, to the service itself. The old
+//! coordinator fused planning (Algo 1, the dominant CPU cost per
+//! `benches/overhead.rs`) and execution into one worker step and re-sorted
+//! identical traces from scratch. This one splits them into **two
+//! pipelined stages with a shared plan cache**:
 //!
-//! No `tokio` offline — std threads + `mpsc` channels; the queue bound
-//! gives backpressure exactly like a bounded async channel would.
+//! ```text
+//!  submit ──▶ [job queue] ──▶ plan workers ──▶ [planned queue] ──▶ execute workers ──▶ results
+//!  (bounded, backpressure)        │   ▲          (bounded)           one dense run +
+//!                                 ▼   │                              one run per requested flow
+//!                              PlanCache                             from the SAME Arc<PlanSet>
+//!                     (sharded LRU, keyed by mask
+//!                      fingerprint ⊕ opts key)
+//! ```
+//!
+//! * **Stage 1 (plan)** fingerprints the trace
+//!   ([`MaskTrace::fingerprint`] ⊕ [`EngineOpts::cache_key`]) and consults
+//!   the [`PlanCache`]: a hit skips Algo 1 entirely; a miss builds the
+//!   [`PlanSet`] once and publishes it as an `Arc` for every future hit.
+//! * **Stage 2 (execute)** runs the dense baseline plus *any number of
+//!   flows* ([`Job::flows`]) from that shared plan set — one trace planned
+//!   once can be executed against several backends.
+//! * **Results stream**: [`Coordinator::results`] yields [`JobResult`]s
+//!   as execute workers finish them (no full-drain barrier); the results
+//!   channel is unbounded so backpressure lives only at intake and
+//!   between the stages. [`Coordinator::drain`] remains as the collect-
+//!   everything convenience.
+//!
+//! Per-job wall latency (submit → result) feeds a streaming
+//! [`LatencyHistogram`]; [`CoordinatorMetrics`] reports p50/p95/p99,
+//! cache hits/misses, and per-stage queue peaks.
+//!
+//! No `tokio` offline — std threads + `mpsc` channels; the queue bounds
+//! give backpressure exactly like bounded async channels would.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::config::SystemConfig;
 use crate::engine::backend::{self, FlowBackend, PlanSet};
@@ -23,147 +50,670 @@ use crate::engine::{gains, EngineOpts, RunReport};
 use crate::hw::cim::CimConfig;
 use crate::hw::sched_rtl::SchedRtl;
 use crate::trace::MaskTrace;
+use crate::util::stats::LatencyHistogram;
 
-/// One unit of coordinator work: schedule + simulate a trace.
+/// One unit of coordinator work: schedule + simulate a trace against one
+/// or more flows.
 #[derive(Clone, Debug)]
 pub struct Job {
     pub id: usize,
     pub trace: MaskTrace,
     /// Fold size override; `None` = whole-head.
     pub sf: Option<usize>,
-    /// Flow name resolved through the backend registry; unknown names fall
-    /// back to `sata`.
-    pub flow: String,
+    /// Flow names resolved through the backend registry. The trace is
+    /// planned once; every listed flow executes from the shared plans.
+    /// An unknown name fails the job with an explicit [`JobResult::error`].
+    pub flows: Vec<String>,
 }
 
 impl Job {
     /// Job running the default (SATA) flow.
     pub fn new(id: usize, trace: MaskTrace, sf: Option<usize>) -> Self {
-        Job { id, trace, sf, flow: "sata".into() }
+        Job { id, trace, sf, flows: vec!["sata".into()] }
+    }
+
+    /// Job fanning one planned trace out to several flows.
+    pub fn with_flows(
+        id: usize,
+        trace: MaskTrace,
+        sf: Option<usize>,
+        flows: Vec<String>,
+    ) -> Self {
+        Job { id, trace, sf, flows }
     }
 }
 
-/// Result of one job.
+/// One flow's execution from a planned job.
 #[derive(Clone, Debug)]
-pub struct JobResult {
-    pub id: usize,
-    pub model: String,
-    /// Flow the report below was produced by.
+pub struct FlowRun {
+    /// Canonical registry name the run resolved to.
     pub flow: String,
     pub report: RunReport,
-    pub dense: RunReport,
+    /// Gains vs the job's dense baseline (1.0 for the dense flow itself).
     pub throughput_gain: f64,
     pub energy_gain: f64,
 }
 
-/// Aggregated coordinator metrics.
+/// Result of one job: the dense baseline plus one [`FlowRun`] per
+/// requested flow — or an explicit error (unknown flow, empty trace).
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: usize,
+    pub model: String,
+    /// Dense baseline the per-flow gains are measured against.
+    pub dense: RunReport,
+    /// Per-flow runs, in [`Job::flows`] order; empty when `error` is set.
+    pub flows: Vec<FlowRun>,
+    /// Whether planning was served from the [`PlanCache`].
+    pub cache_hit: bool,
+    /// Wall latency submit → result (queueing + planning + execution).
+    pub wall_ns: f64,
+    /// Why the job failed, if it did. Jobs with bad flow names are
+    /// rejected explicitly — nothing silently falls back to `sata`.
+    pub error: Option<String>,
+}
+
+impl JobResult {
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan cache
+// ---------------------------------------------------------------------------
+
+struct CacheEntry {
+    plans: Arc<PlanSet>,
+    /// LRU stamp: shard clock value of the last touch.
+    stamp: u64,
+}
+
+#[derive(Default)]
+struct CacheShard {
+    clock: u64,
+    map: HashMap<u64, CacheEntry>,
+}
+
+/// Sharded, LRU-bounded cache of [`PlanSet`]s keyed by
+/// [`PlanSet::fingerprint_for`] (mask fingerprint ⊕ engine-opts key).
+///
+/// Shards bound lock contention between plan workers; shard locks are
+/// held only for lookup/insert, never across an Algo-1 build, so a hit is
+/// always cheap even when another key in the same shard is being planned.
+/// Eviction is least-recently-touched per shard. `capacity == 0` disables
+/// caching (every lookup misses and builds) — the cold baseline
+/// `benches/serve.rs` measures against.
+pub struct PlanCache {
+    shards: Vec<Mutex<CacheShard>>,
+    shard_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    /// `capacity` total cached plan sets (rounded up to a multiple of
+    /// `shards`), spread over `shards` independently locked shards.
+    pub fn new(capacity: usize, shards: usize) -> Self {
+        let n = shards.max(1);
+        PlanCache {
+            shards: (0..n).map(|_| Mutex::new(CacheShard::default())).collect(),
+            shard_cap: if capacity == 0 { 0 } else { capacity.div_ceil(n) },
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look `key` up; on a miss, run `build` and cache the result. Returns
+    /// the shared plans and whether this was a hit.
+    ///
+    /// The build runs **outside** the shard lock (double-checked), so hits
+    /// for other keys in the shard never stall behind Algo 1. Two workers
+    /// racing the same cold key may both build — benign duplicate work,
+    /// and both honestly count as misses — but the first insert wins, so
+    /// every caller still shares one `Arc` of identical plans.
+    pub fn get_or_build(
+        &self,
+        key: u64,
+        build: impl FnOnce() -> PlanSet,
+    ) -> (Arc<PlanSet>, bool) {
+        if self.shard_cap == 0 {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return (Arc::new(build()), false);
+        }
+        let shard = &self.shards[key as usize % self.shards.len()];
+        {
+            let mut s = shard.lock().unwrap();
+            s.clock += 1;
+            let now = s.clock;
+            if let Some(e) = s.map.get_mut(&key) {
+                e.stamp = now;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return (Arc::clone(&e.plans), true);
+            }
+        }
+        let built = Arc::new(build());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut s = shard.lock().unwrap();
+        s.clock += 1;
+        let now = s.clock;
+        if let Some(e) = s.map.get_mut(&key) {
+            // lost a same-key race: adopt the winner's plans (identical
+            // content — both built from the same fingerprinted inputs)
+            e.stamp = now;
+            return (Arc::clone(&e.plans), false);
+        }
+        if s.map.len() >= self.shard_cap {
+            let lru = s.map.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| *k);
+            if let Some(lru) = lru {
+                s.map.remove(&lru);
+            }
+        }
+        s.map.insert(key, CacheEntry { plans: Arc::clone(&built), stamp: now });
+        (built, false)
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed) as usize
+    }
+
+    /// Cached plan sets right now.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metrics
+// ---------------------------------------------------------------------------
+
+/// Aggregated coordinator metrics (see [`Coordinator::metrics`]).
 #[derive(Clone, Debug, Default)]
 pub struct CoordinatorMetrics {
+    pub jobs_submitted: usize,
+    /// Jobs that produced a successful result.
     pub jobs_done: usize,
+    /// Jobs rejected with [`JobResult::error`].
+    pub jobs_failed: usize,
+    /// Total flow executions across all jobs (≥ `jobs_done`).
+    pub flow_runs: usize,
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    /// Peak jobs pending for stage 1: queued **plus** submitters blocked
+    /// on backpressure, so this measures demand and may exceed the
+    /// configured `queue_cap`.
+    pub plan_queue_peak: usize,
+    /// Peak planned jobs pending for stage 2 (same convention: includes a
+    /// plan worker blocked handing off).
+    pub exec_queue_peak: usize,
+    /// Wall-latency percentiles (submit → result), in ns.
+    pub wall_p50_ns: f64,
+    pub wall_p95_ns: f64,
+    pub wall_p99_ns: f64,
+    /// Sums over flow runs (simulated time/energy, not wall time).
     pub total_latency_ns: f64,
     pub total_energy_pj: f64,
+    /// Means over flow runs, vs each job's dense baseline.
     pub mean_throughput_gain: f64,
     pub mean_energy_gain: f64,
 }
 
-/// Multi-worker scheduling/simulation service.
+impl CoordinatorMetrics {
+    /// Plan-cache hit rate in [0, 1]; 0.0 before any lookup.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Current + peak pending count of one pipeline queue. Senders enter
+/// *before* the (possibly blocking) bounded send and receivers exit on
+/// recv, so the gauge reads demand — queued items plus blocked senders —
+/// not just channel occupancy; see the `CoordinatorMetrics` field docs.
+#[derive(Default)]
+struct QueueGauge {
+    depth: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl QueueGauge {
+    fn enter(&self) {
+        let d = self.depth.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(d, Ordering::SeqCst);
+    }
+
+    fn exit(&self) {
+        self.depth.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Mutable aggregate the workers fold results into.
+#[derive(Default)]
+struct Agg {
+    wall: LatencyHistogram,
+    done: usize,
+    failed: usize,
+    flow_runs: usize,
+    total_latency_ns: f64,
+    total_energy_pj: f64,
+    thr_sum: f64,
+    en_sum: f64,
+}
+
+struct Shared {
+    submitted: AtomicUsize,
+    plan_q: QueueGauge,
+    exec_q: QueueGauge,
+    agg: Mutex<Agg>,
+}
+
+/// Fold a finished result into the aggregate, then stream it out. Send
+/// failure (receiver dropped mid-shutdown) is not an error.
+fn record_and_send(shared: &Shared, res_tx: &Sender<JobResult>, r: JobResult) {
+    {
+        let mut agg = shared.agg.lock().unwrap();
+        agg.wall.record(r.wall_ns);
+        if r.is_ok() {
+            agg.done += 1;
+        } else {
+            agg.failed += 1;
+        }
+        for fr in &r.flows {
+            agg.flow_runs += 1;
+            agg.total_latency_ns += fr.report.latency_ns;
+            agg.total_energy_pj += fr.report.total_pj();
+            agg.thr_sum += fr.throughput_gain;
+            agg.en_sum += fr.energy_gain;
+        }
+    }
+    let _ = res_tx.send(r);
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline
+// ---------------------------------------------------------------------------
+
+/// Stage-1 → stage-2 handoff: everything execution needs, with the plans
+/// behind an `Arc` so cache hits share one allocation across jobs.
+struct PlannedJob {
+    id: usize,
+    model: String,
+    dk: usize,
+    flows: Vec<String>,
+    plans: Arc<PlanSet>,
+    cache_hit: bool,
+    enqueued: Instant,
+}
+
+struct QueuedJob {
+    job: Job,
+    enqueued: Instant,
+}
+
+/// Pipeline shape + cache sizing (see [`Coordinator::with_config`]).
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub plan_workers: usize,
+    pub exec_workers: usize,
+    /// Bound of the submit→plan and plan→execute queues (backpressure).
+    pub queue_cap: usize,
+    /// Total [`PlanCache`] capacity; 0 disables caching.
+    pub cache_capacity: usize,
+    pub cache_shards: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            plan_workers: 2,
+            exec_workers: 2,
+            queue_cap: 8,
+            cache_capacity: 128,
+            cache_shards: 8,
+        }
+    }
+}
+
+/// Two-stage pipelined scheduling/simulation service with a shared plan
+/// cache. See the module docs for the pipeline diagram.
 pub struct Coordinator {
-    tx: Option<SyncSender<Job>>,
-    results_rx: Receiver<JobResult>,
-    workers: Vec<JoinHandle<()>>,
-    submitted: Arc<AtomicUsize>,
+    /// Intake sender; `close()` takes it (behind a mutex so a submitter
+    /// thread can close while another streams results).
+    job_tx: Mutex<Option<SyncSender<QueuedJob>>>,
+    /// Behind a mutex because `mpsc::Receiver` is `!Sync` and the serve
+    /// shape shares `&Coordinator` across scoped threads (submitter +
+    /// results consumer) — without it the coordinator would be `!Sync`.
+    results_rx: Mutex<Receiver<JobResult>>,
+    plan_workers: Vec<JoinHandle<()>>,
+    exec_workers: Vec<JoinHandle<()>>,
+    cache: Arc<PlanCache>,
+    shared: Arc<Shared>,
 }
 
 impl Coordinator {
-    /// Spawn `n_workers` workers with a queue bound of `queue_cap`
-    /// (submitting beyond the bound blocks — backpressure).
+    /// Spawn `n_workers` plan workers and `n_workers` execute workers with
+    /// a queue bound of `queue_cap` per stage (submitting beyond the bound
+    /// blocks — backpressure) and the default cache sizing.
     pub fn new(n_workers: usize, queue_cap: usize, sys: SystemConfig) -> Self {
-        let (tx, rx) = sync_channel::<Job>(queue_cap);
-        let (res_tx, results_rx) = sync_channel::<JobResult>(queue_cap.max(64));
-        let rx = Arc::new(Mutex::new(rx));
-        let submitted = Arc::new(AtomicUsize::new(0));
+        Self::with_config(
+            sys,
+            CoordinatorConfig {
+                plan_workers: n_workers,
+                exec_workers: n_workers,
+                queue_cap,
+                ..Default::default()
+            },
+        )
+    }
 
-        let workers = (0..n_workers.max(1))
+    pub fn with_config(sys: SystemConfig, cfg: CoordinatorConfig) -> Self {
+        let queue_cap = cfg.queue_cap.max(1);
+        let (job_tx, job_rx) = sync_channel::<QueuedJob>(queue_cap);
+        let (plan_tx, plan_rx) = sync_channel::<PlannedJob>(queue_cap);
+        // Results are unbounded: backpressure lives at intake and between
+        // the stages, so a slow results consumer can never deadlock the
+        // pipeline against a fast submitter.
+        let (res_tx, results_rx) = channel::<JobResult>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let plan_rx = Arc::new(Mutex::new(plan_rx));
+        let cache =
+            Arc::new(PlanCache::new(cfg.cache_capacity, cfg.cache_shards));
+        let shared = Arc::new(Shared {
+            submitted: AtomicUsize::new(0),
+            plan_q: QueueGauge::default(),
+            exec_q: QueueGauge::default(),
+            agg: Mutex::new(Agg::default()),
+        });
+
+        let plan_workers = (0..cfg.plan_workers.max(1))
             .map(|_| {
-                let rx = Arc::clone(&rx);
+                let job_rx = Arc::clone(&job_rx);
+                let plan_tx = plan_tx.clone();
                 let res_tx = res_tx.clone();
+                let cache = Arc::clone(&cache);
+                let shared = Arc::clone(&shared);
                 let sys = sys.clone();
                 std::thread::spawn(move || {
-                    let rtl = SchedRtl::tsmc65();
-                    loop {
-                        // hold the lock only to receive
-                        let job = match rx.lock().unwrap().recv() {
-                            Ok(j) => j,
-                            Err(_) => break, // queue closed
-                        };
-                        let mut cim: CimConfig = sys.cim();
-                        cim.dk = job.trace.dk.max(1);
-                        let opts = EngineOpts {
-                            sf: job.sf,
-                            theta_frac: sys.theta_frac,
-                            seed: sys.seed,
-                            ..Default::default()
-                        };
-                        let flow: &dyn FlowBackend = backend::by_name(&job.flow)
-                            .unwrap_or(&backend::SATA);
-                        // Algo 1 once per trace; both flows share the plans.
-                        let plans = flow.plan(&job.trace.heads, opts);
-                        let report = flow.run_planned(&plans, &cim, &rtl);
-                        let dense = backend::DENSE.run_planned(&plans, &cim, &rtl);
-                        let g = gains(&dense, &report);
-                        let _ = res_tx.send(JobResult {
-                            id: job.id,
-                            model: job.trace.model.clone(),
-                            flow: flow.name().to_string(),
-                            report,
-                            dense,
-                            throughput_gain: g.throughput,
-                            energy_gain: g.energy_eff,
-                        });
-                    }
+                    plan_worker(&job_rx, &plan_tx, &res_tx, &cache, &shared, &sys)
                 })
             })
             .collect();
 
-        Coordinator { tx: Some(tx), results_rx, workers, submitted }
+        let exec_workers = (0..cfg.exec_workers.max(1))
+            .map(|_| {
+                let plan_rx = Arc::clone(&plan_rx);
+                let res_tx = res_tx.clone();
+                let shared = Arc::clone(&shared);
+                let sys = sys.clone();
+                std::thread::spawn(move || {
+                    exec_worker(&plan_rx, &res_tx, &shared, &sys)
+                })
+            })
+            .collect();
+
+        // Workers hold the only remaining senders: once `close()` drops
+        // `job_tx`, stage 1 drains and exits, stage 2 follows, and the
+        // results channel disconnects — that cascade IS the shutdown.
+        drop(plan_tx);
+        drop(res_tx);
+
+        Coordinator {
+            job_tx: Mutex::new(Some(job_tx)),
+            results_rx: Mutex::new(results_rx),
+            plan_workers,
+            exec_workers,
+            cache,
+            shared,
+        }
     }
 
-    /// Submit a job; blocks when the queue is full (backpressure).
-    pub fn submit(&self, job: Job) {
-        self.submitted.fetch_add(1, Ordering::SeqCst);
-        self.tx
-            .as_ref()
-            .expect("coordinator already drained")
-            .send(job)
-            .expect("workers gone");
-    }
-
-    /// Close the queue, wait for all workers, and aggregate metrics.
-    pub fn drain(mut self) -> (Vec<JobResult>, CoordinatorMetrics) {
-        drop(self.tx.take()); // close queue → workers exit after drain
-        let expected = self.submitted.load(Ordering::SeqCst);
-        let mut results = Vec::with_capacity(expected);
-        for _ in 0..expected {
-            match self.results_rx.recv() {
-                Ok(r) => results.push(r),
-                Err(_) => break,
+    /// Submit a job; blocks when the intake queue is full (backpressure).
+    /// Returns the job back if the coordinator is closed or its workers
+    /// are gone — no panic.
+    pub fn submit(&self, job: Job) -> Result<(), Job> {
+        // Clone the sender out so the (possibly blocking) send happens
+        // without holding the lock `close()` needs.
+        let Some(tx) = self.job_tx.lock().unwrap().clone() else {
+            return Err(job);
+        };
+        self.shared.submitted.fetch_add(1, Ordering::SeqCst);
+        self.shared.plan_q.enter();
+        match tx.send(QueuedJob { job, enqueued: Instant::now() }) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.shared.plan_q.exit();
+                self.shared.submitted.fetch_sub(1, Ordering::SeqCst);
+                Err(e.0.job)
             }
         }
-        for w in self.workers.drain(..) {
+    }
+
+    /// Close the intake: no further submissions; in-flight jobs keep
+    /// flowing. After this, [`Coordinator::results`] terminates once the
+    /// last in-flight job is delivered. Callable from any thread — a
+    /// submitter thread closing while the main thread streams results is
+    /// the intended `serve` shape.
+    pub fn close(&self) {
+        self.job_tx.lock().unwrap().take();
+    }
+
+    /// Stream results as execute workers finish them — **no full-drain
+    /// barrier**; arrival order is completion order, not submission order.
+    /// Blocks between results while jobs are in flight; ends after
+    /// [`Coordinator::close`] once everything in flight has been yielded.
+    pub fn results(&self) -> impl Iterator<Item = JobResult> + '_ {
+        // lock per recv: cheap (one uncontended lock per result) and keeps
+        // the receiver shareable across threads
+        std::iter::from_fn(move || self.results_rx.lock().unwrap().recv().ok())
+    }
+
+    /// Snapshot of the service metrics (callable while serving).
+    pub fn metrics(&self) -> CoordinatorMetrics {
+        let agg = self.shared.agg.lock().unwrap();
+        CoordinatorMetrics {
+            jobs_submitted: self.shared.submitted.load(Ordering::SeqCst),
+            jobs_done: agg.done,
+            jobs_failed: agg.failed,
+            flow_runs: agg.flow_runs,
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            plan_queue_peak: self.shared.plan_q.peak.load(Ordering::SeqCst),
+            exec_queue_peak: self.shared.exec_q.peak.load(Ordering::SeqCst),
+            wall_p50_ns: agg.wall.percentile(50.0),
+            wall_p95_ns: agg.wall.percentile(95.0),
+            wall_p99_ns: agg.wall.percentile(99.0),
+            total_latency_ns: agg.total_latency_ns,
+            total_energy_pj: agg.total_energy_pj,
+            mean_throughput_gain: if agg.flow_runs > 0 {
+                agg.thr_sum / agg.flow_runs as f64
+            } else {
+                0.0
+            },
+            mean_energy_gain: if agg.flow_runs > 0 {
+                agg.en_sum / agg.flow_runs as f64
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Shared plan cache (inspection / pre-warming).
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// Graceful shutdown after streaming: close the intake, discard any
+    /// results not consumed via [`Coordinator::results`], join all
+    /// workers, and return the final metrics.
+    pub fn finish(mut self) -> CoordinatorMetrics {
+        self.close();
+        for _ in self.results_rx.get_mut().unwrap().iter() {}
+        self.join_workers();
+        self.metrics()
+    }
+
+    /// Collect-everything convenience: close the intake, gather all
+    /// remaining results sorted by job id, join workers, return metrics.
+    pub fn drain(mut self) -> (Vec<JobResult>, CoordinatorMetrics) {
+        self.close();
+        let mut results: Vec<JobResult> =
+            self.results_rx.get_mut().unwrap().iter().collect();
+        self.join_workers();
+        results.sort_by_key(|r| r.id);
+        let m = self.metrics();
+        (results, m)
+    }
+
+    fn join_workers(&mut self) {
+        for w in self.plan_workers.drain(..) {
             let _ = w.join();
         }
-        results.sort_by_key(|r| r.id);
-
-        let mut m = CoordinatorMetrics { jobs_done: results.len(), ..Default::default() };
-        if !results.is_empty() {
-            m.total_latency_ns = results.iter().map(|r| r.report.latency_ns).sum();
-            m.total_energy_pj = results.iter().map(|r| r.report.total_pj()).sum();
-            m.mean_throughput_gain = results.iter().map(|r| r.throughput_gain).sum::<f64>()
-                / results.len() as f64;
-            m.mean_energy_gain =
-                results.iter().map(|r| r.energy_gain).sum::<f64>() / results.len() as f64;
+        for w in self.exec_workers.drain(..) {
+            let _ = w.join();
         }
-        (results, m)
+    }
+}
+
+/// Stage 1: validate, fingerprint, plan (through the cache), hand off.
+fn plan_worker(
+    job_rx: &Mutex<Receiver<QueuedJob>>,
+    plan_tx: &SyncSender<PlannedJob>,
+    res_tx: &Sender<JobResult>,
+    cache: &PlanCache,
+    shared: &Shared,
+    sys: &SystemConfig,
+) {
+    loop {
+        // hold the lock only to receive
+        let queued = match job_rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => break, // intake closed and drained
+        };
+        shared.plan_q.exit();
+        let QueuedJob { job, enqueued } = queued;
+
+        let error = if job.flows.is_empty() {
+            Some("no flows requested".to_string())
+        } else if let Some(bad) =
+            job.flows.iter().find(|f| backend::by_name(f).is_none())
+        {
+            Some(format!(
+                "unknown flow '{bad}' (registered: {})",
+                backend::flow_names().join("|")
+            ))
+        } else if job.trace.heads.is_empty() {
+            Some("trace has no heads".to_string())
+        } else {
+            None
+        };
+        if let Some(error) = error {
+            record_and_send(
+                shared,
+                res_tx,
+                JobResult {
+                    id: job.id,
+                    model: job.trace.model,
+                    dense: RunReport::default(),
+                    flows: Vec::new(),
+                    cache_hit: false,
+                    wall_ns: enqueued.elapsed().as_nanos() as f64,
+                    error: Some(error),
+                },
+            );
+            continue;
+        }
+
+        let opts = EngineOpts {
+            sf: job.sf,
+            theta_frac: sys.theta_frac,
+            seed: sys.seed,
+            ..Default::default()
+        };
+        let key = PlanSet::fingerprint_for(&job.trace.heads, opts);
+        let (plans, cache_hit) =
+            cache.get_or_build(key, || PlanSet::build(&job.trace.heads, opts));
+
+        shared.exec_q.enter();
+        let planned = PlannedJob {
+            id: job.id,
+            model: job.trace.model,
+            dk: job.trace.dk,
+            flows: job.flows,
+            plans,
+            cache_hit,
+            enqueued,
+        };
+        if plan_tx.send(planned).is_err() {
+            shared.exec_q.exit();
+            break; // execute stage gone; nothing left to do
+        }
+    }
+}
+
+/// Stage 2: run the dense baseline + every requested flow from the shared
+/// plans, stream the result.
+fn exec_worker(
+    plan_rx: &Mutex<Receiver<PlannedJob>>,
+    res_tx: &Sender<JobResult>,
+    shared: &Shared,
+    sys: &SystemConfig,
+) {
+    let rtl = SchedRtl::tsmc65();
+    loop {
+        let pj = match plan_rx.lock().unwrap().recv() {
+            Ok(p) => p,
+            Err(_) => break, // plan stage closed and drained
+        };
+        shared.exec_q.exit();
+
+        let mut cim: CimConfig = sys.cim();
+        cim.dk = pj.dk.max(1);
+        let dense = backend::DENSE.run_planned(&pj.plans, &cim, &rtl);
+        let flows: Vec<FlowRun> = pj
+            .flows
+            .iter()
+            .map(|name| {
+                let b = backend::by_name(name).expect("validated at plan stage");
+                let report = if b.name() == "dense" {
+                    dense // already executed as the baseline
+                } else {
+                    b.run_planned(&pj.plans, &cim, &rtl)
+                };
+                let g = gains(&dense, &report);
+                FlowRun {
+                    flow: b.name().to_string(),
+                    report,
+                    throughput_gain: g.throughput,
+                    energy_gain: g.energy_eff,
+                }
+            })
+            .collect();
+
+        record_and_send(
+            shared,
+            res_tx,
+            JobResult {
+                id: pj.id,
+                model: pj.model,
+                dense,
+                flows,
+                cache_hit: pj.cache_hit,
+                wall_ns: pj.enqueued.elapsed().as_nanos() as f64,
+                error: None,
+            },
+        );
     }
 }
 
@@ -186,16 +736,24 @@ mod tests {
         let spec = WorkloadSpec::drsformer();
         let sys = SystemConfig::for_workload(&spec);
         let coord = Coordinator::new(2, 4, sys);
-        let js = jobs(&spec, 6);
-        for j in js {
-            coord.submit(j);
+        for j in jobs(&spec, 6) {
+            coord.submit(j).unwrap();
         }
         let (results, metrics) = coord.drain();
         assert_eq!(results.len(), 6);
+        assert_eq!(metrics.jobs_submitted, 6);
         assert_eq!(metrics.jobs_done, 6);
+        assert_eq!(metrics.jobs_failed, 0);
         assert!(results.windows(2).all(|w| w[0].id < w[1].id), "sorted by id");
         assert!(metrics.mean_throughput_gain > 1.0);
         assert!(metrics.total_energy_pj > 0.0);
+        // 6 distinct traces → all cold plans, all wall-timed.
+        assert_eq!(metrics.cache_misses, 6);
+        assert_eq!(metrics.cache_hits, 0);
+        assert!(metrics.wall_p50_ns > 0.0);
+        assert!(metrics.wall_p99_ns >= metrics.wall_p50_ns);
+        assert!(metrics.plan_queue_peak >= 1);
+        assert!(metrics.exec_queue_peak >= 1);
     }
 
     #[test]
@@ -204,56 +762,158 @@ mod tests {
         let sys = SystemConfig::for_workload(&spec);
         let coord = Coordinator::new(1, 2, sys);
         for j in jobs(&spec, 3) {
-            coord.submit(j);
+            coord.submit(j).unwrap();
         }
         let (results, _) = coord.drain();
         assert_eq!(results.len(), 3);
         for r in &results {
-            assert_eq!(r.flow, "sata");
-            assert!(r.report.latency_ns > 0.0);
-            assert!(r.dense.latency_ns >= r.report.latency_ns);
+            assert!(r.is_ok());
+            let sata = &r.flows[0];
+            assert_eq!(sata.flow, "sata");
+            assert!(sata.report.latency_ns > 0.0);
+            assert!(r.dense.latency_ns >= sata.report.latency_ns);
         }
     }
 
     #[test]
-    fn coordinator_serves_every_registered_flow() {
+    fn one_planned_job_fans_out_to_every_registered_flow() {
         let spec = WorkloadSpec::ttst();
         let sys = SystemConfig::for_workload(&spec);
-        let names = backend::flow_names();
+        let names: Vec<String> =
+            backend::flow_names().iter().map(|s| s.to_string()).collect();
         let coord = Coordinator::new(2, 4, sys);
-        let traces = gen_traces(&spec, 1, 9);
-        let trace = &traces[0];
-        for (id, name) in names.iter().enumerate() {
-            coord.submit(Job {
-                id,
-                trace: trace.clone(),
-                sf: spec.sf,
-                flow: name.to_string(),
-            });
-        }
+        let trace = gen_traces(&spec, 1, 9).pop().unwrap();
+        coord
+            .submit(Job::with_flows(0, trace, spec.sf, names.clone()))
+            .unwrap();
         let (results, metrics) = coord.drain();
-        assert_eq!(results.len(), names.len());
-        assert_eq!(metrics.jobs_done, names.len());
-        for (r, name) in results.iter().zip(&names) {
-            assert_eq!(&r.flow.as_str(), name);
-            assert!(r.report.latency_ns > 0.0, "{name}");
-            assert!(r.report.total_pj() > 0.0, "{name}");
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert!(r.is_ok());
+        assert_eq!(r.flows.len(), names.len());
+        assert_eq!(metrics.flow_runs, names.len());
+        // one trace, one plan — no matter how many flows executed
+        assert_eq!(metrics.cache_misses, 1);
+        for (fr, name) in r.flows.iter().zip(&names) {
+            assert_eq!(&fr.flow, name);
+            assert!(fr.report.latency_ns > 0.0, "{name}");
+            assert!(fr.report.total_pj() > 0.0, "{name}");
         }
         // dense vs itself is exactly 1.0 on both axes
-        assert!((results[0].throughput_gain - 1.0).abs() < 1e-12);
-        assert!((results[0].energy_gain - 1.0).abs() < 1e-12);
+        assert!((r.flows[0].throughput_gain - 1.0).abs() < 1e-12);
+        assert!((r.flows[0].energy_gain - 1.0).abs() < 1e-12);
     }
 
     #[test]
-    fn unknown_flow_falls_back_to_sata() {
+    fn unknown_flow_is_an_explicit_error_not_a_fallback() {
         let spec = WorkloadSpec::drsformer();
         let sys = SystemConfig::for_workload(&spec);
         let coord = Coordinator::new(1, 2, sys);
         let trace = gen_traces(&spec, 1, 2).pop().unwrap();
-        coord.submit(Job { id: 0, trace, sf: spec.sf, flow: "no-such-flow".into() });
-        let (results, _) = coord.drain();
+        coord
+            .submit(Job::with_flows(0, trace, spec.sf, vec!["no-such-flow".into()]))
+            .unwrap();
+        let (results, metrics) = coord.drain();
         assert_eq!(results.len(), 1);
-        assert_eq!(results[0].flow, "sata");
+        let r = &results[0];
+        assert!(!r.is_ok());
+        let err = r.error.as_ref().unwrap();
+        assert!(err.contains("no-such-flow"), "{err}");
+        assert!(err.contains("sata"), "should list registered flows: {err}");
+        assert!(r.flows.is_empty());
+        assert_eq!(metrics.jobs_failed, 1);
+        assert_eq!(metrics.jobs_done, 0);
+        // rejected before planning: the cache never saw it
+        assert_eq!(metrics.cache_misses + metrics.cache_hits, 0);
+    }
+
+    #[test]
+    fn empty_flow_list_and_headless_trace_are_rejected() {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::new(1, 2, sys);
+        let trace = gen_traces(&spec, 1, 3).pop().unwrap();
+        coord
+            .submit(Job::with_flows(0, trace.clone(), None, Vec::new()))
+            .unwrap();
+        let mut headless = trace;
+        headless.heads.clear();
+        coord.submit(Job::new(1, headless, None)).unwrap();
+        let (results, metrics) = coord.drain();
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|r| !r.is_ok()));
+        assert_eq!(metrics.jobs_failed, 2);
+    }
+
+    #[test]
+    fn submit_after_close_returns_the_job() {
+        let coord = Coordinator::new(1, 2, SystemConfig::default());
+        coord.close();
+        let spec = WorkloadSpec::ttst();
+        let trace = gen_traces(&spec, 1, 1).pop().unwrap();
+        let job = Job::new(7, trace, None);
+        let back = coord.submit(job).unwrap_err();
+        assert_eq!(back.id, 7);
+        let m = coord.finish();
+        assert_eq!(m.jobs_submitted, 0);
+    }
+
+    #[test]
+    fn results_stream_without_a_drain_barrier() {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::new(2, 4, sys);
+        for j in jobs(&spec, 5) {
+            coord.submit(j).unwrap();
+        }
+        coord.close();
+        // Consume the stream one result at a time (completion order).
+        let mut seen = Vec::new();
+        for r in coord.results() {
+            assert!(r.is_ok());
+            assert!(r.wall_ns > 0.0);
+            seen.push(r.id);
+        }
+        assert_eq!(seen.len(), 5);
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+        let m = coord.finish();
+        assert_eq!(m.jobs_done, 5);
+    }
+
+    #[test]
+    fn repeat_submissions_hit_the_plan_cache_with_identical_reports() {
+        let spec = WorkloadSpec::drsformer();
+        let sys = SystemConfig::for_workload(&spec);
+        // one plan worker → deterministic miss-then-hit ordering
+        let coord = Coordinator::with_config(
+            sys,
+            CoordinatorConfig {
+                plan_workers: 1,
+                exec_workers: 2,
+                ..Default::default()
+            },
+        );
+        let trace = gen_traces(&spec, 1, 4).pop().unwrap();
+        for id in 0..4 {
+            coord.submit(Job::new(id, trace.clone(), spec.sf)).unwrap();
+        }
+        let (results, metrics) = coord.drain();
+        assert_eq!(results.len(), 4);
+        assert_eq!(metrics.cache_misses, 1);
+        assert_eq!(metrics.cache_hits, 3);
+        assert!(metrics.cache_hit_rate() > 0.7);
+        assert!(!results[0].cache_hit);
+        assert!(results[1..].iter().all(|r| r.cache_hit));
+        // hit-path executions are bitwise identical to the cold plan's
+        for r in &results[1..] {
+            assert_eq!(r.dense, results[0].dense);
+            assert_eq!(r.flows[0].report, results[0].flows[0].report);
+            assert_eq!(
+                r.flows[0].throughput_gain,
+                results[0].flows[0].throughput_gain
+            );
+        }
     }
 
     #[test]
@@ -263,5 +923,45 @@ mod tests {
         let (results, metrics) = coord.drain();
         assert!(results.is_empty());
         assert_eq!(metrics.jobs_done, 0);
+        assert_eq!(metrics.cache_hit_rate(), 0.0);
+        assert_eq!(metrics.wall_p50_ns, 0.0);
+    }
+
+    #[test]
+    fn plan_cache_lru_eviction_and_disable() {
+        let spec = WorkloadSpec::ttst();
+        let traces = gen_traces(&spec, 3, 8);
+        let opts = EngineOpts::default();
+        let keys: Vec<u64> = traces
+            .iter()
+            .map(|t| PlanSet::fingerprint_for(&t.heads, opts))
+            .collect();
+        let build = |i: usize| PlanSet::build(&traces[i].heads, opts);
+
+        // capacity 2, single shard → third insert evicts the LRU (key 0)
+        let cache = PlanCache::new(2, 1);
+        let (a0, hit0) = cache.get_or_build(keys[0], || build(0));
+        assert!(!hit0);
+        let (a0b, hit0b) = cache.get_or_build(keys[0], || build(0));
+        assert!(hit0b && Arc::ptr_eq(&a0, &a0b), "hit returns the same Arc");
+        cache.get_or_build(keys[1], || build(1));
+        // touch key 0 again so key 1 becomes the least-recently-used
+        let (_, hit0c) = cache.get_or_build(keys[0], || build(0));
+        assert!(hit0c);
+        cache.get_or_build(keys[2], || build(2)); // at capacity → evicts key 1
+        assert_eq!(cache.len(), 2);
+        let (_, hit0d) = cache.get_or_build(keys[0], || build(0));
+        assert!(hit0d, "key 0 was recently touched and must survive");
+        let (_, hit1) = cache.get_or_build(keys[1], || build(1));
+        assert!(!hit1, "key 1 was the LRU and must have been evicted");
+        assert_eq!(cache.hits(), 3);
+
+        // capacity 0 disables caching entirely
+        let off = PlanCache::new(0, 4);
+        let (x, h1) = off.get_or_build(keys[0], || build(0));
+        let (y, h2) = off.get_or_build(keys[0], || build(0));
+        assert!(!h1 && !h2 && !Arc::ptr_eq(&x, &y));
+        assert_eq!(off.len(), 0);
+        assert!(off.is_empty());
     }
 }

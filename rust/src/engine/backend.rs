@@ -33,11 +33,22 @@ use super::{chunked_k_uses, EngineOpts, RunReport};
 
 /// Algo-1 output for one trace: per-head sorted + classified plans, built
 /// once and shared by every backend that simulates the trace.
+///
+/// Sharing semantics: a `PlanSet` is immutable after [`PlanSet::build`] —
+/// every backend method takes it by `&` and the coordinator hands one
+/// `Arc<PlanSet>` to any number of execute workers (see
+/// [`crate::coordinator::PlanCache`]), so a cache hit re-executes the
+/// exact planned bytes with zero re-sorting and zero copying.
 #[derive(Clone, Debug)]
 pub struct PlanSet {
     pub plans: Vec<HeadPlan>,
     /// Engine options the plans were built with (θ, seed, fold size).
     pub opts: EngineOpts,
+    /// Cache identity: source-mask fingerprint mixed with the opts key
+    /// ([`crate::mask::SelectiveMask::fingerprint`] per head +
+    /// [`EngineOpts::cache_key`]). Two `PlanSet`s with equal fingerprints
+    /// plan — and therefore schedule and execute — identically.
+    pub fingerprint: u64,
 }
 
 impl PlanSet {
@@ -46,12 +57,23 @@ impl PlanSet {
         assert!(!masks.is_empty(), "no heads to plan");
         let n = masks[0].n();
         let theta = (n as f64 * opts.theta_frac) as usize;
-        let plans = masks
+        let plans: Vec<HeadPlan> = masks
             .iter()
             .enumerate()
             .map(|(h, m)| HeadPlan::build(h, m.clone(), theta, opts.seed))
             .collect();
-        PlanSet { plans, opts }
+        let fingerprint = Self::fingerprint_for(masks, opts);
+        PlanSet { plans, opts, fingerprint }
+    }
+
+    /// The cache key [`PlanSet::build`] would stamp on these inputs,
+    /// computable without running Algo 1 (O(N²/64) vs O(N³)) — this is
+    /// what makes a plan-cache lookup cheap relative to planning. For a
+    /// trace this is exactly `mix64(trace.fingerprint() ^ opts.cache_key())`
+    /// ([`crate::mask::masks_fingerprint`] is the shared mask half).
+    pub fn fingerprint_for(masks: &[SelectiveMask], opts: EngineOpts) -> u64 {
+        use crate::util::rng::mix64;
+        mix64(crate::mask::masks_fingerprint(masks) ^ opts.cache_key())
     }
 
     /// Token count N (uniform across heads of one trace).
@@ -664,20 +686,6 @@ mod tests {
     use crate::util::prop::check;
     use crate::util::rng::Rng;
 
-    fn report_eq(a: &RunReport, b: &RunReport) -> bool {
-        a.latency_ns == b.latency_ns
-            && a.compute_busy_ns == b.compute_busy_ns
-            && a.mac_pj == b.mac_pj
-            && a.k_fetch_pj == b.k_fetch_pj
-            && a.q_load_pj == b.q_load_pj
-            && a.sched_pj == b.sched_pj
-            && a.index_pj == b.index_pj
-            && a.k_vec_ops == b.k_vec_ops
-            && a.q_loads == b.q_loads
-            && a.selected_pairs == b.selected_pairs
-            && a.steps == b.steps
-    }
-
     #[test]
     fn registry_has_all_seven_flows() {
         let names = flow_names();
@@ -718,6 +726,27 @@ mod tests {
     }
 
     #[test]
+    fn planset_fingerprint_tracks_masks_and_opts() {
+        let spec = WorkloadSpec::ttst();
+        let t = gen_trace(&spec, 3);
+        let opts = EngineOpts::default();
+        let a = PlanSet::build(&t.heads, opts);
+        // Stamped fingerprint == the lookup-side precomputation, and the
+        // documented identity: trace fingerprint ⊕ opts key, mixed.
+        assert_eq!(a.fingerprint, PlanSet::fingerprint_for(&t.heads, opts));
+        assert_eq!(
+            a.fingerprint,
+            crate::util::rng::mix64(t.fingerprint() ^ opts.cache_key())
+        );
+        // Same inputs → same fingerprint; different opts or masks → not.
+        assert_eq!(a.fingerprint, PlanSet::build(&t.heads, opts).fingerprint);
+        let tilted = EngineOpts { sf: Some(8), ..opts };
+        assert_ne!(a.fingerprint, PlanSet::fingerprint_for(&t.heads, tilted));
+        let t2 = gen_trace(&spec, 4);
+        assert_ne!(a.fingerprint, PlanSet::fingerprint_for(&t2.heads, opts));
+    }
+
+    #[test]
     fn shared_planset_matches_standalone_runs() {
         // Planning once per trace and fanning out must not change any
         // backend's report vs planning per flow.
@@ -730,7 +759,7 @@ mod tests {
         for b in all() {
             let shared = b.run_planned(&plans, &cim, &rtl);
             let standalone = b.run(&t.heads, &cim, &rtl, opts);
-            assert!(report_eq(&shared, &standalone), "{} diverged", b.name());
+            assert_eq!(shared, standalone, "{} diverged", b.name());
         }
     }
 
@@ -791,8 +820,8 @@ mod tests {
         for b in sota_backends() {
             let (integrated, base) = b.run_with_baseline(&plans, &cim, &rtl);
             // run_with_baseline must agree with the two single-shot paths.
-            assert!(report_eq(&integrated, &b.run_planned(&plans, &cim, &rtl)));
-            assert!(report_eq(&base, &b.baseline_report(&plans, &cim)));
+            assert_eq!(integrated, b.run_planned(&plans, &cim, &rtl));
+            assert_eq!(base, b.baseline_report(&plans, &cim));
             assert!(
                 base.latency_ns > integrated.latency_ns,
                 "{}: no throughput gain",

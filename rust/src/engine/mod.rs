@@ -92,7 +92,11 @@ pub fn chunked_k_uses_ref(
 }
 
 /// Energy/latency report for one workload run. Energies in pJ, time in ns.
-#[derive(Clone, Copy, Debug, Default)]
+///
+/// `PartialEq` is derived so the golden/cache-equivalence tests compare
+/// reports field-for-field (f64 `==`, i.e. bitwise for the normal positive
+/// values reports hold) without hand-maintained comparators.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct RunReport {
     pub latency_ns: f64,
     /// Time the MAC arrays are busy (for utilization).
@@ -153,6 +157,27 @@ pub struct EngineOpts {
 impl Default for EngineOpts {
     fn default() -> Self {
         EngineOpts { sf: None, theta_frac: 0.5, seed: 0x5A7A, index_bits: 1 }
+    }
+}
+
+impl EngineOpts {
+    /// Stable 64-bit key over every option field.
+    ///
+    /// A cached [`backend::PlanSet`] carries its `opts` into the schedule
+    /// and execute stages (`sf` picks whole-head vs tiled, `theta_frac` and
+    /// `seed` shaped the plans, `index_bits` prices index acquisition), so
+    /// the plan-cache key must cover all of them: combined with
+    /// [`crate::trace::MaskTrace::fingerprint`] it guarantees a hit is
+    /// re-executable verbatim.
+    pub fn cache_key(&self) -> u64 {
+        use crate::util::rng::mix64;
+        let mut h = mix64(match self.sf {
+            None => u64::MAX,
+            Some(sf) => sf as u64,
+        });
+        h = mix64(h ^ self.theta_frac.to_bits());
+        h = mix64(h ^ self.seed);
+        mix64(h ^ self.index_bits as u64)
     }
 }
 

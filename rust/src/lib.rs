@@ -20,8 +20,9 @@
 //! * [`trace`]     - selective-mask traces: synthetic generator calibrated
 //!   to Table I plus loaders for model-emitted masks
 //! * [`config`]    - workload + system configuration (JSON)
-//! * [`coordinator`] - the Layer-3 runtime: job queue, worker pool,
-//!   batching, backpressure, metrics
+//! * [`coordinator`] - the Layer-3 runtime: pipelined plan/execute worker
+//!   stages, fingerprint-keyed plan cache, streaming results, backpressure,
+//!   metrics
 //! * [`runtime`]   - PJRT bridge: load AOT HLO-text artifacts and execute
 //!   the Layer-2 JAX model from Rust
 //! * [`metrics`]   - reports and gain tables

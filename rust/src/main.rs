@@ -7,13 +7,17 @@
 //! sata schedule   --workload <name> [--seed <s>]      # Table-I stats
 //! sata simulate   --workload <name> [--traces <n>] [--flow <name>]
 //! sata flows                                          # list registered flows
-//! sata serve      --workload <name> --jobs <n> --workers <w> [--flow <name>]
+//! sata serve      --workload <name> --jobs <n> --workers <w>
+//!                 [--flows a,b,c] [--repeat <r>] [--traces-dir <dir>]
 //! sata e2e        [--artifacts <dir>]                 # PJRT end-to-end
 //! ```
 //!
-//! `--flow` resolves through the [`backend`] registry: `dense`, `gated`,
-//! `sata` (default), or a SOTA integration (`a3+sata`, `spatten+sata`,
-//! `energon+sata`, `elsa+sata`).
+//! `--flow` / `--flows` resolve through the [`backend`] registry: `dense`,
+//! `gated`, `sata` (default), or a SOTA integration (`a3+sata`,
+//! `spatten+sata`, `energon+sata`, `elsa+sata`). `serve` streams results
+//! through the pipelined coordinator and reports plan-cache hit rate plus
+//! p50/p95/p99 wall latency; `--repeat` resubmits the trace set to
+//! exercise the cache, `--traces-dir` streams trace files from disk.
 
 use std::collections::HashMap;
 
@@ -25,15 +29,25 @@ use sata::hw::cim::CimConfig;
 use sata::hw::sched_rtl::SchedRtl;
 use sata::metrics::{render_flow_comparison, render_report, schedule_stats};
 use sata::trace::synth::{gen_trace, gen_traces};
+use sata::trace::{MaskTrace, TraceDir};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut m = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
-            let val = args.get(i + 1).cloned().unwrap_or_default();
-            m.insert(key.to_string(), val);
-            i += 2;
+            // A following `--token` is the next flag, not this flag's
+            // value: `--out --workload ttst` must not swallow `--workload`.
+            match args.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    m.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+                _ => {
+                    m.insert(key.to_string(), String::new());
+                    i += 1;
+                }
+            }
         } else {
             i += 1;
         }
@@ -67,6 +81,36 @@ fn flow(flags: &HashMap<String, String>) -> &'static dyn FlowBackend {
             std::process::exit(2);
         }
     }
+}
+
+/// Resolve `serve`'s flow set: comma-separated `--flows`, else the single
+/// `--flow`, else `sata`. Unknown names exit 2 with the registered list.
+fn flow_list(flags: &HashMap<String, String>) -> Vec<String> {
+    let spec = flags
+        .get("flows")
+        .or_else(|| flags.get("flow"))
+        .cloned()
+        .unwrap_or_else(|| "sata".into());
+    let names: Vec<String> = spec
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|name| match backend::by_name(name) {
+            Some(b) => b.name().to_string(),
+            None => {
+                eprintln!(
+                    "unknown flow '{name}' (registered: {})",
+                    backend::flow_names().join("|")
+                );
+                std::process::exit(2);
+            }
+        })
+        .collect();
+    if names.is_empty() {
+        eprintln!("--flows needs at least one flow name");
+        std::process::exit(2);
+    }
+    names
 }
 
 fn usize_flag(flags: &HashMap<String, String>, key: &str, default: usize) -> usize {
@@ -145,22 +189,140 @@ fn main() {
         }
         "serve" => {
             let spec = workload(&flags);
-            let b = flow(&flags);
+            let flows = flow_list(&flags);
             let jobs = usize_flag(&flags, "jobs", 16);
             let workers = usize_flag(&flags, "workers", 2);
+            let repeat = usize_flag(&flags, "repeat", 1).max(1);
             let sys = SystemConfig::for_workload(&spec);
             let coord = Coordinator::new(workers, 8, sys);
             let t0 = std::time::Instant::now();
-            for (id, trace) in gen_traces(&spec, jobs, seed).into_iter().enumerate() {
-                coord.submit(Job { id, trace, sf: spec.sf, flow: b.name().to_string() });
+
+            // Trace source: `--traces-dir` streams files lazily (one
+            // resident at a time) when submitted once; with `--repeat` the
+            // set is held in memory so repeated fingerprints hit the plan
+            // cache. No dir → Table-I synthetics.
+            enum Source {
+                Dir(TraceDir),
+                Mem(Vec<MaskTrace>),
             }
-            let (results, metrics) = coord.drain();
+            let source = match flags.get("traces-dir") {
+                Some(dir) => {
+                    let open = || {
+                        TraceDir::open(std::path::Path::new(dir)).unwrap_or_else(|e| {
+                            eprintln!("{e}");
+                            std::process::exit(2);
+                        })
+                    };
+                    if repeat == 1 {
+                        Source::Dir(open())
+                    } else {
+                        Source::Mem(
+                            open()
+                                .filter_map(|(path, t)| match t {
+                                    Ok(t) => Some(t),
+                                    Err(e) => {
+                                        eprintln!("skipping {}: {e}", path.display());
+                                        None
+                                    }
+                                })
+                                .collect(),
+                        )
+                    }
+                }
+                None => Source::Mem(gen_traces(&spec, jobs, seed)),
+            };
+
+            // Submit from a side thread (closing the intake when done) and
+            // consume the result stream here: results print as execute
+            // workers finish them — there is no drain barrier between
+            // submission and reporting.
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    let mut id = 0;
+                    let mut submit = |trace: MaskTrace| {
+                        let job = Job::with_flows(id, trace, spec.sf, flows.clone());
+                        id += 1;
+                        coord.submit(job).is_ok()
+                    };
+                    match source {
+                        Source::Dir(src) => {
+                            for (path, t) in src {
+                                match t {
+                                    Ok(t) => {
+                                        if !submit(t) {
+                                            break;
+                                        }
+                                    }
+                                    Err(e) => {
+                                        eprintln!("skipping {}: {e}", path.display())
+                                    }
+                                }
+                            }
+                        }
+                        Source::Mem(base) => {
+                            'submit: for _ in 0..repeat {
+                                for t in &base {
+                                    if !submit(t.clone()) {
+                                        break 'submit;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    coord.close(); // ends the results stream below
+                });
+                for r in coord.results() {
+                    match &r.error {
+                        Some(e) => println!("job {:>4} {}: ERROR {e}", r.id, r.model),
+                        None => {
+                            let per_flow: Vec<String> = r
+                                .flows
+                                .iter()
+                                .map(|f| {
+                                    format!(
+                                        "{} thr {:.2}x en {:.2}x",
+                                        f.flow, f.throughput_gain, f.energy_gain
+                                    )
+                                })
+                                .collect();
+                            println!(
+                                "job {:>4} {} [{}] {} wall {:.2} ms",
+                                r.id,
+                                r.model,
+                                if r.cache_hit { "hit " } else { "miss" },
+                                per_flow.join(" | "),
+                                r.wall_ns / 1e6,
+                            );
+                        }
+                    }
+                }
+            });
+            let metrics = coord.finish();
             println!(
-                "served {} jobs [{}] in {:.1} ms wall ({} workers): mean gains thr {:.2}x en {:.2}x; simulated latency {:.2} ms, energy {:.2} µJ",
-                results.len(),
-                b.name(),
+                "served {} jobs ({} failed) x {} flows in {:.1} ms wall ({}+{} workers)",
+                metrics.jobs_done,
+                metrics.jobs_failed,
+                flows.len(),
                 t0.elapsed().as_secs_f64() * 1e3,
                 workers,
+                workers,
+            );
+            println!(
+                "plan cache: {:.1}% hit rate ({} hits / {} lookups); queue peaks plan {} exec {}",
+                100.0 * metrics.cache_hit_rate(),
+                metrics.cache_hits,
+                metrics.cache_hits + metrics.cache_misses,
+                metrics.plan_queue_peak,
+                metrics.exec_queue_peak,
+            );
+            println!(
+                "wall latency p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms",
+                metrics.wall_p50_ns / 1e6,
+                metrics.wall_p95_ns / 1e6,
+                metrics.wall_p99_ns / 1e6,
+            );
+            println!(
+                "mean gains thr {:.2}x en {:.2}x; simulated latency {:.2} ms, energy {:.2} µJ",
                 metrics.mean_throughput_gain,
                 metrics.mean_energy_gain,
                 metrics.total_latency_ns / 1e6,
@@ -222,9 +384,39 @@ fn main() {
             println!(
                 "sata — SATA reproduction CLI\n\
                  usage: sata <trace-gen|schedule|simulate|flows|serve|e2e> \
-                 [--workload ttst|kvt-tiny|kvt-base|drsformer] [--flow {}] [--seed N] …",
+                 [--workload ttst|kvt-tiny|kvt-base|drsformer] [--flow {}] [--seed N] …\n\
+                 serve: [--flows a,b,c] [--repeat N] [--traces-dir DIR] \
+                 [--jobs N] [--workers N]",
                 backend::flow_names().join("|")
             );
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_flags;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_does_not_swallow_a_following_flag_as_value() {
+        // `--out --workload ttst` must leave --workload intact.
+        let m = parse_flags(&args(&["--out", "--workload", "ttst", "--jobs", "4"]));
+        assert_eq!(m.get("out").map(String::as_str), Some(""));
+        assert_eq!(m.get("workload").map(String::as_str), Some("ttst"));
+        assert_eq!(m.get("jobs").map(String::as_str), Some("4"));
+    }
+
+    #[test]
+    fn parse_flags_handles_trailing_and_positional_tokens() {
+        let m = parse_flags(&args(&["positional", "--flow", "sata", "--repeat"]));
+        assert_eq!(m.get("flow").map(String::as_str), Some("sata"));
+        // trailing flag with no value parses as present-but-empty
+        assert_eq!(m.get("repeat").map(String::as_str), Some(""));
+        assert!(!m.contains_key("positional"));
+        assert!(parse_flags(&[]).is_empty());
     }
 }

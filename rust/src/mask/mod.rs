@@ -15,12 +15,26 @@
 
 pub mod tile;
 
-use crate::util::rng::Rng;
+use crate::util::rng::{mix64, Rng};
 
 /// Number of u64 words to hold `n` bits.
 #[inline]
 pub(crate) fn words_for(n: usize) -> usize {
     n.div_ceil(64)
+}
+
+/// Fold a slice of masks into one 64-bit fingerprint: chained per-mask
+/// [`SelectiveMask::fingerprint`]s seeded with the mask count.
+///
+/// The single implementation behind `MaskTrace::fingerprint` and the
+/// plan-cache key (`PlanSet::fingerprint_for`) — extend it here and both
+/// stay in sync.
+pub fn masks_fingerprint(masks: &[SelectiveMask]) -> u64 {
+    let mut h = mix64(masks.len() as u64 ^ 0x9E37_79B9_7F4A_7C15);
+    for m in masks {
+        h = mix64(h ^ m.fingerprint());
+    }
+    h
 }
 
 /// Bit-packed N×N selective attention mask (square; queries × keys).
@@ -142,6 +156,22 @@ impl SelectiveMask {
     /// Total selected pairs (= MAC vector ops the selective workload needs).
     pub fn total_selected(&self) -> usize {
         self.rows.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// 64-bit content fingerprint over the bit-packed rows.
+    ///
+    /// Chained SplitMix64 mixing (`h = mix64(h ^ word)`) seeded with `n`:
+    /// position-sensitive, full-avalanche, and O(N²/64) — the same packed
+    /// words the engine already streams. Equal masks always fingerprint
+    /// equally; this is the plan-cache key material (two masks differing
+    /// in a single word can never collide, since `mix64` is a bijection
+    /// and the word XOR is injective from a shared chain state).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = mix64(self.n as u64 ^ 0x5A7A_F1D6_E55E_ED01);
+        for &w in &self.rows {
+            h = mix64(h ^ w);
+        }
+        h
     }
 
     /// Binary dot product of key columns `a` and `b` over queries —
@@ -363,6 +393,45 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn fingerprint_is_content_determined_and_bit_sensitive() {
+        check("fingerprint equality/sensitivity", 30, |rng| {
+            let n = 1 + rng.gen_range(130);
+            let k = 1 + rng.gen_range(n);
+            let m = SelectiveMask::random_topk(n, k, rng);
+            if m.fingerprint() != m.clone().fingerprint() {
+                return Err("fingerprint not deterministic".into());
+            }
+            // Flipping any single bit must change the fingerprint.
+            let q = rng.gen_range(n);
+            let mut flipped = SelectiveMask::zeros(n);
+            for qq in 0..n {
+                for kk in 0..n {
+                    if m.get(qq, kk) != (qq == q && kk == (q + 1) % n) {
+                        flipped.set(qq, kk);
+                    }
+                }
+            }
+            if flipped.fingerprint() == m.fingerprint() {
+                return Err(format!("bit flip not detected (n={n} k={k})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_sizes_and_empty_masks() {
+        // Same (empty) content, different n → different fingerprints.
+        assert_ne!(
+            SelectiveMask::zeros(64).fingerprint(),
+            SelectiveMask::zeros(65).fingerprint()
+        );
+        let mut a = SelectiveMask::zeros(8);
+        let b = a.clone();
+        a.set(0, 0);
+        assert_ne!(a.fingerprint(), b.fingerprint());
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 pub mod synth;
 
-use crate::mask::SelectiveMask;
+use crate::mask::{masks_fingerprint, SelectiveMask};
 use crate::util::json::Json;
 
 /// One layer's worth of selective masks (one per head) plus metadata.
@@ -85,6 +85,20 @@ impl MaskTrace {
         })
     }
 
+    /// 64-bit content fingerprint over every head mask — exactly
+    /// [`masks_fingerprint`]`(&self.heads)`, the same value the plan-cache
+    /// key is built from (`PlanSet::fingerprint_for` mixes it with
+    /// `EngineOpts::cache_key`), so extending one extends both.
+    ///
+    /// Two traces with identical masks fingerprint identically no matter
+    /// how they were produced (synth, JSON re-load, resubmission), so
+    /// Algo 1 runs once. Metadata that does not influence planning
+    /// (`model`, `dk`, `topk`) is deliberately excluded; per-mask
+    /// fingerprints already cover N.
+    pub fn fingerprint(&self) -> u64 {
+        masks_fingerprint(&self.heads)
+    }
+
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_json().emit())
     }
@@ -93,6 +107,53 @@ impl MaskTrace {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         let j = Json::parse(&text).map_err(|e| e.to_string())?;
         Self::from_json(&j)
+    }
+}
+
+/// Streaming trace source over a directory of `*.json` trace files
+/// (`serve --traces-dir`): paths are listed and sorted up front (stable
+/// job ids), but each file is read and parsed only when the iterator
+/// reaches it, so a large corpus is never resident all at once.
+pub struct TraceDir {
+    paths: std::vec::IntoIter<std::path::PathBuf>,
+}
+
+impl TraceDir {
+    /// List `*.json` files under `dir` (non-recursive), sorted by name.
+    pub fn open(dir: &std::path::Path) -> Result<Self, String> {
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let mut paths: Vec<std::path::PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.is_file() && p.extension().and_then(|x| x.to_str()) == Some("json")
+            })
+            .collect();
+        if paths.is_empty() {
+            return Err(format!("no *.json traces under {}", dir.display()));
+        }
+        paths.sort();
+        Ok(TraceDir { paths: paths.into_iter() })
+    }
+
+    pub fn len(&self) -> usize {
+        self.paths.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.paths.len() == 0
+    }
+}
+
+impl Iterator for TraceDir {
+    /// Each item carries the source path so callers can report which file
+    /// failed to parse without aborting the stream.
+    type Item = (std::path::PathBuf, Result<MaskTrace, String>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let p = self.paths.next()?;
+        let t = MaskTrace::load(&p);
+        Some((p, t))
     }
 }
 
@@ -134,6 +195,47 @@ mod tests {
         assert_eq!(back.n, t.n);
         assert_eq!(back.heads[0], t.heads[0]);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn fingerprint_survives_json_roundtrip_and_sees_mask_changes() {
+        let t = sample_trace();
+        let back = MaskTrace::from_json(&t.to_json()).unwrap();
+        assert_eq!(t.fingerprint(), back.fingerprint());
+        // Metadata is excluded: renaming the model keeps the fingerprint.
+        let mut renamed = t.clone();
+        renamed.model = "other".into();
+        assert_eq!(t.fingerprint(), renamed.fingerprint());
+        // Mask content is not: dropping a head changes it.
+        let mut fewer = t.clone();
+        fewer.heads.pop();
+        assert_ne!(t.fingerprint(), fewer.fingerprint());
+    }
+
+    #[test]
+    fn trace_dir_streams_sorted_and_reports_bad_files() {
+        let dir = std::env::temp_dir().join("sata_trace_dir_test");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let t = sample_trace();
+        t.save(&dir.join("b_0001.json")).unwrap();
+        t.save(&dir.join("a_0000.json")).unwrap();
+        std::fs::write(dir.join("broken.json"), "{ nope").unwrap();
+        std::fs::write(dir.join("ignored.txt"), "not a trace").unwrap();
+
+        let src = TraceDir::open(&dir).unwrap();
+        assert_eq!(src.len(), 3);
+        let items: Vec<_> = src.collect();
+        assert!(items[0].0.ends_with("a_0000.json") && items[0].1.is_ok());
+        assert!(items[1].0.ends_with("b_0001.json") && items[1].1.is_ok());
+        assert!(items[2].0.ends_with("broken.json") && items[2].1.is_err());
+        assert_eq!(
+            items[0].1.as_ref().unwrap().fingerprint(),
+            t.fingerprint()
+        );
+
+        assert!(TraceDir::open(&dir.join("missing")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -5,14 +5,23 @@
 //! seed key pick, property tests). Every consumer takes an explicit seed so
 //! runs are replayable from the CLI (`--seed`).
 
+/// SplitMix64 finalizer: a full-avalanche 64-bit bijection. Besides seed
+/// expansion it is the mixing step of the mask/trace fingerprints and the
+/// plan-cache keys (`mask::SelectiveMask::fingerprint`,
+/// `engine::EngineOpts::cache_key`) — chaining `mix64(h ^ word)` gives a
+/// position-sensitive 64-bit hash with no external hash crate.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// SplitMix64 step — used to expand a single `u64` seed into xoshiro state.
 #[inline]
 fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
-    let mut z = *state;
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^ (z >> 31)
+    mix64(*state)
 }
 
 /// xoshiro256++ — fast, high-quality, 2^256-1 period.
@@ -126,6 +135,18 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mix64_is_injective_on_small_domain_and_avalanches() {
+        // Bijectivity spot check: 4096 consecutive inputs, no collisions.
+        let mut outs: Vec<u64> = (0..4096u64).map(mix64).collect();
+        outs.sort_unstable();
+        outs.dedup();
+        assert_eq!(outs.len(), 4096);
+        // Single-bit flips should flip ~half the output bits.
+        let flipped = (mix64(0x1234_5678) ^ mix64(0x1234_5679)).count_ones();
+        assert!((16..=48).contains(&flipped), "weak avalanche: {flipped} bits");
+    }
 
     #[test]
     fn deterministic_for_same_seed() {

@@ -78,6 +78,95 @@ impl Histogram {
     }
 }
 
+/// Streaming log-bucketed latency histogram: O(1) memory regardless of
+/// sample count, built for the coordinator's wall-latency percentiles
+/// (p50/p95/p99) where keeping every sample would grow with traffic.
+///
+/// Buckets are geometric with [`LatencyHistogram::SUB_BUCKETS`] buckets
+/// per octave (bucket width ≈ 9%), so a reported percentile is within
+/// ~±4.5% of the exact sample value — plenty for serving dashboards.
+/// Exact min/max are tracked so the tails never over-report.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl LatencyHistogram {
+    /// Buckets per factor-of-2; 8 → bucket edges grow by 2^(1/8) ≈ 1.09.
+    pub const SUB_BUCKETS: usize = 8;
+    /// Octaves covered starting at 1 (ns): 1 ns .. 2^64 ns (~584 years).
+    const OCTAVES: usize = 64;
+
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: vec![0; Self::OCTAVES * Self::SUB_BUCKETS],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket(x: f64) -> usize {
+        // log2(x) * SUB_BUCKETS, clamped; x <= 1 lands in bucket 0.
+        let b = (x.max(1.0).log2() * Self::SUB_BUCKETS as f64) as usize;
+        b.min(Self::OCTAVES * Self::SUB_BUCKETS - 1)
+    }
+
+    /// Record one sample (non-finite or negative samples count as 0).
+    pub fn record(&mut self, x: f64) {
+        let x = if x.is_finite() { x.max(0.0) } else { 0.0 };
+        self.counts[Self::bucket(x)] += 1;
+        self.total += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Estimated percentile (`p` in [0, 100]): geometric midpoint of the
+    /// bucket holding the rank-`p` sample, clamped to the exact min/max.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        if rank >= self.total {
+            return self.max;
+        }
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let mid = ((i as f64 + 0.5) / Self::SUB_BUCKETS as f64).exp2();
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,6 +192,46 @@ mod tests {
         let g = geomean(&[2.0, 8.0]);
         assert!((g - 4.0).abs() < 1e-12);
         assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn latency_histogram_tracks_percentiles_within_bucket_error() {
+        let mut h = LatencyHistogram::new();
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64 * 50.0).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        assert_eq!(h.count(), 1000);
+        for p in [50.0, 95.0, 99.0] {
+            let exact = percentile(&xs, p);
+            let est = h.percentile(p);
+            assert!(
+                (est / exact - 1.0).abs() < 0.10,
+                "p{p}: est {est} vs exact {exact}"
+            );
+        }
+        // Tails clamp to observed extremes (p100 is the exact max; p0 is
+        // the lowest bucket's midpoint, within one bucket of the min).
+        assert!(h.percentile(0.0) <= 55.0);
+        assert_eq!(h.percentile(100.0), 50_000.0);
+        assert!((h.mean() - mean(&xs)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn latency_histogram_empty_and_degenerate_samples() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        h.record(-3.0); // clamps to 0
+        h.record(f64::NAN); // counts as 0
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile(99.0), 0.0);
+        h.record(100.0);
+        h.record(10_000.0);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.percentile(100.0), 10_000.0);
+        // low tail: lowest bucket's midpoint (~1 ns), clamped above min
+        assert!(h.percentile(0.0) <= 1.1);
     }
 
     #[test]

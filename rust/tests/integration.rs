@@ -3,9 +3,9 @@
 //! against the pre-refactor `run_*` implementations, residency across all
 //! backends) and failure-injection on malformed inputs.
 use sata::config::{SystemConfig, WorkloadSpec};
-use sata::coordinator::{Coordinator, Job};
+use sata::coordinator::{Coordinator, Job, PlanCache};
 use sata::engine::backend::{self, FlowBackend, PlanSet};
-use sata::engine::{gains, run_dense, run_gated, run_sata, EngineOpts, RunReport};
+use sata::engine::{gains, run_dense, run_gated, run_sata, EngineOpts};
 use sata::hw::cim::CimConfig;
 use sata::hw::sched_rtl::SchedRtl;
 use sata::mask::SelectiveMask;
@@ -225,20 +225,6 @@ mod legacy {
     }
 }
 
-fn report_bitwise_eq(a: &RunReport, b: &RunReport) -> bool {
-    a.latency_ns == b.latency_ns
-        && a.compute_busy_ns == b.compute_busy_ns
-        && a.mac_pj == b.mac_pj
-        && a.k_fetch_pj == b.k_fetch_pj
-        && a.q_load_pj == b.q_load_pj
-        && a.sched_pj == b.sched_pj
-        && a.index_pj == b.index_pj
-        && a.k_vec_ops == b.k_vec_ops
-        && a.q_loads == b.q_loads
-        && a.selected_pairs == b.selected_pairs
-        && a.steps == b.steps
-}
-
 #[test]
 fn golden_backend_ports_match_prerefactor_flows_on_ttst() {
     // The acceptance contract: per-flow RunReports (and hence gains) for
@@ -252,15 +238,15 @@ fn golden_backend_ports_match_prerefactor_flows_on_ttst() {
 
         let dense_new = run_dense(&t.heads, &cim);
         let dense_old = legacy::run_dense(&t.heads, &cim);
-        assert!(report_bitwise_eq(&dense_new, &dense_old), "dense diverged");
+        assert_eq!(dense_new, dense_old, "dense diverged");
 
         let gated_new = run_gated(&t.heads, &cim, opts);
         let gated_old = legacy::run_gated(&t.heads, &cim, opts);
-        assert!(report_bitwise_eq(&gated_new, &gated_old), "gated diverged");
+        assert_eq!(gated_new, gated_old, "gated diverged");
 
         let sata_new = run_sata(&t.heads, &cim, &rtl, opts);
         let sata_old = legacy::run_sata(&t.heads, &cim, &rtl, opts);
-        assert!(report_bitwise_eq(&sata_new, &sata_old), "sata diverged");
+        assert_eq!(sata_new, sata_old, "sata diverged");
 
         let g_new = gains(&dense_new, &sata_new);
         let g_old = gains(&dense_old, &sata_old);
@@ -280,7 +266,7 @@ fn golden_backend_ports_match_prerefactor_tiled_flow() {
         assert!(opts.sf.is_some());
         let new = run_sata(&t.heads, &cim, &rtl, opts);
         let old = legacy::run_sata(&t.heads, &cim, &rtl, opts);
-        assert!(report_bitwise_eq(&new, &old), "{}: tiled sata diverged", spec.name);
+        assert_eq!(new, old, "{}: tiled sata diverged", spec.name);
     }
 }
 
@@ -388,13 +374,90 @@ fn coordinator_end_to_end_with_mixed_workloads() {
     let mut id = 0;
     for spec in [WorkloadSpec::ttst(), WorkloadSpec::drsformer()] {
         for t in gen_traces(&spec, 2, 3) {
-            coord.submit(Job::new(id, t, spec.sf));
+            coord.submit(Job::new(id, t, spec.sf)).unwrap();
             id += 1;
         }
     }
     let (results, metrics) = coord.drain();
     assert_eq!(results.len(), 4);
+    assert!(results.iter().all(|r| r.is_ok()));
     assert!(metrics.mean_throughput_gain > 1.0);
+    // four distinct traces → four cold plans, zero hits
+    assert_eq!(metrics.cache_misses, 4);
+    assert!(metrics.wall_p99_ns >= metrics.wall_p50_ns);
+}
+
+#[test]
+fn cache_hit_execution_is_bitwise_identical_to_cold_plan_for_every_flow() {
+    // The plan-cache correctness contract pinning the serve acceptance
+    // criterion: executing any registered flow from a cached (hit-path)
+    // PlanSet is bitwise identical to executing it from a freshly built
+    // (cold-path) one, across the Table-I workloads.
+    let rtl = SchedRtl::tsmc65();
+    check("cache-hit == cold-plan execution", 6, |rng| {
+        let specs = WorkloadSpec::all_paper();
+        let spec = &specs[rng.gen_range(specs.len())];
+        let t = gen_trace(spec, rng.next_u64());
+        let opts = EngineOpts { sf: spec.sf, ..Default::default() };
+        let cim = CimConfig::default_65nm(spec.dk);
+        let cache = PlanCache::new(8, 2);
+        let key = PlanSet::fingerprint_for(&t.heads, opts);
+        let (_, warm_hit) =
+            cache.get_or_build(key, || PlanSet::build(&t.heads, opts));
+        if warm_hit {
+            return Err("first lookup must miss".into());
+        }
+        let (cached, hit) =
+            cache.get_or_build(key, || PlanSet::build(&t.heads, opts));
+        if !hit {
+            return Err("second lookup must hit".into());
+        }
+        let cold = PlanSet::build(&t.heads, opts);
+        for b in backend::all() {
+            let from_cache = b.run_planned(&cached, &cim, &rtl);
+            let from_cold = b.run_planned(&cold, &cim, &rtl);
+            if from_cache != from_cold {
+                return Err(format!("{}: hit path diverged ({})", b.name(), spec.name));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fingerprints_never_collide_across_table1_masks() {
+    // Distinct masks must get distinct fingerprints over the Table-I
+    // workloads (the plan cache would otherwise serve wrong plans).
+    let mut seen: std::collections::HashMap<u64, SelectiveMask> =
+        std::collections::HashMap::new();
+    let mut distinct = 0usize;
+    for spec in WorkloadSpec::all_paper() {
+        for t in gen_traces(&spec, 8, 0xC0FFEE) {
+            for m in t.heads {
+                match seen.get(&m.fingerprint()) {
+                    Some(prev) => assert_eq!(
+                        prev, &m,
+                        "{}: two distinct masks share a fingerprint",
+                        spec.name
+                    ),
+                    None => {
+                        seen.insert(m.fingerprint(), m);
+                        distinct += 1;
+                    }
+                }
+            }
+        }
+    }
+    assert!(distinct > 200, "only {distinct} distinct masks sampled");
+    // Trace-level fingerprints must also separate the workloads.
+    let fps: Vec<u64> = WorkloadSpec::all_paper()
+        .iter()
+        .map(|spec| gen_trace(spec, 1).fingerprint())
+        .collect();
+    let mut uniq = fps.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    assert_eq!(uniq.len(), fps.len());
 }
 
 #[test]
