@@ -19,6 +19,7 @@ fn serve_pass(
     traces: usize,
     repeats: usize,
     flows: &[&str],
+    substrate: &str,
     cache_capacity: usize,
 ) -> (f64, sata::coordinator::CoordinatorMetrics) {
     let sys = SystemConfig::for_workload(spec);
@@ -35,8 +36,9 @@ fn serve_pass(
             for _ in 0..repeats {
                 for t in &base {
                     let flows = flows.iter().map(|f| f.to_string()).collect();
-                    if coord.submit(Job::with_flows(id, t.clone(), spec.sf, flows)).is_err()
-                    {
+                    let job = Job::with_flows(id, t.clone(), spec.sf, flows)
+                        .on_substrate(substrate);
+                    if coord.submit(job).is_err() {
                         return;
                     }
                     id += 1;
@@ -63,8 +65,8 @@ fn main() {
         flows.len()
     );
     for spec in [WorkloadSpec::ttst(), WorkloadSpec::kvt_deit_tiny()] {
-        let (cold_jps, cold_m) = serve_pass(&spec, traces, repeats, &flows, 0);
-        let (warm_jps, warm_m) = serve_pass(&spec, traces, repeats, &flows, 256);
+        let (cold_jps, cold_m) = serve_pass(&spec, traces, repeats, &flows, "cim", 0);
+        let (warm_jps, warm_m) = serve_pass(&spec, traces, repeats, &flows, "cim", 256);
         assert_eq!(cold_m.cache_hits, 0, "disabled cache must never hit");
         assert!(warm_m.cache_hits > 0, "warm pass must hit");
         let tag = spec.name.to_lowercase();
@@ -82,4 +84,14 @@ fn main() {
             "ms",
         );
     }
+
+    // Substrate-generic serving: the same trace set executed on the
+    // systolic array through the identical coordinator path. Plans are
+    // substrate-independent, so repeat submissions warm the cache exactly
+    // as on CIM.
+    let spec = WorkloadSpec::ttst();
+    let (sys_jps, sys_m) =
+        serve_pass(&spec, traces, repeats, &flows, "systolic", 256);
+    assert!(sys_m.cache_hits > 0, "repeat systolic jobs must hit the plan cache");
+    b.report_metric("serve.ttst.systolic.jobs_per_s", sys_jps, "jobs/s");
 }

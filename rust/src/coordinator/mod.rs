@@ -46,9 +46,7 @@ use std::time::Instant;
 
 use crate::config::SystemConfig;
 use crate::engine::backend::{self, FlowBackend, PlanSet};
-use crate::engine::{gains, EngineOpts, RunReport};
-use crate::hw::cim::CimConfig;
-use crate::hw::sched_rtl::SchedRtl;
+use crate::engine::{gains, substrate, EngineOpts, RunReport};
 use crate::trace::MaskTrace;
 use crate::util::stats::LatencyHistogram;
 
@@ -64,12 +62,16 @@ pub struct Job {
     /// planned once; every listed flow executes from the shared plans.
     /// An unknown name fails the job with an explicit [`JobResult::error`].
     pub flows: Vec<String>,
+    /// Execution substrate, resolved through the
+    /// [`crate::engine::substrate`] registry (`cim` | `systolic`). Unknown
+    /// names fail the job explicitly, like unknown flows.
+    pub substrate: String,
 }
 
 impl Job {
-    /// Job running the default (SATA) flow.
+    /// Job running the default (SATA) flow on the CIM substrate.
     pub fn new(id: usize, trace: MaskTrace, sf: Option<usize>) -> Self {
-        Job { id, trace, sf, flows: vec!["sata".into()] }
+        Job { id, trace, sf, flows: vec!["sata".into()], substrate: "cim".into() }
     }
 
     /// Job fanning one planned trace out to several flows.
@@ -79,7 +81,13 @@ impl Job {
         sf: Option<usize>,
         flows: Vec<String>,
     ) -> Self {
-        Job { id, trace, sf, flows }
+        Job { id, trace, sf, flows, substrate: "cim".into() }
+    }
+
+    /// Route the job's executions onto a registered substrate.
+    pub fn on_substrate(mut self, substrate: &str) -> Self {
+        self.substrate = substrate.into();
+        self
     }
 }
 
@@ -100,7 +108,10 @@ pub struct FlowRun {
 pub struct JobResult {
     pub id: usize,
     pub model: String,
-    /// Dense baseline the per-flow gains are measured against.
+    /// Substrate the job executed on (canonical registry name).
+    pub substrate: String,
+    /// Dense baseline the per-flow gains are measured against — executed
+    /// on the job's substrate, so gains compare like with like.
     pub dense: RunReport,
     /// Per-flow runs, in [`Job::flows`] order; empty when `error` is set.
     pub flows: Vec<FlowRun>,
@@ -352,6 +363,7 @@ struct PlannedJob {
     model: String,
     dk: usize,
     flows: Vec<String>,
+    substrate: String,
     plans: Arc<PlanSet>,
     cache_hit: bool,
     enqueued: Instant,
@@ -613,6 +625,12 @@ fn plan_worker(
                 "unknown flow '{bad}' (registered: {})",
                 backend::flow_names().join("|")
             ))
+        } else if substrate::by_name(&job.substrate).is_none() {
+            Some(format!(
+                "unknown substrate '{}' (registered: {})",
+                job.substrate,
+                substrate::substrate_names().join("|")
+            ))
         } else if job.trace.heads.is_empty() {
             Some("trace has no heads".to_string())
         } else {
@@ -625,6 +643,7 @@ fn plan_worker(
                 JobResult {
                     id: job.id,
                     model: job.trace.model,
+                    substrate: job.substrate,
                     dense: RunReport::default(),
                     flows: Vec::new(),
                     cache_hit: false,
@@ -651,6 +670,7 @@ fn plan_worker(
             model: job.trace.model,
             dk: job.trace.dk,
             flows: job.flows,
+            substrate: job.substrate,
             plans,
             cache_hit,
             enqueued,
@@ -663,14 +683,13 @@ fn plan_worker(
 }
 
 /// Stage 2: run the dense baseline + every requested flow from the shared
-/// plans, stream the result.
+/// plans on the job's substrate, stream the result.
 fn exec_worker(
     plan_rx: &Mutex<Receiver<PlannedJob>>,
     res_tx: &Sender<JobResult>,
     shared: &Shared,
     sys: &SystemConfig,
 ) {
-    let rtl = SchedRtl::tsmc65();
     loop {
         let pj = match plan_rx.lock().unwrap().recv() {
             Ok(p) => p,
@@ -678,9 +697,13 @@ fn exec_worker(
         };
         shared.exec_q.exit();
 
-        let mut cim: CimConfig = sys.cim();
-        cim.dk = pj.dk.max(1);
-        let dense = backend::DENSE.run_planned(&pj.plans, &cim, &rtl);
+        // Substrate instantiation is per job (it binds the trace's D_k);
+        // the default `cim` path builds exactly the config the pre-
+        // substrate worker used, so CIM reports stay bitwise identical.
+        let sspec =
+            substrate::by_name(&pj.substrate).expect("validated at plan stage");
+        let sub = (sspec.build)(sys, pj.dk);
+        let dense = backend::DENSE.run_on(&pj.plans, &*sub);
         let flows: Vec<FlowRun> = pj
             .flows
             .iter()
@@ -689,7 +712,7 @@ fn exec_worker(
                 let report = if b.name() == "dense" {
                     dense // already executed as the baseline
                 } else {
-                    b.run_planned(&pj.plans, &cim, &rtl)
+                    b.run_on(&pj.plans, &*sub)
                 };
                 let g = gains(&dense, &report);
                 FlowRun {
@@ -707,6 +730,7 @@ fn exec_worker(
             JobResult {
                 id: pj.id,
                 model: pj.model,
+                substrate: sspec.name.to_string(),
                 dense,
                 flows,
                 cache_hit: pj.cache_hit,
@@ -802,6 +826,69 @@ mod tests {
         // dense vs itself is exactly 1.0 on both axes
         assert!((r.flows[0].throughput_gain - 1.0).abs() < 1e-12);
         assert!((r.flows[0].energy_gain - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jobs_execute_on_the_systolic_substrate() {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        // one plan worker → deterministic miss-then-hit ordering
+        let coord = Coordinator::with_config(
+            sys,
+            CoordinatorConfig { plan_workers: 1, exec_workers: 2, ..Default::default() },
+        );
+        let trace = gen_traces(&spec, 1, 6).pop().unwrap();
+        // Same trace on both substrates: plans are shared (one miss, one
+        // hit), reports differ per substrate.
+        coord
+            .submit(
+                Job::with_flows(0, trace.clone(), None, vec!["gated".into(), "sata".into()])
+                    .on_substrate("systolic"),
+            )
+            .unwrap();
+        coord
+            .submit(Job::with_flows(1, trace, None, vec!["sata".into()]))
+            .unwrap();
+        let (results, metrics) = coord.drain();
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|r| r.is_ok()));
+        assert_eq!(results[0].substrate, "systolic");
+        assert_eq!(results[1].substrate, "cim");
+        // one trace, one plan — substrate choice never re-plans
+        assert_eq!(metrics.cache_misses, 1);
+        assert_eq!(metrics.cache_hits, 1);
+        let sys_gated = &results[0].flows[0];
+        let sys_sata = &results[0].flows[1];
+        // Sec. IV-B shape: un-scheduled selective is stall-dominated,
+        // SATA's sorted bursts beat it on the same array.
+        assert!(sys_gated.report.stall_fraction() > sys_sata.report.stall_fraction());
+        assert!(sys_gated.report.latency_ns > sys_sata.report.latency_ns);
+        // Substrates produce genuinely different timings for one trace.
+        assert_ne!(
+            results[0].flows[1].report.latency_ns,
+            results[1].flows[0].report.latency_ns
+        );
+    }
+
+    #[test]
+    fn unknown_substrate_is_an_explicit_error() {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::new(1, 2, sys);
+        let trace = gen_traces(&spec, 1, 2).pop().unwrap();
+        coord
+            .submit(Job::new(0, trace, None).on_substrate("tpu"))
+            .unwrap();
+        let (results, metrics) = coord.drain();
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert!(!r.is_ok());
+        let err = r.error.as_ref().unwrap();
+        assert!(err.contains("tpu"), "{err}");
+        assert!(err.contains("systolic"), "should list substrates: {err}");
+        assert_eq!(metrics.jobs_failed, 1);
+        // rejected before planning
+        assert_eq!(metrics.cache_misses + metrics.cache_hits, 0);
     }
 
     #[test]

@@ -29,6 +29,7 @@ use crate::mask::SelectiveMask;
 use crate::schedule::tiled::{schedule_tiled, validate_tiled, TiledSchedule};
 use crate::schedule::{schedule_sata, schedule_sequential, validate, HeadPlan, Schedule};
 
+use super::substrate::Substrate;
 use super::{chunked_k_uses, EngineOpts, RunReport};
 
 /// Algo-1 output for one trace: per-head sorted + classified plans, built
@@ -127,6 +128,37 @@ impl FlowSchedule {
     }
 }
 
+/// How a flow's operand stream maps onto a DRAM-backed substrate
+/// (`engine::substrate`): burst quality, prefetchability, selectivity.
+/// Substrate-independent in the other direction too — the CIM substrate
+/// encodes the same distinctions inside each flow's `execute` hook.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AccessProfile {
+    /// K accesses form sequential bursts (sorted KSeq / dense streaming)
+    /// vs scattered gathers that waste DRAM burst efficiency.
+    pub sorted: bool,
+    /// The next fetch is known early (deterministic KSeq), so prefetch
+    /// overlaps compute — vs demand fetching.
+    pub prefetch: bool,
+    /// The flow computes a mask-selected workload (drives schedule-derived
+    /// locality reuse; dense streaming has nothing to reuse).
+    pub selective: bool,
+}
+
+impl AccessProfile {
+    /// Dense streaming: trivially sequential and prefetchable.
+    pub const SEQUENTIAL_DENSE: AccessProfile =
+        AccessProfile { sorted: true, prefetch: true, selective: false };
+    /// Un-scheduled selective flow: scattered gathers, demand-fetched —
+    /// the Sec. IV-B systolic baseline.
+    pub const FRAGMENTED_SELECTIVE: AccessProfile =
+        AccessProfile { sorted: false, prefetch: false, selective: true };
+    /// SATA-front-ended selective flow: sorted bursts, prefetch overlap,
+    /// schedule-derived locality.
+    pub const SORTED_SELECTIVE: AccessProfile =
+        AccessProfile { sorted: true, prefetch: true, selective: true };
+}
+
 /// One execution flow behind the plan → schedule → execute pipeline.
 pub trait FlowBackend: Sync {
     /// Registry name (the CLI's `--flow <name>`).
@@ -146,7 +178,8 @@ pub trait FlowBackend: Sync {
     /// Stage 2 — Algo 2 variant over the shared plans.
     fn schedule(&self, plans: &PlanSet) -> FlowSchedule;
 
-    /// Stage 3 — Eq. 3 timing + energy accumulation.
+    /// Stage 3 — Eq. 3 timing + energy accumulation on the CIM model (the
+    /// [`CimSubstrate`](super::substrate::CimSubstrate) execution hook).
     fn execute(
         &self,
         plans: &PlanSet,
@@ -154,6 +187,26 @@ pub trait FlowBackend: Sync {
         cim: &CimConfig,
         rtl: &SchedRtl,
     ) -> RunReport;
+
+    /// Substrate-side execution hook: how this flow's operand stream maps
+    /// onto a DRAM-backed substrate (`engine::substrate` uses this to run
+    /// the same [`FlowSchedule`] on the systolic array).
+    fn access_profile(&self) -> AccessProfile;
+
+    /// SOTA design whose index engine rides on top of this flow, if any —
+    /// substrates charge its published runtime/energy index fractions.
+    fn index_design(&self) -> Option<SotaDesign> {
+        None
+    }
+
+    /// Schedule + execute on an arbitrary substrate — the substrate-
+    /// generic analogue of [`FlowBackend::run_planned`].
+    fn run_on(&self, plans: &PlanSet, sub: &dyn Substrate) -> RunReport
+    where
+        Self: Sized,
+    {
+        sub.execute(self, plans, &self.schedule(plans))
+    }
 
     /// Full pipeline for standalone callers.
     fn run(
@@ -412,6 +465,10 @@ impl FlowBackend for DenseBackend {
         FlowSchedule::Whole(schedule_sequential(&plans.plans, false))
     }
 
+    fn access_profile(&self) -> AccessProfile {
+        AccessProfile::SEQUENTIAL_DENSE
+    }
+
     fn execute(
         &self,
         plans: &PlanSet,
@@ -441,6 +498,12 @@ impl FlowBackend for GatedBackend {
 
     fn schedule(&self, plans: &PlanSet) -> FlowSchedule {
         FlowSchedule::Whole(schedule_sequential(&plans.plans, true))
+    }
+
+    fn access_profile(&self) -> AccessProfile {
+        // The "straightforward approach": selective gathers with the
+        // conventional flow — the Sec. IV-B un-scheduled systolic baseline.
+        AccessProfile::FRAGMENTED_SELECTIVE
     }
 
     fn execute(
@@ -492,6 +555,10 @@ impl FlowBackend for SataBackend {
                     .collect(),
             ),
         }
+    }
+
+    fn access_profile(&self) -> AccessProfile {
+        AccessProfile::SORTED_SELECTIVE
     }
 
     fn execute(
@@ -611,6 +678,15 @@ impl FlowBackend for SotaSataBackend {
         SATA.schedule(plans)
     }
 
+    fn access_profile(&self) -> AccessProfile {
+        // SATA front-ends the operand flow: sorted bursts + overlap.
+        AccessProfile::SORTED_SELECTIVE
+    }
+
+    fn index_design(&self) -> Option<SotaDesign> {
+        Some(self.design)
+    }
+
     fn execute(
         &self,
         plans: &PlanSet,
@@ -676,6 +752,13 @@ impl dyn FlowBackend {
     pub fn by_name(name: &str) -> Option<&'static dyn FlowBackend> {
         self::by_name(name)
     }
+
+    /// Trait-object mirror of [`FlowBackend::run_on`] (the trait default
+    /// needs `Self: Sized` to coerce into `&dyn FlowBackend`; registry
+    /// callers hold `&dyn FlowBackend` already).
+    pub fn run_on(&self, plans: &PlanSet, sub: &dyn Substrate) -> RunReport {
+        sub.execute(self, plans, &self.schedule(plans))
+    }
 }
 
 #[cfg(test)]
@@ -704,6 +787,24 @@ mod tests {
         for n in names {
             assert!(by_name(n).is_some(), "{n} not resolvable");
         }
+    }
+
+    #[test]
+    fn access_profiles_match_flow_semantics() {
+        assert_eq!(DENSE.access_profile(), AccessProfile::SEQUENTIAL_DENSE);
+        assert_eq!(GATED.access_profile(), AccessProfile::FRAGMENTED_SELECTIVE);
+        assert_eq!(SATA.access_profile(), AccessProfile::SORTED_SELECTIVE);
+        assert!(DENSE.index_design().is_none());
+        assert!(SATA.index_design().is_none());
+        for b in sota_backends() {
+            assert_eq!(b.access_profile(), AccessProfile::SORTED_SELECTIVE);
+            assert_eq!(b.index_design(), Some(b.design()), "{}", b.name());
+        }
+        // Profiles are reachable through the registry (trait objects).
+        assert_eq!(
+            by_name("gated").unwrap().access_profile(),
+            AccessProfile::FRAGMENTED_SELECTIVE
+        );
     }
 
     #[test]

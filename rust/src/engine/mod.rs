@@ -11,9 +11,14 @@
 //! Flows are implemented by [`backend::FlowBackend`]s behind the
 //! plan → schedule → execute pipeline (see DESIGN.md §Execution-pipeline);
 //! [`run_dense`] / [`run_gated`] / [`run_sata`] remain as thin wrappers
-//! over the registry for source compatibility.
+//! over the registry for source compatibility. Execution hardware is a
+//! registered [`substrate::Substrate`] (`cim` or `systolic`): planning and
+//! scheduling are substrate-independent, and any flow's schedule runs on
+//! any substrate via [`backend::FlowBackend::run_on`] (DESIGN.md
+//! §Substrates).
 
 pub mod backend;
+pub mod substrate;
 
 use crate::hw::cim::CimConfig;
 use crate::hw::sched_rtl::SchedRtl;
@@ -126,6 +131,17 @@ impl RunReport {
             0.0
         } else {
             self.compute_busy_ns / self.latency_ns
+        }
+    }
+
+    /// Stalled fraction of the run (1 − utilization). On the systolic
+    /// substrate this is exactly `stall_cycles / total_cycles` — the
+    /// quantity Sec. IV-B reports (90.4% → 75.2% on TTST).
+    pub fn stall_fraction(&self) -> f64 {
+        if self.latency_ns == 0.0 {
+            0.0
+        } else {
+            1.0 - self.utilization()
         }
     }
 

@@ -14,7 +14,8 @@
 //! * [`hw`]        - hardware substrates: CIM system model (NeuroSim-
 //!   flavoured), systolic array (ScaleSIM-flavoured), scheduler RTL PPA
 //! * [`engine`]    - executes a schedule on a hardware model (Eq. 3 timing,
-//!   active-row energy), producing run reports
+//!   active-row energy), producing run reports; `engine::substrate` runs
+//!   any flow's schedule on any registered substrate (CIM or systolic)
 //! * [`baselines`] - A3 / SpAtten / Energon / ELSA behavioural models for
 //!   the integration study (Fig. 4c)
 //! * [`trace`]     - selective-mask traces: synthetic generator calibrated

@@ -6,28 +6,33 @@
 //! sata trace-gen  --workload <name> --count <n> --seed <s> --out <dir>
 //! sata schedule   --workload <name> [--seed <s>]      # Table-I stats
 //! sata simulate   --workload <name> [--traces <n>] [--flow <name>]
-//! sata flows                                          # list registered flows
+//!                 [--substrate cim|systolic]
+//! sata flows                                          # flows + substrates
 //! sata serve      --workload <name> --jobs <n> --workers <w>
-//!                 [--flows a,b,c] [--repeat <r>] [--traces-dir <dir>]
+//!                 [--flows a,b,c] [--substrate <name>] [--repeat <r>]
+//!                 [--traces-dir <dir>]
 //! sata e2e        [--artifacts <dir>]                 # PJRT end-to-end
 //! ```
 //!
 //! `--flow` / `--flows` resolve through the [`backend`] registry: `dense`,
 //! `gated`, `sata` (default), or a SOTA integration (`a3+sata`,
-//! `spatten+sata`, `energon+sata`, `elsa+sata`). `serve` streams results
-//! through the pipelined coordinator and reports plan-cache hit rate plus
-//! p50/p95/p99 wall latency; `--repeat` resubmits the trace set to
-//! exercise the cache, `--traces-dir` streams trace files from disk.
+//! `spatten+sata`, `energon+sata`, `elsa+sata`); `--substrate` resolves
+//! through the [`substrate`] registry (`cim` default, `systolic` for the
+//! Sec. IV-B array) — any flow runs on any substrate from the same plans
+//! and schedule. `serve` streams results through the pipelined coordinator
+//! and reports plan-cache hit rate plus p50/p95/p99 wall latency;
+//! `--repeat` resubmits the trace set to exercise the cache,
+//! `--traces-dir` streams trace files from disk.
 
 use std::collections::HashMap;
 
 use sata::config::{SystemConfig, WorkloadSpec};
 use sata::coordinator::{Coordinator, Job};
 use sata::engine::backend::{self, FlowBackend, PlanSet};
-use sata::engine::{gains, run_dense, run_sata, EngineOpts};
+use sata::engine::{gains, run_dense, run_sata, substrate, EngineOpts};
 use sata::hw::cim::CimConfig;
 use sata::hw::sched_rtl::SchedRtl;
-use sata::metrics::{render_flow_comparison, render_report, schedule_stats};
+use sata::metrics::{render_flow_comparison_on, render_report, schedule_stats};
 use sata::trace::synth::{gen_trace, gen_traces};
 use sata::trace::{MaskTrace, TraceDir};
 
@@ -77,6 +82,21 @@ fn flow(flags: &HashMap<String, String>) -> &'static dyn FlowBackend {
             eprintln!(
                 "unknown flow '{name}' (registered: {})",
                 backend::flow_names().join("|")
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Resolve `--substrate` through the substrate registry (default: `cim`).
+fn substrate_spec(flags: &HashMap<String, String>) -> &'static substrate::SubstrateSpec {
+    let name = flags.get("substrate").map(String::as_str).unwrap_or("cim");
+    match substrate::by_name(name) {
+        Some(s) => s,
+        None => {
+            eprintln!(
+                "unknown substrate '{name}' (registered: {})",
+                substrate::substrate_names().join("|")
             );
             std::process::exit(2);
         }
@@ -154,35 +174,45 @@ fn main() {
             for b in backend::all() {
                 println!("  {:<14} {}", b.name(), b.describe());
             }
+            println!("registered substrates (--substrate; any flow runs on any):");
+            for s in &substrate::SUBSTRATES {
+                println!("  {:<14} {}", s.name, s.describe);
+            }
         }
         "simulate" => {
             let spec = workload(&flags);
             let b = flow(&flags);
+            let sspec = substrate_spec(&flags);
+            let sys = SystemConfig::for_workload(&spec);
+            let sub = (sspec.build)(&sys, spec.dk);
             let n_traces = usize_flag(&flags, "traces", 4);
-            let cim = CimConfig::default_65nm(spec.dk);
-            let rtl = SchedRtl::tsmc65();
             let opts = EngineOpts { sf: spec.sf, ..Default::default() };
             let mut thr = 0.0;
             let mut en = 0.0;
             for (i, t) in gen_traces(&spec, n_traces, seed).iter().enumerate() {
-                // Algo 1 once per trace; baseline + flow share the plans.
+                // Algo 1 once per trace; baseline + flow share the plans,
+                // and the substrate executes both schedules.
                 let plans = PlanSet::build(&t.heads, opts);
-                let dense = backend::DENSE.run_planned(&plans, &cim, &rtl);
-                let rep = b.run_planned(&plans, &cim, &rtl);
+                let dense = backend::DENSE.run_on(&plans, &*sub);
+                let rep = b.run_on(&plans, &*sub);
                 let g = gains(&dense, &rep);
                 thr += g.throughput;
                 en += g.energy_eff;
                 if i == 0 {
                     print!(
                         "{}",
-                        render_flow_comparison(&[("dense", &dense), (b.name(), &rep)])
+                        render_flow_comparison_on(
+                            sspec.name,
+                            &[("dense", &dense), (b.name(), &rep)]
+                        )
                     );
                 }
             }
             println!(
-                "{} [{}]: mean throughput gain {:.2}x, mean energy-efficiency gain {:.2}x over {n_traces} traces vs dense",
+                "{} [{}@{}]: mean throughput gain {:.2}x, mean energy-efficiency gain {:.2}x over {n_traces} traces vs dense",
                 spec.name,
                 b.name(),
+                sspec.name,
                 thr / n_traces as f64,
                 en / n_traces as f64
             );
@@ -190,6 +220,7 @@ fn main() {
         "serve" => {
             let spec = workload(&flags);
             let flows = flow_list(&flags);
+            let sspec = substrate_spec(&flags);
             let jobs = usize_flag(&flags, "jobs", 16);
             let workers = usize_flag(&flags, "workers", 2);
             let repeat = usize_flag(&flags, "repeat", 1).max(1);
@@ -240,7 +271,8 @@ fn main() {
                 s.spawn(|| {
                     let mut id = 0;
                     let mut submit = |trace: MaskTrace| {
-                        let job = Job::with_flows(id, trace, spec.sf, flows.clone());
+                        let job = Job::with_flows(id, trace, spec.sf, flows.clone())
+                            .on_substrate(sspec.name);
                         id += 1;
                         coord.submit(job).is_ok()
                     };
@@ -286,9 +318,10 @@ fn main() {
                                 })
                                 .collect();
                             println!(
-                                "job {:>4} {} [{}] {} wall {:.2} ms",
+                                "job {:>4} {} [{} {}] {} wall {:.2} ms",
                                 r.id,
                                 r.model,
+                                r.substrate,
                                 if r.cache_hit { "hit " } else { "miss" },
                                 per_flow.join(" | "),
                                 r.wall_ns / 1e6,
@@ -299,10 +332,11 @@ fn main() {
             });
             let metrics = coord.finish();
             println!(
-                "served {} jobs ({} failed) x {} flows in {:.1} ms wall ({}+{} workers)",
+                "served {} jobs ({} failed) x {} flows on {} in {:.1} ms wall ({}+{} workers)",
                 metrics.jobs_done,
                 metrics.jobs_failed,
                 flows.len(),
+                sspec.name,
                 t0.elapsed().as_secs_f64() * 1e3,
                 workers,
                 workers,
@@ -384,10 +418,12 @@ fn main() {
             println!(
                 "sata — SATA reproduction CLI\n\
                  usage: sata <trace-gen|schedule|simulate|flows|serve|e2e> \
-                 [--workload ttst|kvt-tiny|kvt-base|drsformer] [--flow {}] [--seed N] …\n\
+                 [--workload ttst|kvt-tiny|kvt-base|drsformer] [--flow {}] \
+                 [--substrate {}] [--seed N] …\n\
                  serve: [--flows a,b,c] [--repeat N] [--traces-dir DIR] \
                  [--jobs N] [--workers N]",
-                backend::flow_names().join("|")
+                backend::flow_names().join("|"),
+                substrate::substrate_names().join("|")
             );
         }
     }

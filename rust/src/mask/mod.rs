@@ -82,7 +82,9 @@ impl SelectiveMask {
     }
 
     /// Build from per-query selected-key index lists (TopK output layout —
-    /// what the L2 model's `masks` tensor reduces to).
+    /// what the L2 model's `masks` tensor reduces to). Panics on
+    /// out-of-range indices; use [`Self::try_from_topk_indices`] on
+    /// untrusted input (trace ingestion).
     pub fn from_topk_indices(n: usize, topk: &[Vec<usize>]) -> Self {
         assert_eq!(topk.len(), n);
         let mut m = Self::zeros(n);
@@ -93,6 +95,34 @@ impl SelectiveMask {
             }
         }
         m
+    }
+
+    /// Fallible [`Self::from_topk_indices`]: rejects out-of-range and
+    /// duplicate key indices with an `Err` instead of aborting — the
+    /// trace-ingestion path (`MaskTrace::from_json`) must survive hostile
+    /// or corrupt files (`serve --traces-dir` promises per-file errors).
+    pub fn try_from_topk_indices(n: usize, topk: &[Vec<usize>]) -> Result<Self, String> {
+        if n == 0 {
+            return Err("empty mask (n = 0)".into());
+        }
+        if topk.len() != n {
+            return Err(format!("{} index rows, expected {n}", topk.len()));
+        }
+        let mut m = Self::zeros(n);
+        for (q, ks) in topk.iter().enumerate() {
+            for &k in ks {
+                if k >= n {
+                    return Err(format!(
+                        "query {q}: key index {k} out of range (n = {n})"
+                    ));
+                }
+                if m.get(q, k) {
+                    return Err(format!("query {q}: duplicate key index {k}"));
+                }
+                m.set(q, k);
+            }
+        }
+        Ok(m)
     }
 
     /// Build from a dense f32 0/1 buffer in row-major order (the layout the
@@ -446,5 +476,27 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn set_out_of_range_panics() {
         SelectiveMask::zeros(4).set(0, 4);
+    }
+
+    #[test]
+    fn try_from_topk_indices_rejects_bad_input_and_accepts_good() {
+        // out-of-range index → Err, not panic
+        let oob = vec![vec![0], vec![9999], vec![2], vec![3]];
+        let e = SelectiveMask::try_from_topk_indices(4, &oob).unwrap_err();
+        assert!(e.contains("out of range"), "{e}");
+        // duplicate index → explicit Err
+        let dup = vec![vec![1, 1], vec![0], vec![2], vec![3]];
+        let e = SelectiveMask::try_from_topk_indices(4, &dup).unwrap_err();
+        assert!(e.contains("duplicate"), "{e}");
+        // wrong row count → Err
+        let short = vec![vec![0], vec![1]];
+        assert!(SelectiveMask::try_from_topk_indices(4, &short).is_err());
+        // n = 0 → Err (zeros() would assert)
+        assert!(SelectiveMask::try_from_topk_indices(0, &[]).is_err());
+        // valid input matches the panicking constructor exactly
+        let good = vec![vec![0, 3], vec![1], vec![], vec![2, 0]];
+        let a = SelectiveMask::try_from_topk_indices(4, &good).unwrap();
+        let b = SelectiveMask::from_topk_indices(4, &good);
+        assert_eq!(a, b);
     }
 }

@@ -158,6 +158,13 @@ pub fn render_flow_comparison(rows: &[(&str, &RunReport)]) -> String {
     s
 }
 
+/// [`render_flow_comparison`] with the executing substrate in a header
+/// line — the `simulate --substrate` output path. Substrate names come
+/// from the `engine::substrate` registry.
+pub fn render_flow_comparison_on(substrate: &str, rows: &[(&str, &RunReport)]) -> String {
+    format!("substrate: {substrate}\n{}", render_flow_comparison(rows))
+}
+
 /// Pretty-print an engine report (CLI + examples).
 pub fn render_report(name: &str, r: &RunReport) -> String {
     format!(
@@ -224,6 +231,16 @@ mod tests {
         assert!(out.contains("dense"));
         assert!(out.contains("vs dense: thr 2.00x en 2.00x"));
         assert!(render_flow_comparison(&[]).is_empty());
+    }
+
+    #[test]
+    fn flow_comparison_on_substrate_names_the_substrate() {
+        let base = RunReport { latency_ns: 2000.0, mac_pj: 100.0, ..Default::default() };
+        let fast = RunReport { latency_ns: 500.0, mac_pj: 50.0, ..Default::default() };
+        let out =
+            render_flow_comparison_on("systolic", &[("gated", &base), ("sata", &fast)]);
+        assert!(out.starts_with("substrate: systolic\n"), "{out}");
+        assert!(out.contains("vs gated: thr 4.00x"));
     }
 
     #[test]

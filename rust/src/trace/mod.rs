@@ -74,7 +74,12 @@ impl MaskTrace {
                         .collect()
                 })
                 .collect::<Result<_, _>>()?;
-            heads.push(SelectiveMask::from_topk_indices(n, &idx));
+            // Validated (not asserting) construction: an out-of-range or
+            // duplicate index in one file must yield this file's Err, not
+            // abort the whole `serve --traces-dir` stream.
+            let mask = SelectiveMask::try_from_topk_indices(n, &idx)
+                .map_err(|e| format!("head {}: {e}", heads.len()))?;
+            heads.push(mask);
         }
         Ok(MaskTrace {
             model: j.get("model").as_str().unwrap_or("unknown").to_string(),
@@ -243,5 +248,26 @@ mod tests {
         assert!(MaskTrace::from_json(&Json::parse("{}").unwrap()).is_err());
         let bad = Json::parse(r#"{"n": 4, "heads": [[[0],[1]]]}"#).unwrap();
         assert!(MaskTrace::from_json(&bad).is_err(), "row count mismatch");
+    }
+
+    #[test]
+    fn from_json_rejects_out_of_range_and_duplicate_indices() {
+        // Out-of-range key index: previously an assert inside
+        // `from_topk_indices` aborted the process; now a per-file Err.
+        let oob =
+            Json::parse(r#"{"n": 4, "heads": [[[9999],[0],[1],[2]]]}"#).unwrap();
+        let e = MaskTrace::from_json(&oob).unwrap_err();
+        assert!(e.contains("out of range"), "{e}");
+        let dup =
+            Json::parse(r#"{"n": 4, "heads": [[[1,1],[0],[2],[3]]]}"#).unwrap();
+        let e = MaskTrace::from_json(&dup).unwrap_err();
+        assert!(e.contains("duplicate"), "{e}");
+        // The error names the offending head.
+        let second_head = Json::parse(
+            r#"{"n": 2, "heads": [[[0],[1]], [[0],[7]]]}"#,
+        )
+        .unwrap();
+        let e = MaskTrace::from_json(&second_head).unwrap_err();
+        assert!(e.contains("head 1"), "{e}");
     }
 }

@@ -19,12 +19,17 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile by linear interpolation on a *sorted copy*; `p` in [0, 100].
+///
+/// Non-finite samples (NaN, ±∞) are dropped before ranking — the old
+/// `partial_cmp(..).unwrap()` sort aborted on the first NaN; this matches
+/// `LatencyHistogram::record`'s tolerance of degenerate samples. All-non-
+/// finite (or empty) input reports 0.0.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -185,6 +190,23 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn percentile_survives_nan_and_infinite_samples() {
+        // NaN used to abort via partial_cmp().unwrap(); now it's dropped.
+        assert_eq!(percentile(&[1.0, f64::NAN, 3.0], 50.0), 2.0);
+        assert_eq!(percentile(&[f64::NAN], 50.0), 0.0);
+        assert_eq!(
+            percentile(&[f64::INFINITY, f64::NEG_INFINITY, f64::NAN], 99.0),
+            0.0
+        );
+        // Finite samples rank as before around dropped ones.
+        let xs = [f64::INFINITY, 4.0, 1.0, f64::NAN, 2.0, 3.0];
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        // Negative zero and negative values order correctly via total_cmp.
+        assert_eq!(percentile(&[-1.0, -0.0, 0.0, 1.0], 0.0), -1.0);
     }
 
     #[test]

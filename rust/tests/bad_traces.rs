@@ -1,0 +1,153 @@
+//! Crash-proof trace ingestion: a traces directory mixing valid,
+//! truncated, out-of-range-index, duplicate-index, and wrong-row-count
+//! files must yield per-file errors and completed good jobs — never a
+//! panic (the `TraceDir` iterator contract `serve --traces-dir` relies
+//! on). Plus a property test that `MaskTrace::from_json` is total over
+//! structurally-valid JSON with arbitrary index values.
+
+use sata::config::SystemConfig;
+use sata::coordinator::{Coordinator, Job};
+use sata::mask::SelectiveMask;
+use sata::trace::{MaskTrace, TraceDir};
+use sata::util::json::Json;
+use sata::util::prop::check;
+use sata::util::rng::Rng;
+
+fn good_trace(seed: u64) -> MaskTrace {
+    let mut rng = Rng::new(seed);
+    MaskTrace {
+        model: "corpus".into(),
+        n: 16,
+        dk: 64,
+        topk: 4,
+        heads: (0..2).map(|_| SelectiveMask::random_topk(16, 4, &mut rng)).collect(),
+    }
+}
+
+#[test]
+fn bad_trace_corpus_completes_good_jobs_and_reports_per_file_errors() {
+    let dir = std::env::temp_dir().join("sata_bad_trace_corpus");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Two valid traces…
+    good_trace(1).save(&dir.join("a_good.json")).unwrap();
+    good_trace(2).save(&dir.join("b_good.json")).unwrap();
+    // …and four hostile files: truncated JSON, an out-of-range key index
+    // (used to abort the process via `from_topk_indices`' assert), a
+    // duplicate index, and a wrong per-head row count.
+    std::fs::write(dir.join("c_truncated.json"), r#"{"n": 16, "heads": [[[0,"#).unwrap();
+    std::fs::write(
+        dir.join("d_oob_index.json"),
+        r#"{"model": "x", "n": 4, "dk": 8, "topk": 1, "heads": [[[9999],[0],[1],[2]]]}"#,
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("e_dup_index.json"),
+        r#"{"n": 4, "heads": [[[1,1],[0],[2],[3]]]}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("f_wrong_rows.json"), r#"{"n": 4, "heads": [[[0],[1]]]}"#)
+        .unwrap();
+
+    // The serve shape: stream the dir, submit parsable traces, collect
+    // per-file errors for the rest.
+    let src = TraceDir::open(&dir).unwrap();
+    assert_eq!(src.len(), 6);
+    let coord = Coordinator::new(2, 4, SystemConfig::default());
+    let mut submitted = 0usize;
+    let mut file_errors = Vec::new();
+    for (path, parsed) in src {
+        match parsed {
+            Ok(t) => {
+                coord.submit(Job::new(submitted, t, None)).unwrap();
+                submitted += 1;
+            }
+            Err(e) => file_errors.push((path, e)),
+        }
+    }
+    let (results, metrics) = coord.drain();
+
+    // Every good file became a completed job…
+    assert_eq!(submitted, 2);
+    assert_eq!(results.len(), 2);
+    assert!(results.iter().all(|r| r.is_ok()));
+    assert_eq!(metrics.jobs_done, 2);
+    assert_eq!(metrics.jobs_failed, 0);
+    // …and every bad file produced a per-file error naming the problem.
+    assert_eq!(file_errors.len(), 4);
+    let err_for = |stem: &str| {
+        file_errors
+            .iter()
+            .find(|(p, _)| p.file_name().unwrap().to_str().unwrap().starts_with(stem))
+            .unwrap_or_else(|| panic!("no error for {stem}"))
+            .1
+            .clone()
+    };
+    assert!(err_for("c_truncated").contains("parse"), "{}", err_for("c_truncated"));
+    assert!(err_for("d_oob_index").contains("out of range"), "{}", err_for("d_oob_index"));
+    assert!(err_for("e_dup_index").contains("duplicate"), "{}", err_for("e_dup_index"));
+    assert!(err_for("f_wrong_rows").contains("rows"), "{}", err_for("f_wrong_rows"));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn from_json_is_total_on_structurally_valid_json() {
+    // Arbitrary index values (including far out of range), arbitrary
+    // duplication, sometimes-wrong row counts: `from_json` must always
+    // return Ok/Err — reaching the end of each iteration IS the property
+    // (an assert inside mask construction would abort the test binary).
+    check("from_json total over arbitrary indices", 80, |rng| {
+        let n = 1 + rng.gen_range(10);
+        let n_heads = rng.gen_range(4); // 0..=3 heads
+        let mut all_valid = true;
+        let mut heads_json = Vec::new();
+        for _ in 0..n_heads {
+            let rows = if rng.chance(0.15) {
+                all_valid = false; // wrong row count
+                n + 1 + rng.gen_range(3)
+            } else {
+                n
+            };
+            let mut rows_json = Vec::new();
+            for _ in 0..rows {
+                let count = rng.gen_range(n + 2);
+                let mut seen = vec![false; 4 * n + 4];
+                let mut row = Vec::new();
+                for _ in 0..count {
+                    // in range about half the time; sometimes huge
+                    let idx = if rng.chance(0.5) {
+                        rng.gen_range(n)
+                    } else if rng.chance(0.1) {
+                        1_000_000 + rng.gen_range(1000)
+                    } else {
+                        rng.gen_range(3 * n + 2)
+                    };
+                    if idx >= n || seen[idx.min(4 * n + 3)] {
+                        all_valid = false;
+                    }
+                    if idx < seen.len() {
+                        seen[idx] = true;
+                    }
+                    row.push(Json::num(idx as f64));
+                }
+                rows_json.push(Json::Arr(row));
+            }
+            heads_json.push(Json::Arr(rows_json));
+        }
+        let j = Json::obj(vec![
+            ("model", Json::str("prop")),
+            ("n", Json::num(n as f64)),
+            ("dk", Json::num(8.0)),
+            ("topk", Json::num(2.0)),
+            ("heads", Json::Arr(heads_json)),
+        ]);
+        let res = MaskTrace::from_json(&j);
+        match (all_valid, &res) {
+            (true, Err(e)) => Err(format!("valid trace rejected: {e}")),
+            (false, Ok(_)) => Err("invalid trace accepted".into()),
+            _ => Ok(()),
+        }
+    });
+}

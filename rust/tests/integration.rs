@@ -5,7 +5,7 @@
 use sata::config::{SystemConfig, WorkloadSpec};
 use sata::coordinator::{Coordinator, Job, PlanCache};
 use sata::engine::backend::{self, FlowBackend, PlanSet};
-use sata::engine::{gains, run_dense, run_gated, run_sata, EngineOpts};
+use sata::engine::{gains, run_dense, run_gated, run_sata, substrate, EngineOpts};
 use sata::hw::cim::CimConfig;
 use sata::hw::sched_rtl::SchedRtl;
 use sata::mask::SelectiveMask;
@@ -267,6 +267,75 @@ fn golden_backend_ports_match_prerefactor_tiled_flow() {
         let new = run_sata(&t.heads, &cim, &rtl, opts);
         let old = legacy::run_sata(&t.heads, &cim, &rtl, opts);
         assert_eq!(new, old, "{}: tiled sata diverged", spec.name);
+    }
+}
+
+#[test]
+fn cim_substrate_path_is_bitwise_golden_across_workloads() {
+    // The substrate tentpole's acceptance contract: routing execution
+    // through `engine::substrate` must not move one bit of the CIM path —
+    // pinned against both `run_planned` and the retained pre-refactor
+    // legacy implementations, for every Table-I workload.
+    let rtl = SchedRtl::tsmc65();
+    for spec in WorkloadSpec::all_paper() {
+        let t = gen_trace(&spec, 11);
+        let sys = SystemConfig::for_workload(&spec);
+        let sub = (substrate::by_name("cim").unwrap().build)(&sys, spec.dk);
+        let cim = CimConfig::default_65nm(spec.dk);
+        let opts = EngineOpts { sf: spec.sf, ..Default::default() };
+        let plans = PlanSet::build(&t.heads, opts);
+        for b in backend::all() {
+            let via = b.run_on(&plans, &*sub);
+            let direct = b.run_planned(&plans, &cim, &rtl);
+            assert_eq!(via, direct, "{}@cim diverged ({})", b.name(), spec.name);
+        }
+        // Transitively: substrate path == the seed's free functions.
+        assert_eq!(
+            backend::DENSE.run_on(&plans, &*sub),
+            legacy::run_dense(&t.heads, &cim),
+            "{}: dense golden",
+            spec.name
+        );
+        assert_eq!(
+            backend::SATA.run_on(&plans, &*sub),
+            legacy::run_sata(&t.heads, &cim, &rtl, opts),
+            "{}: sata golden",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn every_flow_runs_on_every_substrate_across_workloads() {
+    // Substrate-generic execution: same PlanSet, same FlowSchedule, both
+    // hardware models — all seven flows, all four Table-I workloads
+    // (whole-head and tiled schedule shapes).
+    for spec in WorkloadSpec::all_paper() {
+        let t = gen_trace(&spec, 7);
+        let sys = SystemConfig::for_workload(&spec);
+        let opts = EngineOpts { sf: spec.sf, ..Default::default() };
+        let plans = PlanSet::build(&t.heads, opts);
+        let want: usize = t.heads.iter().map(|m| m.total_selected()).sum();
+        let n = t.heads[0].n();
+        for sspec in &substrate::SUBSTRATES {
+            let sub = (sspec.build)(&sys, spec.dk);
+            for b in backend::all() {
+                let rep = b.run_on(&plans, &*sub);
+                let tag = format!("{} {}@{}", spec.name, b.name(), sspec.name);
+                assert!(rep.latency_ns > 0.0, "{tag}: zero latency");
+                assert!(rep.total_pj() > 0.0, "{tag}: zero energy");
+                assert!(
+                    rep.utilization() > 0.0 && rep.utilization() <= 1.0 + 1e-12,
+                    "{tag}: utilization {}",
+                    rep.utilization()
+                );
+                if b.name() == "dense" {
+                    assert_eq!(rep.selected_pairs, t.heads.len() * n * n, "{tag}");
+                } else {
+                    assert_eq!(rep.selected_pairs, want, "{tag}: selected pairs");
+                }
+            }
+        }
     }
 }
 
