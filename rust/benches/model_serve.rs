@@ -1,0 +1,113 @@
+//! Model-request serving: requests/sec and plan-cache hit rate as a
+//! function of the cross-layer selection-overlap knob `rho`, on both
+//! substrates.
+//!
+//! Each request is an L-layer `ModelTrace` from `gen_model`; the
+//! coordinator plans **per layer** through the fingerprint-keyed cache,
+//! so a request whose layers re-select the previous layer's keys hits the
+//! plans its own earlier layers just published. `gen_model`'s copy budget
+//! is deterministic (`round(rho·(L−1))` verbatim transitions), so the hit
+//! rate is an exact function of `rho` — asserted strictly increasing
+//! across the sweep, the acceptance criterion of the model-request
+//! refactor. Requests use distinct seeds, so all hits are genuinely
+//! cross-layer, not cross-request.
+//!
+//! `SATA_BENCH_FAST=1` shrinks the request counts (CI smoke mode).
+
+use sata::config::{SystemConfig, WorkloadSpec};
+use sata::coordinator::{Coordinator, CoordinatorConfig, Job};
+use sata::trace::synth::gen_models;
+use sata::util::bench::Bench;
+
+const LAYERS: usize = 6; // ≥ 4-layer workload per the acceptance criterion
+
+fn serve_models(
+    spec: &WorkloadSpec,
+    requests: usize,
+    rho: f64,
+    substrate: &str,
+) -> (f64, sata::coordinator::CoordinatorMetrics) {
+    let sys = SystemConfig::for_workload(spec);
+    let coord = Coordinator::with_config(
+        sys,
+        // Capacity far above the distinct-key working set: hits measure
+        // cross-layer locality, not eviction luck.
+        CoordinatorConfig { cache_capacity: 1024, ..Default::default() },
+    );
+    let base = gen_models(spec, requests, LAYERS, rho, 0x5EED);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            for (id, m) in base.into_iter().enumerate() {
+                let job = Job::new(id, m, spec.sf).on_substrate(substrate);
+                if coord.submit(job).is_err() {
+                    return;
+                }
+            }
+        });
+        for r in coord.results().take(requests) {
+            assert!(r.is_ok(), "{:?}", r.error);
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let metrics = coord.finish();
+    (requests as f64 / wall_s, metrics)
+}
+
+fn main() {
+    let b = Bench::new();
+    let fast = std::env::var("SATA_BENCH_FAST").is_ok();
+    let requests = if fast { 6 } else { 24 };
+    let spec = WorkloadSpec::ttst();
+    // round(rho·5) copies per request: 0, 2, 3, 5 — strictly increasing.
+    let rho_grid = [0.0, 0.3, 0.6, 1.0];
+
+    println!(
+        "model serving: {requests} requests x {LAYERS} layers, hit rate vs rho, cim + systolic"
+    );
+    for substrate in ["cim", "systolic"] {
+        let mut hit_rates = Vec::new();
+        for &rho in &rho_grid {
+            let (rps, m) = serve_models(&spec, requests, rho, substrate);
+            let hr = m.cache_hit_rate();
+            hit_rates.push(hr);
+            assert_eq!(
+                m.layers_planned,
+                requests * LAYERS,
+                "every layer of every request must plan"
+            );
+            b.report_metric(
+                &format!("model_serve.{substrate}.rho{rho}.req_per_s"),
+                rps,
+                "req/s",
+            );
+            b.report_metric(
+                &format!("model_serve.{substrate}.rho{rho}.hit_rate"),
+                hr,
+                "frac",
+            );
+            b.report_metric(
+                &format!("model_serve.{substrate}.rho{rho}.evictions"),
+                m.cache_evictions as f64,
+                "evictions",
+            );
+        }
+        // The acceptance criterion: cross-layer locality must translate
+        // into strictly more plan-cache hits as rho rises.
+        for w in hit_rates.windows(2) {
+            assert!(
+                w[1] > w[0],
+                "{substrate}: hit rate not strictly increasing with rho: {hit_rates:?}"
+            );
+        }
+        // rho = 0 → independent layers → no hits at all; rho = 1 → every
+        // layer after the first hits: (L−1)/L.
+        assert_eq!(hit_rates[0], 0.0, "{substrate}");
+        let full = (LAYERS - 1) as f64 / LAYERS as f64;
+        assert!(
+            (hit_rates[3] - full).abs() < 1e-9,
+            "{substrate}: rho=1 hit rate {} != {full}",
+            hit_rates[3]
+        );
+    }
+}

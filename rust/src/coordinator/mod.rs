@@ -1,29 +1,32 @@
-//! Layer-3 coordinator: a streaming plan/execute service around the SATA
-//! pipeline.
+//! Layer-3 coordinator: a streaming plan/execute service whose unit of
+//! work is a full **model request** ([`ModelTrace`]), not a single layer.
 //!
 //! The paper's thesis — reorder work so operands are fetched early and
-//! retired early — applied one level up, to the service itself. The old
-//! coordinator fused planning (Algo 1, the dominant CPU cost per
-//! `benches/overhead.rs`) and execution into one worker step and re-sorted
-//! identical traces from scratch. This one splits them into **two
-//! pipelined stages with a shared plan cache**:
+//! retired early — applied one level up, to the service itself. Planning
+//! (Algo 1, the dominant CPU cost per `benches/overhead.rs`) and execution
+//! run as **two pipelined stages with a shared plan cache**:
 //!
 //! ```text
 //!  submit ──▶ [job queue] ──▶ plan workers ──▶ [planned queue] ──▶ execute workers ──▶ results
-//!  (bounded, backpressure)        │   ▲          (bounded)           one dense run +
-//!                                 ▼   │                              one run per requested flow
-//!                              PlanCache                             from the SAME Arc<PlanSet>
-//!                     (sharded LRU, keyed by mask
-//!                      fingerprint ⊕ opts key)
+//!  (bounded, backpressure)        │   ▲          (bounded)           per layer: dense +
+//!                                 ▼   │                              one run per flow from
+//!                              PlanCache                             the layer's Arc<PlanSet>,
+//!                     (sharded LRU, keyed per LAYER:                 folded into ModelReports
+//!                      mask fingerprint ⊕ opts key)
 //! ```
 //!
-//! * **Stage 1 (plan)** fingerprints the trace
-//!   ([`MaskTrace::fingerprint`] ⊕ [`EngineOpts::cache_key`]) and consults
-//!   the [`PlanCache`]: a hit skips Algo 1 entirely; a miss builds the
-//!   [`PlanSet`] once and publishes it as an `Arc` for every future hit.
-//! * **Stage 2 (execute)** runs the dense baseline plus *any number of
-//!   flows* ([`Job::flows`]) from that shared plan set — one trace planned
-//!   once can be executed against several backends.
+//! * **Stage 1 (plan)** fingerprints **each layer** of the request
+//!   ([`PlanSet::fingerprint_for`] = per-layer mask fingerprint ⊕
+//!   [`EngineOpts::cache_key`]) and consults the [`PlanCache`] per layer:
+//!   a hit skips Algo 1 for that layer; a miss builds its [`PlanSet`] once
+//!   and publishes it as an `Arc`. Because keys are layer-scoped,
+//!   correlated layers of ONE request hit each other's plans — the
+//!   cross-layer locality `trace::synth::gen_model`'s `rho` knob dials in
+//!   and `benches/model_serve.rs` measures.
+//! * **Stage 2 (execute)** runs, per layer, the dense baseline plus *any
+//!   number of flows* ([`Job::flows`]) on the job's substrate, and folds
+//!   the per-layer [`crate::engine::RunReport`]s into request-scoped [`ModelReport`]s
+//!   (end-to-end totals, per-layer breakdown, critical layer).
 //! * **Results stream**: [`Coordinator::results`] yields [`JobResult`]s
 //!   as execute workers finish them (no full-drain barrier); the results
 //!   channel is unbounded so backpressure lives only at intake and
@@ -32,7 +35,13 @@
 //!
 //! Per-job wall latency (submit → result) feeds a streaming
 //! [`LatencyHistogram`]; [`CoordinatorMetrics`] reports p50/p95/p99,
-//! cache hits/misses, and per-stage queue peaks.
+//! cache hits/misses/evictions, and per-stage queue peaks.
+//!
+//! Single-layer callers lose nothing: [`Job`] constructors take
+//! `impl Into<ModelTrace>`, a bare [`crate::trace::MaskTrace`] wraps into a 1-layer
+//! request, and `tests/model_requests.rs` pins the 1-layer path bitwise
+//! identical to the pre-model single-trace path for every flow on both
+//! substrates.
 //!
 //! No `tokio` offline — std threads + `mpsc` channels; the queue bounds
 //! give backpressure exactly like bounded async channels would.
@@ -46,21 +55,25 @@ use std::time::Instant;
 
 use crate::config::SystemConfig;
 use crate::engine::backend::{self, FlowBackend, PlanSet};
-use crate::engine::{gains, substrate, EngineOpts, RunReport};
-use crate::trace::MaskTrace;
+use crate::engine::{gains, substrate, EngineOpts};
+use crate::model::report::ModelReport;
+use crate::model::ModelTrace;
+use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
 
-/// One unit of coordinator work: schedule + simulate a trace against one
-/// or more flows.
+/// One unit of coordinator work: schedule + simulate a full model request
+/// against one or more flows. Constructors take `impl Into<ModelTrace>`,
+/// so a bare [`crate::trace::MaskTrace`] submits as a 1-layer request.
 #[derive(Clone, Debug)]
 pub struct Job {
     pub id: usize,
-    pub trace: MaskTrace,
+    pub trace: ModelTrace,
     /// Fold size override; `None` = whole-head.
     pub sf: Option<usize>,
-    /// Flow names resolved through the backend registry. The trace is
-    /// planned once; every listed flow executes from the shared plans.
-    /// An unknown name fails the job with an explicit [`JobResult::error`].
+    /// Flow names resolved through the backend registry. Each layer is
+    /// planned once; every listed flow executes every layer from the
+    /// shared per-layer plans. An unknown name fails the job with an
+    /// explicit [`JobResult::error`].
     pub flows: Vec<String>,
     /// Execution substrate, resolved through the
     /// [`crate::engine::substrate`] registry (`cim` | `systolic`). Unknown
@@ -70,18 +83,24 @@ pub struct Job {
 
 impl Job {
     /// Job running the default (SATA) flow on the CIM substrate.
-    pub fn new(id: usize, trace: MaskTrace, sf: Option<usize>) -> Self {
-        Job { id, trace, sf, flows: vec!["sata".into()], substrate: "cim".into() }
+    pub fn new(id: usize, trace: impl Into<ModelTrace>, sf: Option<usize>) -> Self {
+        Job {
+            id,
+            trace: trace.into(),
+            sf,
+            flows: vec!["sata".into()],
+            substrate: "cim".into(),
+        }
     }
 
-    /// Job fanning one planned trace out to several flows.
+    /// Job fanning one planned request out to several flows.
     pub fn with_flows(
         id: usize,
-        trace: MaskTrace,
+        trace: impl Into<ModelTrace>,
         sf: Option<usize>,
         flows: Vec<String>,
     ) -> Self {
-        Job { id, trace, sf, flows, substrate: "cim".into() }
+        Job { id, trace: trace.into(), sf, flows, substrate: "cim".into() }
     }
 
     /// Route the job's executions onto a registered substrate.
@@ -91,13 +110,14 @@ impl Job {
     }
 }
 
-/// One flow's execution from a planned job.
+/// One flow's execution of a planned model request.
 #[derive(Clone, Debug)]
 pub struct FlowRun {
     /// Canonical registry name the run resolved to.
     pub flow: String,
-    pub report: RunReport,
-    /// Gains vs the job's dense baseline (1.0 for the dense flow itself).
+    /// Per-layer reports + end-to-end fold.
+    pub report: ModelReport,
+    /// End-to-end gains vs the job's dense baseline (1.0 for dense).
     pub throughput_gain: f64,
     pub energy_gain: f64,
 }
@@ -110,12 +130,17 @@ pub struct JobResult {
     pub model: String,
     /// Substrate the job executed on (canonical registry name).
     pub substrate: String,
+    /// Layers in the request.
+    pub layers: usize,
     /// Dense baseline the per-flow gains are measured against — executed
     /// on the job's substrate, so gains compare like with like.
-    pub dense: RunReport,
+    pub dense: ModelReport,
     /// Per-flow runs, in [`Job::flows`] order; empty when `error` is set.
     pub flows: Vec<FlowRun>,
-    /// Whether planning was served from the [`PlanCache`].
+    /// Layers whose plans were served from the [`PlanCache`].
+    pub cache_hits: usize,
+    /// Whether every layer's plan was served from the cache (for a
+    /// 1-layer job this is the old per-trace hit flag).
     pub cache_hit: bool,
     /// Wall latency submit → result (queueing + planning + execution).
     pub wall_ns: f64,
@@ -127,6 +152,42 @@ pub struct JobResult {
 impl JobResult {
     pub fn is_ok(&self) -> bool {
         self.error.is_none()
+    }
+
+    /// Machine-readable per-job line (`serve --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("model", Json::str(&self.model)),
+            ("substrate", Json::str(&self.substrate)),
+            ("layers", Json::num(self.layers as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("wall_ns", Json::num(self.wall_ns)),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => Json::str(e),
+                    None => Json::Null,
+                },
+            ),
+            ("dense", self.dense.to_json()),
+            (
+                "flows",
+                Json::Arr(
+                    self.flows
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("flow", Json::str(&f.flow)),
+                                ("throughput_gain", Json::num(f.throughput_gain)),
+                                ("energy_gain", Json::num(f.energy_gain)),
+                                ("report", f.report.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
     }
 }
 
@@ -160,6 +221,7 @@ pub struct PlanCache {
     shard_cap: usize,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl PlanCache {
@@ -172,6 +234,7 @@ impl PlanCache {
             shard_cap: if capacity == 0 { 0 } else { capacity.div_ceil(n) },
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
     }
 
@@ -218,6 +281,7 @@ impl PlanCache {
             let lru = s.map.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| *k);
             if let Some(lru) = lru {
                 s.map.remove(&lru);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
         s.map.insert(key, CacheEntry { plans: Arc::clone(&built), stamp: now });
@@ -230,6 +294,15 @@ impl PlanCache {
 
     pub fn misses(&self) -> usize {
         self.misses.load(Ordering::Relaxed) as usize
+    }
+
+    /// Entries evicted by the per-shard LRU policy. Hits/misses alone
+    /// cannot distinguish a too-small cache from a cold one: a low hit
+    /// rate WITH evictions means capacity pressure (multi-layer jobs
+    /// multiply keys per request); without, the corpus simply never
+    /// repeats.
+    pub fn evictions(&self) -> usize {
+        self.evictions.load(Ordering::Relaxed) as usize
     }
 
     /// Cached plan sets right now.
@@ -254,10 +327,15 @@ pub struct CoordinatorMetrics {
     pub jobs_done: usize,
     /// Jobs rejected with [`JobResult::error`].
     pub jobs_failed: usize,
-    /// Total flow executions across all jobs (≥ `jobs_done`).
+    /// Total flow executions across all jobs (≥ `jobs_done`); a model
+    /// request counts once per flow, not once per layer.
     pub flow_runs: usize,
+    /// Total layers planned across all completed jobs.
+    pub layers_planned: usize,
     pub cache_hits: usize,
     pub cache_misses: usize,
+    /// Plan-cache LRU evictions (see [`PlanCache::evictions`]).
+    pub cache_evictions: usize,
     /// Peak jobs pending for stage 1: queued **plus** submitters blocked
     /// on backpressure, so this measures demand and may exceed the
     /// configured `queue_cap`.
@@ -286,6 +364,30 @@ impl CoordinatorMetrics {
         } else {
             self.cache_hits as f64 / total as f64
         }
+    }
+
+    /// Machine-readable final metrics block (`serve --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("jobs_submitted", Json::num(self.jobs_submitted as f64)),
+            ("jobs_done", Json::num(self.jobs_done as f64)),
+            ("jobs_failed", Json::num(self.jobs_failed as f64)),
+            ("flow_runs", Json::num(self.flow_runs as f64)),
+            ("layers_planned", Json::num(self.layers_planned as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("cache_misses", Json::num(self.cache_misses as f64)),
+            ("cache_evictions", Json::num(self.cache_evictions as f64)),
+            ("cache_hit_rate", Json::num(self.cache_hit_rate())),
+            ("plan_queue_peak", Json::num(self.plan_queue_peak as f64)),
+            ("exec_queue_peak", Json::num(self.exec_queue_peak as f64)),
+            ("wall_p50_ns", Json::num(self.wall_p50_ns)),
+            ("wall_p95_ns", Json::num(self.wall_p95_ns)),
+            ("wall_p99_ns", Json::num(self.wall_p99_ns)),
+            ("total_latency_ns", Json::num(self.total_latency_ns)),
+            ("total_energy_pj", Json::num(self.total_energy_pj)),
+            ("mean_throughput_gain", Json::num(self.mean_throughput_gain)),
+            ("mean_energy_gain", Json::num(self.mean_energy_gain)),
+        ])
     }
 }
 
@@ -317,6 +419,7 @@ struct Agg {
     done: usize,
     failed: usize,
     flow_runs: usize,
+    layers_planned: usize,
     total_latency_ns: f64,
     total_energy_pj: f64,
     thr_sum: f64,
@@ -338,12 +441,13 @@ fn record_and_send(shared: &Shared, res_tx: &Sender<JobResult>, r: JobResult) {
         agg.wall.record(r.wall_ns);
         if r.is_ok() {
             agg.done += 1;
+            agg.layers_planned += r.layers;
         } else {
             agg.failed += 1;
         }
         for fr in &r.flows {
             agg.flow_runs += 1;
-            agg.total_latency_ns += fr.report.latency_ns;
+            agg.total_latency_ns += fr.report.latency_ns();
             agg.total_energy_pj += fr.report.total_pj();
             agg.thr_sum += fr.throughput_gain;
             agg.en_sum += fr.energy_gain;
@@ -356,16 +460,19 @@ fn record_and_send(shared: &Shared, res_tx: &Sender<JobResult>, r: JobResult) {
 // Pipeline
 // ---------------------------------------------------------------------------
 
-/// Stage-1 → stage-2 handoff: everything execution needs, with the plans
-/// behind an `Arc` so cache hits share one allocation across jobs.
+/// Stage-1 → stage-2 handoff: everything execution needs, with each
+/// layer's plans behind an `Arc` so cache hits share one allocation
+/// across jobs (and across correlated layers of one job).
 struct PlannedJob {
     id: usize,
     model: String,
     dk: usize,
     flows: Vec<String>,
     substrate: String,
-    plans: Arc<PlanSet>,
-    cache_hit: bool,
+    /// Per-layer plan sets, in layer order.
+    plans: Vec<Arc<PlanSet>>,
+    /// Layers served from the plan cache.
+    cache_hits: usize,
     enqueued: Instant,
 }
 
@@ -491,9 +598,12 @@ impl Coordinator {
         }
     }
 
-    /// Submit a job; blocks when the intake queue is full (backpressure).
-    /// Returns the job back if the coordinator is closed or its workers
-    /// are gone — no panic.
+    /// Submit a job; blocks when the intake queue is full (backpressure —
+    /// a full queue is **not** an error and never returns `Err`).
+    /// Returns the job back (`Err(job)`) only when the coordinator is
+    /// closed or its workers are gone — no panic. Callers that must not
+    /// lose a request should use [`Coordinator::submit_with_retry`]
+    /// rather than dropping the returned job.
     pub fn submit(&self, job: Job) -> Result<(), Job> {
         // Clone the sender out so the (possibly blocking) send happens
         // without holding the lock `close()` needs.
@@ -510,6 +620,43 @@ impl Coordinator {
                 Err(e.0.job)
             }
         }
+    }
+
+    /// [`Coordinator::submit`] with a bounded retry/backoff loop: on
+    /// `Err(job)` the submission is retried up to `max_attempts` times
+    /// total, sleeping `backoff` (doubling each retry, capped at 100×)
+    /// between attempts. Returns the job only after the budget is
+    /// exhausted, so callers can surface the drop loudly instead of
+    /// silently losing the request (`serve` does exactly this).
+    ///
+    /// Note `Err` from `submit` means closed-or-dead, never full — a full
+    /// intake queue blocks inside `submit`, so backpressure needs no
+    /// retry. Today that rejection is permanent (there is no worker
+    /// restart path), so the budget mostly bounds how long a caller
+    /// stalls before reporting the drop; keep `max_attempts` small. The
+    /// loop is the submission contract for any future rejection mode
+    /// (load shedding, draining) that IS transient.
+    pub fn submit_with_retry(
+        &self,
+        job: Job,
+        max_attempts: usize,
+        backoff: std::time::Duration,
+    ) -> Result<(), Job> {
+        let mut job = job;
+        let mut wait = backoff;
+        for attempt in 1..=max_attempts.max(1) {
+            match self.submit(job) {
+                Ok(()) => return Ok(()),
+                Err(back) => {
+                    job = back;
+                    if attempt < max_attempts {
+                        std::thread::sleep(wait);
+                        wait = (wait * 2).min(backoff * 100);
+                    }
+                }
+            }
+        }
+        Err(job)
     }
 
     /// Close the intake: no further submissions; in-flight jobs keep
@@ -539,8 +686,10 @@ impl Coordinator {
             jobs_done: agg.done,
             jobs_failed: agg.failed,
             flow_runs: agg.flow_runs,
+            layers_planned: agg.layers_planned,
             cache_hits: self.cache.hits(),
             cache_misses: self.cache.misses(),
+            cache_evictions: self.cache.evictions(),
             plan_queue_peak: self.shared.plan_q.peak.load(Ordering::SeqCst),
             exec_queue_peak: self.shared.exec_q.peak.load(Ordering::SeqCst),
             wall_p50_ns: agg.wall.percentile(50.0),
@@ -598,7 +747,8 @@ impl Coordinator {
     }
 }
 
-/// Stage 1: validate, fingerprint, plan (through the cache), hand off.
+/// Stage 1: validate, fingerprint **per layer**, plan each layer through
+/// the cache, hand off.
 fn plan_worker(
     job_rx: &Mutex<Receiver<QueuedJob>>,
     plan_tx: &SyncSender<PlannedJob>,
@@ -631,12 +781,21 @@ fn plan_worker(
                 job.substrate,
                 substrate::substrate_names().join("|")
             ))
-        } else if job.trace.heads.is_empty() {
-            Some("trace has no heads".to_string())
+        } else if job.trace.layers.is_empty() {
+            Some("model trace has no layers".to_string())
+        } else if let Some((i, _)) = job
+            .trace
+            .layers
+            .iter()
+            .enumerate()
+            .find(|(_, l)| l.heads.is_empty())
+        {
+            Some(format!("layer {i} has no heads"))
         } else {
             None
         };
         if let Some(error) = error {
+            let layers = job.trace.layers.len();
             record_and_send(
                 shared,
                 res_tx,
@@ -644,8 +803,10 @@ fn plan_worker(
                     id: job.id,
                     model: job.trace.model,
                     substrate: job.substrate,
-                    dense: RunReport::default(),
+                    layers,
+                    dense: ModelReport::default(),
                     flows: Vec::new(),
+                    cache_hits: 0,
                     cache_hit: false,
                     wall_ns: enqueued.elapsed().as_nanos() as f64,
                     error: Some(error),
@@ -660,19 +821,31 @@ fn plan_worker(
             seed: sys.seed,
             ..Default::default()
         };
-        let key = PlanSet::fingerprint_for(&job.trace.heads, opts);
-        let (plans, cache_hit) =
-            cache.get_or_build(key, || PlanSet::build(&job.trace.heads, opts));
+        // Each layer keys the cache independently — layers of one request
+        // that re-select the previous layer's keys (high-rho workloads)
+        // hit the plans the previous layer just published.
+        let mut plans = Vec::with_capacity(job.trace.layers.len());
+        let mut cache_hits = 0usize;
+        for layer in &job.trace.layers {
+            let key = PlanSet::fingerprint_for(&layer.heads, opts);
+            let (p, hit) =
+                cache.get_or_build(key, || PlanSet::build(&layer.heads, opts));
+            if hit {
+                cache_hits += 1;
+            }
+            plans.push(p);
+        }
 
         shared.exec_q.enter();
+        let dk = job.trace.dk();
         let planned = PlannedJob {
             id: job.id,
             model: job.trace.model,
-            dk: job.trace.dk,
+            dk,
             flows: job.flows,
             substrate: job.substrate,
             plans,
-            cache_hit,
+            cache_hits,
             enqueued,
         };
         if plan_tx.send(planned).is_err() {
@@ -682,8 +855,9 @@ fn plan_worker(
     }
 }
 
-/// Stage 2: run the dense baseline + every requested flow from the shared
-/// plans on the job's substrate, stream the result.
+/// Stage 2: per layer, run the dense baseline + every requested flow from
+/// the shared plans on the job's substrate; fold the per-layer reports
+/// into [`ModelReport`]s and stream the result.
 fn exec_worker(
     plan_rx: &Mutex<Receiver<PlannedJob>>,
     res_tx: &Sender<JobResult>,
@@ -703,18 +877,24 @@ fn exec_worker(
         let sspec =
             substrate::by_name(&pj.substrate).expect("validated at plan stage");
         let sub = (sspec.build)(sys, pj.dk);
-        let dense = backend::DENSE.run_on(&pj.plans, &*sub);
+        // Execution stays layer-scoped (FlowBackend/Substrate simulate one
+        // layer's schedule); the request view is the fold of its layers.
+        let run_model = |b: &dyn FlowBackend| -> ModelReport {
+            ModelReport::fold(pj.plans.iter().map(|p| b.run_on(p, &*sub)).collect())
+        };
+        let dense = run_model(&backend::DENSE);
+        let layers = pj.plans.len();
         let flows: Vec<FlowRun> = pj
             .flows
             .iter()
             .map(|name| {
                 let b = backend::by_name(name).expect("validated at plan stage");
                 let report = if b.name() == "dense" {
-                    dense // already executed as the baseline
+                    dense.clone() // already executed as the baseline
                 } else {
-                    b.run_on(&pj.plans, &*sub)
+                    run_model(b)
                 };
-                let g = gains(&dense, &report);
+                let g = gains(&dense.total, &report.total);
                 FlowRun {
                     flow: b.name().to_string(),
                     report,
@@ -731,9 +911,11 @@ fn exec_worker(
                 id: pj.id,
                 model: pj.model,
                 substrate: sspec.name.to_string(),
+                layers,
                 dense,
                 flows,
-                cache_hit: pj.cache_hit,
+                cache_hits: pj.cache_hits,
+                cache_hit: pj.cache_hits == layers,
                 wall_ns: pj.enqueued.elapsed().as_nanos() as f64,
                 error: None,
             },
@@ -792,10 +974,11 @@ mod tests {
         assert_eq!(results.len(), 3);
         for r in &results {
             assert!(r.is_ok());
+            assert_eq!(r.layers, 1);
             let sata = &r.flows[0];
             assert_eq!(sata.flow, "sata");
-            assert!(sata.report.latency_ns > 0.0);
-            assert!(r.dense.latency_ns >= sata.report.latency_ns);
+            assert!(sata.report.latency_ns() > 0.0);
+            assert!(r.dense.latency_ns() >= sata.report.latency_ns());
         }
     }
 
@@ -820,7 +1003,7 @@ mod tests {
         assert_eq!(metrics.cache_misses, 1);
         for (fr, name) in r.flows.iter().zip(&names) {
             assert_eq!(&fr.flow, name);
-            assert!(fr.report.latency_ns > 0.0, "{name}");
+            assert!(fr.report.latency_ns() > 0.0, "{name}");
             assert!(fr.report.total_pj() > 0.0, "{name}");
         }
         // dense vs itself is exactly 1.0 on both axes
@@ -862,11 +1045,11 @@ mod tests {
         // Sec. IV-B shape: un-scheduled selective is stall-dominated,
         // SATA's sorted bursts beat it on the same array.
         assert!(sys_gated.report.stall_fraction() > sys_sata.report.stall_fraction());
-        assert!(sys_gated.report.latency_ns > sys_sata.report.latency_ns);
+        assert!(sys_gated.report.latency_ns() > sys_sata.report.latency_ns());
         // Substrates produce genuinely different timings for one trace.
         assert_ne!(
-            results[0].flows[1].report.latency_ns,
-            results[1].flows[0].report.latency_ns
+            results[0].flows[1].report.latency_ns(),
+            results[1].flows[0].report.latency_ns()
         );
     }
 
@@ -1012,6 +1195,159 @@ mod tests {
         assert_eq!(metrics.jobs_done, 0);
         assert_eq!(metrics.cache_hit_rate(), 0.0);
         assert_eq!(metrics.wall_p50_ns, 0.0);
+    }
+
+    #[test]
+    fn multi_layer_job_hits_the_cache_across_correlated_layers() {
+        use crate::trace::synth::gen_model;
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::with_config(
+            sys,
+            CoordinatorConfig { plan_workers: 1, exec_workers: 1, ..Default::default() },
+        );
+        // rho = 1: all 4 layers identical → layer 0 misses, layers 1..3
+        // hit the plans layer 0 just published — within ONE request.
+        coord
+            .submit(Job::new(0, gen_model(&spec, 4, 1.0, 5), spec.sf))
+            .unwrap();
+        // rho = 0: four independent layers → four cold plans.
+        coord
+            .submit(Job::new(1, gen_model(&spec, 4, 0.0, 6), spec.sf))
+            .unwrap();
+        let (results, metrics) = coord.drain();
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|r| r.is_ok()));
+        assert_eq!(results[0].layers, 4);
+        assert_eq!(results[0].cache_hits, 3);
+        assert!(!results[0].cache_hit, "layer 0 was a miss");
+        assert_eq!(results[1].cache_hits, 0);
+        assert_eq!(metrics.cache_hits, 3);
+        assert_eq!(metrics.cache_misses, 5);
+        assert_eq!(metrics.layers_planned, 8);
+        // The correlated request's reports fold 4 identical layers: every
+        // layer report equals the first, and totals are 4× one layer.
+        let r = &results[0];
+        assert_eq!(r.dense.n_layers(), 4);
+        assert!(r.dense.layers.iter().all(|l| *l == r.dense.layers[0]));
+        assert!(
+            (r.dense.latency_ns() - 4.0 * r.dense.layers[0].latency_ns).abs()
+                < 1e-6 * r.dense.latency_ns()
+        );
+    }
+
+    #[test]
+    fn eviction_counter_distinguishes_small_cache_from_cold_corpus() {
+        let spec = WorkloadSpec::ttst();
+        let traces = gen_traces(&spec, 3, 8);
+        let opts = EngineOpts::default();
+        let keys: Vec<u64> =
+            traces.iter().map(|t| PlanSet::fingerprint_for(&t.heads, opts)).collect();
+        let build = |i: usize| PlanSet::build(&traces[i].heads, opts);
+
+        // Cold-but-large cache: distinct keys, no evictions.
+        let large = PlanCache::new(16, 1);
+        for (i, &k) in keys.iter().enumerate() {
+            large.get_or_build(k, || build(i));
+        }
+        assert_eq!(large.evictions(), 0);
+        assert_eq!(large.misses(), 3);
+
+        // Too-small cache: same misses, but the counter shows pressure.
+        let small = PlanCache::new(1, 1);
+        for (i, &k) in keys.iter().enumerate() {
+            small.get_or_build(k, || build(i));
+        }
+        assert_eq!(small.misses(), 3);
+        assert_eq!(small.evictions(), 2);
+
+        // The coordinator surfaces it in the metrics snapshot.
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::with_config(
+            sys,
+            CoordinatorConfig {
+                plan_workers: 1,
+                exec_workers: 1,
+                cache_capacity: 1,
+                cache_shards: 1,
+                ..Default::default()
+            },
+        );
+        for (id, t) in gen_traces(&spec, 4, 9).into_iter().enumerate() {
+            coord.submit(Job::new(id, t, spec.sf)).unwrap();
+        }
+        let (_, metrics) = coord.drain();
+        assert_eq!(metrics.cache_misses, 4);
+        assert!(metrics.cache_evictions >= 3, "{}", metrics.cache_evictions);
+    }
+
+    #[test]
+    fn submit_with_retry_bounds_attempts_and_returns_the_job() {
+        let coord = Coordinator::new(1, 2, SystemConfig::default());
+        let spec = WorkloadSpec::ttst();
+        let trace = gen_traces(&spec, 1, 1).pop().unwrap();
+
+        // Open coordinator: first attempt succeeds.
+        coord
+            .submit_with_retry(
+                Job::new(0, trace.clone(), None),
+                3,
+                std::time::Duration::from_micros(50),
+            )
+            .unwrap();
+
+        coord.close();
+        // Closed coordinator: the bounded budget exhausts and the job
+        // comes back instead of being silently dropped.
+        let t0 = Instant::now();
+        let back = coord
+            .submit_with_retry(
+                Job::new(7, trace, None),
+                3,
+                std::time::Duration::from_micros(50),
+            )
+            .unwrap_err();
+        assert_eq!(back.id, 7);
+        assert!(t0.elapsed().as_millis() < 500, "backoff must stay bounded");
+        let m = coord.finish();
+        assert_eq!(m.jobs_done, 1);
+    }
+
+    #[test]
+    fn job_result_and_metrics_emit_valid_json() {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::new(1, 2, sys);
+        let trace = gen_traces(&spec, 1, 4).pop().unwrap();
+        coord.submit(Job::new(0, trace, spec.sf)).unwrap();
+        coord
+            .submit(Job::with_flows(1, gen_traces(&spec, 1, 5).pop().unwrap(), None, vec!["bogus".into()]))
+            .unwrap();
+        let (results, metrics) = coord.drain();
+        for r in &results {
+            let j = r.to_json();
+            let text = j.emit();
+            let back = crate::util::json::Json::parse(&text).unwrap();
+            assert_eq!(back.get("id").as_usize(), Some(r.id));
+            assert_eq!(back.get("layers").as_usize(), Some(r.layers));
+            match &r.error {
+                Some(e) => assert_eq!(back.get("error").as_str(), Some(e.as_str())),
+                None => {
+                    assert_eq!(*back.get("error"), crate::util::json::Json::Null);
+                    assert_eq!(
+                        back.get("flows").as_arr().unwrap().len(),
+                        r.flows.len()
+                    );
+                    assert!(back.get("dense").get("latency_ns").as_f64().unwrap() > 0.0);
+                }
+            }
+        }
+        let mj = metrics.to_json();
+        let back = crate::util::json::Json::parse(&mj.emit()).unwrap();
+        assert_eq!(back.get("jobs_done").as_usize(), Some(1));
+        assert_eq!(back.get("jobs_failed").as_usize(), Some(1));
+        assert_eq!(back.get("cache_evictions").as_usize(), Some(0));
+        assert!(back.get("cache_hit_rate").as_f64().is_some());
     }
 
     #[test]

@@ -20,6 +20,9 @@
 //!   the integration study (Fig. 4c)
 //! * [`trace`]     - selective-mask traces: synthetic generator calibrated
 //!   to Table I plus loaders for model-emitted masks
+//! * [`model`]     - model-level requests: multi-layer [`model::ModelTrace`]s
+//!   (the coordinator's unit of work), per-request report folding
+//!   (`model::report`), and the cross-layer-locality synth knob `rho`
 //! * [`config`]    - workload + system configuration (JSON)
 //! * [`coordinator`] - the Layer-3 runtime: pipelined plan/execute worker
 //!   stages, fingerprint-keyed plan cache, streaming results, backpressure,
@@ -37,6 +40,7 @@ pub mod engine;
 pub mod hw;
 pub mod mask;
 pub mod metrics;
+pub mod model;
 pub mod runtime;
 pub mod schedule;
 pub mod trace;

@@ -4,13 +4,14 @@
 //!
 //! ```text
 //! sata trace-gen  --workload <name> --count <n> --seed <s> --out <dir>
+//!                 [--layers <L>] [--rho <r>]          # L>1 → model files
 //! sata schedule   --workload <name> [--seed <s>]      # Table-I stats
 //! sata simulate   --workload <name> [--traces <n>] [--flow <name>]
-//!                 [--substrate cim|systolic]
+//!                 [--substrate cim|systolic] [--layers <L>] [--rho <r>]
 //! sata flows                                          # flows + substrates
 //! sata serve      --workload <name> --jobs <n> --workers <w>
 //!                 [--flows a,b,c] [--substrate <name>] [--repeat <r>]
-//!                 [--traces-dir <dir>]
+//!                 [--traces-dir <dir>] [--layers <L>] [--rho <r>] [--json]
 //! sata e2e        [--artifacts <dir>]                 # PJRT end-to-end
 //! ```
 //!
@@ -19,10 +20,20 @@
 //! `spatten+sata`, `energon+sata`, `elsa+sata`); `--substrate` resolves
 //! through the [`substrate`] registry (`cim` default, `systolic` for the
 //! Sec. IV-B array) — any flow runs on any substrate from the same plans
-//! and schedule. `serve` streams results through the pipelined coordinator
-//! and reports plan-cache hit rate plus p50/p95/p99 wall latency;
-//! `--repeat` resubmits the trace set to exercise the cache,
-//! `--traces-dir` streams trace files from disk.
+//! and schedule.
+//!
+//! The unit of work is a **model request** (`model::ModelTrace`):
+//! `--layers L` makes the synthetic sources generate L-layer requests and
+//! `--rho` dials their cross-layer selection overlap (0 = independent
+//! TopK per layer, 1 = each layer re-selects the previous layer's keys);
+//! bare single-layer trace files keep working everywhere as 1-layer
+//! requests, and `--traces-dir` serves directories mixing both file
+//! shapes. `serve` streams results through the pipelined coordinator and
+//! reports plan-cache hit rate (layers are cached individually, so
+//! correlated layers hit), evictions, and p50/p95/p99 wall latency;
+//! `--repeat` resubmits the trace set to exercise the cache, `--json`
+//! switches per-job lines and the final metrics block to machine-readable
+//! JSON.
 
 use std::collections::HashMap;
 
@@ -32,9 +43,13 @@ use sata::engine::backend::{self, FlowBackend, PlanSet};
 use sata::engine::{gains, run_dense, run_sata, substrate, EngineOpts};
 use sata::hw::cim::CimConfig;
 use sata::hw::sched_rtl::SchedRtl;
-use sata::metrics::{render_flow_comparison_on, render_report, schedule_stats};
-use sata::trace::synth::{gen_trace, gen_traces};
-use sata::trace::{MaskTrace, TraceDir};
+use sata::metrics::{
+    render_flow_comparison_on, render_model_rollup, render_report, schedule_stats,
+};
+use sata::model::report::ModelReport;
+use sata::model::ModelTrace;
+use sata::trace::synth::{gen_models, gen_trace, gen_traces};
+use sata::trace::TraceDir;
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut m = HashMap::new();
@@ -137,6 +152,10 @@ fn usize_flag(flags: &HashMap<String, String>, key: &str, default: usize) -> usi
     flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+fn f64_flag(flags: &HashMap<String, String>, key: &str, default: f64) -> f64 {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
@@ -147,12 +166,25 @@ fn main() {
         "trace-gen" => {
             let spec = workload(&flags);
             let count = usize_flag(&flags, "count", 8);
+            let layers = usize_flag(&flags, "layers", 1);
+            let rho = f64_flag(&flags, "rho", 0.0);
             let out = flags.get("out").cloned().unwrap_or_else(|| "traces".into());
             std::fs::create_dir_all(&out).expect("mkdir");
-            for (i, t) in gen_traces(&spec, count, seed).iter().enumerate() {
-                let path = format!("{out}/{}_{i:04}.json", spec.name.to_lowercase());
-                t.save(std::path::Path::new(&path)).expect("write trace");
-                println!("wrote {path}");
+            if layers > 1 {
+                for (i, m) in gen_models(&spec, count, layers, rho, seed).iter().enumerate() {
+                    let path = format!(
+                        "{out}/{}_model_{i:04}.json",
+                        spec.name.to_lowercase()
+                    );
+                    m.save(std::path::Path::new(&path)).expect("write model trace");
+                    println!("wrote {path} ({layers} layers, rho {rho})");
+                }
+            } else {
+                for (i, t) in gen_traces(&spec, count, seed).iter().enumerate() {
+                    let path = format!("{out}/{}_{i:04}.json", spec.name.to_lowercase());
+                    t.save(std::path::Path::new(&path)).expect("write trace");
+                    println!("wrote {path}");
+                }
             }
         }
         "schedule" => {
@@ -186,36 +218,76 @@ fn main() {
             let sys = SystemConfig::for_workload(&spec);
             let sub = (sspec.build)(&sys, spec.dk);
             let n_traces = usize_flag(&flags, "traces", 4);
+            let layers = usize_flag(&flags, "layers", 1);
+            let rho = f64_flag(&flags, "rho", 0.0);
             let opts = EngineOpts { sf: spec.sf, ..Default::default() };
             let mut thr = 0.0;
             let mut en = 0.0;
-            for (i, t) in gen_traces(&spec, n_traces, seed).iter().enumerate() {
-                // Algo 1 once per trace; baseline + flow share the plans,
-                // and the substrate executes both schedules.
-                let plans = PlanSet::build(&t.heads, opts);
-                let dense = backend::DENSE.run_on(&plans, &*sub);
-                let rep = b.run_on(&plans, &*sub);
-                let g = gains(&dense, &rep);
-                thr += g.throughput;
-                en += g.energy_eff;
-                if i == 0 {
-                    print!(
-                        "{}",
-                        render_flow_comparison_on(
-                            sspec.name,
-                            &[("dense", &dense), (b.name(), &rep)]
-                        )
+            if layers > 1 {
+                // Model requests: plan each layer once, run baseline +
+                // flow per layer, fold into request-scoped reports.
+                for (i, m) in gen_models(&spec, n_traces, layers, rho, seed)
+                    .iter()
+                    .enumerate()
+                {
+                    let plan_sets: Vec<PlanSet> =
+                        m.layers.iter().map(|l| PlanSet::build(&l.heads, opts)).collect();
+                    let dense = ModelReport::fold(
+                        plan_sets.iter().map(|p| backend::DENSE.run_on(p, &*sub)).collect(),
                     );
+                    let rep = ModelReport::fold(
+                        plan_sets.iter().map(|p| b.run_on(p, &*sub)).collect(),
+                    );
+                    let g = gains(&dense.total, &rep.total);
+                    thr += g.throughput;
+                    en += g.energy_eff;
+                    if i == 0 {
+                        print!(
+                            "{}",
+                            render_model_rollup(
+                                sspec.name,
+                                &[("dense", &dense), (b.name(), &rep)]
+                            )
+                        );
+                    }
                 }
+                println!(
+                    "{} [{}@{}]: mean end-to-end throughput gain {:.2}x, energy-efficiency gain {:.2}x over {n_traces} {layers}-layer requests (rho {rho}) vs dense",
+                    spec.name,
+                    b.name(),
+                    sspec.name,
+                    thr / n_traces as f64,
+                    en / n_traces as f64
+                );
+            } else {
+                for (i, t) in gen_traces(&spec, n_traces, seed).iter().enumerate() {
+                    // Algo 1 once per trace; baseline + flow share the plans,
+                    // and the substrate executes both schedules.
+                    let plans = PlanSet::build(&t.heads, opts);
+                    let dense = backend::DENSE.run_on(&plans, &*sub);
+                    let rep = b.run_on(&plans, &*sub);
+                    let g = gains(&dense, &rep);
+                    thr += g.throughput;
+                    en += g.energy_eff;
+                    if i == 0 {
+                        print!(
+                            "{}",
+                            render_flow_comparison_on(
+                                sspec.name,
+                                &[("dense", &dense), (b.name(), &rep)]
+                            )
+                        );
+                    }
+                }
+                println!(
+                    "{} [{}@{}]: mean throughput gain {:.2}x, mean energy-efficiency gain {:.2}x over {n_traces} traces vs dense",
+                    spec.name,
+                    b.name(),
+                    sspec.name,
+                    thr / n_traces as f64,
+                    en / n_traces as f64
+                );
             }
-            println!(
-                "{} [{}@{}]: mean throughput gain {:.2}x, mean energy-efficiency gain {:.2}x over {n_traces} traces vs dense",
-                spec.name,
-                b.name(),
-                sspec.name,
-                thr / n_traces as f64,
-                en / n_traces as f64
-            );
         }
         "serve" => {
             let spec = workload(&flags);
@@ -224,17 +296,22 @@ fn main() {
             let jobs = usize_flag(&flags, "jobs", 16);
             let workers = usize_flag(&flags, "workers", 2);
             let repeat = usize_flag(&flags, "repeat", 1).max(1);
+            let layers = usize_flag(&flags, "layers", 1);
+            let rho = f64_flag(&flags, "rho", 0.0);
+            let json_out = flags.contains_key("json");
             let sys = SystemConfig::for_workload(&spec);
             let coord = Coordinator::new(workers, 8, sys);
             let t0 = std::time::Instant::now();
 
-            // Trace source: `--traces-dir` streams files lazily (one
+            // Request source: `--traces-dir` streams files lazily (one
             // resident at a time) when submitted once; with `--repeat` the
             // set is held in memory so repeated fingerprints hit the plan
-            // cache. No dir → Table-I synthetics.
+            // cache. The directory may mix bare single-layer traces and
+            // model files. No dir → Table-I synthetics (`--layers`/`--rho`
+            // shape them into multi-layer requests).
             enum Source {
                 Dir(TraceDir),
-                Mem(Vec<MaskTrace>),
+                Mem(Vec<ModelTrace>),
             }
             let source = match flags.get("traces-dir") {
                 Some(dir) => {
@@ -260,21 +337,41 @@ fn main() {
                         )
                     }
                 }
-                None => Source::Mem(gen_traces(&spec, jobs, seed)),
+                None if layers > 1 => {
+                    Source::Mem(gen_models(&spec, jobs, layers, rho, seed))
+                }
+                None => Source::Mem(
+                    gen_traces(&spec, jobs, seed).into_iter().map(ModelTrace::from).collect(),
+                ),
             };
 
             // Submit from a side thread (closing the intake when done) and
             // consume the result stream here: results print as execute
             // workers finish them — there is no drain barrier between
-            // submission and reporting.
+            // submission and reporting. A rejected submission is retried
+            // with bounded backoff and reported loudly if it is finally
+            // dropped — never lost in silence.
             std::thread::scope(|s| {
                 s.spawn(|| {
                     let mut id = 0;
-                    let mut submit = |trace: MaskTrace| {
+                    let mut submit = |trace: ModelTrace| {
                         let job = Job::with_flows(id, trace, spec.sf, flows.clone())
                             .on_substrate(sspec.name);
                         id += 1;
-                        coord.submit(job).is_ok()
+                        match coord.submit_with_retry(
+                            job,
+                            4,
+                            std::time::Duration::from_millis(1),
+                        ) {
+                            Ok(()) => true,
+                            Err(job) => {
+                                eprintln!(
+                                    "DROPPED job {} after 4 attempts: coordinator unavailable",
+                                    job.id
+                                );
+                                false
+                            }
+                        }
                     };
                     match source {
                         Source::Dir(src) => {
@@ -304,6 +401,10 @@ fn main() {
                     coord.close(); // ends the results stream below
                 });
                 for r in coord.results() {
+                    if json_out {
+                        println!("{}", r.to_json().emit());
+                        continue;
+                    }
                     match &r.error {
                         Some(e) => println!("job {:>4} {}: ERROR {e}", r.id, r.model),
                         None => {
@@ -318,11 +419,13 @@ fn main() {
                                 })
                                 .collect();
                             println!(
-                                "job {:>4} {} [{} {}] {} wall {:.2} ms",
+                                "job {:>4} {} [{} {}L {}/{} hit] {} wall {:.2} ms",
                                 r.id,
                                 r.model,
                                 r.substrate,
-                                if r.cache_hit { "hit " } else { "miss" },
+                                r.layers,
+                                r.cache_hits,
+                                r.layers,
                                 per_flow.join(" | "),
                                 r.wall_ns / 1e6,
                             );
@@ -331,10 +434,18 @@ fn main() {
                 }
             });
             let metrics = coord.finish();
+            if json_out {
+                // One final machine-readable metrics block (util::json) so
+                // bench trajectories can be captured without scraping the
+                // human-format output.
+                println!("{}", metrics.to_json().emit());
+                return;
+            }
             println!(
-                "served {} jobs ({} failed) x {} flows on {} in {:.1} ms wall ({}+{} workers)",
+                "served {} jobs ({} failed, {} layers) x {} flows on {} in {:.1} ms wall ({}+{} workers)",
                 metrics.jobs_done,
                 metrics.jobs_failed,
+                metrics.layers_planned,
                 flows.len(),
                 sspec.name,
                 t0.elapsed().as_secs_f64() * 1e3,
@@ -342,10 +453,11 @@ fn main() {
                 workers,
             );
             println!(
-                "plan cache: {:.1}% hit rate ({} hits / {} lookups); queue peaks plan {} exec {}",
+                "plan cache: {:.1}% hit rate ({} hits / {} lookups, {} evictions); queue peaks plan {} exec {}",
                 100.0 * metrics.cache_hit_rate(),
                 metrics.cache_hits,
                 metrics.cache_hits + metrics.cache_misses,
+                metrics.cache_evictions,
                 metrics.plan_queue_peak,
                 metrics.exec_queue_peak,
             );
@@ -420,8 +532,12 @@ fn main() {
                  usage: sata <trace-gen|schedule|simulate|flows|serve|e2e> \
                  [--workload ttst|kvt-tiny|kvt-base|drsformer] [--flow {}] \
                  [--substrate {}] [--seed N] …\n\
+                 model requests: [--layers L] [--rho R] shape synthetic \
+                 multi-layer requests (rho = cross-layer selection overlap \
+                 in [0,1]); single-layer trace files still load as 1-layer \
+                 requests\n\
                  serve: [--flows a,b,c] [--repeat N] [--traces-dir DIR] \
-                 [--jobs N] [--workers N]",
+                 [--jobs N] [--workers N] [--json]",
                 backend::flow_names().join("|"),
                 substrate::substrate_names().join("|")
             );

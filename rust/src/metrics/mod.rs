@@ -165,6 +165,43 @@ pub fn render_flow_comparison_on(substrate: &str, rows: &[(&str, &RunReport)]) -
     format!("substrate: {substrate}\n{}", render_flow_comparison(rows))
 }
 
+/// Model-level rollup of [`render_flow_comparison_on`]: one row per flow
+/// over a full multi-layer request, with end-to-end totals, gains vs the
+/// first (baseline) row, and each flow's critical layer — the
+/// `simulate --layers` output path.
+pub fn render_model_rollup(
+    substrate: &str,
+    rows: &[(&str, &crate::model::report::ModelReport)],
+) -> String {
+    let mut s = String::new();
+    let Some(((base_name, base), _)) = rows.split_first() else {
+        return s;
+    };
+    s.push_str(&format!(
+        "model rollup [{substrate}] — {} layers, gains vs {base_name}\n",
+        base.n_layers()
+    ));
+    s.push_str(&format!(
+        "{:<14} {:>12} {:>12} {:>8} {:>8}   {}\n",
+        "flow", "latency µs", "energy nJ", "thr", "energy", "critical layer"
+    ));
+    for (name, r) in rows {
+        let g = crate::engine::gains(&base.total, &r.total);
+        let crit = r.critical_layer().unwrap_or(0);
+        s.push_str(&format!(
+            "{:<14} {:>12.3} {:>12.3} {:>7.2}x {:>7.2}x   L{} ({:.1}% of latency)\n",
+            name,
+            r.total.latency_ns / 1e3,
+            r.total.total_pj() / 1e3,
+            g.throughput,
+            g.energy_eff,
+            crit,
+            100.0 * r.critical_fraction(),
+        ));
+    }
+    s
+}
+
 /// Pretty-print an engine report (CLI + examples).
 pub fn render_report(name: &str, r: &RunReport) -> String {
     format!(
@@ -241,6 +278,23 @@ mod tests {
             render_flow_comparison_on("systolic", &[("gated", &base), ("sata", &fast)]);
         assert!(out.starts_with("substrate: systolic\n"), "{out}");
         assert!(out.contains("vs gated: thr 4.00x"));
+    }
+
+    #[test]
+    fn model_rollup_renders_totals_gains_and_critical_layer() {
+        use crate::model::report::ModelReport;
+        let slow = RunReport { latency_ns: 3000.0, mac_pj: 100.0, ..Default::default() };
+        let fast = RunReport { latency_ns: 1000.0, mac_pj: 50.0, ..Default::default() };
+        let dense = ModelReport::fold(vec![slow, slow]);
+        let sata = ModelReport::fold(vec![fast, slow]);
+        let out = render_model_rollup("cim", &[("dense", &dense), ("sata", &sata)]);
+        assert!(out.starts_with("model rollup [cim] — 2 layers"), "{out}");
+        assert!(out.contains("dense"), "{out}");
+        // sata total 4000 vs dense 6000 → 1.50x throughput
+        assert!(out.contains("1.50x"), "{out}");
+        // sata's critical layer is L1 at 75% of its latency
+        assert!(out.contains("L1 (75.0% of latency)"), "{out}");
+        assert!(render_model_rollup("cim", &[]).is_empty());
     }
 
     #[test]

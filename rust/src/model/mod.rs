@@ -1,0 +1,288 @@
+//! Model-level requests: the multi-layer unit of work.
+//!
+//! SATA's traces come from real selective-attention models whose token
+//! selections are strongly correlated across consecutive layers — the
+//! locality the paper exploits *within* a head (and that SpAtten's cascade
+//! pruning exploits *between* layers) also exists between layers of one
+//! inference. A production service therefore schedules **requests**, not
+//! single layers: a [`ModelTrace`] is one inference's full stack of
+//! per-layer [`MaskTrace`]s, and the coordinator plans each layer through
+//! the fingerprint-keyed plan cache — correlated layers produce real
+//! cross-layer cache hits (see `trace::synth::gen_model`'s `rho` knob and
+//! `benches/model_serve.rs`).
+//!
+//! On-disk format: either a model file (`{"model", "seq_len", "layers":
+//! [<MaskTrace>, …]}`) or a bare [`MaskTrace`] file, which parses as a
+//! 1-layer model — every existing trace corpus keeps working, and
+//! `serve --traces-dir` serves mixed directories.
+
+pub mod report;
+
+use crate::trace::MaskTrace;
+use crate::util::json::Json;
+use crate::util::rng::mix64;
+
+/// One full model request: the per-layer selective-mask traces of a single
+/// multi-layer inference, in layer order.
+#[derive(Clone, Debug)]
+pub struct ModelTrace {
+    pub model: String,
+    /// Sequence length N — uniform across layers (validated on load).
+    pub seq_len: usize,
+    pub layers: Vec<MaskTrace>,
+}
+
+impl From<MaskTrace> for ModelTrace {
+    /// A single-layer trace is a 1-layer model request — the compatibility
+    /// bridge every pre-model call site rides ([`crate::coordinator::Job`]
+    /// constructors take `impl Into<ModelTrace>`).
+    fn from(t: MaskTrace) -> Self {
+        ModelTrace { model: t.model.clone(), seq_len: t.n, layers: vec![t] }
+    }
+}
+
+impl ModelTrace {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Embedding dim D_k (taken from the first layer; informational).
+    pub fn dk(&self) -> usize {
+        self.layers.first().map(|l| l.dk).unwrap_or(0)
+    }
+
+    /// 64-bit content fingerprint: chained [`mix64`] over the per-layer
+    /// [`MaskTrace::fingerprint`]s, so it is position-sensitive (swapping
+    /// two distinct layers changes it). Note the plan cache does NOT key
+    /// on this — it keys per layer, which is exactly what lets correlated
+    /// layers of one request hit each other's plans.
+    pub fn fingerprint(&self) -> u64 {
+        self.layers.iter().fold(0u64, |h, l| mix64(h ^ l.fingerprint()))
+    }
+
+    /// Mean fraction of a query's selected keys already selected by the
+    /// same query in the previous layer, over all consecutive layer pairs,
+    /// heads, and queries — the measured counterpart of the generator's
+    /// `rho` knob (`trace::synth::gen_model`). 0.0 for models with fewer
+    /// than two layers.
+    pub fn inter_layer_overlap(&self) -> f64 {
+        let mut acc = 0.0;
+        let mut rows = 0usize;
+        for w in self.layers.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            for (ha, hb) in a.heads.iter().zip(&b.heads) {
+                for q in 0..ha.n().min(hb.n()) {
+                    let inter: usize = ha
+                        .row_words(q)
+                        .iter()
+                        .zip(hb.row_words(q))
+                        .map(|(x, y)| (x & y).count_ones() as usize)
+                        .sum();
+                    acc += inter as f64 / hb.row_popcount(q).max(1) as f64;
+                    rows += 1;
+                }
+            }
+        }
+        if rows == 0 {
+            0.0
+        } else {
+            acc / rows as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("seq_len", Json::num(self.seq_len as f64)),
+            ("layers", Json::Arr(self.layers.iter().map(|l| l.to_json()).collect())),
+        ])
+    }
+
+    /// Total parse: any structurally-valid JSON yields `Ok` or a
+    /// descriptive per-file `Err` — never a panic (the hostile-input
+    /// discipline of [`MaskTrace::from_json`], which handles each layer).
+    /// A bare `MaskTrace` object (no `"layers"` key) parses as a 1-layer
+    /// model, so every pre-model trace file keeps loading.
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let Some(layers_j) = j.get("layers").as_arr() else {
+            return MaskTrace::from_json(j).map(ModelTrace::from);
+        };
+        if layers_j.is_empty() {
+            return Err("model trace with no layers".into());
+        }
+        let mut layers = Vec::with_capacity(layers_j.len());
+        for (i, lj) in layers_j.iter().enumerate() {
+            let l = MaskTrace::from_json(lj).map_err(|e| format!("layer {i}: {e}"))?;
+            layers.push(l);
+        }
+        let n = layers[0].n;
+        if let Some((i, l)) = layers.iter().enumerate().find(|(_, l)| l.n != n) {
+            return Err(format!("layer {i} has n = {}, expected {n} (uniform)", l.n));
+        }
+        // dk must also be uniform: the coordinator sizes one substrate per
+        // request from the first layer's dk, so a mixed-dk file would be
+        // silently simulated with the wrong geometry.
+        let dk = layers[0].dk;
+        if let Some((i, l)) = layers.iter().enumerate().find(|(_, l)| l.dk != dk) {
+            return Err(format!("layer {i} has dk = {}, expected {dk} (uniform)", l.dk));
+        }
+        if let Some(sl) = j.get("seq_len").as_usize() {
+            if sl != n {
+                return Err(format!("seq_len {sl} does not match layer n = {n}"));
+            }
+        }
+        let model = j
+            .get("model")
+            .as_str()
+            .unwrap_or(&layers[0].model)
+            .to_string();
+        Ok(ModelTrace { model, seq_len: n, layers })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().emit())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::SelectiveMask;
+    use crate::util::rng::Rng;
+
+    fn layer(seed: u64, n: usize) -> MaskTrace {
+        let mut rng = Rng::new(seed);
+        MaskTrace {
+            model: "test".into(),
+            n,
+            dk: 64,
+            topk: 4,
+            heads: (0..2).map(|_| SelectiveMask::random_topk(n, 4, &mut rng)).collect(),
+        }
+    }
+
+    fn sample_model() -> ModelTrace {
+        ModelTrace {
+            model: "test".into(),
+            seq_len: 16,
+            layers: (0..3).map(|i| layer(i, 16)).collect(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_layers() {
+        let m = sample_model();
+        let back = ModelTrace::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.model, "test");
+        assert_eq!(back.seq_len, 16);
+        assert_eq!(back.n_layers(), 3);
+        for (a, b) in m.layers.iter().zip(&back.layers) {
+            assert_eq!(a.heads, b.heads);
+        }
+        assert_eq!(m.fingerprint(), back.fingerprint());
+    }
+
+    #[test]
+    fn bare_mask_trace_parses_as_one_layer_model() {
+        let t = layer(7, 12);
+        let m = ModelTrace::from_json(&t.to_json()).unwrap();
+        assert_eq!(m.n_layers(), 1);
+        assert_eq!(m.seq_len, 12);
+        assert_eq!(m.model, "test");
+        assert_eq!(m.layers[0].heads, t.heads);
+        // The From impl matches the parse path.
+        let via_from = ModelTrace::from(t);
+        assert_eq!(via_from.fingerprint(), m.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_is_layer_order_sensitive() {
+        let m = sample_model();
+        let mut swapped = m.clone();
+        swapped.layers.swap(0, 2);
+        assert_ne!(m.fingerprint(), swapped.fingerprint());
+        // And a 1-layer model does not collide with its own layer count
+        // extension (chained mixing, not XOR folding).
+        let mut extended = m.clone();
+        extended.layers.push(m.layers[0].clone());
+        assert_ne!(m.fingerprint(), extended.fingerprint());
+    }
+
+    #[test]
+    fn from_json_rejects_hostile_model_files() {
+        let empty = Json::parse(r#"{"layers": []}"#).unwrap();
+        assert!(ModelTrace::from_json(&empty).unwrap_err().contains("no layers"));
+
+        // A bad layer is named in the error, not a panic.
+        let bad_layer = Json::parse(
+            r#"{"layers": [{"n": 4, "heads": [[[0],[1],[2],[3]]]},
+                           {"n": 4, "heads": [[[9999],[0],[1],[2]]]}]}"#,
+        )
+        .unwrap();
+        let e = ModelTrace::from_json(&bad_layer).unwrap_err();
+        assert!(e.contains("layer 1"), "{e}");
+        assert!(e.contains("out of range"), "{e}");
+
+        // Mixed sequence lengths across layers are rejected.
+        let mixed = Json::parse(
+            r#"{"layers": [{"n": 4, "heads": [[[0],[1],[2],[3]]]},
+                           {"n": 2, "heads": [[[0],[1]]]}]}"#,
+        )
+        .unwrap();
+        assert!(ModelTrace::from_json(&mixed).unwrap_err().contains("uniform"));
+
+        // Mixed dk is rejected too: the coordinator sizes one substrate
+        // per request from layer 0's dk.
+        let mixed_dk = Json::parse(
+            r#"{"layers": [{"n": 2, "dk": 64, "heads": [[[0],[1]]]},
+                           {"n": 2, "dk": 128, "heads": [[[0],[1]]]}]}"#,
+        )
+        .unwrap();
+        let e = ModelTrace::from_json(&mixed_dk).unwrap_err();
+        assert!(e.contains("dk") && e.contains("uniform"), "{e}");
+
+        // A stated seq_len must agree with the layers.
+        let lying = Json::parse(
+            r#"{"seq_len": 9, "layers": [{"n": 4, "heads": [[[0],[1],[2],[3]]]}]}"#,
+        )
+        .unwrap();
+        assert!(ModelTrace::from_json(&lying).unwrap_err().contains("seq_len"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let m = sample_model();
+        let dir = std::env::temp_dir().join("sata_model_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.json");
+        m.save(&path).unwrap();
+        let back = ModelTrace::load(&path).unwrap();
+        assert_eq!(back.n_layers(), 3);
+        assert_eq!(back.fingerprint(), m.fingerprint());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn inter_layer_overlap_bounds() {
+        // Identical consecutive layers overlap fully; a 1-layer model has
+        // no transitions.
+        let l = layer(3, 16);
+        let same = ModelTrace {
+            model: "x".into(),
+            seq_len: 16,
+            layers: vec![l.clone(), l.clone()],
+        };
+        assert!((same.inter_layer_overlap() - 1.0).abs() < 1e-12);
+        let single = ModelTrace::from(l);
+        assert_eq!(single.inter_layer_overlap(), 0.0);
+        let m = sample_model();
+        let o = m.inter_layer_overlap();
+        assert!((0.0..=1.0).contains(&o), "{o}");
+    }
+}

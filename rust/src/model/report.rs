@@ -1,0 +1,189 @@
+//! Model-level run reports: per-layer [`RunReport`]s folded into one
+//! request-scoped view.
+//!
+//! Execution stays layer-scoped by design — `FlowBackend` and `Substrate`
+//! simulate one layer's schedule — so a model request's report is the fold
+//! of its layers: end-to-end latency/energy are sums, per-layer entries
+//! are kept for breakdowns, and the **critical layer** (largest latency
+//! share) is identified for the rollup table
+//! (`metrics::render_model_rollup`) and the `serve --json` output.
+
+use crate::engine::RunReport;
+use crate::util::json::Json;
+
+/// One flow's execution of a full model request: the per-layer reports in
+/// layer order plus their field-wise sum.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ModelReport {
+    /// Per-layer reports, in layer order.
+    pub layers: Vec<RunReport>,
+    /// Field-wise sum over `layers` (latencies, energies, op counts).
+    pub total: RunReport,
+}
+
+impl ModelReport {
+    /// Fold per-layer reports into a model report. Summation starts from
+    /// the all-zero [`RunReport`], so a 1-layer fold's `total` is bitwise
+    /// identical to its single layer (adding 0.0 to a finite positive f64
+    /// is exact) — the compatibility contract `tests/model_requests.rs`
+    /// pins against the pre-model single-trace path.
+    pub fn fold(layers: Vec<RunReport>) -> Self {
+        let mut total = RunReport::default();
+        for l in &layers {
+            total.latency_ns += l.latency_ns;
+            total.compute_busy_ns += l.compute_busy_ns;
+            total.mac_pj += l.mac_pj;
+            total.k_fetch_pj += l.k_fetch_pj;
+            total.q_load_pj += l.q_load_pj;
+            total.sched_pj += l.sched_pj;
+            total.index_pj += l.index_pj;
+            total.k_vec_ops += l.k_vec_ops;
+            total.q_loads += l.q_loads;
+            total.selected_pairs += l.selected_pairs;
+            total.steps += l.steps;
+        }
+        ModelReport { layers, total }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// End-to-end latency across all layers.
+    pub fn latency_ns(&self) -> f64 {
+        self.total.latency_ns
+    }
+
+    /// End-to-end energy across all layers.
+    pub fn total_pj(&self) -> f64 {
+        self.total.total_pj()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.total.utilization()
+    }
+
+    pub fn stall_fraction(&self) -> f64 {
+        self.total.stall_fraction()
+    }
+
+    /// Index of the layer with the largest latency — the request's
+    /// critical layer. `None` for an empty report.
+    pub fn critical_layer(&self) -> Option<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| a.latency_ns.total_cmp(&b.latency_ns))
+            .map(|(i, _)| i)
+    }
+
+    /// The critical layer's share of end-to-end latency, in [0, 1].
+    pub fn critical_fraction(&self) -> f64 {
+        match (self.critical_layer(), self.total.latency_ns) {
+            (Some(i), t) if t > 0.0 => self.layers[i].latency_ns / t,
+            _ => 0.0,
+        }
+    }
+
+    /// Machine-readable summary (`serve --json`): end-to-end totals, the
+    /// critical layer, and the per-layer latency/energy breakdown.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("latency_ns", Json::num(self.total.latency_ns)),
+            ("energy_pj", Json::num(self.total.total_pj())),
+            ("utilization", Json::num(self.utilization())),
+            (
+                "critical_layer",
+                match self.critical_layer() {
+                    Some(i) => Json::num(i as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("critical_fraction", Json::num(self.critical_fraction())),
+            (
+                "layer_latency_ns",
+                Json::arr_f64(
+                    &self.layers.iter().map(|l| l.latency_ns).collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "layer_energy_pj",
+                Json::arr_f64(
+                    &self.layers.iter().map(|l| l.total_pj()).collect::<Vec<_>>(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rep(latency: f64, mac: f64) -> RunReport {
+        RunReport {
+            latency_ns: latency,
+            compute_busy_ns: latency / 2.0,
+            mac_pj: mac,
+            k_fetch_pj: 1.0,
+            q_load_pj: 2.0,
+            sched_pj: 0.5,
+            index_pj: 0.25,
+            k_vec_ops: 3,
+            q_loads: 4,
+            selected_pairs: 5,
+            steps: 2,
+        }
+    }
+
+    #[test]
+    fn single_layer_fold_is_bitwise_identity() {
+        let r = rep(123.456, 7.89);
+        let m = ModelReport::fold(vec![r]);
+        assert_eq!(m.total, r);
+        assert_eq!(m.layers[0], r);
+        assert_eq!(m.latency_ns(), r.latency_ns);
+        assert_eq!(m.total_pj(), r.total_pj());
+        assert_eq!(m.critical_layer(), Some(0));
+        assert!((m.critical_fraction() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fold_sums_every_field_and_finds_the_critical_layer() {
+        let m = ModelReport::fold(vec![rep(100.0, 1.0), rep(300.0, 2.0), rep(200.0, 3.0)]);
+        assert_eq!(m.n_layers(), 3);
+        assert_eq!(m.total.latency_ns, 600.0);
+        assert_eq!(m.total.mac_pj, 6.0);
+        assert_eq!(m.total.k_vec_ops, 9);
+        assert_eq!(m.total.q_loads, 12);
+        assert_eq!(m.total.selected_pairs, 15);
+        assert_eq!(m.total.steps, 6);
+        assert_eq!(m.critical_layer(), Some(1));
+        assert!((m.critical_fraction() - 0.5).abs() < 1e-12);
+        // utilization folds from the summed busy/latency, staying in (0,1].
+        assert!((m.utilization() - 0.5).abs() < 1e-12);
+        assert!((m.stall_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_is_inert() {
+        let m = ModelReport::default();
+        assert_eq!(m.critical_layer(), None);
+        assert_eq!(m.critical_fraction(), 0.0);
+        assert_eq!(m.latency_ns(), 0.0);
+        let folded = ModelReport::fold(Vec::new());
+        assert_eq!(folded, m);
+    }
+
+    #[test]
+    fn json_summary_has_totals_and_breakdown() {
+        let m = ModelReport::fold(vec![rep(100.0, 1.0), rep(300.0, 2.0)]);
+        let j = m.to_json();
+        assert_eq!(j.get("latency_ns").as_f64(), Some(400.0));
+        assert_eq!(j.get("critical_layer").as_usize(), Some(1));
+        assert_eq!(j.get("layer_latency_ns").as_arr().unwrap().len(), 2);
+        // emits + reparses cleanly
+        let text = j.emit();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
+    }
+}

@@ -119,6 +119,10 @@ impl MaskTrace {
 /// (`serve --traces-dir`): paths are listed and sorted up front (stable
 /// job ids), but each file is read and parsed only when the iterator
 /// reaches it, so a large corpus is never resident all at once.
+///
+/// Files may mix bare single-layer [`MaskTrace`]s and multi-layer model
+/// files — each parses into a [`crate::model::ModelTrace`] (a bare trace
+/// becomes a 1-layer model), so one directory serves both corpus shapes.
 pub struct TraceDir {
     paths: std::vec::IntoIter<std::path::PathBuf>,
 }
@@ -153,11 +157,11 @@ impl TraceDir {
 impl Iterator for TraceDir {
     /// Each item carries the source path so callers can report which file
     /// failed to parse without aborting the stream.
-    type Item = (std::path::PathBuf, Result<MaskTrace, String>);
+    type Item = (std::path::PathBuf, Result<crate::model::ModelTrace, String>);
 
     fn next(&mut self) -> Option<Self::Item> {
         let p = self.paths.next()?;
-        let t = MaskTrace::load(&p);
+        let t = crate::model::ModelTrace::load(&p);
         Some((p, t))
     }
 }
@@ -218,13 +222,19 @@ mod tests {
     }
 
     #[test]
-    fn trace_dir_streams_sorted_and_reports_bad_files() {
+    fn trace_dir_streams_sorted_and_serves_mixed_single_and_model_files() {
         let dir = std::env::temp_dir().join("sata_trace_dir_test");
         std::fs::remove_dir_all(&dir).ok();
         std::fs::create_dir_all(&dir).unwrap();
         let t = sample_trace();
-        t.save(&dir.join("b_0001.json")).unwrap();
+        // a bare single-layer file, a 2-layer model file, and a bad file
         t.save(&dir.join("a_0000.json")).unwrap();
+        let m = crate::model::ModelTrace {
+            model: "test".into(),
+            seq_len: t.n,
+            layers: vec![t.clone(), t.clone()],
+        };
+        m.save(&dir.join("b_model.json")).unwrap();
         std::fs::write(dir.join("broken.json"), "{ nope").unwrap();
         std::fs::write(dir.join("ignored.txt"), "not a trace").unwrap();
 
@@ -232,12 +242,13 @@ mod tests {
         assert_eq!(src.len(), 3);
         let items: Vec<_> = src.collect();
         assert!(items[0].0.ends_with("a_0000.json") && items[0].1.is_ok());
-        assert!(items[1].0.ends_with("b_0001.json") && items[1].1.is_ok());
+        assert!(items[1].0.ends_with("b_model.json") && items[1].1.is_ok());
         assert!(items[2].0.ends_with("broken.json") && items[2].1.is_err());
-        assert_eq!(
-            items[0].1.as_ref().unwrap().fingerprint(),
-            t.fingerprint()
-        );
+        // The bare file arrives as a 1-layer model carrying the same masks.
+        let single = items[0].1.as_ref().unwrap();
+        assert_eq!(single.n_layers(), 1);
+        assert_eq!(single.layers[0].fingerprint(), t.fingerprint());
+        assert_eq!(items[1].1.as_ref().unwrap().n_layers(), 2);
 
         assert!(TraceDir::open(&dir.join("missing")).is_err());
         std::fs::remove_dir_all(&dir).ok();

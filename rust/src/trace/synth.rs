@@ -18,6 +18,7 @@
 use super::MaskTrace;
 use crate::config::WorkloadSpec;
 use crate::mask::SelectiveMask;
+use crate::model::ModelTrace;
 use crate::util::rng::Rng;
 
 /// Generate one head's mask per the workload's locality profile.
@@ -76,6 +77,100 @@ pub fn gen_traces(spec: &WorkloadSpec, count: usize, seed: u64) -> Vec<MaskTrace
     (0..count)
         .map(|i| gen_trace(spec, seed.wrapping_add(i as u64 * 0x9E37_79B9)))
         .collect()
+}
+
+/// Generate an `n_layers`-deep model request with tunable cross-layer
+/// selection overlap `rho ∈ [0, 1]`.
+///
+/// Real selective-attention models re-select much of the previous layer's
+/// key set (the cascade locality SpAtten prunes with); `rho` dials that in
+/// so plan-cache behaviour under inter-layer locality is measurable
+/// (`benches/model_serve.rs`):
+///
+/// * `rho = 0` — independent Table-I-profiled TopK per layer;
+/// * `rho → 1` — layer ℓ+1 re-selects layer ℓ's keys. Two mechanisms
+///   compose: a **deterministic copy budget** of `round(rho·(L−1))`
+///   transitions re-uses the previous layer *verbatim* (identical masks →
+///   identical plan fingerprints → real cross-layer cache hits, and a hit
+///   count that is strictly monotone in `rho` for a fixed L), and the
+///   remaining transitions **blend**, retaining `round(rho·K)` of each
+///   query's previous keys and filling the rest from a fresh
+///   Table-I-profiled head — so measured overlap
+///   ([`ModelTrace::inter_layer_overlap`]) rises smoothly with `rho` even
+///   between copy-budget steps.
+///
+/// Layer 0 is exactly [`gen_trace`]`(spec, seed)`, so a 1-layer model is
+/// bitwise the single-trace corpus every pre-model test ran on.
+pub fn gen_model(spec: &WorkloadSpec, n_layers: usize, rho: f64, seed: u64) -> ModelTrace {
+    let n_layers = n_layers.max(1);
+    let rho = rho.clamp(0.0, 1.0);
+    let copies = (rho * (n_layers - 1) as f64).round() as usize;
+    let mut rng = Rng::new(seed ^ 0x4D4F_4445_4C21); // distinct layer-blend stream
+    let mut layers: Vec<MaskTrace> = Vec::with_capacity(n_layers);
+    layers.push(gen_trace(spec, seed));
+    for l in 1..n_layers {
+        let layer = if l <= copies {
+            layers[l - 1].clone() // verbatim re-selection (cache-hit path)
+        } else {
+            blend_layer(spec, &layers[l - 1], rho, &mut rng)
+        };
+        layers.push(layer);
+    }
+    ModelTrace { model: spec.name.clone(), seq_len: spec.n_tokens, layers }
+}
+
+/// Generate `count` model requests with derived per-request seeds.
+pub fn gen_models(
+    spec: &WorkloadSpec,
+    count: usize,
+    n_layers: usize,
+    rho: f64,
+    seed: u64,
+) -> Vec<ModelTrace> {
+    (0..count)
+        .map(|i| gen_model(spec, n_layers, rho, seed.wrapping_add(i as u64 * 0x9E37_79B9)))
+        .collect()
+}
+
+/// One blended layer: per query, retain `round(rho·K)` of the previous
+/// layer's selected keys (sampled), fill to K from a fresh
+/// Table-I-profiled head, then from any unused index. Every row keeps an
+/// exact-K, duplicate-free, in-range selection for any `rho`.
+fn blend_layer(spec: &WorkloadSpec, prev: &MaskTrace, rho: f64, rng: &mut Rng) -> MaskTrace {
+    let n = prev.n;
+    let heads = prev
+        .heads
+        .iter()
+        .map(|pm| {
+            let fresh = gen_head(spec, rng);
+            let mut rows: Vec<Vec<usize>> = Vec::with_capacity(n);
+            for q in 0..n {
+                let prev_keys: Vec<usize> = (0..n).filter(|&k| pm.get(q, k)).collect();
+                let k_row = prev_keys.len();
+                let keep = ((rho * k_row as f64).round() as usize).min(k_row);
+                let mut used = vec![false; n];
+                let mut sel = Vec::with_capacity(k_row);
+                if keep > 0 {
+                    for pos in rng.sample_indices(k_row, keep) {
+                        let k = prev_keys[pos];
+                        used[k] = true;
+                        sel.push(k);
+                    }
+                }
+                let mut fill = (0..n).filter(|&k| fresh.get(q, k)).chain(0..n);
+                while sel.len() < k_row {
+                    let k = fill.next().expect("n indices suffice for a TopK row");
+                    if !used[k] {
+                        used[k] = true;
+                        sel.push(k);
+                    }
+                }
+                rows.push(sel);
+            }
+            SelectiveMask::from_topk_indices(n, &rows)
+        })
+        .collect();
+    MaskTrace { model: prev.model.clone(), n, dk: prev.dk, topk: prev.topk, heads }
 }
 
 #[cfg(test)]
@@ -150,6 +245,116 @@ mod tests {
         // same seed → identical (replayability)
         let c = gen_trace(&spec, 1);
         assert_eq!(a.heads[0], c.heads[0]);
+    }
+
+    #[test]
+    fn gen_model_layer0_is_exactly_gen_trace_and_replayable() {
+        let spec = WorkloadSpec::ttst();
+        let m = gen_model(&spec, 4, 0.5, 9);
+        assert_eq!(m.n_layers(), 4);
+        assert_eq!(m.seq_len, spec.n_tokens);
+        let t = gen_trace(&spec, 9);
+        assert_eq!(m.layers[0].heads, t.heads, "layer 0 must be gen_trace(seed)");
+        // 1-layer model == the single-trace corpus, rho irrelevant.
+        let single = gen_model(&spec, 1, 0.9, 9);
+        assert_eq!(single.layers[0].heads, t.heads);
+        // same seed → identical model (replayability), different seed → not
+        let again = gen_model(&spec, 4, 0.5, 9);
+        assert_eq!(m.fingerprint(), again.fingerprint());
+        assert_ne!(m.fingerprint(), gen_model(&spec, 4, 0.5, 10).fingerprint());
+    }
+
+    #[test]
+    fn gen_model_masks_are_valid_for_all_rho() {
+        use crate::util::prop::check;
+        // Validity property: for arbitrary rho ∈ [0,1] and layer counts,
+        // every row of every layer keeps an exact-TopK, duplicate-free
+        // selection (round-tripping through the validated JSON loader
+        // re-checks range/duplicate discipline).
+        check("gen_model produces valid masks for all rho", 12, |rng| {
+            let spec = WorkloadSpec::ttst();
+            let rho = rng.f64();
+            let layers = 1 + rng.gen_range(5);
+            let m = gen_model(&spec, layers, rho, rng.next_u64());
+            for (l, t) in m.layers.iter().enumerate() {
+                if t.heads.len() != spec.n_heads {
+                    return Err(format!("layer {l}: {} heads", t.heads.len()));
+                }
+                for h in &t.heads {
+                    for q in 0..h.n() {
+                        if h.row_popcount(q) != spec.topk {
+                            return Err(format!(
+                                "layer {l} q{q}: popcount {} != K {} (rho {rho:.2})",
+                                h.row_popcount(q),
+                                spec.topk
+                            ));
+                        }
+                    }
+                }
+                crate::model::ModelTrace::from_json(&t.to_json())
+                    .map_err(|e| format!("layer {l} failed reload: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_model_overlap_is_monotone_in_rho() {
+        // Measured inter-layer overlap must rise with the knob: averaged
+        // over layers × heads × rows the retained-key floor (round(rho·K))
+        // plus the copy budget dominates sampling noise.
+        let spec = WorkloadSpec::ttst();
+        let grid = [0.0, 0.25, 0.5, 0.75, 1.0];
+        for seed in [1u64, 7, 21] {
+            let overlaps: Vec<f64> = grid
+                .iter()
+                .map(|&rho| gen_model(&spec, 6, rho, seed).inter_layer_overlap())
+                .collect();
+            for w in overlaps.windows(2) {
+                assert!(
+                    w[1] >= w[0] - 0.03,
+                    "overlap not monotone (seed {seed}): {overlaps:?}"
+                );
+            }
+            assert!(
+                overlaps[4] > overlaps[0] + 0.3,
+                "knob has no dynamic range (seed {seed}): {overlaps:?}"
+            );
+            // rho = 1: every transition is a verbatim copy.
+            assert!((overlaps[4] - 1.0).abs() < 1e-12, "{overlaps:?}");
+        }
+    }
+
+    #[test]
+    fn gen_model_copy_budget_duplicates_whole_layers() {
+        // The deterministic copy budget: round(rho·(L−1)) transitions are
+        // verbatim copies — the fingerprint-identical layers the plan
+        // cache hits on (`benches/model_serve.rs` measures this vs rho).
+        let spec = WorkloadSpec::kvt_deit_tiny();
+        let m = gen_model(&spec, 6, 0.6, 4); // copies = round(0.6·5) = 3
+        let fp: Vec<u64> = m.layers.iter().map(|l| l.fingerprint()).collect();
+        assert_eq!(fp[0], fp[1]);
+        assert_eq!(fp[1], fp[2]);
+        assert_eq!(fp[2], fp[3]);
+        assert_ne!(fp[3], fp[4]);
+        assert_ne!(fp[4], fp[5]);
+        // rho = 0: all layers distinct (independent TopK per layer).
+        let indep = gen_model(&spec, 6, 0.0, 4);
+        let mut uniq: Vec<u64> = indep.layers.iter().map(|l| l.fingerprint()).collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 6);
+    }
+
+    #[test]
+    fn gen_models_derives_distinct_request_seeds() {
+        let spec = WorkloadSpec::ttst();
+        let ms = gen_models(&spec, 3, 2, 0.5, 11);
+        assert_eq!(ms.len(), 3);
+        let mut fps: Vec<u64> = ms.iter().map(|m| m.fingerprint()).collect();
+        fps.sort_unstable();
+        fps.dedup();
+        assert_eq!(fps.len(), 3, "requests must be distinct workloads");
     }
 
     #[test]

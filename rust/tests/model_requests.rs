@@ -1,0 +1,233 @@
+//! Model-request path acceptance tests: a 1-layer `ModelTrace` through
+//! the coordinator is **bitwise identical** (cycles, energy, traffic) to
+//! the pre-refactor single-trace path for all seven flows on both
+//! substrates; `gen_model`'s `rho` knob produces valid masks with
+//! monotone inter-layer overlap; multi-layer requests fold correctly and
+//! hit the per-layer plan cache.
+
+use sata::config::{SystemConfig, WorkloadSpec};
+use sata::coordinator::{Coordinator, CoordinatorConfig, Job};
+use sata::engine::backend::{self, PlanSet};
+use sata::engine::{substrate, EngineOpts, RunReport};
+use sata::model::report::ModelReport;
+use sata::model::ModelTrace;
+use sata::trace::synth::{gen_model, gen_trace};
+use sata::trace::TraceDir;
+use sata::util::prop::check;
+
+/// The pre-model single-trace execution path: plan the bare `MaskTrace`
+/// once, run one flow on one substrate. This is exactly what the
+/// coordinator's execute worker did per job before the refactor (pinned
+/// transitively golden against the seed's free functions by
+/// `tests/integration.rs`).
+fn legacy_single_trace_reports(
+    spec: &WorkloadSpec,
+    seed: u64,
+    substrate_name: &str,
+) -> Vec<(String, RunReport)> {
+    let t = gen_trace(spec, seed);
+    let sys = SystemConfig::for_workload(spec);
+    // The exact opts the coordinator's plan worker builds.
+    let opts = EngineOpts {
+        sf: spec.sf,
+        theta_frac: sys.theta_frac,
+        seed: sys.seed,
+        ..Default::default()
+    };
+    let plans = PlanSet::build(&t.heads, opts);
+    let sub = (substrate::by_name(substrate_name).unwrap().build)(&sys, spec.dk);
+    backend::all()
+        .into_iter()
+        .map(|b| (b.name().to_string(), b.run_on(&plans, &*sub)))
+        .collect()
+}
+
+#[test]
+fn one_layer_model_is_bitwise_identical_to_single_trace_path_everywhere() {
+    // The refactor's golden contract: for every Table-I workload, every
+    // registered flow, and both substrates, a 1-layer ModelTrace served
+    // through the model-request coordinator reproduces the pre-refactor
+    // single-trace reports bit for bit — total AND per-layer.
+    for spec in WorkloadSpec::all_paper() {
+        let seed = 13;
+        let flow_names: Vec<String> =
+            backend::flow_names().iter().map(|s| s.to_string()).collect();
+        for sspec in &substrate::SUBSTRATES {
+            let expected = legacy_single_trace_reports(&spec, seed, sspec.name);
+
+            let sys = SystemConfig::for_workload(&spec);
+            let coord = Coordinator::new(2, 4, sys);
+            let trace = gen_trace(&spec, seed); // wraps into a 1-layer model
+            coord
+                .submit(
+                    Job::with_flows(0, trace, spec.sf, flow_names.clone())
+                        .on_substrate(sspec.name),
+                )
+                .unwrap();
+            let (results, _) = coord.drain();
+            assert_eq!(results.len(), 1);
+            let r = &results[0];
+            assert!(r.is_ok(), "{:?}", r.error);
+            assert_eq!(r.layers, 1);
+            assert_eq!(r.flows.len(), expected.len());
+
+            // Dense baseline matches the legacy dense run.
+            let legacy_dense = &expected[0].1;
+            assert_eq!(&r.dense.total, legacy_dense, "{}@{}", spec.name, sspec.name);
+            for (fr, (name, legacy)) in r.flows.iter().zip(&expected) {
+                assert_eq!(&fr.flow, name);
+                let tag = format!("{} {}@{}", spec.name, name, sspec.name);
+                assert_eq!(&fr.report.total, legacy, "{tag}: total diverged");
+                assert_eq!(fr.report.n_layers(), 1, "{tag}");
+                assert_eq!(&fr.report.layers[0], legacy, "{tag}: layer diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_layer_request_folds_exactly_the_per_layer_runs() {
+    // A model job's reports must equal running each layer standalone and
+    // folding — no hidden cross-layer state in the execute path.
+    let spec = WorkloadSpec::ttst();
+    let m = gen_model(&spec, 3, 0.5, 21);
+    let sys = SystemConfig::for_workload(&spec);
+    let opts = EngineOpts {
+        sf: spec.sf,
+        theta_frac: sys.theta_frac,
+        seed: sys.seed,
+        ..Default::default()
+    };
+    for sspec in &substrate::SUBSTRATES {
+        let sub = (sspec.build)(&sys, spec.dk);
+        let expected = ModelReport::fold(
+            m.layers
+                .iter()
+                .map(|l| {
+                    let plans = PlanSet::build(&l.heads, opts);
+                    backend::SATA.run_on(&plans, &*sub)
+                })
+                .collect(),
+        );
+
+        let coord = Coordinator::new(2, 4, SystemConfig::for_workload(&spec));
+        coord
+            .submit(Job::new(0, m.clone(), spec.sf).on_substrate(sspec.name))
+            .unwrap();
+        let (results, _) = coord.drain();
+        let r = &results[0];
+        assert!(r.is_ok(), "{:?}", r.error);
+        assert_eq!(r.flows[0].report, expected, "{} diverged", sspec.name);
+        assert!(r.flows[0].report.critical_layer().is_some());
+    }
+}
+
+#[test]
+fn correlated_model_requests_hit_the_plan_cache_across_layers() {
+    // gen_model(rho) is the cross-layer-locality workload: higher rho →
+    // strictly more per-layer plan-cache hits within one request.
+    let spec = WorkloadSpec::kvt_deit_tiny();
+    let layers = 5;
+    let mut hits = Vec::new();
+    for rho in [0.0, 0.5, 1.0] {
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::with_config(
+            sys,
+            CoordinatorConfig { plan_workers: 1, exec_workers: 1, ..Default::default() },
+        );
+        coord
+            .submit(Job::new(0, gen_model(&spec, layers, rho, 2), spec.sf))
+            .unwrap();
+        let (results, metrics) = coord.drain();
+        assert!(results[0].is_ok());
+        assert_eq!(metrics.cache_hits + metrics.cache_misses, layers);
+        hits.push(metrics.cache_hits);
+    }
+    assert!(hits[0] < hits[1] && hits[1] < hits[2], "{hits:?}");
+    assert_eq!(hits[0], 0, "rho=0 layers are independent");
+    assert_eq!(hits[2], layers - 1, "rho=1 re-plans nothing after layer 0");
+}
+
+#[test]
+fn gen_model_is_total_and_valid_over_random_rho_and_depth() {
+    // Valid masks for all rho ∈ [0,1]: exact-TopK rows, duplicate-free,
+    // JSON-reloadable, and servable end to end.
+    check("gen_model valid + servable over rho", 8, |rng| {
+        let spec = WorkloadSpec::ttst();
+        let rho = rng.f64();
+        let layers = 1 + rng.gen_range(4);
+        let m = gen_model(&spec, layers, rho, rng.next_u64());
+        for (l, t) in m.layers.iter().enumerate() {
+            for h in &t.heads {
+                for q in 0..h.n() {
+                    if h.row_popcount(q) != spec.topk {
+                        return Err(format!("layer {l}: row {q} not exact-K"));
+                    }
+                }
+            }
+        }
+        let back = ModelTrace::from_json(&m.to_json())
+            .map_err(|e| format!("reload failed: {e}"))?;
+        if back.fingerprint() != m.fingerprint() {
+            return Err("fingerprint changed across JSON roundtrip".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn measured_overlap_is_monotone_in_rho_and_spans_the_range() {
+    let spec = WorkloadSpec::drsformer();
+    let grid = [0.0, 0.25, 0.5, 0.75, 1.0];
+    let overlaps: Vec<f64> = grid
+        .iter()
+        .map(|&rho| gen_model(&spec, 5, rho, 17).inter_layer_overlap())
+        .collect();
+    for w in overlaps.windows(2) {
+        assert!(w[1] >= w[0] - 0.03, "not monotone: {overlaps:?}");
+    }
+    assert!(overlaps[4] > overlaps[0] + 0.3, "no dynamic range: {overlaps:?}");
+    assert!((overlaps[4] - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn traces_dir_serves_mixed_single_layer_and_model_files_end_to_end() {
+    // The serve shape over a directory mixing a bare single-layer trace,
+    // a multi-layer model file, and a hostile file: good jobs complete
+    // with the right layer counts, the bad file reports a per-file error.
+    let dir = std::env::temp_dir().join("sata_mixed_corpus_test");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = WorkloadSpec::ttst();
+    gen_trace(&spec, 1).save(&dir.join("a_single.json")).unwrap();
+    gen_model(&spec, 3, 0.8, 2).save(&dir.join("b_model.json")).unwrap();
+    std::fs::write(
+        dir.join("c_bad.json"),
+        r#"{"layers": [{"n": 4, "heads": [[[777],[0],[1],[2]]]}]}"#,
+    )
+    .unwrap();
+
+    let coord = Coordinator::new(2, 4, SystemConfig::for_workload(&spec));
+    let mut id = 0;
+    let mut file_errors = Vec::new();
+    for (path, parsed) in TraceDir::open(&dir).unwrap() {
+        match parsed {
+            Ok(m) => {
+                coord.submit(Job::new(id, m, spec.sf)).unwrap();
+                id += 1;
+            }
+            Err(e) => file_errors.push((path, e)),
+        }
+    }
+    let (results, metrics) = coord.drain();
+    assert_eq!(results.len(), 2);
+    assert!(results.iter().all(|r| r.is_ok()));
+    assert_eq!(results[0].layers, 1, "bare file = 1-layer request");
+    assert_eq!(results[1].layers, 3, "model file keeps its depth");
+    assert_eq!(metrics.jobs_done, 2);
+    assert_eq!(metrics.layers_planned, 4);
+    assert_eq!(file_errors.len(), 1);
+    assert!(file_errors[0].1.contains("layer 0"), "{}", file_errors[0].1);
+    assert!(file_errors[0].1.contains("out of range"), "{}", file_errors[0].1);
+    std::fs::remove_dir_all(&dir).ok();
+}
