@@ -1,0 +1,185 @@
+//! Decode-session serving: tokens/sec, cross-step plan-cache hit rate,
+//! and step-carryover reuse as a function of the step-to-step selection
+//! overlap knob `kappa`, on both substrates.
+//!
+//! Each session is a 1-layer prefill plus `STEPS` generated tokens from
+//! `gen_session`; the coordinator plans **per step** through the
+//! fingerprint-keyed cache, so a step that re-selects the previous step's
+//! keys hits the plan its own predecessor just published. `gen_session`'s
+//! copy budget is deterministic (`round(kappa·(S−1))` verbatim
+//! transitions), so the step hit count is an exact function of `kappa` —
+//! asserted strictly increasing across the sweep with **zero** hits at
+//! `kappa = 0` (prefills use distinct seeds, so nothing hits
+//! cross-session). Carryover reuse (keys charged resident instead of
+//! refetched) must also strictly increase with `kappa`, and at every
+//! `kappa > 0` the carried SATA-front-ended flows must pay strictly less
+//! simulated time and energy per token than the same sessions served
+//! `--no-carry` — the acceptance criteria of the decode-session PR.
+//!
+//! `SATA_BENCH_FAST=1` shrinks the session counts (CI smoke mode).
+
+use sata::config::{SystemConfig, WorkloadSpec};
+use sata::coordinator::{Coordinator, CoordinatorConfig, CoordinatorMetrics, Job};
+use sata::trace::synth::gen_sessions;
+use sata::util::bench::Bench;
+
+const STEPS: usize = 6; // copies = round(kappa·5): 0, 2, 3, 5 across the grid
+
+fn serve_sessions(
+    spec: &WorkloadSpec,
+    sessions: usize,
+    kappa: f64,
+    substrate: &str,
+    flow: &str,
+    carryover: bool,
+) -> (f64, Vec<f64>, CoordinatorMetrics) {
+    let sys = SystemConfig::for_workload(spec);
+    let coord = Coordinator::with_config(
+        sys,
+        // Capacity far above the distinct-key working set: hits measure
+        // cross-step locality, not eviction luck.
+        CoordinatorConfig { cache_capacity: 1024, ..Default::default() },
+    );
+    // 1-layer prefills with distinct per-session seeds: every cache hit
+    // is a genuine cross-STEP hit within one session.
+    let base = gen_sessions(spec, sessions, 1, 0.0, STEPS, kappa, 0xDEC0DE);
+    let t0 = std::time::Instant::now();
+    let mut per_token_ns = Vec::new();
+    let mut per_token_pj = Vec::new();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            for (id, sess) in base.into_iter().enumerate() {
+                let job = Job::with_flows(id, sess, spec.sf, vec![flow.into()])
+                    .on_substrate(substrate)
+                    .with_carryover(carryover);
+                if coord.submit(job).is_err() {
+                    return;
+                }
+            }
+        });
+        for r in coord.results().take(sessions) {
+            assert!(r.is_ok(), "{:?}", r.error);
+            assert_eq!(r.tokens, STEPS);
+            // Per-token simulated cost of the requested flow: the report's
+            // entries after the prefill layers are the step reports.
+            let rep = &r.flows[0].report;
+            let steps = &rep.layers[r.layers..];
+            assert_eq!(steps.len(), STEPS);
+            per_token_ns
+                .push(steps.iter().map(|s| s.latency_ns).sum::<f64>() / STEPS as f64);
+            per_token_pj
+                .push(steps.iter().map(|s| s.total_pj()).sum::<f64>() / STEPS as f64);
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let metrics = coord.finish();
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    (
+        metrics.tokens_done as f64 / wall_s,
+        vec![mean(&per_token_ns), mean(&per_token_pj)],
+        metrics,
+    )
+}
+
+fn main() {
+    let b = Bench::new();
+    let fast = std::env::var("SATA_BENCH_FAST").is_ok();
+    let sessions = if fast { 5 } else { 16 };
+    // TTST: D_k = 65536 keeps decode steps memory-bound on both
+    // substrates, so carryover buys wall time as well as energy.
+    let spec = WorkloadSpec::ttst();
+    let kappa_grid = [0.0, 0.3, 0.6, 1.0];
+    let copies = |kappa: f64| (kappa * (STEPS - 1) as f64).round() as usize;
+
+    println!(
+        "decode serving: {sessions} sessions x {STEPS} tokens, hit/reuse vs kappa, cim + systolic"
+    );
+    for substrate in ["cim", "systolic"] {
+        let mut hit_rates = Vec::new();
+        let mut reuse_rates = Vec::new();
+        for &kappa in &kappa_grid {
+            let (tok_per_s, _, m) =
+                serve_sessions(&spec, sessions, kappa, substrate, "sata", true);
+            // Step hits are exact: the prefill layer always misses (one
+            // distinct layer per session), each copy transition hits.
+            assert_eq!(m.tokens_done, sessions * STEPS);
+            assert_eq!(
+                m.cache_hits,
+                sessions * copies(kappa),
+                "{substrate} kappa {kappa}: step hits must equal the copy budget"
+            );
+            let hr = m.cache_hit_rate();
+            hit_rates.push(hr);
+            reuse_rates.push(m.carry_reuse_rate());
+            b.report_metric(
+                &format!("decode_serve.{substrate}.kappa{kappa}.tok_per_s"),
+                tok_per_s,
+                "tok/s",
+            );
+            b.report_metric(
+                &format!("decode_serve.{substrate}.kappa{kappa}.hit_rate"),
+                hr,
+                "frac",
+            );
+            b.report_metric(
+                &format!("decode_serve.{substrate}.kappa{kappa}.carry_reuse"),
+                m.carry_reuse_rate(),
+                "frac",
+            );
+        }
+        // Acceptance: cross-step locality must translate into strictly
+        // more plan-cache hits AND strictly more carryover reuse as
+        // kappa rises — with zero hits at kappa = 0.
+        assert_eq!(hit_rates[0], 0.0, "{substrate}: kappa=0 must not hit");
+        for w in hit_rates.windows(2) {
+            assert!(
+                w[1] > w[0],
+                "{substrate}: hit rate not strictly increasing with kappa: {hit_rates:?}"
+            );
+        }
+        for w in reuse_rates.windows(2) {
+            assert!(
+                w[1] > w[0],
+                "{substrate}: carry reuse not strictly increasing with kappa: {reuse_rates:?}"
+            );
+        }
+        // kappa = 1: all 5 transitions are verbatim copies → fully
+        // resident after step 0.
+        assert!(
+            reuse_rates[3] > 0.8,
+            "{substrate}: kappa=1 reuse {:.3} should be ~(S-1)/S",
+            reuse_rates[3]
+        );
+
+        // Acceptance: at every kappa > 0, SATA-front-ended flows pay
+        // strictly less per token than the un-carried baseline on both
+        // time and energy (dense, by contrast, is carryover-blind).
+        for flow in ["sata", "spatten+sata"] {
+            for &kappa in &kappa_grid[1..] {
+                let (_, carried, _) =
+                    serve_sessions(&spec, sessions, kappa, substrate, flow, true);
+                let (_, uncarried, _) =
+                    serve_sessions(&spec, sessions, kappa, substrate, flow, false);
+                assert!(
+                    carried[0] < uncarried[0],
+                    "{flow}@{substrate} kappa {kappa}: carried {:.1} ns/tok !< un-carried {:.1}",
+                    carried[0],
+                    uncarried[0]
+                );
+                assert!(
+                    carried[1] < uncarried[1],
+                    "{flow}@{substrate} kappa {kappa}: carried {:.1} pJ/tok !< un-carried {:.1}",
+                    carried[1],
+                    uncarried[1]
+                );
+                b.report_metric(
+                    &format!(
+                        "decode_serve.{substrate}.{flow}.kappa{kappa}.carry_win_ns"
+                    ),
+                    uncarried[0] - carried[0],
+                    "ns/tok",
+                );
+            }
+        }
+    }
+}

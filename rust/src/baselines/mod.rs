@@ -32,10 +32,12 @@ pub enum SotaDesign {
 }
 
 impl SotaDesign {
+    /// All four designs, in paper order.
     pub fn all() -> [SotaDesign; 4] {
         [SotaDesign::A3, SotaDesign::SpAtten, SotaDesign::Energon, SotaDesign::Elsa]
     }
 
+    /// Display name.
     pub fn name(&self) -> &'static str {
         match self {
             SotaDesign::A3 => "A3",
@@ -93,8 +95,11 @@ impl SotaDesign {
 /// Gains from bolting SATA onto a design (Fig. 4c's two bar groups).
 #[derive(Clone, Copy, Debug)]
 pub struct IntegrationGain {
+    /// The integrated design.
     pub design: SotaDesign,
+    /// Energy-efficiency gain of design+SATA over the design alone.
     pub energy_eff: f64,
+    /// Throughput gain of design+SATA over the design alone.
     pub throughput: f64,
 }
 

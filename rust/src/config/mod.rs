@@ -12,6 +12,7 @@ use crate::util::json::Json;
 /// One evaluation workload (a Table I row).
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkloadSpec {
+    /// Workload display name (Table I row).
     pub name: String,
     /// Sequence length N (tokens per head).
     pub n_tokens: usize,
@@ -103,6 +104,7 @@ impl WorkloadSpec {
         ]
     }
 
+    /// JSON form (column-per-field, see module docs).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(&self.name)),
@@ -120,6 +122,7 @@ impl WorkloadSpec {
         ])
     }
 
+    /// Parse a workload spec; missing required columns yield `Err`.
     pub fn from_json(j: &Json) -> Result<Self, String> {
         let req = |k: &str| -> Result<usize, String> {
             j.get(k).as_usize().ok_or_else(|| format!("missing/invalid '{k}'"))
@@ -147,10 +150,13 @@ impl WorkloadSpec {
 pub struct SystemConfig {
     /// Embedding dim the CIM system is provisioned for.
     pub dk: usize,
+    /// CIM tiles on the chip.
     pub n_tiles: usize,
+    /// Operand precision (bits).
     pub precision_bits: usize,
     /// θ as fraction of N.
     pub theta_frac: f64,
+    /// Sorting/scheduling seed (replayable runs).
     pub seed: u64,
 }
 
@@ -167,6 +173,7 @@ impl Default for SystemConfig {
 }
 
 impl SystemConfig {
+    /// Derive the CIM configuration this system describes.
     pub fn cim(&self) -> CimConfig {
         let mut c = CimConfig::default_65nm(self.dk);
         c.n_tiles = self.n_tiles;
@@ -174,10 +181,12 @@ impl SystemConfig {
         c
     }
 
+    /// System sized for a workload's embedding dimension.
     pub fn for_workload(w: &WorkloadSpec) -> Self {
         SystemConfig { dk: w.dk, ..Default::default() }
     }
 
+    /// JSON form.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("dk", Json::num(self.dk as f64)),
@@ -188,6 +197,7 @@ impl SystemConfig {
         ])
     }
 
+    /// Parse with defaults for missing fields.
     pub fn from_json(j: &Json) -> Result<Self, String> {
         let d = SystemConfig::default();
         Ok(SystemConfig {

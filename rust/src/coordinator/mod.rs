@@ -1,5 +1,6 @@
-//! Layer-3 coordinator: a streaming plan/execute service whose unit of
-//! work is a full **model request** ([`ModelTrace`]), not a single layer.
+//! Layer-3 coordinator: a streaming plan/execute service over
+//! **requests** — prefill-shaped model requests ([`ModelTrace`]) and
+//! autoregressive decode sessions ([`DecodeSession`]).
 //!
 //! The paper's thesis — reorder work so operands are fetched early and
 //! retired early — applied one level up, to the service itself. Planning
@@ -7,41 +8,54 @@
 //! run as **two pipelined stages with a shared plan cache**:
 //!
 //! ```text
-//!  submit ──▶ [job queue] ──▶ plan workers ──▶ [planned queue] ──▶ execute workers ──▶ results
-//!  (bounded, backpressure)        │   ▲          (bounded)           per layer: dense +
-//!                                 ▼   │                              one run per flow from
-//!                              PlanCache                             the layer's Arc<PlanSet>,
-//!                     (sharded LRU, keyed per LAYER:                 folded into ModelReports
-//!                      mask fingerprint ⊕ opts key)
+//!  submit ──▶ [job queue] ──▶ plan workers ──▶ [unit queue] ──▶ execute workers ──▶ results
+//!  (bounded, backpressure)        │   ▲         (bounded;        dense + one run per flow
+//!                                 ▼   │          prefill jobs    per unit; last unit of a
+//!                              PlanCache         and individual  job folds + streams its
+//!                     (sharded LRU, keyed per    decode steps    JobResult
+//!                      LAYER and per STEP:       interleave)
+//!                      fingerprint ⊕ opts key)
 //! ```
 //!
-//! * **Stage 1 (plan)** fingerprints **each layer** of the request
-//!   ([`PlanSet::fingerprint_for`] = per-layer mask fingerprint ⊕
-//!   [`EngineOpts::cache_key`]) and consults the [`PlanCache`] per layer:
-//!   a hit skips Algo 1 for that layer; a miss builds its [`PlanSet`] once
-//!   and publishes it as an `Arc`. Because keys are layer-scoped,
-//!   correlated layers of ONE request hit each other's plans — the
-//!   cross-layer locality `trace::synth::gen_model`'s `rho` knob dials in
-//!   and `benches/model_serve.rs` measures.
-//! * **Stage 2 (execute)** runs, per layer, the dense baseline plus *any
-//!   number of flows* ([`Job::flows`]) on the job's substrate, and folds
-//!   the per-layer [`crate::engine::RunReport`]s into request-scoped [`ModelReport`]s
-//!   (end-to-end totals, per-layer breakdown, critical layer).
+//! * **Stage 1 (plan)** fingerprints **each layer** of the prefill
+//!   ([`PlanSet::fingerprint_for`]) and **each decode step**
+//!   ([`StepPlan::fingerprint_for`]) and consults the one [`PlanCache`]
+//!   per unit: a hit skips the build. Keys are unit-scoped, so
+//!   correlated layers of ONE request hit each other's plans (the `rho`
+//!   locality of `benches/model_serve.rs`) and consecutive decode steps
+//!   that re-select the same keys hit each other's step plans (the
+//!   `kappa` locality of `benches/decode_serve.rs`).
+//! * **Continuous batching**: a planned job is split into units — one
+//!   for its prefill layers plus one per decode step — that enter the
+//!   bounded unit queue individually, so execute workers interleave
+//!   decode steps from many live sessions with whole prefill jobs in the
+//!   same pool. Each unit runs the dense baseline plus *any number of
+//!   flows* ([`Job::flows`]) on the job's substrate; the worker
+//!   completing a job's last unit folds everything into request-scoped
+//!   [`ModelReport`]s (prefill layers first, then one entry per token)
+//!   and streams the [`JobResult`].
+//! * **Step carryover**: keys a decode step re-selects from its
+//!   predecessor's fetch set are charged resident on carryover-capable
+//!   flows ([`crate::engine::backend::AccessProfile::carryover`]);
+//!   [`Job::carryover`] disables it for un-carried baselines.
 //! * **Results stream**: [`Coordinator::results`] yields [`JobResult`]s
-//!   as execute workers finish them (no full-drain barrier); the results
-//!   channel is unbounded so backpressure lives only at intake and
-//!   between the stages. [`Coordinator::drain`] remains as the collect-
-//!   everything convenience.
+//!   as jobs finish (no full-drain barrier); the results channel is
+//!   unbounded so backpressure lives only at intake and between the
+//!   stages. [`Coordinator::drain`] remains as the collect-all
+//!   convenience.
 //!
-//! Per-job wall latency (submit → result) feeds a streaming
-//! [`LatencyHistogram`]; [`CoordinatorMetrics`] reports p50/p95/p99,
-//! cache hits/misses/evictions, and per-stage queue peaks.
+//! Per-job wall latency (submit → result) and per-token execution wall
+//! time feed streaming [`LatencyHistogram`]s; [`CoordinatorMetrics`]
+//! reports p50/p95/p99 for both, tokens/sec, live-session gauges,
+//! carryover reuse, cache hits/misses/evictions, and per-stage queue
+//! peaks.
 //!
-//! Single-layer callers lose nothing: [`Job`] constructors take
-//! `impl Into<ModelTrace>`, a bare [`crate::trace::MaskTrace`] wraps into a 1-layer
-//! request, and `tests/model_requests.rs` pins the 1-layer path bitwise
-//! identical to the pre-model single-trace path for every flow on both
-//! substrates.
+//! Existing callers lose nothing: [`Job`] constructors take
+//! `impl Into<Request>`, a bare [`crate::trace::MaskTrace`] or
+//! [`ModelTrace`] wraps into a prefill-only request
+//! (`tests/model_requests.rs` pins that path bitwise), and a 0-step
+//! session executes identically to its prefill
+//! (`tests/decode_sessions.rs`).
 //!
 //! No `tokio` offline — std threads + `mpsc` channels; the queue bounds
 //! give backpressure exactly like bounded async channels would.
@@ -54,58 +68,154 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::config::SystemConfig;
-use crate::engine::backend::{self, FlowBackend, PlanSet};
-use crate::engine::{gains, substrate, EngineOpts};
+use crate::decode::{carry_resident_counts, DecodeSession};
+use crate::engine::backend::{self, FlowBackend, PlanSet, StepPlan};
+use crate::engine::substrate::{StepExec, Substrate};
+use crate::engine::{gains, substrate, EngineOpts, RunReport};
 use crate::model::report::ModelReport;
 use crate::model::ModelTrace;
 use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
 
-/// One unit of coordinator work: schedule + simulate a full model request
-/// against one or more flows. Constructors take `impl Into<ModelTrace>`,
-/// so a bare [`crate::trace::MaskTrace`] submits as a 1-layer request.
+/// What a [`Job`] asks the service to run: a prefill-shaped model request
+/// or a full autoregressive decode session. Constructors take
+/// `impl Into<Request>`, so bare [`crate::trace::MaskTrace`]s and
+/// [`ModelTrace`]s keep submitting unchanged (they wrap into prefill-only
+/// requests) and a [`DecodeSession`] submits directly.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// One multi-layer inference, planned and executed once (the PR 4
+    /// unit of work).
+    Model(ModelTrace),
+    /// A decode session: the prefill plus one scheduled step per
+    /// generated token. A 0-step session executes bitwise identically to
+    /// `Model(prefill)` (`tests/decode_sessions.rs`).
+    Decode(DecodeSession),
+}
+
+impl Request {
+    /// The prefill portion (the whole request, for model jobs).
+    pub fn prefill(&self) -> &ModelTrace {
+        match self {
+            Request::Model(m) => m,
+            Request::Decode(s) => &s.prefill,
+        }
+    }
+
+    /// Generated tokens carried by the request (0 for model jobs).
+    pub fn n_steps(&self) -> usize {
+        match self {
+            Request::Model(_) => 0,
+            Request::Decode(s) => s.n_steps(),
+        }
+    }
+
+    /// Source model name.
+    pub fn model(&self) -> &str {
+        match self {
+            Request::Model(m) => &m.model,
+            Request::Decode(s) => &s.model,
+        }
+    }
+
+    /// Load a request file of any shape — bare single-layer trace,
+    /// multi-layer model, or decode session — reading and JSON-parsing
+    /// the file **once** and dispatching on shape: a `"prefill"` key
+    /// loads as [`Request::Decode`], anything else through the
+    /// [`ModelTrace`] loader (which accepts bare traces as 1-layer
+    /// models). This is `serve --traces-dir`'s per-file loader.
+    pub fn load(path: &std::path::Path) -> Result<Request, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        if *j.get("prefill") != Json::Null {
+            return DecodeSession::from_json(&j).map(Request::Decode);
+        }
+        ModelTrace::from_json(&j).map(Request::Model)
+    }
+}
+
+impl From<ModelTrace> for Request {
+    fn from(m: ModelTrace) -> Self {
+        Request::Model(m)
+    }
+}
+
+impl From<crate::trace::MaskTrace> for Request {
+    fn from(t: crate::trace::MaskTrace) -> Self {
+        Request::Model(ModelTrace::from(t))
+    }
+}
+
+impl From<DecodeSession> for Request {
+    fn from(s: DecodeSession) -> Self {
+        Request::Decode(s)
+    }
+}
+
+/// One unit of coordinator work: schedule + simulate a full request
+/// (prefill layers plus any decode steps) against one or more flows.
 #[derive(Clone, Debug)]
 pub struct Job {
+    /// Caller-chosen id, echoed in the [`JobResult`].
     pub id: usize,
-    pub trace: ModelTrace,
+    /// What to run (see [`Request`]).
+    pub request: Request,
     /// Fold size override; `None` = whole-head.
     pub sf: Option<usize>,
-    /// Flow names resolved through the backend registry. Each layer is
-    /// planned once; every listed flow executes every layer from the
-    /// shared per-layer plans. An unknown name fails the job with an
-    /// explicit [`JobResult::error`].
+    /// Flow names resolved through the backend registry. Each layer and
+    /// step is planned once; every listed flow executes every unit from
+    /// the shared plans. An unknown name fails the job with an explicit
+    /// [`JobResult::error`].
     pub flows: Vec<String>,
     /// Execution substrate, resolved through the
     /// [`crate::engine::substrate`] registry (`cim` | `systolic`). Unknown
     /// names fail the job explicitly, like unknown flows.
     pub substrate: String,
+    /// Step-carryover residency for decode steps (default on). `false`
+    /// forces every step's fetch fresh — the un-carried baseline
+    /// `benches/decode_serve.rs` measures the residency win against.
+    pub carryover: bool,
 }
 
 impl Job {
     /// Job running the default (SATA) flow on the CIM substrate.
-    pub fn new(id: usize, trace: impl Into<ModelTrace>, sf: Option<usize>) -> Self {
+    pub fn new(id: usize, request: impl Into<Request>, sf: Option<usize>) -> Self {
         Job {
             id,
-            trace: trace.into(),
+            request: request.into(),
             sf,
             flows: vec!["sata".into()],
             substrate: "cim".into(),
+            carryover: true,
         }
     }
 
     /// Job fanning one planned request out to several flows.
     pub fn with_flows(
         id: usize,
-        trace: impl Into<ModelTrace>,
+        request: impl Into<Request>,
         sf: Option<usize>,
         flows: Vec<String>,
     ) -> Self {
-        Job { id, trace: trace.into(), sf, flows, substrate: "cim".into() }
+        Job {
+            id,
+            request: request.into(),
+            sf,
+            flows,
+            substrate: "cim".into(),
+            carryover: true,
+        }
     }
 
     /// Route the job's executions onto a registered substrate.
     pub fn on_substrate(mut self, substrate: &str) -> Self {
         self.substrate = substrate.into();
+        self
+    }
+
+    /// Enable/disable decode step carryover (see [`Job::carryover`]).
+    pub fn with_carryover(mut self, carryover: bool) -> Self {
+        self.carryover = carryover;
         self
     }
 }
@@ -119,29 +229,46 @@ pub struct FlowRun {
     pub report: ModelReport,
     /// End-to-end gains vs the job's dense baseline (1.0 for dense).
     pub throughput_gain: f64,
+    /// Energy-efficiency gain vs the dense baseline.
     pub energy_gain: f64,
 }
 
 /// Result of one job: the dense baseline plus one [`FlowRun`] per
 /// requested flow — or an explicit error (unknown flow, empty trace).
+///
+/// For decode jobs every [`ModelReport`] in the result carries the
+/// prefill layers first and one entry **per generated token** after them
+/// ([`JobResult::layers`] counts the prefill entries, [`JobResult::tokens`]
+/// the step entries), so per-token breakdowns fall out of the same
+/// report shape the prefill path uses.
 #[derive(Clone, Debug)]
 pub struct JobResult {
+    /// Caller-chosen id from the [`Job`].
     pub id: usize,
+    /// Source model name.
     pub model: String,
     /// Substrate the job executed on (canonical registry name).
     pub substrate: String,
-    /// Layers in the request.
+    /// Prefill layers in the request.
     pub layers: usize,
+    /// Decode steps (generated tokens) in the request; 0 for model jobs.
+    pub tokens: usize,
     /// Dense baseline the per-flow gains are measured against — executed
     /// on the job's substrate, so gains compare like with like.
     pub dense: ModelReport,
     /// Per-flow runs, in [`Job::flows`] order; empty when `error` is set.
     pub flows: Vec<FlowRun>,
-    /// Layers whose plans were served from the [`PlanCache`].
+    /// Layers + steps whose plans were served from the [`PlanCache`].
     pub cache_hits: usize,
-    /// Whether every layer's plan was served from the cache (for a
-    /// 1-layer job this is the old per-trace hit flag).
+    /// Whether every layer's and step's plan was served from the cache
+    /// (for a 1-layer job this is the old per-trace hit flag).
     pub cache_hit: bool,
+    /// Step-carryover accounting: selected keys charged resident across
+    /// this job's steps (0 unless a decode job with carryover on).
+    pub carry_resident: usize,
+    /// Total selected keys across this job's steps (the carryover
+    /// denominator; 0 for model jobs).
+    pub carry_fetched: usize,
     /// Wall latency submit → result (queueing + planning + execution).
     pub wall_ns: f64,
     /// Why the job failed, if it did. Jobs with bad flow names are
@@ -150,6 +277,7 @@ pub struct JobResult {
 }
 
 impl JobResult {
+    /// Whether the job completed without error.
     pub fn is_ok(&self) -> bool {
         self.error.is_none()
     }
@@ -161,7 +289,10 @@ impl JobResult {
             ("model", Json::str(&self.model)),
             ("substrate", Json::str(&self.substrate)),
             ("layers", Json::num(self.layers as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
             ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("carry_resident", Json::num(self.carry_resident as f64)),
+            ("carry_fetched", Json::num(self.carry_fetched as f64)),
             ("wall_ns", Json::num(self.wall_ns)),
             (
                 "error",
@@ -195,20 +326,63 @@ impl JobResult {
 // Plan cache
 // ---------------------------------------------------------------------------
 
-struct CacheEntry {
-    plans: Arc<PlanSet>,
+/// What the coordinator's plan cache stores: a prefill layer's
+/// [`PlanSet`] or a decode step's [`StepPlan`]. Key domains are disjoint
+/// by construction ([`StepPlan::fingerprint_for`] salts its keys away
+/// from [`PlanSet::fingerprint_for`]), so one cache serves both shapes —
+/// the point being that decode steps ride the *existing* fingerprint-
+/// keyed LRU, hit accounting and all.
+#[derive(Debug)]
+pub enum Planned {
+    /// Algo-1 output for one prefill layer.
+    Layer(PlanSet),
+    /// Burst-ordered plan for one decode step.
+    Step(StepPlan),
+}
+
+impl Planned {
+    /// The layer plan set, if this entry is one.
+    pub fn as_layer(&self) -> Option<&PlanSet> {
+        match self {
+            Planned::Layer(p) => Some(p),
+            Planned::Step(_) => None,
+        }
+    }
+
+    /// The step plan, if this entry is one.
+    pub fn as_step(&self) -> Option<&StepPlan> {
+        match self {
+            Planned::Step(p) => Some(p),
+            Planned::Layer(_) => None,
+        }
+    }
+}
+
+struct CacheEntry<V> {
+    plans: Arc<V>,
     /// LRU stamp: shard clock value of the last touch.
     stamp: u64,
 }
 
-#[derive(Default)]
-struct CacheShard {
+struct CacheShard<V> {
     clock: u64,
-    map: HashMap<u64, CacheEntry>,
+    map: HashMap<u64, CacheEntry<V>>,
 }
 
-/// Sharded, LRU-bounded cache of [`PlanSet`]s keyed by
-/// [`PlanSet::fingerprint_for`] (mask fingerprint ⊕ engine-opts key).
+impl<V> Default for CacheShard<V> {
+    fn default() -> Self {
+        CacheShard { clock: 0, map: HashMap::new() }
+    }
+}
+
+/// Sharded, LRU-bounded cache of plans keyed by
+/// [`PlanSet::fingerprint_for`] / [`StepPlan::fingerprint_for`]
+/// (content fingerprint ⊕ engine-opts key).
+///
+/// Generic over the cached value: the coordinator instantiates it with
+/// [`Planned`] so prefill layers and decode steps share one cache;
+/// standalone callers (tests, benches) may cache bare [`PlanSet`]s, the
+/// default.
 ///
 /// Shards bound lock contention between plan workers; shard locks are
 /// held only for lookup/insert, never across an Algo-1 build, so a hit is
@@ -216,15 +390,15 @@ struct CacheShard {
 /// Eviction is least-recently-touched per shard. `capacity == 0` disables
 /// caching (every lookup misses and builds) — the cold baseline
 /// `benches/serve.rs` measures against.
-pub struct PlanCache {
-    shards: Vec<Mutex<CacheShard>>,
+pub struct PlanCache<V = PlanSet> {
+    shards: Vec<Mutex<CacheShard<V>>>,
     shard_cap: usize,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
 }
 
-impl PlanCache {
+impl<V> PlanCache<V> {
     /// `capacity` total cached plan sets (rounded up to a multiple of
     /// `shards`), spread over `shards` independently locked shards.
     pub fn new(capacity: usize, shards: usize) -> Self {
@@ -249,8 +423,8 @@ impl PlanCache {
     pub fn get_or_build(
         &self,
         key: u64,
-        build: impl FnOnce() -> PlanSet,
-    ) -> (Arc<PlanSet>, bool) {
+        build: impl FnOnce() -> V,
+    ) -> (Arc<V>, bool) {
         if self.shard_cap == 0 {
             self.misses.fetch_add(1, Ordering::Relaxed);
             return (Arc::new(build()), false);
@@ -288,10 +462,12 @@ impl PlanCache {
         (built, false)
     }
 
+    /// Lookups served from the cache so far.
     pub fn hits(&self) -> usize {
         self.hits.load(Ordering::Relaxed) as usize
     }
 
+    /// Lookups that had to build (including lost same-key races).
     pub fn misses(&self) -> usize {
         self.misses.load(Ordering::Relaxed) as usize
     }
@@ -310,6 +486,7 @@ impl PlanCache {
         self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
+    /// Whether the cache currently holds nothing.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -322,6 +499,7 @@ impl PlanCache {
 /// Aggregated coordinator metrics (see [`Coordinator::metrics`]).
 #[derive(Clone, Debug, Default)]
 pub struct CoordinatorMetrics {
+    /// Jobs accepted by [`Coordinator::submit`].
     pub jobs_submitted: usize,
     /// Jobs that produced a successful result.
     pub jobs_done: usize,
@@ -332,7 +510,24 @@ pub struct CoordinatorMetrics {
     pub flow_runs: usize,
     /// Total layers planned across all completed jobs.
     pub layers_planned: usize,
+    /// Decode tokens executed across all completed jobs (one per step).
+    pub tokens_done: usize,
+    /// Decode tokens per wall-clock second since the coordinator started
+    /// (snapshot-time rate; 0.0 before any token completes).
+    pub tokens_per_s: f64,
+    /// Decode sessions in flight right now (planned, not yet finalized).
+    pub live_sessions: usize,
+    /// Peak concurrent decode sessions in flight.
+    pub live_sessions_peak: usize,
+    /// Selected keys charged resident by step carryover, across all
+    /// completed decode jobs.
+    pub carry_resident_keys: usize,
+    /// Total selected keys across all completed decode jobs' steps (the
+    /// carryover denominator).
+    pub carry_fetched_keys: usize,
+    /// Plan-cache hits (layers + steps).
     pub cache_hits: usize,
+    /// Plan-cache misses (layers + steps).
     pub cache_misses: usize,
     /// Plan-cache LRU evictions (see [`PlanCache::evictions`]).
     pub cache_evictions: usize,
@@ -340,18 +535,30 @@ pub struct CoordinatorMetrics {
     /// on backpressure, so this measures demand and may exceed the
     /// configured `queue_cap`.
     pub plan_queue_peak: usize,
-    /// Peak planned jobs pending for stage 2 (same convention: includes a
-    /// plan worker blocked handing off).
+    /// Peak planned **units** pending for stage 2 (same convention:
+    /// includes a plan worker blocked handing off). A unit is a whole
+    /// prefill or one decode step, so a single S-token session
+    /// contributes up to 1 + S here.
     pub exec_queue_peak: usize,
-    /// Wall-latency percentiles (submit → result), in ns.
+    /// Wall-latency p50 (submit → result), in ns.
     pub wall_p50_ns: f64,
+    /// Wall-latency p95 (submit → result), in ns.
     pub wall_p95_ns: f64,
+    /// Wall-latency p99 (submit → result), in ns.
     pub wall_p99_ns: f64,
-    /// Sums over flow runs (simulated time/energy, not wall time).
+    /// Per-token wall-latency p50 (one decode step's execution), in ns.
+    pub token_p50_ns: f64,
+    /// Per-token wall-latency p95, in ns.
+    pub token_p95_ns: f64,
+    /// Per-token wall-latency p99, in ns.
+    pub token_p99_ns: f64,
+    /// Sum of simulated latency over flow runs (not wall time).
     pub total_latency_ns: f64,
+    /// Sum of simulated energy over flow runs.
     pub total_energy_pj: f64,
-    /// Means over flow runs, vs each job's dense baseline.
+    /// Mean throughput gain over flow runs, vs each job's dense baseline.
     pub mean_throughput_gain: f64,
+    /// Mean energy-efficiency gain over flow runs.
     pub mean_energy_gain: f64,
 }
 
@@ -366,6 +573,17 @@ impl CoordinatorMetrics {
         }
     }
 
+    /// Fraction of decode-step key fetches served resident by step
+    /// carryover, in [0, 1] — the schedule-derived reuse of PR 3
+    /// measured across time. 0.0 before any step executes.
+    pub fn carry_reuse_rate(&self) -> f64 {
+        if self.carry_fetched_keys == 0 {
+            0.0
+        } else {
+            self.carry_resident_keys as f64 / self.carry_fetched_keys as f64
+        }
+    }
+
     /// Machine-readable final metrics block (`serve --json`).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -374,6 +592,16 @@ impl CoordinatorMetrics {
             ("jobs_failed", Json::num(self.jobs_failed as f64)),
             ("flow_runs", Json::num(self.flow_runs as f64)),
             ("layers_planned", Json::num(self.layers_planned as f64)),
+            ("tokens_done", Json::num(self.tokens_done as f64)),
+            ("tokens_per_s", Json::num(self.tokens_per_s)),
+            ("live_sessions", Json::num(self.live_sessions as f64)),
+            ("live_sessions_peak", Json::num(self.live_sessions_peak as f64)),
+            ("carry_resident_keys", Json::num(self.carry_resident_keys as f64)),
+            ("carry_fetched_keys", Json::num(self.carry_fetched_keys as f64)),
+            ("carry_reuse_rate", Json::num(self.carry_reuse_rate())),
+            ("token_p50_ns", Json::num(self.token_p50_ns)),
+            ("token_p95_ns", Json::num(self.token_p95_ns)),
+            ("token_p99_ns", Json::num(self.token_p99_ns)),
             ("cache_hits", Json::num(self.cache_hits as f64)),
             ("cache_misses", Json::num(self.cache_misses as f64)),
             ("cache_evictions", Json::num(self.cache_evictions as f64)),
@@ -416,10 +644,15 @@ impl QueueGauge {
 #[derive(Default)]
 struct Agg {
     wall: LatencyHistogram,
+    /// Per-token execution wall time (one decode step unit, all flows).
+    token_wall: LatencyHistogram,
     done: usize,
     failed: usize,
     flow_runs: usize,
     layers_planned: usize,
+    tokens_done: usize,
+    carry_resident: usize,
+    carry_fetched: usize,
     total_latency_ns: f64,
     total_energy_pj: f64,
     thr_sum: f64,
@@ -430,6 +663,8 @@ struct Shared {
     submitted: AtomicUsize,
     plan_q: QueueGauge,
     exec_q: QueueGauge,
+    /// Decode sessions in flight (planned → finalized).
+    live_sessions: QueueGauge,
     agg: Mutex<Agg>,
 }
 
@@ -442,6 +677,9 @@ fn record_and_send(shared: &Shared, res_tx: &Sender<JobResult>, r: JobResult) {
         if r.is_ok() {
             agg.done += 1;
             agg.layers_planned += r.layers;
+            agg.tokens_done += r.tokens;
+            agg.carry_resident += r.carry_resident;
+            agg.carry_fetched += r.carry_fetched;
         } else {
             agg.failed += 1;
         }
@@ -460,20 +698,66 @@ fn record_and_send(shared: &Shared, res_tx: &Sender<JobResult>, r: JobResult) {
 // Pipeline
 // ---------------------------------------------------------------------------
 
-/// Stage-1 → stage-2 handoff: everything execution needs, with each
-/// layer's plans behind an `Arc` so cache hits share one allocation
-/// across jobs (and across correlated layers of one job).
-struct PlannedJob {
+/// Shared per-job state the execute stage folds its units into.
+///
+/// Continuous batching: a planned job is split into **units** — one for
+/// the prefill layers plus one per decode step — that enter the planned
+/// queue individually, so execute workers interleave decode steps from
+/// many live sessions with whole prefill jobs in the same pool. Each unit
+/// stores its reports here by position; the worker that completes the
+/// last unit assembles and streams the [`JobResult`].
+struct SessionAccum {
     id: usize,
     model: String,
-    dk: usize,
     flows: Vec<String>,
+    /// Canonical substrate name (resolved at plan time).
     substrate: String,
-    /// Per-layer plan sets, in layer order.
-    plans: Vec<Arc<PlanSet>>,
-    /// Layers served from the plan cache.
+    /// The job's substrate instance, built ONCE at plan time and shared
+    /// by every unit (it binds the trace's D_k; `Substrate: Send + Sync`
+    /// so units executing on different workers share it safely — the
+    /// systolic baseline memo is internally locked).
+    sub: Box<dyn Substrate>,
+    /// Prefill layers (for `JobResult::layers`).
+    layers: usize,
+    /// Decode steps (for `JobResult::tokens`).
+    tokens: usize,
+    /// Plan-cache hits across layers + steps.
     cache_hits: usize,
+    /// Carryover accounting summed at plan time (resident, fetched).
+    carry: (usize, usize),
     enqueued: Instant,
+    /// Units not yet executed; the worker that decrements this to zero
+    /// finalizes the job.
+    units_left: AtomicUsize,
+    parts: Mutex<Parts>,
+}
+
+/// Positional report storage: `dense_*`/`flow_*` slots filled by units as
+/// they complete (out of order), read once at finalize.
+#[derive(Default)]
+struct Parts {
+    dense_prefill: Vec<RunReport>,
+    /// `flow_prefill[f]` = per-layer reports of flow `f`.
+    flow_prefill: Vec<Vec<RunReport>>,
+    /// `dense_steps[t]` = the dense report of step `t`.
+    dense_steps: Vec<Option<RunReport>>,
+    /// `flow_steps[f][t]` = flow `f`'s report of step `t`.
+    flow_steps: Vec<Vec<Option<RunReport>>>,
+}
+
+/// One stage-1 → stage-2 work item (see [`SessionAccum`]).
+struct PlannedUnit {
+    accum: Arc<SessionAccum>,
+    kind: UnitKind,
+}
+
+enum UnitKind {
+    /// All prefill layers of the job, planned (one [`Arc`] per layer so
+    /// cache hits share allocations across jobs and layers).
+    Prefill(Vec<Arc<Planned>>),
+    /// One decode step: its index, KV length, shared plan, and per-head
+    /// resident-key counts (empty when carryover is off).
+    Step { t: usize, kv_len: usize, plan: Arc<Planned>, resident: Vec<usize> },
 }
 
 struct QueuedJob {
@@ -484,12 +768,15 @@ struct QueuedJob {
 /// Pipeline shape + cache sizing (see [`Coordinator::with_config`]).
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
+    /// Stage-1 (plan) worker threads.
     pub plan_workers: usize,
+    /// Stage-2 (execute) worker threads.
     pub exec_workers: usize,
     /// Bound of the submit→plan and plan→execute queues (backpressure).
     pub queue_cap: usize,
     /// Total [`PlanCache`] capacity; 0 disables caching.
     pub cache_capacity: usize,
+    /// Independently locked shards of the plan cache.
     pub cache_shards: usize,
 }
 
@@ -507,6 +794,24 @@ impl Default for CoordinatorConfig {
 
 /// Two-stage pipelined scheduling/simulation service with a shared plan
 /// cache. See the module docs for the pipeline diagram.
+///
+/// ```
+/// use sata::config::{SystemConfig, WorkloadSpec};
+/// use sata::coordinator::{Coordinator, Job};
+/// use sata::trace::synth::{gen_session, gen_trace};
+///
+/// let spec = WorkloadSpec::ttst();
+/// let coord = Coordinator::new(2, 4, SystemConfig::for_workload(&spec));
+/// // A prefill request and a 3-token decode session, served together.
+/// coord.submit(Job::new(0, gen_trace(&spec, 1), spec.sf)).unwrap();
+/// coord
+///     .submit(Job::new(1, gen_session(&spec, 1, 0.0, 3, 0.8, 2), spec.sf))
+///     .unwrap();
+/// let (results, metrics) = coord.drain();
+/// assert!(results.iter().all(|r| r.is_ok()));
+/// assert_eq!(results[1].tokens, 3);
+/// assert_eq!(metrics.tokens_done, 3);
+/// ```
 pub struct Coordinator {
     /// Intake sender; `close()` takes it (behind a mutex so a submitter
     /// thread can close while another streams results).
@@ -517,8 +822,10 @@ pub struct Coordinator {
     results_rx: Mutex<Receiver<JobResult>>,
     plan_workers: Vec<JoinHandle<()>>,
     exec_workers: Vec<JoinHandle<()>>,
-    cache: Arc<PlanCache>,
+    cache: Arc<PlanCache<Planned>>,
     shared: Arc<Shared>,
+    /// Service start time — the `tokens_per_s` denominator.
+    started: Instant,
 }
 
 impl Coordinator {
@@ -537,22 +844,25 @@ impl Coordinator {
         )
     }
 
+    /// Spawn the pipeline with explicit per-stage worker counts and cache
+    /// sizing (see [`CoordinatorConfig`]).
     pub fn with_config(sys: SystemConfig, cfg: CoordinatorConfig) -> Self {
         let queue_cap = cfg.queue_cap.max(1);
         let (job_tx, job_rx) = sync_channel::<QueuedJob>(queue_cap);
-        let (plan_tx, plan_rx) = sync_channel::<PlannedJob>(queue_cap);
+        let (plan_tx, plan_rx) = sync_channel::<PlannedUnit>(queue_cap);
         // Results are unbounded: backpressure lives at intake and between
         // the stages, so a slow results consumer can never deadlock the
         // pipeline against a fast submitter.
         let (res_tx, results_rx) = channel::<JobResult>();
         let job_rx = Arc::new(Mutex::new(job_rx));
         let plan_rx = Arc::new(Mutex::new(plan_rx));
-        let cache =
+        let cache: Arc<PlanCache<Planned>> =
             Arc::new(PlanCache::new(cfg.cache_capacity, cfg.cache_shards));
         let shared = Arc::new(Shared {
             submitted: AtomicUsize::new(0),
             plan_q: QueueGauge::default(),
             exec_q: QueueGauge::default(),
+            live_sessions: QueueGauge::default(),
             agg: Mutex::new(Agg::default()),
         });
 
@@ -575,10 +885,7 @@ impl Coordinator {
                 let plan_rx = Arc::clone(&plan_rx);
                 let res_tx = res_tx.clone();
                 let shared = Arc::clone(&shared);
-                let sys = sys.clone();
-                std::thread::spawn(move || {
-                    exec_worker(&plan_rx, &res_tx, &shared, &sys)
-                })
+                std::thread::spawn(move || exec_worker(&plan_rx, &res_tx, &shared))
             })
             .collect();
 
@@ -595,6 +902,7 @@ impl Coordinator {
             exec_workers,
             cache,
             shared,
+            started: Instant::now(),
         }
     }
 
@@ -681,12 +989,23 @@ impl Coordinator {
     /// Snapshot of the service metrics (callable while serving).
     pub fn metrics(&self) -> CoordinatorMetrics {
         let agg = self.shared.agg.lock().unwrap();
+        let elapsed_s = self.started.elapsed().as_secs_f64();
         CoordinatorMetrics {
             jobs_submitted: self.shared.submitted.load(Ordering::SeqCst),
             jobs_done: agg.done,
             jobs_failed: agg.failed,
             flow_runs: agg.flow_runs,
             layers_planned: agg.layers_planned,
+            tokens_done: agg.tokens_done,
+            tokens_per_s: if elapsed_s > 0.0 {
+                agg.tokens_done as f64 / elapsed_s
+            } else {
+                0.0
+            },
+            live_sessions: self.shared.live_sessions.depth.load(Ordering::SeqCst),
+            live_sessions_peak: self.shared.live_sessions.peak.load(Ordering::SeqCst),
+            carry_resident_keys: agg.carry_resident,
+            carry_fetched_keys: agg.carry_fetched,
             cache_hits: self.cache.hits(),
             cache_misses: self.cache.misses(),
             cache_evictions: self.cache.evictions(),
@@ -695,6 +1014,9 @@ impl Coordinator {
             wall_p50_ns: agg.wall.percentile(50.0),
             wall_p95_ns: agg.wall.percentile(95.0),
             wall_p99_ns: agg.wall.percentile(99.0),
+            token_p50_ns: agg.token_wall.percentile(50.0),
+            token_p95_ns: agg.token_wall.percentile(95.0),
+            token_p99_ns: agg.token_wall.percentile(99.0),
             total_latency_ns: agg.total_latency_ns,
             total_energy_pj: agg.total_energy_pj,
             mean_throughput_gain: if agg.flow_runs > 0 {
@@ -711,7 +1033,7 @@ impl Coordinator {
     }
 
     /// Shared plan cache (inspection / pre-warming).
-    pub fn cache(&self) -> &PlanCache {
+    pub fn cache(&self) -> &PlanCache<Planned> {
         &self.cache
     }
 
@@ -747,13 +1069,32 @@ impl Coordinator {
     }
 }
 
-/// Stage 1: validate, fingerprint **per layer**, plan each layer through
-/// the cache, hand off.
+/// Build the error [`JobResult`] validation failures report.
+fn error_result(job: Job, enqueued: Instant, error: String) -> JobResult {
+    JobResult {
+        id: job.id,
+        model: job.request.model().to_string(),
+        substrate: job.substrate,
+        layers: job.request.prefill().layers.len(),
+        tokens: job.request.n_steps(),
+        dense: ModelReport::default(),
+        flows: Vec::new(),
+        cache_hits: 0,
+        cache_hit: false,
+        carry_resident: 0,
+        carry_fetched: 0,
+        wall_ns: enqueued.elapsed().as_nanos() as f64,
+        error: Some(error),
+    }
+}
+
+/// Stage 1: validate, fingerprint **per layer and per step**, plan each
+/// through the cache, split the job into units, hand them off.
 fn plan_worker(
     job_rx: &Mutex<Receiver<QueuedJob>>,
-    plan_tx: &SyncSender<PlannedJob>,
+    plan_tx: &SyncSender<PlannedUnit>,
     res_tx: &Sender<JobResult>,
-    cache: &PlanCache,
+    cache: &PlanCache<Planned>,
     shared: &Shared,
     sys: &SystemConfig,
 ) {
@@ -766,6 +1107,7 @@ fn plan_worker(
         shared.plan_q.exit();
         let QueuedJob { job, enqueued } = queued;
 
+        let prefill = job.request.prefill();
         let error = if job.flows.is_empty() {
             Some("no flows requested".to_string())
         } else if let Some(bad) =
@@ -781,37 +1123,25 @@ fn plan_worker(
                 job.substrate,
                 substrate::substrate_names().join("|")
             ))
-        } else if job.trace.layers.is_empty() {
+        } else if prefill.layers.is_empty() {
             Some("model trace has no layers".to_string())
-        } else if let Some((i, _)) = job
-            .trace
+        } else if let Some((i, _)) = prefill
             .layers
             .iter()
             .enumerate()
             .find(|(_, l)| l.heads.is_empty())
         {
             Some(format!("layer {i} has no heads"))
+        } else if let Request::Decode(s) = &job.request {
+            // Directly-constructed sessions get the same structural
+            // checks the JSON loader enforces (KV growth, head counts,
+            // in-range duplicate-free selections).
+            s.validate().err()
         } else {
             None
         };
         if let Some(error) = error {
-            let layers = job.trace.layers.len();
-            record_and_send(
-                shared,
-                res_tx,
-                JobResult {
-                    id: job.id,
-                    model: job.trace.model,
-                    substrate: job.substrate,
-                    layers,
-                    dense: ModelReport::default(),
-                    flows: Vec::new(),
-                    cache_hits: 0,
-                    cache_hit: false,
-                    wall_ns: enqueued.elapsed().as_nanos() as f64,
-                    error: Some(error),
-                },
-            );
+            record_and_send(shared, res_tx, error_result(job, enqueued, error));
             continue;
         }
 
@@ -824,102 +1154,261 @@ fn plan_worker(
         // Each layer keys the cache independently — layers of one request
         // that re-select the previous layer's keys (high-rho workloads)
         // hit the plans the previous layer just published.
-        let mut plans = Vec::with_capacity(job.trace.layers.len());
         let mut cache_hits = 0usize;
-        for layer in &job.trace.layers {
+        let mut layer_plans = Vec::with_capacity(prefill.layers.len());
+        for layer in &prefill.layers {
             let key = PlanSet::fingerprint_for(&layer.heads, opts);
-            let (p, hit) =
-                cache.get_or_build(key, || PlanSet::build(&layer.heads, opts));
+            let (p, hit) = cache
+                .get_or_build(key, || Planned::Layer(PlanSet::build(&layer.heads, opts)));
+            if p.as_layer().is_none() {
+                // Astronomically unlikely cross-domain key collision:
+                // fall back to a private build rather than mis-execute.
+                layer_plans
+                    .push(Arc::new(Planned::Layer(PlanSet::build(&layer.heads, opts))));
+                continue;
+            }
             if hit {
                 cache_hits += 1;
             }
-            plans.push(p);
+            layer_plans.push(p);
         }
 
-        shared.exec_q.enter();
-        let dk = job.trace.dk();
-        let planned = PlannedJob {
+        // Decode steps plan through the SAME cache: a step that
+        // re-selects the previous step's keys fingerprints identically
+        // (KV growth notwithstanding) and hits the plan the previous
+        // step just published.
+        let mut step_units: Vec<(usize, usize, Arc<Planned>, Vec<usize>)> = Vec::new();
+        let mut carry = (0usize, 0usize);
+        if let Request::Decode(session) = &job.request {
+            let residency = carry_resident_counts(session);
+            for (t, step) in session.steps.iter().enumerate() {
+                let key = step.plan_key(opts);
+                let fp = step.fingerprint();
+                let (p, hit) = cache.get_or_build(key, || {
+                    Planned::Step(StepPlan::build(&step.heads, fp, opts))
+                });
+                let p = if p.as_step().is_some() {
+                    if hit {
+                        cache_hits += 1;
+                    }
+                    p
+                } else {
+                    Arc::new(Planned::Step(StepPlan::build(&step.heads, fp, opts)))
+                };
+                let resident: Vec<usize> = if job.carryover {
+                    residency[t].clone()
+                } else {
+                    vec![0; step.heads.len()]
+                };
+                carry.0 += resident.iter().sum::<usize>();
+                carry.1 += step.heads.iter().map(|h| h.len()).sum::<usize>();
+                step_units.push((t, step.kv_len, p, resident));
+            }
+        }
+
+        // The substrate is built once per job (it binds the trace's D_k)
+        // and shared by every unit; the default `cim` path builds exactly
+        // the config the pre-substrate worker used, so CIM reports stay
+        // bitwise identical.
+        let sspec =
+            substrate::by_name(&job.substrate).expect("validated above");
+        let sub = (sspec.build)(sys, prefill.dk());
+        let layers = prefill.layers.len();
+        let tokens = step_units.len();
+        let accum = Arc::new(SessionAccum {
             id: job.id,
-            model: job.trace.model,
-            dk,
+            model: job.request.model().to_string(),
             flows: job.flows,
-            substrate: job.substrate,
-            plans,
+            substrate: sspec.name.to_string(),
+            sub,
+            layers,
+            tokens,
             cache_hits,
+            carry,
             enqueued,
-        };
-        if plan_tx.send(planned).is_err() {
-            shared.exec_q.exit();
-            break; // execute stage gone; nothing left to do
+            units_left: AtomicUsize::new(1 + tokens),
+            parts: Mutex::new(Parts {
+                dense_prefill: Vec::new(),
+                flow_prefill: Vec::new(),
+                dense_steps: vec![None; tokens],
+                flow_steps: Vec::new(),
+            }),
+        });
+        if tokens > 0 {
+            shared.live_sessions.enter();
+        }
+
+        // Emit units: prefill first (it is the session's own step-0
+        // predecessor in queue order), then one unit per decode step.
+        // Units from different jobs interleave freely in the exec queue —
+        // that is the continuous batch.
+        let mut units = Vec::with_capacity(1 + tokens);
+        units.push(PlannedUnit {
+            accum: Arc::clone(&accum),
+            kind: UnitKind::Prefill(layer_plans),
+        });
+        for (t, kv_len, plan, resident) in step_units {
+            units.push(PlannedUnit {
+                accum: Arc::clone(&accum),
+                kind: UnitKind::Step { t, kv_len, plan, resident },
+            });
+        }
+        let mut dead = false;
+        for u in units {
+            shared.exec_q.enter();
+            if plan_tx.send(u).is_err() {
+                shared.exec_q.exit();
+                dead = true;
+                break; // execute stage gone; nothing left to do
+            }
+        }
+        if dead {
+            break;
         }
     }
 }
 
-/// Stage 2: per layer, run the dense baseline + every requested flow from
-/// the shared plans on the job's substrate; fold the per-layer reports
-/// into [`ModelReport`]s and stream the result.
+/// Execute one unit and, if it was the job's last, assemble and stream
+/// the [`JobResult`].
+fn exec_unit(unit: PlannedUnit, res_tx: &Sender<JobResult>, shared: &Shared) {
+    let acc = &unit.accum;
+    let sub: &dyn Substrate = &*acc.sub;
+
+    match unit.kind {
+        UnitKind::Prefill(plans) => {
+            // Execution stays layer-scoped (FlowBackend/Substrate simulate
+            // one layer's schedule); the request view is the fold of its
+            // layers + steps at finalize.
+            let run_layers = |b: &dyn FlowBackend| -> Vec<RunReport> {
+                plans
+                    .iter()
+                    .map(|p| b.run_on(p.as_layer().expect("prefill unit"), sub))
+                    .collect()
+            };
+            let dense = run_layers(&backend::DENSE);
+            let flows: Vec<Vec<RunReport>> = acc
+                .flows
+                .iter()
+                .map(|name| {
+                    let b = backend::by_name(name).expect("validated at plan stage");
+                    if b.name() == "dense" {
+                        dense.clone() // already executed as the baseline
+                    } else {
+                        run_layers(b)
+                    }
+                })
+                .collect();
+            let mut parts = acc.parts.lock().unwrap();
+            parts.dense_prefill = dense;
+            parts.flow_prefill = flows;
+        }
+        UnitKind::Step { t, kv_len, plan, resident } => {
+            let plan = plan.as_step().expect("step unit");
+            let exec = StepExec { kv_len, plan, resident: &resident };
+            let t0 = Instant::now();
+            let dense = sub.execute_step(&backend::DENSE, &exec);
+            let flows: Vec<RunReport> = acc
+                .flows
+                .iter()
+                .map(|name| {
+                    let b = backend::by_name(name).expect("validated at plan stage");
+                    if b.name() == "dense" {
+                        dense
+                    } else {
+                        sub.execute_step(b, &exec)
+                    }
+                })
+                .collect();
+            shared
+                .agg
+                .lock()
+                .unwrap()
+                .token_wall
+                .record(t0.elapsed().as_nanos() as f64);
+            let mut parts = acc.parts.lock().unwrap();
+            parts.dense_steps[t] = Some(dense);
+            if parts.flow_steps.is_empty() {
+                parts.flow_steps = vec![vec![None; acc.tokens]; acc.flows.len()];
+            }
+            for (f, rep) in flows.into_iter().enumerate() {
+                parts.flow_steps[f][t] = Some(rep);
+            }
+        }
+    }
+
+    // The worker completing the last unit finalizes the job.
+    if acc.units_left.fetch_sub(1, Ordering::SeqCst) != 1 {
+        return;
+    }
+    if acc.tokens > 0 {
+        shared.live_sessions.exit();
+    }
+    let parts = std::mem::take(&mut *acc.parts.lock().unwrap());
+    let fold = |prefill: Vec<RunReport>, steps: Vec<Option<RunReport>>| -> ModelReport {
+        let mut all = prefill;
+        all.extend(steps.into_iter().map(|r| r.expect("all units executed")));
+        ModelReport::fold(all)
+    };
+    let dense = fold(parts.dense_prefill, parts.dense_steps);
+    let flow_steps = if parts.flow_steps.is_empty() {
+        vec![Vec::new(); acc.flows.len()]
+    } else {
+        parts.flow_steps
+    };
+    let flows: Vec<FlowRun> = acc
+        .flows
+        .iter()
+        .zip(parts.flow_prefill.into_iter().zip(flow_steps))
+        .map(|(name, (prefill, steps))| {
+            let b = backend::by_name(name).expect("validated at plan stage");
+            let report = fold(prefill, steps);
+            let g = gains(&dense.total, &report.total);
+            FlowRun {
+                flow: b.name().to_string(),
+                report,
+                throughput_gain: g.throughput,
+                energy_gain: g.energy_eff,
+            }
+        })
+        .collect();
+
+    record_and_send(
+        shared,
+        res_tx,
+        JobResult {
+            id: acc.id,
+            model: acc.model.clone(),
+            substrate: acc.substrate.clone(),
+            layers: acc.layers,
+            tokens: acc.tokens,
+            dense,
+            flows,
+            cache_hits: acc.cache_hits,
+            cache_hit: acc.cache_hits == acc.layers + acc.tokens,
+            carry_resident: acc.carry.0,
+            carry_fetched: acc.carry.1,
+            wall_ns: acc.enqueued.elapsed().as_nanos() as f64,
+            error: None,
+        },
+    );
+}
+
+/// Stage 2: pull units — whole prefills and individual decode steps from
+/// any live session, interleaved — run the dense baseline + every
+/// requested flow on the job's substrate, and stream each [`JobResult`]
+/// as its last unit completes.
 fn exec_worker(
-    plan_rx: &Mutex<Receiver<PlannedJob>>,
+    plan_rx: &Mutex<Receiver<PlannedUnit>>,
     res_tx: &Sender<JobResult>,
     shared: &Shared,
-    sys: &SystemConfig,
 ) {
     loop {
-        let pj = match plan_rx.lock().unwrap().recv() {
+        let unit = match plan_rx.lock().unwrap().recv() {
             Ok(p) => p,
             Err(_) => break, // plan stage closed and drained
         };
         shared.exec_q.exit();
-
-        // Substrate instantiation is per job (it binds the trace's D_k);
-        // the default `cim` path builds exactly the config the pre-
-        // substrate worker used, so CIM reports stay bitwise identical.
-        let sspec =
-            substrate::by_name(&pj.substrate).expect("validated at plan stage");
-        let sub = (sspec.build)(sys, pj.dk);
-        // Execution stays layer-scoped (FlowBackend/Substrate simulate one
-        // layer's schedule); the request view is the fold of its layers.
-        let run_model = |b: &dyn FlowBackend| -> ModelReport {
-            ModelReport::fold(pj.plans.iter().map(|p| b.run_on(p, &*sub)).collect())
-        };
-        let dense = run_model(&backend::DENSE);
-        let layers = pj.plans.len();
-        let flows: Vec<FlowRun> = pj
-            .flows
-            .iter()
-            .map(|name| {
-                let b = backend::by_name(name).expect("validated at plan stage");
-                let report = if b.name() == "dense" {
-                    dense.clone() // already executed as the baseline
-                } else {
-                    run_model(b)
-                };
-                let g = gains(&dense.total, &report.total);
-                FlowRun {
-                    flow: b.name().to_string(),
-                    report,
-                    throughput_gain: g.throughput,
-                    energy_gain: g.energy_eff,
-                }
-            })
-            .collect();
-
-        record_and_send(
-            shared,
-            res_tx,
-            JobResult {
-                id: pj.id,
-                model: pj.model,
-                substrate: sspec.name.to_string(),
-                layers,
-                dense,
-                flows,
-                cache_hits: pj.cache_hits,
-                cache_hit: pj.cache_hits == layers,
-                wall_ns: pj.enqueued.elapsed().as_nanos() as f64,
-                error: None,
-            },
-        );
+        exec_unit(unit, res_tx, shared);
     }
 }
 
@@ -1234,6 +1723,108 @@ mod tests {
             (r.dense.latency_ns() - 4.0 * r.dense.layers[0].latency_ns).abs()
                 < 1e-6 * r.dense.latency_ns()
         );
+    }
+
+    #[test]
+    fn decode_jobs_hit_the_step_plan_cache_and_account_carryover() {
+        use crate::trace::synth::gen_session;
+        let spec = WorkloadSpec::ttst();
+        // kappa = 1: steps 1..5 re-select step 0 verbatim → 5 step hits
+        // within ONE session; the prefill layer is a cold miss.
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::with_config(
+            sys,
+            CoordinatorConfig { plan_workers: 1, exec_workers: 2, ..Default::default() },
+        );
+        let s = gen_session(&spec, 1, 0.0, 6, 1.0, 3);
+        coord.submit(Job::new(0, s.clone(), spec.sf)).unwrap();
+        // Same session with carryover disabled: an un-carried baseline.
+        coord
+            .submit(Job::new(1, s, spec.sf).with_carryover(false))
+            .unwrap();
+        let (results, metrics) = coord.drain();
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|r| r.is_ok()), "{:?}", results[0].error);
+        let r = &results[0];
+        assert_eq!(r.layers, 1);
+        assert_eq!(r.tokens, 6);
+        assert_eq!(r.cache_hits, 5, "5 verbatim re-selections must hit");
+        // Reports carry prefill + one entry per token.
+        assert_eq!(r.dense.n_layers(), 7);
+        assert_eq!(r.flows[0].report.n_layers(), 7);
+        // Carryover: identical consecutive selections are fully resident
+        // after step 0.
+        assert!(r.carry_fetched > 0);
+        assert_eq!(
+            r.carry_resident,
+            r.carry_fetched - r.carry_fetched / 6,
+            "steps 1..5 fully resident, step 0 fresh"
+        );
+        // The un-carried twin fetched everything fresh…
+        let u = &results[1];
+        assert_eq!(u.carry_resident, 0);
+        assert_eq!(u.carry_fetched, r.carry_fetched);
+        // …and pays strictly more simulated time + energy on the SATA
+        // flow (the per-token benefit of step carryover).
+        assert!(u.flows[0].report.latency_ns() > r.flows[0].report.latency_ns());
+        assert!(u.flows[0].report.total_pj() > r.flows[0].report.total_pj());
+        // Dense is carryover-blind: identical on both jobs.
+        assert_eq!(u.dense, r.dense);
+        // Metrics fold the decode side.
+        assert_eq!(metrics.tokens_done, 12);
+        assert_eq!(metrics.layers_planned, 2);
+        assert!(metrics.tokens_per_s > 0.0);
+        assert!(metrics.token_p50_ns > 0.0);
+        assert!(metrics.live_sessions_peak >= 1);
+        assert_eq!(metrics.live_sessions, 0, "all sessions finalized");
+        assert!(metrics.carry_reuse_rate() > 0.0);
+        // Step hits: 5 per job (the second job re-hits the first's plans
+        // for ALL its steps and its prefill layer).
+        assert_eq!(metrics.cache_hits, 5 + 7);
+    }
+
+    #[test]
+    fn zero_step_session_matches_model_job_exactly() {
+        // The decode path's compatibility anchor, exercised end to end in
+        // `tests/decode_sessions.rs` for all flows and substrates.
+        use crate::model::ModelTrace;
+        let spec = WorkloadSpec::drsformer();
+        let trace = gen_traces(&spec, 1, 9).pop().unwrap();
+        let model = ModelTrace::from(trace);
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::new(2, 4, sys);
+        coord.submit(Job::new(0, model.clone(), spec.sf)).unwrap();
+        coord
+            .submit(Job::new(1, crate::decode::DecodeSession::from(model), spec.sf))
+            .unwrap();
+        let (results, metrics) = coord.drain();
+        assert!(results.iter().all(|r| r.is_ok()));
+        assert_eq!(results[1].tokens, 0);
+        assert_eq!(results[0].dense, results[1].dense);
+        assert_eq!(results[0].flows[0].report, results[1].flows[0].report);
+        // A 0-step session is not a live decode session.
+        assert_eq!(metrics.live_sessions_peak, 0);
+        assert_eq!(metrics.tokens_done, 0);
+        assert_eq!(metrics.carry_fetched_keys, 0);
+    }
+
+    #[test]
+    fn malformed_decode_session_is_an_explicit_error() {
+        use crate::trace::synth::gen_session;
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::new(1, 2, sys);
+        let mut s = gen_session(&spec, 1, 0.0, 3, 0.5, 4);
+        s.steps[2].kv_len = 9999; // KV growth violated
+        coord.submit(Job::new(0, s, spec.sf)).unwrap();
+        let (results, metrics) = coord.drain();
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert!(!r.is_ok());
+        assert!(r.error.as_ref().unwrap().contains("kv_len"), "{:?}", r.error);
+        assert_eq!(metrics.jobs_failed, 1);
+        // rejected before planning: the cache never saw it
+        assert_eq!(metrics.cache_misses + metrics.cache_hits, 0);
     }
 
     #[test]

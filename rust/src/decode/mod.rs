@@ -1,0 +1,564 @@
+//! Autoregressive **decode sessions**: the streaming unit of work.
+//!
+//! Prefill-shaped requests ([`crate::model::ModelTrace`]) plan a fixed
+//! mask set once and execute it. Decode is different: each generated
+//! token re-selects TopK keys from a KV set **grown** by every prior
+//! step, and consecutive steps overlap heavily in which keys they touch —
+//! the temporally-correlated regime SpAtten's cascade pruning and
+//! HashAttention's semantic top-k selection target, and exactly where the
+//! paper's early-fetch/early-retirement locality matters most.
+//!
+//! A [`DecodeSession`] is one request's full lifetime: the prefill
+//! [`ModelTrace`] plus one [`StepMask`] per generated token. Two pieces
+//! of machinery exploit the cross-step locality:
+//!
+//! * **Plan reuse** — each step plans through the coordinator's
+//!   fingerprint-keyed plan cache ([`StepPlan`]); a step that re-selects
+//!   the previous step's keys fingerprints identically and hits the plan
+//!   the previous step just published (the per-layer hit story of PR 4,
+//!   generalized across time — `trace::synth::gen_session`'s `kappa`
+//!   knob dials it, `benches/decode_serve.rs` measures it).
+//! * **Step-carryover residency** ([`carry_residency`]) — keys fetched at
+//!   step *t* and re-selected at step *t+1* are charged as resident
+//!   instead of refetched on flows whose
+//!   [`AccessProfile::carryover`](crate::engine::backend::AccessProfile)
+//!   discipline supports it (the schedule-derived reuse of PR 3,
+//!   generalized across time).
+//!
+//! On-disk format: `{"model", "prefill": <ModelTrace>, "steps":
+//! [{"kv_len", "heads": [[k, …], …]}, …]}`. A bare [`ModelTrace`] (or
+//! single-layer [`crate::trace::MaskTrace`]) file parses as a **0-step
+//! session**, which executes bitwise identically to the prefill-only
+//! path (`tests/decode_sessions.rs` pins this for all seven flows on
+//! both substrates).
+
+use crate::engine::backend::{FlowBackend, PlanSet, StepPlan};
+use crate::engine::substrate::{StepExec, Substrate};
+use crate::engine::EngineOpts;
+use crate::model::report::ModelReport;
+use crate::model::ModelTrace;
+use crate::util::json::Json;
+use crate::util::rng::mix64;
+
+/// One decode step: the newly generated token's TopK key selection, per
+/// head, over the KV set grown by every prior step.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StepMask {
+    /// KV set size at this step: `prefill.seq_len + t + 1` at step `t`
+    /// (prefill tokens plus every generated token so far, including this
+    /// one — self-attention over the grown set).
+    pub kv_len: usize,
+    /// Per-head selected key indices (validated in-range and
+    /// duplicate-free on every ingestion path).
+    pub heads: Vec<Vec<usize>>,
+}
+
+impl StepMask {
+    /// 64-bit content fingerprint over the per-head selections —
+    /// **deliberately `kv_len`-independent**, so a verbatim re-selection
+    /// one token later (when the KV set has grown by one) fingerprints
+    /// identically and hits the previous step's cached plan. `kv_len`
+    /// never influences planning (see
+    /// [`StepPlan`]); it is validated structurally and consumed at
+    /// execute time by the dense flow only.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = mix64(self.heads.len() as u64 ^ 0x5354_4550_4D41_534B); // "STEPMASK"
+        for keys in &self.heads {
+            h = mix64(h ^ keys.len() as u64);
+            for &k in keys {
+                h = mix64(h ^ k as u64);
+            }
+        }
+        h
+    }
+
+    /// The plan-cache key this step plans under (see
+    /// [`StepPlan::fingerprint_for`]).
+    pub fn plan_key(&self, opts: EngineOpts) -> u64 {
+        StepPlan::fingerprint_for(self.fingerprint(), opts)
+    }
+
+    /// Build the flow-independent burst-ordered plan for this step.
+    pub fn plan(&self, opts: EngineOpts) -> StepPlan {
+        StepPlan::build(&self.heads, self.fingerprint(), opts)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kv_len", Json::num(self.kv_len as f64)),
+            (
+                "heads",
+                Json::Arr(self.heads.iter().map(|h| Json::arr_usize(h)).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let kv_len = j.get("kv_len").as_usize().ok_or("missing 'kv_len'")?;
+        let heads_j = j.get("heads").as_arr().ok_or("missing 'heads'")?;
+        let heads: Vec<Vec<usize>> = heads_j
+            .iter()
+            .map(|hj| {
+                hj.as_arr()
+                    .ok_or("head must be an index array".to_string())?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or("bad index".to_string()))
+                    .collect()
+            })
+            .collect::<Result<_, _>>()?;
+        Ok(StepMask { kv_len, heads })
+    }
+}
+
+/// One autoregressive decode session: a prefill request plus the per-token
+/// selection trace of its generation — the coordinator's streaming unit
+/// of work (`Job` constructors accept it via `impl Into<Request>`).
+///
+/// ```
+/// use sata::config::WorkloadSpec;
+/// use sata::decode::DecodeSession;
+/// use sata::trace::synth::gen_session;
+///
+/// let spec = WorkloadSpec::ttst();
+/// // 4 generated tokens; kappa = 1 re-selects each step verbatim.
+/// let s = gen_session(&spec, 1, 0.0, 4, 1.0, 5);
+/// assert_eq!(s.n_steps(), 4);
+/// s.validate().unwrap();
+/// assert!((s.step_overlap() - 1.0).abs() < 1e-12);
+/// // The KV set grows by one per token.
+/// assert_eq!(s.steps[3].kv_len, s.prefill.seq_len + 4);
+/// // JSON round-trip preserves identity.
+/// let back = DecodeSession::from_json(&s.to_json()).unwrap();
+/// assert_eq!(back.fingerprint(), s.fingerprint());
+/// ```
+#[derive(Clone, Debug)]
+pub struct DecodeSession {
+    /// Source model name (informational, like [`ModelTrace::model`]).
+    pub model: String,
+    /// The prefill request: planned and executed exactly like a
+    /// standalone [`ModelTrace`] job.
+    pub prefill: ModelTrace,
+    /// One [`StepMask`] per generated token, in generation order.
+    pub steps: Vec<StepMask>,
+}
+
+impl From<ModelTrace> for DecodeSession {
+    /// A prefill-only request is a 0-step session — the compatibility
+    /// bridge that keeps every prefill corpus servable through the decode
+    /// path (pinned bitwise in `tests/decode_sessions.rs`).
+    fn from(m: ModelTrace) -> Self {
+        DecodeSession { model: m.model.clone(), prefill: m, steps: Vec::new() }
+    }
+}
+
+impl From<crate::trace::MaskTrace> for DecodeSession {
+    fn from(t: crate::trace::MaskTrace) -> Self {
+        DecodeSession::from(ModelTrace::from(t))
+    }
+}
+
+impl DecodeSession {
+    /// Generated tokens in the session.
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// KV set size at step `t`: prefill tokens + `t + 1` generated.
+    pub fn kv_len_at(&self, t: usize) -> usize {
+        self.prefill.seq_len + t + 1
+    }
+
+    /// Structural validity: every ingestion path (JSON, synth, direct
+    /// construction submitted to the coordinator) must satisfy this.
+    ///
+    /// * step `t`'s `kv_len` is exactly [`DecodeSession::kv_len_at`]`(t)`
+    ///   (the KV set grows by one per token — no gaps, no shrinkage);
+    /// * every step has the prefill's head count (uniform across layers
+    ///   by [`ModelTrace::from_json`], so layer 0 anchors it);
+    /// * every head selects at least one key, in range, duplicate-free.
+    pub fn validate(&self) -> Result<(), String> {
+        let Some(layer0) = self.prefill.layers.first() else {
+            return Err("session prefill has no layers".into());
+        };
+        let n_heads = layer0.heads.len();
+        for (t, step) in self.steps.iter().enumerate() {
+            let want_kv = self.kv_len_at(t);
+            if step.kv_len != want_kv {
+                return Err(format!(
+                    "step {t}: kv_len {} != seq_len + t + 1 = {want_kv}",
+                    step.kv_len
+                ));
+            }
+            if step.heads.len() != n_heads {
+                return Err(format!(
+                    "step {t}: {} heads, prefill has {n_heads}",
+                    step.heads.len()
+                ));
+            }
+            for (h, keys) in step.heads.iter().enumerate() {
+                if keys.is_empty() {
+                    return Err(format!("step {t} head {h}: empty selection"));
+                }
+                let mut seen = vec![false; step.kv_len];
+                for &k in keys {
+                    if k >= step.kv_len {
+                        return Err(format!(
+                            "step {t} head {h}: key index {k} out of range (kv_len = {})",
+                            step.kv_len
+                        ));
+                    }
+                    if seen[k] {
+                        return Err(format!(
+                            "step {t} head {h}: duplicate key index {k}"
+                        ));
+                    }
+                    seen[k] = true;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// 64-bit content fingerprint: the prefill fingerprint chained with
+    /// every step's `kv_len` and selection ([`mix64`]-mixed, position-
+    /// sensitive). Unlike [`StepMask::fingerprint`] this is a full
+    /// session identity and **does** cover `kv_len`.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = mix64(self.prefill.fingerprint() ^ 0x4445_434F_4445_5353); // "DECODESS"
+        for s in &self.steps {
+            h = mix64(h ^ s.kv_len as u64);
+            h = mix64(h ^ s.fingerprint());
+        }
+        h
+    }
+
+    /// Mean fraction of a step's selected keys that the *previous* step
+    /// also selected, over all consecutive step pairs and heads — the
+    /// measured counterpart of the generator's `kappa` knob
+    /// (`trace::synth::gen_session`), and exactly the fraction
+    /// step-carryover residency can serve on-chip. 0.0 for sessions with
+    /// fewer than two steps.
+    pub fn step_overlap(&self) -> f64 {
+        let mut acc = 0.0;
+        let mut rows = 0usize;
+        for w in self.steps.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            for (ha, hb) in a.heads.iter().zip(&b.heads) {
+                let inter = hb.iter().filter(|k| ha.contains(k)).count();
+                acc += inter as f64 / hb.len().max(1) as f64;
+                rows += 1;
+            }
+        }
+        if rows == 0 {
+            0.0
+        } else {
+            acc / rows as f64
+        }
+    }
+
+    /// Machine/disk representation (see the module docs for the format).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("prefill", self.prefill.to_json()),
+            ("steps", Json::Arr(self.steps.iter().map(|s| s.to_json()).collect())),
+        ])
+    }
+
+    /// Total parse: any structurally-valid JSON yields `Ok` or a
+    /// descriptive per-file `Err` — never a panic (the hostile-input
+    /// discipline of [`ModelTrace::from_json`], which handles the
+    /// prefill). A file with no `"prefill"` key parses as a **0-step
+    /// session** via the [`ModelTrace`] loader (which itself accepts bare
+    /// single-layer files), so every existing corpus keeps loading.
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        if *j.get("prefill") == Json::Null {
+            return ModelTrace::from_json(j).map(DecodeSession::from);
+        }
+        let prefill = ModelTrace::from_json(j.get("prefill"))
+            .map_err(|e| format!("prefill: {e}"))?;
+        // A present-but-wrong-typed "steps" is corruption, not a 0-step
+        // session: only a missing key (or an explicit empty array) means
+        // "no generated tokens yet".
+        let steps = match j.get("steps") {
+            Json::Null => Vec::new(),
+            steps_v => steps_v
+                .as_arr()
+                .ok_or("'steps' must be an array of step masks")?
+                .iter()
+                .enumerate()
+                .map(|(t, sj)| {
+                    StepMask::from_json(sj).map_err(|e| format!("step {t}: {e}"))
+                })
+                .collect::<Result<_, _>>()?,
+        };
+        let model = j
+            .get("model")
+            .as_str()
+            .unwrap_or(&prefill.model)
+            .to_string();
+        let s = DecodeSession { model, prefill, steps };
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Write the session as JSON.
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().emit())
+    }
+
+    /// Load and validate a session file (see [`DecodeSession::from_json`]).
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(&j)
+    }
+}
+
+/// The step-carryover residency sets of a session: for each step and
+/// head, the keys this step re-selects **from the previous step's fetch
+/// set** — `selected(t) ∩ selected(t−1)`, in ascending order.
+///
+/// The residency contract: a key is only ever claimed resident if the
+/// previous step actually fetched it (selective flows fetch exactly their
+/// selection), so step 0 — with no predecessor — carries nothing, and the
+/// prefill deliberately seeds no residency (its working set is retired
+/// wholesale when generation starts). Property-tested in
+/// `tests/decode_sessions.rs`.
+pub fn carry_residency(s: &DecodeSession) -> Vec<Vec<Vec<usize>>> {
+    residency_impl(s, |resident| {
+        let mut r = resident;
+        r.sort_unstable();
+        r
+    })
+}
+
+/// Per-step, per-head **counts** of carried-resident keys —
+/// `|selected(t) ∩ selected(t−1)|`. This is all the execution path
+/// consumes (`StepExec::resident`), so the coordinator and
+/// [`run_session`] use it instead of materializing the full sets
+/// ([`carry_residency`] remains for diagnostics and the residency
+/// property tests).
+pub fn carry_resident_counts(s: &DecodeSession) -> Vec<Vec<usize>> {
+    residency_impl(s, |resident| resident.len())
+}
+
+/// Shared intersection walk: O(K) per head via a membership array over
+/// the previous step's KV set (every index < `prev.kv_len` < `kv_len`),
+/// not O(K²) `contains` scans.
+fn residency_impl<T>(
+    s: &DecodeSession,
+    finish: impl Fn(Vec<usize>) -> T,
+) -> Vec<Vec<T>> {
+    let mut out = Vec::with_capacity(s.steps.len());
+    let mut in_prev: Vec<bool> = Vec::new();
+    for (t, step) in s.steps.iter().enumerate() {
+        let per_head: Vec<T> = if t == 0 {
+            step.heads.iter().map(|_| finish(Vec::new())).collect()
+        } else {
+            let prev = &s.steps[t - 1];
+            step.heads
+                .iter()
+                .zip(&prev.heads)
+                .map(|(cur, before)| {
+                    in_prev.clear();
+                    in_prev.resize(prev.kv_len, false);
+                    for &k in before {
+                        in_prev[k] = true;
+                    }
+                    finish(
+                        cur.iter()
+                            .copied()
+                            .filter(|&k| k < prev.kv_len && in_prev[k])
+                            .collect(),
+                    )
+                })
+                .collect()
+        };
+        out.push(per_head);
+    }
+    out
+}
+
+/// Plan and execute one whole session for one flow on one substrate — the
+/// single-threaded reference path (`simulate --steps`, golden tests). The
+/// coordinator's pipelined path executes exactly these primitives per
+/// unit; both fold to a [`ModelReport`] whose first
+/// [`n_layers`](ModelTrace::n_layers) entries are the prefill layers and
+/// whose remaining entries are the per-token step reports.
+///
+/// `carryover = false` forces every step fresh — the un-carried baseline
+/// `benches/decode_serve.rs` measures the residency win against.
+pub fn run_session(
+    flow: &dyn FlowBackend,
+    session: &DecodeSession,
+    sub: &dyn Substrate,
+    opts: EngineOpts,
+    carryover: bool,
+) -> ModelReport {
+    let mut reports: Vec<crate::engine::RunReport> = session
+        .prefill
+        .layers
+        .iter()
+        .map(|l| {
+            let plans = PlanSet::build(&l.heads, opts);
+            flow.run_on(&plans, sub)
+        })
+        .collect();
+    let residency = carry_resident_counts(session);
+    for (t, step) in session.steps.iter().enumerate() {
+        let plan = step.plan(opts);
+        let resident: Vec<usize> = if carryover {
+            residency[t].clone()
+        } else {
+            vec![0; step.heads.len()]
+        };
+        let exec = StepExec { kv_len: step.kv_len, plan: &plan, resident: &resident };
+        reports.push(sub.execute_step(flow, &exec));
+    }
+    ModelReport::fold(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadSpec;
+    use crate::trace::synth::{gen_session, gen_trace};
+
+    fn tiny_session(steps: usize) -> DecodeSession {
+        let spec = WorkloadSpec::ttst();
+        gen_session(&spec, 2, 0.5, steps, 0.5, 7)
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_session_and_fingerprint() {
+        let s = tiny_session(4);
+        let back = DecodeSession::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.n_steps(), 4);
+        assert_eq!(back.prefill.n_layers(), 2);
+        assert_eq!(back.fingerprint(), s.fingerprint());
+        assert_eq!(back.steps, s.steps);
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn bare_model_and_mask_files_parse_as_zero_step_sessions() {
+        let spec = WorkloadSpec::ttst();
+        let t = gen_trace(&spec, 3);
+        let s = DecodeSession::from_json(&t.to_json()).unwrap();
+        assert_eq!(s.n_steps(), 0);
+        assert_eq!(s.prefill.n_layers(), 1);
+        assert_eq!(s.prefill.layers[0].fingerprint(), t.fingerprint());
+        // The From impls match the parse path.
+        let via_from = DecodeSession::from(t);
+        assert_eq!(via_from.fingerprint(), s.fingerprint());
+    }
+
+    #[test]
+    fn step_fingerprint_is_kv_len_independent() {
+        // A verbatim re-selection one token later must hit the plan cache:
+        // same plan key despite the grown KV set.
+        let a = StepMask { kv_len: 31, heads: vec![vec![1, 5, 9]] };
+        let b = StepMask { kv_len: 32, heads: vec![vec![1, 5, 9]] };
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let opts = EngineOpts::default();
+        assert_eq!(a.plan_key(opts), b.plan_key(opts));
+        // …but a different selection never collides in practice.
+        let c = StepMask { kv_len: 31, heads: vec![vec![1, 5, 10]] };
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // The session identity is content identity and DOES see kv_len.
+        let sa = DecodeSession::from_json(&tiny_session(2).to_json()).unwrap();
+        let mut sb = sa.clone();
+        sb.steps.pop();
+        assert_ne!(sa.fingerprint(), sb.fingerprint());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_sessions() {
+        let s = tiny_session(3);
+        s.validate().unwrap();
+
+        let mut bad = s.clone();
+        bad.steps[1].kv_len += 1;
+        assert!(bad.validate().unwrap_err().contains("kv_len"));
+
+        let mut bad = s.clone();
+        bad.steps[0].heads.pop();
+        assert!(bad.validate().unwrap_err().contains("heads"));
+
+        let mut bad = s.clone();
+        let kv = bad.steps[2].kv_len;
+        bad.steps[2].heads[0] = vec![kv + 5];
+        assert!(bad.validate().unwrap_err().contains("out of range"));
+
+        let mut bad = s.clone();
+        bad.steps[2].heads[0] = vec![1, 1];
+        assert!(bad.validate().unwrap_err().contains("duplicate"));
+
+        let mut bad = s.clone();
+        bad.steps[0].heads[0].clear();
+        assert!(bad.validate().unwrap_err().contains("empty"));
+
+        // from_json re-checks: a hostile file yields a per-file Err.
+        let mut bad = s;
+        bad.steps[1].kv_len = 999;
+        assert!(DecodeSession::from_json(&bad.to_json()).is_err());
+
+        // A present-but-wrong-typed "steps" is corruption, not a 0-step
+        // session.
+        let prefill = tiny_session(0).prefill.to_json().emit();
+        let corrupt =
+            Json::parse(&format!(r#"{{"prefill": {prefill}, "steps": 17}}"#)).unwrap();
+        let e = DecodeSession::from_json(&corrupt).unwrap_err();
+        assert!(e.contains("steps"), "{e}");
+        // …but a missing "steps" key is a legitimate 0-step session.
+        let bare = Json::parse(&format!(r#"{{"prefill": {prefill}}}"#)).unwrap();
+        assert_eq!(DecodeSession::from_json(&bare).unwrap().n_steps(), 0);
+    }
+
+    #[test]
+    fn carry_residency_is_a_subset_of_the_previous_fetch() {
+        let s = tiny_session(5);
+        let res = carry_residency(&s);
+        assert_eq!(res.len(), 5);
+        assert!(res[0].iter().all(|h| h.is_empty()), "step 0 carries nothing");
+        // The counts-only fast path agrees with the full sets.
+        let counts = carry_resident_counts(&s);
+        for (full, fast) in res.iter().zip(&counts) {
+            let want: Vec<usize> = full.iter().map(|h| h.len()).collect();
+            assert_eq!(&want, fast);
+        }
+        for t in 1..5 {
+            for (h, keys) in res[t].iter().enumerate() {
+                for k in keys {
+                    assert!(
+                        s.steps[t - 1].heads[h].contains(k),
+                        "step {t} head {h}: key {k} not fetched by step {}",
+                        t - 1
+                    );
+                    assert!(
+                        s.steps[t].heads[h].contains(k),
+                        "step {t} head {h}: resident key {k} not even selected"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_overlap_bounds_and_identity() {
+        let s = tiny_session(1);
+        assert_eq!(s.step_overlap(), 0.0, "one step has no transitions");
+        let s = tiny_session(6);
+        let o = s.step_overlap();
+        assert!((0.0..=1.0).contains(&o), "{o}");
+        // A session whose steps all copy each other overlaps fully.
+        let mut copied = s.clone();
+        let proto = copied.steps[0].heads.clone();
+        for (t, step) in copied.steps.iter_mut().enumerate() {
+            step.heads = proto.clone();
+            step.kv_len = s.prefill.seq_len + t + 1;
+        }
+        assert!((copied.step_overlap() - 1.0).abs() < 1e-12);
+    }
+}

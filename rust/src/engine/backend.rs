@@ -42,6 +42,7 @@ use super::{chunked_k_uses, EngineOpts, RunReport};
 /// exact planned bytes with zero re-sorting and zero copying.
 #[derive(Clone, Debug)]
 pub struct PlanSet {
+    /// Per-head Algo-1 plans, in head order.
     pub plans: Vec<HeadPlan>,
     /// Engine options the plans were built with (θ, seed, fold size).
     pub opts: EngineOpts,
@@ -82,8 +83,81 @@ impl PlanSet {
         self.plans[0].mask.n()
     }
 
+    /// Heads planned.
     pub fn n_heads(&self) -> usize {
         self.plans.len()
+    }
+}
+
+/// Flow-independent plan for one autoregressive **decode step** — the
+/// decode analogue of [`PlanSet`].
+///
+/// A decode step computes attention for the single newly generated token:
+/// per head, one query row selecting TopK keys from the KV set grown by
+/// every prior step. There is nothing for Algo 1 to sort *across queries*
+/// (there is only one), so planning reduces to fixing the fetch order:
+/// the selected keys in ascending index order — the sequential-burst
+/// stream SATA's front-end would emit. The plan is keyed into the same
+/// plan cache as layer [`PlanSet`]s (`StepPlan::fingerprint_for`), so
+/// consecutive steps that re-select the same keys (high-`kappa` sessions,
+/// see `trace::synth::gen_session`) hit each other's plans.
+///
+/// Deliberately **KV-length-independent**: the plan depends only on which
+/// keys are selected, not on how far the KV set has grown, so a verbatim
+/// re-selection one token later fingerprints identically (the decode
+/// analogue of [`crate::trace::MaskTrace::fingerprint`] excluding
+/// metadata). Execution takes the step's `kv_len` alongside the plan
+/// (`super::substrate::StepExec`) — only the dense flow consumes it.
+#[derive(Clone, Debug)]
+pub struct StepPlan {
+    /// Per-head selected-key indices in ascending (sequential-burst)
+    /// order.
+    pub heads: Vec<Vec<usize>>,
+    /// Engine options the plan was built with (index precision matters at
+    /// execute time; `sf`/θ/seed are inert for a single-query step but
+    /// keep the cache key aligned with the layer path).
+    pub opts: EngineOpts,
+    /// Cache identity: step-mask fingerprint mixed with the opts key (see
+    /// [`StepPlan::fingerprint_for`]).
+    pub fingerprint: u64,
+}
+
+/// Domain separator between layer-plan and step-plan cache keys (both
+/// live in the coordinator's one plan cache).
+const STEP_PLAN_SALT: u64 = 0x5743_4150_5F53_5445; // "STEP_CAPW" flavour
+
+impl StepPlan {
+    /// Build the burst-ordered plan from a step's raw per-head selections
+    /// (`step_fingerprint` = `decode::StepMask::fingerprint`).
+    pub fn build(heads: &[Vec<usize>], step_fingerprint: u64, opts: EngineOpts) -> Self {
+        let heads = heads
+            .iter()
+            .map(|h| {
+                let mut h = h.clone();
+                h.sort_unstable();
+                h
+            })
+            .collect();
+        StepPlan { heads, opts, fingerprint: Self::fingerprint_for(step_fingerprint, opts) }
+    }
+
+    /// The cache key [`StepPlan::build`] stamps for a step with this
+    /// content fingerprint under these options — salted so step keys can
+    /// never alias layer keys ([`PlanSet::fingerprint_for`]) even for
+    /// adversarial masks.
+    pub fn fingerprint_for(step_fingerprint: u64, opts: EngineOpts) -> u64 {
+        use crate::util::rng::mix64;
+        mix64(step_fingerprint ^ opts.cache_key() ^ STEP_PLAN_SALT)
+    }
+
+    /// Heads in the step.
+    pub fn n_heads(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// Total selected keys across heads (the step's K-fetch demand).
+    pub fn total_selected(&self) -> usize {
+        self.heads.iter().map(|h| h.len()).sum()
     }
 }
 
@@ -91,7 +165,9 @@ impl PlanSet {
 /// tiled sub-head schedule per head (Sec. III-D).
 #[derive(Clone, Debug)]
 pub enum FlowSchedule {
+    /// One whole-head Algo-2 step stream.
     Whole(Schedule),
+    /// One tiled sub-head schedule per head (`opts.sf` set).
     Tiled(Vec<TiledSchedule>),
 }
 
@@ -143,23 +219,66 @@ pub struct AccessProfile {
     /// The flow computes a mask-selected workload (drives schedule-derived
     /// locality reuse; dense streaming has nothing to reuse).
     pub selective: bool,
+    /// Decode-time **step carryover**: the flow's sorted, deterministic
+    /// fetch discipline keeps the previous step's key set identifiable, so
+    /// keys re-selected by the next generated token are charged as
+    /// resident instead of refetched ([`derived_reuse`] generalized across
+    /// time — see `Substrate::execute_step`). Fragmented demand fetching
+    /// retains no such discipline, and dense streaming refetches the whole
+    /// grown KV set anyway.
+    ///
+    /// [`derived_reuse`]: super::substrate::derived_reuse
+    pub carryover: bool,
 }
 
 impl AccessProfile {
     /// Dense streaming: trivially sequential and prefetchable.
-    pub const SEQUENTIAL_DENSE: AccessProfile =
-        AccessProfile { sorted: true, prefetch: true, selective: false };
+    pub const SEQUENTIAL_DENSE: AccessProfile = AccessProfile {
+        sorted: true,
+        prefetch: true,
+        selective: false,
+        carryover: false,
+    };
     /// Un-scheduled selective flow: scattered gathers, demand-fetched —
     /// the Sec. IV-B systolic baseline.
-    pub const FRAGMENTED_SELECTIVE: AccessProfile =
-        AccessProfile { sorted: false, prefetch: false, selective: true };
+    pub const FRAGMENTED_SELECTIVE: AccessProfile = AccessProfile {
+        sorted: false,
+        prefetch: false,
+        selective: true,
+        carryover: false,
+    };
     /// SATA-front-ended selective flow: sorted bursts, prefetch overlap,
-    /// schedule-derived locality.
-    pub const SORTED_SELECTIVE: AccessProfile =
-        AccessProfile { sorted: true, prefetch: true, selective: true };
+    /// schedule-derived locality — including cross-step carryover at
+    /// decode time.
+    pub const SORTED_SELECTIVE: AccessProfile = AccessProfile {
+        sorted: true,
+        prefetch: true,
+        selective: true,
+        carryover: true,
+    };
 }
 
 /// One execution flow behind the plan → schedule → execute pipeline.
+///
+/// ```
+/// use sata::engine::backend::{self, PlanSet};
+/// use sata::engine::EngineOpts;
+/// use sata::hw::cim::CimConfig;
+/// use sata::hw::sched_rtl::SchedRtl;
+/// use sata::mask::SelectiveMask;
+/// use sata::util::rng::Rng;
+///
+/// // Plan once, execute any registered flow from the shared plans.
+/// let mut rng = Rng::new(7);
+/// let masks: Vec<SelectiveMask> =
+///     (0..2).map(|_| SelectiveMask::random_topk(24, 6, &mut rng)).collect();
+/// let plans = PlanSet::build(&masks, EngineOpts::default());
+/// let cim = CimConfig::default_65nm(64);
+/// let rtl = SchedRtl::tsmc65();
+/// let flow = backend::by_name("sata").unwrap();
+/// let report = flow.run_planned(&plans, &cim, &rtl);
+/// assert!(report.latency_ns > 0.0 && report.total_pj() > 0.0);
+/// ```
 pub trait FlowBackend: Sync {
     /// Registry name (the CLI's `--flow <name>`).
     fn name(&self) -> &'static str;
@@ -586,6 +705,7 @@ pub struct SotaSataBackend {
 }
 
 impl SotaSataBackend {
+    /// The published design this backend integrates.
     pub fn design(&self) -> SotaDesign {
         self.design
     }
@@ -706,15 +826,22 @@ impl FlowBackend for SotaSataBackend {
 // Registry
 // ---------------------------------------------------------------------------
 
+/// Registry instance: dense CIM engine.
 pub static DENSE: DenseBackend = DenseBackend;
+/// Registry instance: compute-gated pruning.
 pub static GATED: GatedBackend = GatedBackend;
+/// Registry instance: the SATA flow.
 pub static SATA: SataBackend = SataBackend;
+/// Registry instance: A3 with SATA front-ending it.
 pub static A3_SATA: SotaSataBackend =
     SotaSataBackend { design: SotaDesign::A3, name: "a3+sata" };
+/// Registry instance: SpAtten with SATA front-ending it.
 pub static SPATTEN_SATA: SotaSataBackend =
     SotaSataBackend { design: SotaDesign::SpAtten, name: "spatten+sata" };
+/// Registry instance: Energon with SATA front-ending it.
 pub static ENERGON_SATA: SotaSataBackend =
     SotaSataBackend { design: SotaDesign::Energon, name: "energon+sata" };
+/// Registry instance: ELSA with SATA front-ending it.
 pub static ELSA_SATA: SotaSataBackend =
     SotaSataBackend { design: SotaDesign::Elsa, name: "elsa+sata" };
 

@@ -103,13 +103,19 @@ pub fn chunked_k_uses_ref(
 /// values reports hold) without hand-maintained comparators.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct RunReport {
+    /// End-to-end latency (ns).
     pub latency_ns: f64,
     /// Time the MAC arrays are busy (for utilization).
     pub compute_busy_ns: f64,
+    /// MAC (compute) energy (pJ).
     pub mac_pj: f64,
+    /// K operand fetch energy (pJ).
     pub k_fetch_pj: f64,
+    /// Q operand load energy (pJ).
     pub q_load_pj: f64,
+    /// Scheduler RTL energy (pJ).
     pub sched_pj: f64,
+    /// Index-acquisition energy (pJ).
     pub index_pj: f64,
     /// K vector ops issued.
     pub k_vec_ops: usize,
@@ -117,10 +123,12 @@ pub struct RunReport {
     pub q_loads: usize,
     /// Selected (q,k) pairs covered (sanity/accuracy accounting).
     pub selected_pairs: usize,
+    /// Scheduled steps executed.
     pub steps: usize,
 }
 
 impl RunReport {
+    /// Total energy across every component (pJ).
     pub fn total_pj(&self) -> f64 {
         self.mac_pj + self.k_fetch_pj + self.q_load_pj + self.sched_pj + self.index_pj
     }
@@ -230,10 +238,14 @@ pub fn run_sata(
 /// efficiency = inverse energy for the same selected work).
 #[derive(Clone, Copy, Debug)]
 pub struct Gains {
+    /// Latency ratio baseline/improved (>1 = faster).
     pub throughput: f64,
+    /// Energy ratio baseline/improved (>1 = more efficient).
     pub energy_eff: f64,
 }
 
+/// Compare two reports (throughput = inverse latency, energy
+/// efficiency = inverse energy for the same selected work).
 pub fn gains(baseline: &RunReport, improved: &RunReport) -> Gains {
     Gains {
         throughput: baseline.latency_ns / improved.latency_ns,

@@ -35,15 +35,68 @@ use crate::hw::systolic::{GemmShape, SystolicConfig};
 use crate::mask::SelectiveMask;
 use crate::schedule::schedule_sequential;
 
-use super::backend::{AccessProfile, FlowBackend, FlowSchedule, PlanSet};
+use crate::baselines::SotaDesign;
+
+use super::backend::{AccessProfile, FlowBackend, FlowSchedule, PlanSet, StepPlan};
 use super::{chunked_k_uses, RunReport};
+
+/// One autoregressive decode step's execution input — the step analogue
+/// of a [`FlowSchedule`], paired with the **step-carryover residency
+/// set** the coordinator computed for it.
+///
+/// `resident[h]` counts the keys of head `h` that this step re-selects
+/// from the *previous* step's fetch set; flows whose
+/// [`AccessProfile::carryover`] is set charge those as resident (near
+/// fetch / no DRAM refetch) instead of refetching them — the
+/// [`derived_reuse`] locality win generalized across time. The residency
+/// contract (never claim a key the prior step did not fetch) is enforced
+/// where the sets are built (`decode::carry_residency`) and
+/// property-tested in `tests/decode_sessions.rs`.
+#[derive(Clone, Copy, Debug)]
+pub struct StepExec<'a> {
+    /// KV set size at this step (prefill tokens + every generated token
+    /// so far, including this one). Only dense streaming consumes it —
+    /// selective flows touch the selected keys regardless of how far the
+    /// KV set has grown.
+    pub kv_len: usize,
+    /// Flow-independent burst-ordered plan (shared via the plan cache).
+    pub plan: &'a StepPlan,
+    /// Per-head resident-key counts carried over from the previous step;
+    /// empty = un-carried (step 0, or carryover disabled for a baseline).
+    pub resident: &'a [usize],
+}
 
 /// One hardware back-end every registered flow can execute on.
 ///
 /// The contract mirrors [`FlowBackend`]: the flow produced a substrate-
 /// independent [`FlowSchedule`] from a shared [`PlanSet`]; the substrate
 /// turns that schedule into a [`RunReport`] on its hardware model.
-pub trait Substrate: Sync {
+/// Decode steps take the parallel [`Substrate::execute_step`] path: a
+/// single-query workload shaped by the flow's [`AccessProfile`] and the
+/// step's carryover residency instead of a full Algo-2 schedule.
+/// `Send + Sync` is a supertrait: the coordinator builds one substrate
+/// per job and shares it across execute workers (units of one session
+/// may run on different threads; the systolic baseline memo is
+/// internally locked).
+///
+/// ```
+/// use sata::config::{SystemConfig, WorkloadSpec};
+/// use sata::engine::backend::{self, PlanSet};
+/// use sata::engine::{substrate, EngineOpts};
+/// use sata::trace::synth::gen_trace;
+///
+/// // The same plans execute on any registered substrate.
+/// let spec = WorkloadSpec::ttst();
+/// let trace = gen_trace(&spec, 1);
+/// let plans = PlanSet::build(&trace.heads, EngineOpts::default());
+/// let sys = SystemConfig::for_workload(&spec);
+/// for sspec in &substrate::SUBSTRATES {
+///     let sub = (sspec.build)(&sys, spec.dk);
+///     let rep = backend::SATA.run_on(&plans, &*sub);
+///     assert!(rep.latency_ns > 0.0, "{}", sspec.name);
+/// }
+/// ```
+pub trait Substrate: Send + Sync {
     /// Registry name (the CLI's `--substrate <name>`).
     fn name(&self) -> &'static str;
 
@@ -59,6 +112,13 @@ pub trait Substrate: Sync {
         plans: &PlanSet,
         sched: &FlowSchedule,
     ) -> RunReport;
+
+    /// Execute one decode step ([`StepExec`]) for one flow: per head, the
+    /// newly generated token's query against its selected keys (dense
+    /// flows stream the whole grown KV set). Flows with
+    /// [`AccessProfile::carryover`] charge the step's resident keys as
+    /// on-chip hits instead of DRAM refetches.
+    fn execute_step(&self, flow: &dyn FlowBackend, step: &StepExec) -> RunReport;
 }
 
 // ---------------------------------------------------------------------------
@@ -69,7 +129,9 @@ pub trait Substrate: Sync {
 /// delegates to the flow's own CIM `execute` hook, so every report is
 /// bitwise identical to the pre-substrate `run_planned` path.
 pub struct CimSubstrate {
+    /// CIM system model (the Eq. 3 cost source).
     pub cim: crate::hw::cim::CimConfig,
+    /// Scheduler RTL PPA model.
     pub rtl: SchedRtl,
 }
 
@@ -90,6 +152,105 @@ impl Substrate for CimSubstrate {
     ) -> RunReport {
         flow.execute(plans, sched, &self.cim, &self.rtl)
     }
+
+    fn execute_step(&self, flow: &dyn FlowBackend, step: &StepExec) -> RunReport {
+        let prof = flow.access_profile();
+        let mut rep = cim_step_core(&self.cim, prof, step, prof.carryover);
+        match flow.index_design() {
+            Some(design) => {
+                // The design's index engine is untouched by SATA: size its
+                // cost from the design's own un-scheduled selective step
+                // (fragmented gather penalty, no carryover), exactly the
+                // layer-path convention (`SotaSataBackend::baseline_exec`).
+                let mut base = cim_step_core(
+                    &self.cim,
+                    AccessProfile::FRAGMENTED_SELECTIVE,
+                    step,
+                    false,
+                );
+                let f = design.frag_penalty();
+                base.latency_ns *= f;
+                base.k_fetch_pj *= f;
+                let (idx_ns, idx_pj) = sota_index_costs(design, &base);
+                rep.latency_ns += idx_ns;
+                rep.index_pj += idx_pj;
+            }
+            // Generic selective flows (gated, sata) pay the low-precision
+            // index pass over the step's 1×kv_len score row per head.
+            None if prof.selective => {
+                let frac = step.plan.opts.index_bits as f64
+                    / self.cim.precision_bits as f64;
+                let per_head = step.kv_len as f64
+                    * self.cim.op_costs().k_mac_per_row_pj
+                    * frac
+                    / 2.0;
+                rep.index_pj += per_head * step.plan.n_heads() as f64;
+            }
+            None => {}
+        }
+        if prof.sorted && prof.selective {
+            // SATA front-end staging at decode time: no Algo-1 sort (one
+            // query sorts trivially), just Kid-FIFO pushes of the fetch
+            // order — log₂(kv) bits per selected key.
+            let bits = (step.kv_len as f64).max(2.0).log2();
+            rep.sched_pj += step.plan.total_selected() as f64 * bits
+                * self.rtl.fj_per_regbit
+                / 1000.0;
+        }
+        rep
+    }
+}
+
+/// Published index-engine fractions applied to a design's own execution
+/// portion — shared by the layer and step paths on both substrates.
+fn sota_index_costs(design: SotaDesign, base: &RunReport) -> (f64, f64) {
+    let it = design.index_runtime_frac();
+    let ie = design.index_energy_frac();
+    (base.latency_ns * it / (1.0 - it), base.total_pj() * ie / (1.0 - ie))
+}
+
+/// Eq. 3-style cost of one decode step on the CIM model: per head, one
+/// query load overlapped (or not, per the profile) against the step's key
+/// stream; resident keys skip the far fetch (fold-buffer hit) and the
+/// transfer time but still MAC.
+fn cim_step_core(
+    cim: &crate::hw::cim::CimConfig,
+    prof: AccessProfile,
+    step: &StepExec,
+    carry: bool,
+) -> RunReport {
+    let c = cim.op_costs();
+    let mut rep = RunReport::default();
+    for (h, keys) in step.plan.heads.iter().enumerate() {
+        let n_sel = keys.len();
+        let x = if prof.selective { n_sel } else { step.kv_len };
+        let res = if carry {
+            step.resident.get(h).copied().unwrap_or(0).min(n_sel)
+        } else {
+            0
+        };
+        let fresh = x - res;
+        let (xf, ff) = (x as f64, fresh as f64);
+        rep.latency_ns += if prof.prefetch {
+            f64::max(c.k_dt_ns * ff, c.q_arr_ns)
+                + f64::max(c.k_comp_ns * xf, c.q_dt_ns)
+        } else {
+            c.k_dt_ns * ff + c.k_comp_ns * xf + c.q_dt_ns + c.q_arr_ns
+        };
+        rep.compute_busy_ns += c.k_comp_ns * xf;
+        // One active Q row: dense-within-active-rows MAC energy coincides
+        // with selected-pair energy for a single-query step.
+        rep.mac_pj += xf * c.k_mac_per_row_pj;
+        rep.k_fetch_pj += ff * c.k_fetch_dram_pj
+            + res as f64 * c.k_fetch_buf_pj
+            + xf * c.k_dt_pj;
+        rep.q_load_pj += c.q_dt_pj + c.q_arr_pj;
+        rep.k_vec_ops += x;
+        rep.q_loads += 1;
+        rep.selected_pairs += x;
+        rep.steps += 1;
+    }
+    rep
 }
 
 // ---------------------------------------------------------------------------
@@ -101,6 +262,7 @@ impl Substrate for CimSubstrate {
 /// [`AccessProfile`] decides burst quality (sorted vs gathered), prefetch
 /// overlap, and whether schedule-derived locality reuse applies.
 pub struct SystolicSubstrate {
+    /// Array configuration.
     pub cfg: SystolicConfig,
     /// Contraction dimension D_k of the Q·Kᵀ GEMMs (a trace property the
     /// CIM substrate carries in `CimConfig::dk`).
@@ -112,6 +274,7 @@ pub struct SystolicSubstrate {
 }
 
 impl SystolicSubstrate {
+    /// Substrate over `cfg` for GEMMs of contraction depth `dk`.
     pub fn new(cfg: SystolicConfig, dk: usize) -> Self {
         SystolicSubstrate { cfg, dk, baseline_memo: Mutex::new(None) }
     }
@@ -161,13 +324,71 @@ impl Substrate for SystolicSubstrate {
             // modeled natively by `frag_efficiency` here, so the CIM
             // model's extra `frag_penalty` multiplier does not apply.
             let base = self.baseline(plans);
-            let it = design.index_runtime_frac();
-            let ie = design.index_energy_frac();
-            rep.latency_ns += base.latency_ns * it / (1.0 - it);
-            rep.index_pj += base.total_pj() * ie / (1.0 - ie);
+            let (idx_ns, idx_pj) = sota_index_costs(design, &base);
+            rep.latency_ns += idx_ns;
+            rep.index_pj += idx_pj;
         }
         rep
     }
+
+    fn execute_step(&self, flow: &dyn FlowBackend, step: &StepExec) -> RunReport {
+        let prof = flow.access_profile();
+        let mut rep =
+            systolic_step_core(&self.cfg, self.dk, prof, step, prof.carryover);
+        if let Some(design) = flow.index_design() {
+            // Index engine sized from the design's own un-scheduled step
+            // on this same array (fragmentation native, no extra penalty).
+            let base = systolic_step_core(
+                &self.cfg,
+                self.dk,
+                AccessProfile::FRAGMENTED_SELECTIVE,
+                step,
+                false,
+            );
+            let (idx_ns, idx_pj) = sota_index_costs(design, &base);
+            rep.latency_ns += idx_ns;
+            rep.index_pj += idx_pj;
+        }
+        rep
+    }
+}
+
+/// One decode step on the array: per head, a 1-row Q·Kᵀ against the
+/// selected keys (dense: the whole grown KV set), with the carryover
+/// share of the key stream served from on-chip SRAM
+/// ([`crate::hw::systolic::SystolicConfig::run_step`]).
+fn systolic_step_core(
+    cfg: &SystolicConfig,
+    dk: usize,
+    prof: AccessProfile,
+    step: &StepExec,
+    carry: bool,
+) -> RunReport {
+    let dk = dk.max(1);
+    let eff = if prof.sorted { 1.0 } else { cfg.frag_efficiency };
+    let mut rep = RunReport::default();
+    for (h, keys) in step.plan.heads.iter().enumerate() {
+        let cols = if prof.selective { keys.len() } else { step.kv_len };
+        if cols == 0 {
+            continue;
+        }
+        let res = if carry {
+            step.resident.get(h).copied().unwrap_or(0).min(keys.len())
+        } else {
+            0
+        };
+        let run = cfg.run_step(cols, res, dk, prof.sorted, prof.prefetch);
+        rep.latency_ns += run.total_cycles; // 1 GHz: 1 cycle = 1 ns
+        rep.compute_busy_ns += run.compute_cycles;
+        rep.mac_pj += cols as f64 * dk as f64 * cfg.pe_mac_pj;
+        rep.k_fetch_pj += run.k_bytes_from_dram / eff * cfg.dram_pj_per_byte;
+        rep.q_load_pj += run.q_bytes_from_dram / eff * cfg.dram_pj_per_byte;
+        rep.k_vec_ops += cols;
+        rep.q_loads += 1;
+        rep.selected_pairs += cols;
+        rep.steps += run.tiles;
+    }
+    rep
 }
 
 /// Locality reuse derived from the schedule's query load order.
@@ -312,8 +533,11 @@ fn execute_systolic(
 /// Registry row: name, help text, and a constructor binding the substrate
 /// to a system config and the trace's D_k.
 pub struct SubstrateSpec {
+    /// Registry name (the CLI's `--substrate <name>`).
     pub name: &'static str,
+    /// One-line help text.
     pub describe: &'static str,
+    /// Construct the substrate for a system config and trace D_k.
     pub build: fn(&SystemConfig, usize) -> Box<dyn Substrate>,
 }
 
@@ -506,6 +730,87 @@ mod tests {
         rng.shuffle(&mut bad);
         let r = derived_reuse(&mask, &bad, 7);
         assert!((0.0..1.0).contains(&r));
+    }
+
+    fn step_plan(heads: usize, n_sel: usize, kv: usize) -> StepPlan {
+        let sel: Vec<Vec<usize>> =
+            (0..heads).map(|h| (0..n_sel).map(|i| (i * 2 + h) % kv).collect()).collect();
+        StepPlan::build(&sel, 0xD1CE, EngineOpts::default())
+    }
+
+    #[test]
+    fn every_flow_executes_a_decode_step_on_every_substrate() {
+        let sys = SystemConfig::default();
+        let plan = step_plan(3, 12, 40);
+        let resident = vec![0usize; 3];
+        let step = StepExec { kv_len: 40, plan: &plan, resident: &resident };
+        for sspec in &SUBSTRATES {
+            let sub = (sspec.build)(&sys, 256);
+            for b in backend::all() {
+                let rep = sub.execute_step(b, &step);
+                let tag = format!("{}@{}", b.name(), sspec.name);
+                assert!(rep.latency_ns > 0.0, "{tag}: zero latency");
+                assert!(rep.total_pj() > 0.0, "{tag}: zero energy");
+                assert_eq!(rep.q_loads, 3, "{tag}: one query per head");
+                if b.name() == "dense" {
+                    // dense streams the whole grown KV set
+                    assert_eq!(rep.selected_pairs, 3 * 40, "{tag}");
+                } else {
+                    assert_eq!(rep.selected_pairs, 3 * 12, "{tag}");
+                }
+                if b.index_design().is_some() {
+                    assert!(rep.index_pj > 0.0, "{tag}: no index charge");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_carryover_discounts_only_carryover_flows() {
+        // dk large enough that the step is memory-bound on both models.
+        let sys = SystemConfig { dk: 65536, ..SystemConfig::default() };
+        let plan = step_plan(2, 10, 64);
+        let none = vec![0usize; 2];
+        let some = vec![6usize, 6];
+        for sspec in &SUBSTRATES {
+            let sub = (sspec.build)(&sys, 65536);
+            let cold = StepExec { kv_len: 64, plan: &plan, resident: &none };
+            let warm = StepExec { kv_len: 64, plan: &plan, resident: &some };
+            for b in backend::all() {
+                let a = sub.execute_step(b, &cold);
+                let c = sub.execute_step(b, &warm);
+                let tag = format!("{}@{}", b.name(), sspec.name);
+                if b.access_profile().carryover {
+                    assert!(c.latency_ns < a.latency_ns, "{tag}: no time win");
+                    assert!(c.total_pj() < a.total_pj(), "{tag}: no energy win");
+                } else {
+                    assert_eq!(a, c, "{tag}: non-carryover flow must ignore residency");
+                }
+            }
+        }
+        // Over-claimed residency clamps to the selection size (never
+        // negative fresh traffic).
+        let sub = (by_name("cim").unwrap().build)(&sys, 65536);
+        let over = vec![999usize, 999];
+        let full = StepExec { kv_len: 64, plan: &plan, resident: &over };
+        let rep = sub.execute_step(&backend::SATA, &full);
+        assert!(rep.latency_ns > 0.0 && rep.latency_ns.is_finite());
+    }
+
+    #[test]
+    fn step_plan_fingerprint_is_salted_away_from_layer_keys() {
+        let opts = EngineOpts::default();
+        let fp = 0xABCD_u64;
+        let a = StepPlan::fingerprint_for(fp, opts);
+        assert_eq!(a, StepPlan::build(&[vec![0, 1]], fp, opts).fingerprint);
+        assert_ne!(a, StepPlan::fingerprint_for(fp ^ 1, opts));
+        let tilted = EngineOpts { index_bits: 2, ..opts };
+        assert_ne!(a, StepPlan::fingerprint_for(fp, tilted));
+        // build sorts each head into burst order
+        let p = StepPlan::build(&[vec![9, 2, 5]], fp, opts);
+        assert_eq!(p.heads[0], vec![2, 5, 9]);
+        assert_eq!(p.total_selected(), 3);
+        assert_eq!(p.n_heads(), 1);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 /// Binary H-tree with `levels` stages.
 #[derive(Clone, Copy, Debug)]
 pub struct HTree {
+    /// Tree depth between the global buffer and a tile.
     pub levels: usize,
     /// Wire + repeater energy per bit per level (pJ).
     pub pj_per_bit_level: f64,
@@ -15,6 +16,7 @@ pub struct HTree {
 }
 
 impl HTree {
+    /// H-tree of `levels` stages with 65 nm wire/repeater defaults.
     pub fn levels(levels: usize) -> Self {
         HTree { levels, pj_per_bit_level: 0.08, link_bits: 256.0 }
     }

@@ -32,6 +32,7 @@ pub struct CimConfig {
     pub precision_bits: usize,
     /// Subarray geometry (paper: 32×32).
     pub subarray_rows: usize,
+    /// Subarray geometry, column dimension.
     pub subarray_cols: usize,
     /// Number of tiles on the chip (parallelism for multi-head work).
     pub n_tiles: usize,

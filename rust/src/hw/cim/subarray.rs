@@ -9,7 +9,9 @@
 /// One CIM subarray's PPA.
 #[derive(Clone, Copy, Debug)]
 pub struct Subarray {
+    /// Array rows (Q vectors resident per subarray).
     pub rows: usize,
+    /// Array columns (operand elements per row segment).
     pub cols: usize,
     /// fJ per cell per input-bit of MAC work.
     pub fj_per_cell_bit: f64,

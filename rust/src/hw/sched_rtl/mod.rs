@@ -46,7 +46,9 @@ pub struct SchedRtl {
 /// One head/tile's scheduling cost.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SchedCost {
+    /// Scheduling cycles at 1 GHz (1 cycle = 1 ns).
     pub cycles: f64,
+    /// Scheduling energy (pJ).
     pub energy_pj: f64,
     /// Area in kGE-equivalents (reporting only).
     pub area_kge: f64,

@@ -29,7 +29,9 @@
 /// Systolic platform configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct SystolicConfig {
+    /// PE rows (output-tile query extent).
     pub rows: usize,
+    /// PE columns (output-tile key extent).
     pub cols: usize,
     /// DRAM bandwidth in bytes/cycle (e.g. 16 B/cy ≈ 16 GB/s @1 GHz).
     pub dram_bytes_per_cycle: f64,
@@ -61,9 +63,13 @@ impl Default for SystolicConfig {
 /// One GEMM run's accounting.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SystolicRun {
+    /// Cycles the array computes (stream + fill/drain).
     pub compute_cycles: f64,
+    /// Cycles stalled on operand fetch.
     pub stall_cycles: f64,
+    /// Compute plus stall cycles.
     pub total_cycles: f64,
+    /// Total fresh operand traffic (bytes).
     pub bytes_from_dram: f64,
     /// Q-operand (output-row) share of `bytes_from_dram`.
     pub q_bytes_from_dram: f64,
@@ -74,6 +80,7 @@ pub struct SystolicRun {
 }
 
 impl SystolicRun {
+    /// Stalled share of the run; 0.0 when nothing ran.
     pub fn stall_fraction(&self) -> f64 {
         if self.total_cycles == 0.0 {
             0.0
@@ -146,6 +153,55 @@ impl SystolicConfig {
                 out.k_bytes_from_dram += k_bytes;
                 out.tiles += 1;
             }
+        }
+        out.bytes_from_dram = out.q_bytes_from_dram + out.k_bytes_from_dram;
+        out.total_cycles = out.compute_cycles + out.stall_cycles;
+        out
+    }
+
+    /// Simulate one autoregressive **decode step**: a single query row
+    /// against `n_keys` key vectors of depth `dk`, with `n_resident` of
+    /// those keys already staged on-chip by the previous step (cross-step
+    /// carryover — they skip the DRAM fetch entirely).
+    ///
+    /// Differs from [`SystolicConfig::run`] with `m = 1` in one way:
+    /// carryover discounts **K traffic only**. The query operand is the
+    /// newly generated token and is always fetched fresh (the generic
+    /// `reuse` knob would discount both operands). Compute still covers
+    /// every selected key — resident operands are MAC'd from SRAM.
+    pub fn run_step(
+        &self,
+        n_keys: usize,
+        n_resident: usize,
+        dk: usize,
+        sorted: bool,
+        overlap: bool,
+    ) -> SystolicRun {
+        let mut out = SystolicRun::default();
+        if n_keys == 0 || dk == 0 {
+            return out;
+        }
+        let bpe = self.bytes_per_elem();
+        let eff = if sorted { 1.0 } else { self.frag_efficiency };
+        let bw = self.dram_bytes_per_cycle * eff;
+        // Fresh share of the key stream, spread uniformly over col tiles.
+        let fresh = (n_keys - n_resident.min(n_keys)) as f64 / n_keys as f64;
+        for j in 0..n_keys.div_ceil(self.cols) {
+            let c = self.cols.min(n_keys - j * self.cols) as f64;
+            let compute = dk as f64 + 1.0 + c - 2.0;
+            let q_bytes = dk as f64 * bpe; // the one query row, per tile
+            let k_bytes = c * dk as f64 * bpe * fresh;
+            let fetch_cycles = (q_bytes + k_bytes) / bw;
+            let stall = if overlap {
+                (fetch_cycles - compute).max(0.0)
+            } else {
+                fetch_cycles
+            };
+            out.compute_cycles += compute;
+            out.stall_cycles += stall;
+            out.q_bytes_from_dram += q_bytes;
+            out.k_bytes_from_dram += k_bytes;
+            out.tiles += 1;
         }
         out.bytes_from_dram = out.q_bytes_from_dram + out.k_bytes_from_dram;
         out.total_cycles = out.compute_cycles + out.stall_cycles;
@@ -270,6 +326,35 @@ mod tests {
         let none = cfg.run_sata(ttst_shape(), 0.0);
         let half = cfg.run_sata(ttst_shape(), 0.5);
         assert!((half.bytes_from_dram / none.bytes_from_dram - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_step_discounts_k_traffic_only_and_matches_run_at_zero_residency() {
+        let cfg = SystolicConfig::default();
+        // No residency: run_step == run with m = 1 and reuse 0 (same tile
+        // walk — one row stripe, per-tile q bytes).
+        let a = cfg.run_step(30, 0, 65536, true, true);
+        let b = cfg.run(GemmShape { m: 1, n: 30, k: 65536 }, true, true, 0.0);
+        assert!((a.total_cycles - b.total_cycles).abs() < 1e-9);
+        assert!((a.bytes_from_dram - b.bytes_from_dram).abs() < 1e-9);
+        // Residency shrinks K bytes proportionally, leaves Q bytes alone.
+        let half = cfg.run_step(30, 15, 65536, true, true);
+        assert!((half.k_bytes_from_dram / a.k_bytes_from_dram - 0.5).abs() < 1e-9);
+        assert!((half.q_bytes_from_dram - a.q_bytes_from_dram).abs() < 1e-9);
+        // Memory-bound (TTST dk): fewer fresh bytes = strictly fewer
+        // cycles; compute is untouched (resident keys still MAC).
+        assert!(half.total_cycles < a.total_cycles);
+        assert!((half.compute_cycles - a.compute_cycles).abs() < 1e-9);
+        // Full residency: only the query row is fetched.
+        let full = cfg.run_step(30, 30, 65536, true, true);
+        assert_eq!(full.k_bytes_from_dram, 0.0);
+        assert!(full.q_bytes_from_dram > 0.0);
+        // Residency clamps (over-claiming cannot go negative).
+        let over = cfg.run_step(30, 99, 65536, true, true);
+        assert_eq!(over.k_bytes_from_dram, 0.0);
+        // Degenerate shapes are inert.
+        assert_eq!(cfg.run_step(0, 0, 64, true, true).tiles, 0);
+        assert_eq!(cfg.run_step(10, 0, 0, true, true).tiles, 0);
     }
 
     #[test]

@@ -21,21 +21,46 @@
 //! * [`trace`]     - selective-mask traces: synthetic generator calibrated
 //!   to Table I plus loaders for model-emitted masks
 //! * [`model`]     - model-level requests: multi-layer [`model::ModelTrace`]s
-//!   (the coordinator's unit of work), per-request report folding
+//!   (a coordinator unit of work), per-request report folding
 //!   (`model::report`), and the cross-layer-locality synth knob `rho`
+//! * [`decode`]    - autoregressive decode sessions: per-token
+//!   [`decode::StepMask`]s over a growing KV set, step-plan reuse and
+//!   step-carryover residency, and the step-locality synth knob `kappa`
 //! * [`config`]    - workload + system configuration (JSON)
 //! * [`coordinator`] - the Layer-3 runtime: pipelined plan/execute worker
-//!   stages, fingerprint-keyed plan cache, streaming results, backpressure,
-//!   metrics
+//!   stages, fingerprint-keyed plan cache, continuous batching of decode
+//!   steps with prefill jobs, streaming results, backpressure, metrics
 //! * [`runtime`]   - PJRT bridge: load AOT HLO-text artifacts and execute
 //!   the Layer-2 JAX model from Rust
 //! * [`metrics`]   - reports and gain tables
 //! * [`util`]      - in-tree RNG / JSON / stats / property-test / bench
 //!   infrastructure (offline build: no external crates)
+//!
+//! ## Quick start
+//!
+//! ```
+//! use sata::config::{SystemConfig, WorkloadSpec};
+//! use sata::engine::backend::{self, PlanSet};
+//! use sata::engine::{substrate, EngineOpts};
+//! use sata::trace::synth::gen_trace;
+//!
+//! // One Table-I workload, planned once, compared across two flows.
+//! let spec = WorkloadSpec::ttst();
+//! let trace = gen_trace(&spec, 1);
+//! let plans = PlanSet::build(&trace.heads, EngineOpts::default());
+//! let sys = SystemConfig::for_workload(&spec);
+//! let sub = (substrate::by_name("cim").unwrap().build)(&sys, spec.dk);
+//! let dense = backend::DENSE.run_on(&plans, &*sub);
+//! let sata = backend::SATA.run_on(&plans, &*sub);
+//! assert!(sata.latency_ns < dense.latency_ns);
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
+pub mod decode;
 pub mod engine;
 pub mod hw;
 pub mod mask;

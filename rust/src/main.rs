@@ -1,19 +1,9 @@
 //! `sata` — CLI launcher for the SATA reproduction.
 //!
-//! Subcommands (no `clap` offline; hand-rolled parsing):
-//!
-//! ```text
-//! sata trace-gen  --workload <name> --count <n> --seed <s> --out <dir>
-//!                 [--layers <L>] [--rho <r>]          # L>1 → model files
-//! sata schedule   --workload <name> [--seed <s>]      # Table-I stats
-//! sata simulate   --workload <name> [--traces <n>] [--flow <name>]
-//!                 [--substrate cim|systolic] [--layers <L>] [--rho <r>]
-//! sata flows                                          # flows + substrates
-//! sata serve      --workload <name> --jobs <n> --workers <w>
-//!                 [--flows a,b,c] [--substrate <name>] [--repeat <r>]
-//!                 [--traces-dir <dir>] [--layers <L>] [--rho <r>] [--json]
-//! sata e2e        [--artifacts <dir>]                 # PJRT end-to-end
-//! ```
+//! Subcommands (no `clap` offline; hand-rolled parsing) — see [`USAGE`],
+//! which a unit test cross-checks against the flags each subcommand
+//! actually accepts ([`SUBCOMMANDS`]); unknown flags are rejected at
+//! startup, so the help text cannot drift from the parser.
 //!
 //! `--flow` / `--flows` resolve through the [`backend`] registry: `dense`,
 //! `gated`, `sata` (default), or a SOTA integration (`a3+sata`,
@@ -22,34 +12,116 @@
 //! Sec. IV-B array) — any flow runs on any substrate from the same plans
 //! and schedule.
 //!
-//! The unit of work is a **model request** (`model::ModelTrace`):
-//! `--layers L` makes the synthetic sources generate L-layer requests and
-//! `--rho` dials their cross-layer selection overlap (0 = independent
-//! TopK per layer, 1 = each layer re-selects the previous layer's keys);
-//! bare single-layer trace files keep working everywhere as 1-layer
-//! requests, and `--traces-dir` serves directories mixing both file
-//! shapes. `serve` streams results through the pipelined coordinator and
-//! reports plan-cache hit rate (layers are cached individually, so
-//! correlated layers hit), evictions, and p50/p95/p99 wall latency;
-//! `--repeat` resubmits the trace set to exercise the cache, `--json`
-//! switches per-job lines and the final metrics block to machine-readable
-//! JSON.
+//! Units of work:
+//!
+//! * **model requests** (`model::ModelTrace`): `--layers L` makes the
+//!   synthetic sources generate L-layer requests and `--rho` dials their
+//!   cross-layer selection overlap (0 = independent TopK per layer, 1 =
+//!   each layer re-selects the previous layer's keys); bare single-layer
+//!   trace files keep working everywhere as 1-layer requests, and
+//!   `--traces-dir` serves directories mixing both file shapes (plus
+//!   decode-session files).
+//! * **decode sessions** (`decode::DecodeSession`): `--steps S` appends S
+//!   generated tokens to each synthetic request, each re-selecting TopK
+//!   keys from the KV set grown by all prior steps; `--kappa` dials the
+//!   step-to-step selection overlap (the temporal analogue of `--rho`),
+//!   and `--no-carry` disables step-carryover residency for an un-carried
+//!   baseline.
+//!
+//! `serve` streams results through the pipelined coordinator —
+//! interleaving decode steps from many live sessions with prefill jobs in
+//! one worker pool — and reports plan-cache hit rate (layers *and steps*
+//! are cached individually), carryover reuse, tokens/sec, per-token and
+//! per-job latency percentiles; `--repeat` resubmits the trace set to
+//! exercise the cache, `--json` switches per-job lines and the final
+//! metrics block to machine-readable JSON.
 
 use std::collections::HashMap;
 
 use sata::config::{SystemConfig, WorkloadSpec};
-use sata::coordinator::{Coordinator, Job};
+use sata::coordinator::{Coordinator, Job, Request};
+use sata::decode::run_session;
 use sata::engine::backend::{self, FlowBackend, PlanSet};
 use sata::engine::{gains, run_dense, run_sata, substrate, EngineOpts};
 use sata::hw::cim::CimConfig;
 use sata::hw::sched_rtl::SchedRtl;
 use sata::metrics::{
-    render_flow_comparison_on, render_model_rollup, render_report, schedule_stats,
+    render_flow_comparison_on, render_model_rollup, render_report,
+    render_session_rollup, schedule_stats,
 };
 use sata::model::report::ModelReport;
-use sata::model::ModelTrace;
-use sata::trace::synth::{gen_models, gen_trace, gen_traces};
+use sata::trace::synth::{gen_models, gen_sessions, gen_trace, gen_traces};
 use sata::trace::TraceDir;
+
+/// Help text. Every `--flag` mentioned here must be accepted by a
+/// subcommand in [`SUBCOMMANDS`] and vice versa — enforced by the
+/// `usage_and_accepted_flags_agree` unit test, and at run time by
+/// [`check_flags`].
+const USAGE: &str = "sata — SATA reproduction CLI
+usage: sata <trace-gen|schedule|simulate|flows|serve|e2e> [flags]
+  common: [--workload ttst|kvt-tiny|kvt-base|drsformer] [--seed N]
+  trace-gen: [--count N] [--out DIR] [--layers L] [--rho R]
+             [--steps S] [--kappa K]     # L>1 → model files; S>0 → sessions
+  schedule:  (Table-I stats; common flags only)
+  simulate:  [--traces N] [--flow FLOW] [--substrate SUB] [--layers L]
+             [--rho R] [--steps S] [--kappa K] [--no-carry]
+  serve:     [--jobs N] [--workers W] [--flows a,b,c] [--flow FLOW]
+             [--substrate SUB] [--repeat R] [--traces-dir DIR]
+             [--layers L] [--rho R] [--steps S] [--kappa K] [--no-carry]
+             [--json]
+  e2e:       [--artifacts DIR]           # PJRT end-to-end
+flows: FLOW ∈ registered backends (see `sata flows`); SUB ∈ cim|systolic
+model requests: --layers/--rho shape multi-layer requests (rho =
+  cross-layer selection overlap in [0,1]); decode sessions: --steps
+  tokens are generated over a growing KV set with --kappa step-to-step
+  overlap; --no-carry disables step-carryover residency";
+
+/// The flags each subcommand accepts (the audit surface for [`USAGE`]).
+const SUBCOMMANDS: &[(&str, &[&str])] = &[
+    (
+        "trace-gen",
+        &["workload", "seed", "count", "out", "layers", "rho", "steps", "kappa"],
+    ),
+    ("schedule", &["workload", "seed"]),
+    (
+        "simulate",
+        &[
+            "workload", "seed", "traces", "flow", "substrate", "layers", "rho",
+            "steps", "kappa", "no-carry",
+        ],
+    ),
+    ("flows", &[]),
+    (
+        "serve",
+        &[
+            "workload", "seed", "jobs", "workers", "flows", "flow", "substrate",
+            "repeat", "traces-dir", "layers", "rho", "steps", "kappa", "no-carry",
+            "json",
+        ],
+    ),
+    ("e2e", &["artifacts", "seed"]),
+];
+
+/// Reject flags the subcommand does not read — the anti-drift guarantee
+/// behind [`USAGE`].
+fn check_flags(cmd: &str, flags: &HashMap<String, String>) {
+    let Some((_, accepted)) = SUBCOMMANDS.iter().find(|(c, _)| *c == cmd) else {
+        return; // unknown subcommand falls through to the usage print
+    };
+    for key in flags.keys() {
+        if !accepted.contains(&key.as_str()) {
+            eprintln!(
+                "unknown flag '--{key}' for '{cmd}' (accepted: {})",
+                accepted
+                    .iter()
+                    .map(|f| format!("--{f}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
+            std::process::exit(2);
+        }
+    }
+}
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut m = HashMap::new();
@@ -160,6 +232,7 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let flags = parse_flags(&args[1.min(args.len())..]);
+    check_flags(cmd, &flags);
     let seed = usize_flag(&flags, "seed", 1) as u64;
 
     match cmd {
@@ -168,9 +241,25 @@ fn main() {
             let count = usize_flag(&flags, "count", 8);
             let layers = usize_flag(&flags, "layers", 1);
             let rho = f64_flag(&flags, "rho", 0.0);
+            let steps = usize_flag(&flags, "steps", 0);
+            let kappa = f64_flag(&flags, "kappa", 0.0);
             let out = flags.get("out").cloned().unwrap_or_else(|| "traces".into());
             std::fs::create_dir_all(&out).expect("mkdir");
-            if layers > 1 {
+            if steps > 0 {
+                for (i, s) in gen_sessions(&spec, count, layers, rho, steps, kappa, seed)
+                    .iter()
+                    .enumerate()
+                {
+                    let path = format!(
+                        "{out}/{}_session_{i:04}.json",
+                        spec.name.to_lowercase()
+                    );
+                    s.save(std::path::Path::new(&path)).expect("write session");
+                    println!(
+                        "wrote {path} ({layers} layers + {steps} steps, rho {rho}, kappa {kappa})"
+                    );
+                }
+            } else if layers > 1 {
                 for (i, m) in gen_models(&spec, count, layers, rho, seed).iter().enumerate() {
                     let path = format!(
                         "{out}/{}_model_{i:04}.json",
@@ -220,10 +309,45 @@ fn main() {
             let n_traces = usize_flag(&flags, "traces", 4);
             let layers = usize_flag(&flags, "layers", 1);
             let rho = f64_flag(&flags, "rho", 0.0);
+            let steps = usize_flag(&flags, "steps", 0);
+            let kappa = f64_flag(&flags, "kappa", 0.0);
+            let carry = !flags.contains_key("no-carry");
             let opts = EngineOpts { sf: spec.sf, ..Default::default() };
             let mut thr = 0.0;
             let mut en = 0.0;
-            if layers > 1 {
+            if steps > 0 {
+                // Decode sessions: prefill + per-token steps, with
+                // step-carryover residency unless --no-carry.
+                for (i, s) in gen_sessions(&spec, n_traces, layers, rho, steps, kappa, seed)
+                    .iter()
+                    .enumerate()
+                {
+                    let dense = run_session(&backend::DENSE, s, &*sub, opts, carry);
+                    let rep = run_session(b, s, &*sub, opts, carry);
+                    let g = gains(&dense.total, &rep.total);
+                    thr += g.throughput;
+                    en += g.energy_eff;
+                    if i == 0 {
+                        print!(
+                            "{}",
+                            render_session_rollup(
+                                sspec.name,
+                                s.prefill.n_layers(),
+                                &[("dense", &dense), (b.name(), &rep)]
+                            )
+                        );
+                    }
+                }
+                println!(
+                    "{} [{}@{}]: mean end-to-end throughput gain {:.2}x, energy-efficiency gain {:.2}x over {n_traces} sessions ({layers} layers + {steps} tokens, kappa {kappa}, carryover {}) vs dense",
+                    spec.name,
+                    b.name(),
+                    sspec.name,
+                    thr / n_traces as f64,
+                    en / n_traces as f64,
+                    if carry { "on" } else { "off" },
+                );
+            } else if layers > 1 {
                 // Model requests: plan each layer once, run baseline +
                 // flow per layer, fold into request-scoped reports.
                 for (i, m) in gen_models(&spec, n_traces, layers, rho, seed)
@@ -298,36 +422,43 @@ fn main() {
             let repeat = usize_flag(&flags, "repeat", 1).max(1);
             let layers = usize_flag(&flags, "layers", 1);
             let rho = f64_flag(&flags, "rho", 0.0);
+            let steps = usize_flag(&flags, "steps", 0);
+            let kappa = f64_flag(&flags, "kappa", 0.0);
+            let carry = !flags.contains_key("no-carry");
             let json_out = flags.contains_key("json");
             let sys = SystemConfig::for_workload(&spec);
             let coord = Coordinator::new(workers, 8, sys);
             let t0 = std::time::Instant::now();
 
-            // Request source: `--traces-dir` streams files lazily (one
+            // Request source: `--traces-dir` loads files lazily (one
             // resident at a time) when submitted once; with `--repeat` the
             // set is held in memory so repeated fingerprints hit the plan
-            // cache. The directory may mix bare single-layer traces and
-            // model files. No dir → Table-I synthetics (`--layers`/`--rho`
-            // shape them into multi-layer requests).
+            // cache. The directory may mix bare single-layer traces,
+            // model files, and decode-session files — `Request::load`
+            // reads and parses each file exactly once and dispatches on
+            // its shape. No dir → Table-I synthetics (`--layers`/`--rho`
+            // shape them into multi-layer requests, `--steps`/`--kappa`
+            // into decode sessions).
             enum Source {
-                Dir(TraceDir),
-                Mem(Vec<ModelTrace>),
+                Dir(Vec<std::path::PathBuf>),
+                Mem(Vec<Request>),
             }
             let source = match flags.get("traces-dir") {
                 Some(dir) => {
-                    let open = || {
-                        TraceDir::open(std::path::Path::new(dir)).unwrap_or_else(|e| {
+                    let paths = TraceDir::open(std::path::Path::new(dir))
+                        .unwrap_or_else(|e| {
                             eprintln!("{e}");
                             std::process::exit(2);
                         })
-                    };
+                        .into_paths();
                     if repeat == 1 {
-                        Source::Dir(open())
+                        Source::Dir(paths)
                     } else {
                         Source::Mem(
-                            open()
-                                .filter_map(|(path, t)| match t {
-                                    Ok(t) => Some(t),
+                            paths
+                                .iter()
+                                .filter_map(|path| match Request::load(path) {
+                                    Ok(r) => Some(r),
                                     Err(e) => {
                                         eprintln!("skipping {}: {e}", path.display());
                                         None
@@ -337,11 +468,20 @@ fn main() {
                         )
                     }
                 }
-                None if layers > 1 => {
-                    Source::Mem(gen_models(&spec, jobs, layers, rho, seed))
-                }
+                None if steps > 0 => Source::Mem(
+                    gen_sessions(&spec, jobs, layers, rho, steps, kappa, seed)
+                        .into_iter()
+                        .map(Request::Decode)
+                        .collect(),
+                ),
+                None if layers > 1 => Source::Mem(
+                    gen_models(&spec, jobs, layers, rho, seed)
+                        .into_iter()
+                        .map(Request::Model)
+                        .collect(),
+                ),
                 None => Source::Mem(
-                    gen_traces(&spec, jobs, seed).into_iter().map(ModelTrace::from).collect(),
+                    gen_traces(&spec, jobs, seed).into_iter().map(Request::from).collect(),
                 ),
             };
 
@@ -354,9 +494,10 @@ fn main() {
             std::thread::scope(|s| {
                 s.spawn(|| {
                     let mut id = 0;
-                    let mut submit = |trace: ModelTrace| {
-                        let job = Job::with_flows(id, trace, spec.sf, flows.clone())
-                            .on_substrate(sspec.name);
+                    let mut submit = |request: Request| {
+                        let job = Job::with_flows(id, request, spec.sf, flows.clone())
+                            .on_substrate(sspec.name)
+                            .with_carryover(carry);
                         id += 1;
                         match coord.submit_with_retry(
                             job,
@@ -374,11 +515,11 @@ fn main() {
                         }
                     };
                     match source {
-                        Source::Dir(src) => {
-                            for (path, t) in src {
-                                match t {
-                                    Ok(t) => {
-                                        if !submit(t) {
+                        Source::Dir(paths) => {
+                            for path in paths {
+                                match Request::load(&path) {
+                                    Ok(r) => {
+                                        if !submit(r) {
                                             break;
                                         }
                                     }
@@ -418,14 +559,23 @@ fn main() {
                                     )
                                 })
                                 .collect();
+                            let decode = if r.tokens > 0 {
+                                format!(
+                                    " +{}tok carry {}/{}",
+                                    r.tokens, r.carry_resident, r.carry_fetched
+                                )
+                            } else {
+                                String::new()
+                            };
                             println!(
-                                "job {:>4} {} [{} {}L {}/{} hit] {} wall {:.2} ms",
+                                "job {:>4} {} [{} {}L{} {}/{} hit] {} wall {:.2} ms",
                                 r.id,
                                 r.model,
                                 r.substrate,
                                 r.layers,
+                                decode,
                                 r.cache_hits,
-                                r.layers,
+                                r.layers + r.tokens,
                                 per_flow.join(" | "),
                                 r.wall_ns / 1e6,
                             );
@@ -467,6 +617,20 @@ fn main() {
                 metrics.wall_p95_ns / 1e6,
                 metrics.wall_p99_ns / 1e6,
             );
+            if metrics.tokens_done > 0 {
+                println!(
+                    "decode: {} tokens at {:.0} tok/s | carry reuse {:.1}% ({}/{} keys) | token p50 {:.3} ms p95 {:.3} ms p99 {:.3} ms | live sessions peak {}",
+                    metrics.tokens_done,
+                    metrics.tokens_per_s,
+                    100.0 * metrics.carry_reuse_rate(),
+                    metrics.carry_resident_keys,
+                    metrics.carry_fetched_keys,
+                    metrics.token_p50_ns / 1e6,
+                    metrics.token_p95_ns / 1e6,
+                    metrics.token_p99_ns / 1e6,
+                    metrics.live_sessions_peak,
+                );
+            }
             println!(
                 "mean gains thr {:.2}x en {:.2}x; simulated latency {:.2} ms, energy {:.2} µJ",
                 metrics.mean_throughput_gain,
@@ -527,17 +691,9 @@ fn main() {
             );
         }
         _ => {
+            println!("{USAGE}");
             println!(
-                "sata — SATA reproduction CLI\n\
-                 usage: sata <trace-gen|schedule|simulate|flows|serve|e2e> \
-                 [--workload ttst|kvt-tiny|kvt-base|drsformer] [--flow {}] \
-                 [--substrate {}] [--seed N] …\n\
-                 model requests: [--layers L] [--rho R] shape synthetic \
-                 multi-layer requests (rho = cross-layer selection overlap \
-                 in [0,1]); single-layer trace files still load as 1-layer \
-                 requests\n\
-                 serve: [--flows a,b,c] [--repeat N] [--traces-dir DIR] \
-                 [--jobs N] [--workers N] [--json]",
+                "registered flows: {}; substrates: {}",
                 backend::flow_names().join("|"),
                 substrate::substrate_names().join("|")
             );
@@ -547,10 +703,48 @@ fn main() {
 
 #[cfg(test)]
 mod tests {
-    use super::parse_flags;
+    use super::{parse_flags, SUBCOMMANDS, USAGE};
 
     fn args(xs: &[&str]) -> Vec<String> {
         xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// Every `--flag` the help text documents is accepted by at least one
+    /// subcommand, and every accepted flag is documented — the usage
+    /// string and the parser cannot drift apart.
+    #[test]
+    fn usage_and_accepted_flags_agree() {
+        // collect `--flag` tokens from the usage text
+        let mut documented: Vec<String> = Vec::new();
+        for chunk in USAGE.split("--").skip(1) {
+            let flag: String = chunk
+                .chars()
+                .take_while(|c| c.is_ascii_lowercase() || *c == '-')
+                .collect();
+            if !flag.is_empty() && !documented.contains(&flag) {
+                documented.push(flag);
+            }
+        }
+        let accepted: Vec<&str> =
+            SUBCOMMANDS.iter().flat_map(|(_, fs)| fs.iter().copied()).collect();
+        for flag in &documented {
+            assert!(
+                accepted.contains(&flag.as_str()),
+                "usage documents --{flag} but no subcommand accepts it"
+            );
+        }
+        for flag in &accepted {
+            assert!(
+                documented.iter().any(|d| d == flag),
+                "subcommands accept --{flag} but the usage text omits it"
+            );
+        }
+        // The decode flags of this PR are present on the subcommands that
+        // parse them.
+        for cmd in ["trace-gen", "simulate", "serve"] {
+            let (_, fs) = SUBCOMMANDS.iter().find(|(c, _)| *c == cmd).unwrap();
+            assert!(fs.contains(&"steps") && fs.contains(&"kappa"), "{cmd}");
+        }
     }
 
     #[test]

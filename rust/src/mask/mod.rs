@@ -141,11 +141,13 @@ impl SelectiveMask {
     }
 
     #[inline]
+    /// Token count N (the mask is N×N).
     pub fn n(&self) -> usize {
         self.n
     }
 
     #[inline]
+    /// Test QK[q][k].
     pub fn get(&self, q: usize, k: usize) -> bool {
         debug_assert!(q < self.n && k < self.n);
         self.rows[q * self.w + k / 64] >> (k % 64) & 1 == 1

@@ -15,6 +15,7 @@ use super::SelectiveMask;
 pub struct MaskTile {
     /// Fold coordinates within the head (query fold, key fold).
     pub qf: usize,
+    /// Key-fold coordinate within the head.
     pub kf: usize,
     /// Fold size S_f.
     pub sf: usize,
@@ -66,15 +67,22 @@ pub fn tile_mask(mask: &SelectiveMask, sf: usize) -> Vec<MaskTile> {
 /// Zero-skip statistics across a tiling (reported by the scaling bench).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SkipStats {
+    /// Tiles in the grid.
     pub tiles: usize,
+    /// Tiles skipped outright (no live query).
     pub empty_tiles: usize,
+    /// Query rows across all tiles.
     pub total_rows: usize,
+    /// Query rows removed by zero-skip.
     pub skipped_rows: usize,
+    /// Key columns across all tiles.
     pub total_cols: usize,
+    /// Key columns removed by zero-skip.
     pub skipped_cols: usize,
 }
 
 impl SkipStats {
+    /// Overall fraction of rows+cols removed by zero-skip.
     pub fn skip_fraction(&self) -> f64 {
         let tot = (self.total_rows + self.total_cols) as f64;
         if tot == 0.0 {

@@ -11,10 +11,13 @@ use crate::util::stats;
 /// Post-schedule statistics for one workload (Table I right half).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ScheduleStats {
+    /// Fraction of queries classified GLOB (Table I GlobQ%).
     pub glob_q_frac: f64,
     /// Average S_h as a fraction of N (or of the tile size in tiled mode).
     pub avg_sh_frac: f64,
+    /// Mean S_h concessions per head (Table I "Avg #(S_h-=1)").
     pub avg_decrements: f64,
+    /// Heads aggregated.
     pub heads: usize,
 }
 
@@ -77,10 +80,15 @@ pub fn schedule_stats(masks: &[SelectiveMask], sf: Option<usize>, seed: u64) -> 
 /// One row of a rendered gain table.
 #[derive(Clone, Debug)]
 pub struct GainRow {
+    /// Workload name (Table I row).
     pub name: String,
+    /// Measured throughput gain vs dense.
     pub throughput: f64,
+    /// Measured energy-efficiency gain vs dense.
     pub energy_eff: f64,
+    /// Paper-reported throughput gain (Fig. 4a).
     pub paper_throughput: f64,
+    /// Paper-reported energy-efficiency gain (Fig. 4a).
     pub paper_energy: f64,
 }
 
@@ -117,12 +125,16 @@ pub fn render_gain_table(rows: &[GainRow]) -> String {
 /// being projections + FFN-adjacent static MatMul and softmax/misc.
 #[derive(Clone, Copy, Debug)]
 pub struct BertBreakdown {
+    /// Static MatMul share (projections + FFN-adjacent).
     pub static_matmul: f64,
+    /// Dynamic QK + AV MatMul share (what SATA accelerates).
     pub dynamic_matmul: f64,
+    /// Softmax + miscellaneous share.
     pub softmax_misc: f64,
 }
 
 impl BertBreakdown {
+    /// Published BERT-Base profile, normalized to 1.0 total.
     pub fn bert_base() -> Self {
         // normalized to 1.0 total
         BertBreakdown { static_matmul: 0.52, dynamic_matmul: 0.36, softmax_misc: 0.12 }
@@ -197,6 +209,48 @@ pub fn render_model_rollup(
             g.energy_eff,
             crit,
             100.0 * r.critical_fraction(),
+        ));
+    }
+    s
+}
+
+/// Decode-session rollup: one row per flow over a full session whose
+/// [`crate::model::report::ModelReport`]s carry `prefill_layers` prefill
+/// entries followed by one entry per generated token (the coordinator's
+/// decode-job report shape). Shows prefill vs decode split, per-token
+/// cost, and gains vs the first (baseline) row — the
+/// `simulate --steps` / `serve --steps` output path.
+pub fn render_session_rollup(
+    substrate: &str,
+    prefill_layers: usize,
+    rows: &[(&str, &crate::model::report::ModelReport)],
+) -> String {
+    let mut s = String::new();
+    let Some(((base_name, base), _)) = rows.split_first() else {
+        return s;
+    };
+    let tokens = base.n_layers().saturating_sub(prefill_layers);
+    s.push_str(&format!(
+        "session rollup [{substrate}] — {prefill_layers} prefill layers + {tokens} tokens, gains vs {base_name}\n",
+    ));
+    s.push_str(&format!(
+        "{:<14} {:>12} {:>12} {:>12} {:>8} {:>8}\n",
+        "flow", "prefill µs", "decode µs", "ns/token", "thr", "energy"
+    ));
+    for (name, r) in rows {
+        let split = prefill_layers.min(r.layers.len());
+        let prefill_ns: f64 = r.layers[..split].iter().map(|l| l.latency_ns).sum();
+        let decode_ns: f64 = r.layers[split..].iter().map(|l| l.latency_ns).sum();
+        let per_token = if tokens > 0 { decode_ns / tokens as f64 } else { 0.0 };
+        let g = crate::engine::gains(&base.total, &r.total);
+        s.push_str(&format!(
+            "{:<14} {:>12.3} {:>12.3} {:>12.1} {:>7.2}x {:>7.2}x\n",
+            name,
+            prefill_ns / 1e3,
+            decode_ns / 1e3,
+            per_token,
+            g.throughput,
+            g.energy_eff,
         ));
     }
     s
@@ -295,6 +349,27 @@ mod tests {
         // sata's critical layer is L1 at 75% of its latency
         assert!(out.contains("L1 (75.0% of latency)"), "{out}");
         assert!(render_model_rollup("cim", &[]).is_empty());
+    }
+
+    #[test]
+    fn session_rollup_splits_prefill_from_decode_and_rates_per_token() {
+        use crate::model::report::ModelReport;
+        let layer = RunReport { latency_ns: 3000.0, mac_pj: 100.0, ..Default::default() };
+        let step = RunReport { latency_ns: 500.0, mac_pj: 10.0, ..Default::default() };
+        // 2 prefill layers + 4 tokens
+        let dense = ModelReport::fold(vec![layer, layer, step, step, step, step]);
+        let fast_step = RunReport { latency_ns: 250.0, mac_pj: 5.0, ..Default::default() };
+        let sata = ModelReport::fold(vec![
+            layer, layer, fast_step, fast_step, fast_step, fast_step,
+        ]);
+        let out =
+            render_session_rollup("cim", 2, &[("dense", &dense), ("sata", &sata)]);
+        assert!(out.starts_with("session rollup [cim] — 2 prefill layers + 4 tokens"), "{out}");
+        // dense: 2000 ns decode over 4 tokens = 500 ns/token
+        assert!(out.contains("500.0"), "{out}");
+        // sata: 250 ns/token
+        assert!(out.contains("250.0"), "{out}");
+        assert!(render_session_rollup("cim", 2, &[]).is_empty());
     }
 
     #[test]

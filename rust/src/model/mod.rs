@@ -24,24 +24,42 @@ use crate::util::rng::mix64;
 
 /// One full model request: the per-layer selective-mask traces of a single
 /// multi-layer inference, in layer order.
+///
+/// ```
+/// use sata::config::WorkloadSpec;
+/// use sata::model::ModelTrace;
+/// use sata::trace::synth::gen_model;
+///
+/// let spec = WorkloadSpec::ttst();
+/// // rho = 1: every layer re-selects the previous layer's keys.
+/// let m = gen_model(&spec, 3, 1.0, 7);
+/// assert_eq!(m.n_layers(), 3);
+/// assert!((m.inter_layer_overlap() - 1.0).abs() < 1e-12);
+/// // JSON round-trip preserves identity.
+/// let back = ModelTrace::from_json(&m.to_json()).unwrap();
+/// assert_eq!(back.fingerprint(), m.fingerprint());
+/// ```
 #[derive(Clone, Debug)]
 pub struct ModelTrace {
+    /// Source model name.
     pub model: String,
     /// Sequence length N — uniform across layers (validated on load).
     pub seq_len: usize,
+    /// Per-layer traces, in layer order.
     pub layers: Vec<MaskTrace>,
 }
 
 impl From<MaskTrace> for ModelTrace {
     /// A single-layer trace is a 1-layer model request — the compatibility
     /// bridge every pre-model call site rides ([`crate::coordinator::Job`]
-    /// constructors take `impl Into<ModelTrace>`).
+    /// constructors take `impl Into<Request>`).
     fn from(t: MaskTrace) -> Self {
         ModelTrace { model: t.model.clone(), seq_len: t.n, layers: vec![t] }
     }
 }
 
 impl ModelTrace {
+    /// Layers in the request.
     pub fn n_layers(&self) -> usize {
         self.layers.len()
     }
@@ -90,6 +108,7 @@ impl ModelTrace {
         }
     }
 
+    /// Emit the on-disk model-file form (see the module docs).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::str(&self.model)),
@@ -139,10 +158,12 @@ impl ModelTrace {
         Ok(ModelTrace { model, seq_len: n, layers })
     }
 
+    /// Write the request as JSON.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_json().emit())
     }
 
+    /// Load and validate one model (or bare single-layer trace) file.
     pub fn load(path: &std::path::Path) -> Result<Self, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         let j = Json::parse(&text).map_err(|e| e.to_string())?;

@@ -45,6 +45,7 @@ impl ModelReport {
         ModelReport { layers, total }
     }
 
+    /// Entries folded (prefill layers, plus steps for decode jobs).
     pub fn n_layers(&self) -> usize {
         self.layers.len()
     }
@@ -59,10 +60,12 @@ impl ModelReport {
         self.total.total_pj()
     }
 
+    /// Array busy fraction of the folded totals.
     pub fn utilization(&self) -> f64 {
         self.total.utilization()
     }
 
+    /// Stalled fraction (1 − utilization) of the folded totals.
     pub fn stall_fraction(&self) -> f64 {
         self.total.stall_fraction()
     }

@@ -31,6 +31,7 @@ impl std::fmt::Display for RuntimeError {
 
 impl std::error::Error for RuntimeError {}
 
+/// Runtime result alias (every PJRT entry point returns it).
 pub type Result<T> = std::result::Result<T, RuntimeError>;
 
 pub(crate) fn err(msg: impl Into<String>) -> RuntimeError {
@@ -40,12 +41,19 @@ pub(crate) fn err(msg: impl Into<String>) -> RuntimeError {
 /// Shape/config metadata for one artifact (from `artifacts/manifest.json`).
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// Entry-point name (e.g. `mha`).
     pub entry: String,
+    /// HLO text file name within the artifacts dir.
     pub file: String,
+    /// Declared input tensor shapes, in call order.
     pub input_shapes: Vec<Vec<usize>>,
+    /// Sequence length the artifact was lowered for.
     pub n_tokens: usize,
+    /// Model (embedding) dimension.
     pub d_model: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// TopK selection width.
     pub topk: usize,
 }
 
@@ -91,8 +99,11 @@ pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
 
 /// Output of one MHA execution: attention output + per-head masks.
 pub struct MhaOutput {
+    /// Attention output, row-major.
     pub out: Vec<f32>,
+    /// Output shape (tokens, d_model).
     pub out_shape: (usize, usize),
+    /// Per-head selective masks extracted from the run.
     pub masks: Vec<SelectiveMask>,
 }
 
@@ -119,24 +130,29 @@ mod stub {
 
     /// Stub loaded artifact.
     pub struct LoadedModel {
+        /// Artifact metadata the stub echoes back.
         pub meta: ArtifactMeta,
     }
 
     impl Runtime {
+        /// Stub constructor: always the descriptive offline error.
         pub fn cpu() -> Result<Self> {
             Err(err(NO_PJRT))
         }
 
+        /// Stub platform name.
         pub fn platform(&self) -> String {
             "stub".into()
         }
 
+        /// Stub load: always the descriptive offline error.
         pub fn load(&self, _dir: &Path, _meta: &ArtifactMeta) -> Result<LoadedModel> {
             Err(err(NO_PJRT))
         }
     }
 
     impl LoadedModel {
+        /// Stub execution: always the descriptive offline error.
         pub fn run_mha(&self, _inputs: &[(&[f32], (usize, usize))]) -> Result<MhaOutput> {
             Err(err(NO_PJRT))
         }

@@ -21,6 +21,7 @@ pub struct Runtime {
 /// One loaded artifact.
 pub struct LoadedModel {
     exe: xla::PjRtLoadedExecutable,
+    /// Artifact metadata the executable was compiled from.
     pub meta: ArtifactMeta,
 }
 
@@ -30,6 +31,7 @@ impl Runtime {
         Ok(Runtime { client: xla::PjRtClient::cpu()? })
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -35,14 +35,21 @@ use crate::sort::{sort_keys, KeyOrder};
 /// FSM phase that emitted a step (kept for reporting/debug).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {
+    /// Load the first local head's major Qs (nothing to overlap).
     Init,
+    /// MAC the eff-first S_h keys ∥ load minor Qs.
     IntoHd,
+    /// MAC the middle keys against all Qs.
     MidstHd,
+    /// MAC the eff-last S_h keys ∥ load the next head's major Qs.
     OuttaHd,
+    /// Conventional load for a GLOB-wrapped head.
     WrapGlobLoad,
+    /// Conventional MAC for a GLOB-wrapped head.
     WrapGlobMac,
     /// Baseline-only phases (sequential load / MAC, no overlap).
     SeqLoad,
+    /// Baseline sequential MAC step.
     SeqMac,
 }
 
@@ -53,6 +60,7 @@ pub struct Step {
     /// Head whose keys are MAC'd this step (also the load target for
     /// `Init`/`WrapGlobLoad`, where `k_macs` is empty).
     pub head: usize,
+    /// FSM phase that emitted this step.
     pub phase: Phase,
     /// Original key indices MAC'd this step (sorted-order slice).
     pub k_macs: Vec<usize>,
@@ -81,9 +89,13 @@ impl Step {
 /// Sorted + classified plan for one head — the unit the scheduler consumes.
 #[derive(Clone, Debug)]
 pub struct HeadPlan {
+    /// Head index within the trace.
     pub head: usize,
+    /// The head's selective mask.
     pub mask: SelectiveMask,
+    /// Algo-1 sorted key order.
     pub order: KeyOrder,
+    /// Query classification (S_h, per-query tags, concessions).
     pub class: Classified,
 }
 
@@ -123,9 +135,11 @@ impl HeadPlan {
 /// A complete schedule over a set of heads.
 #[derive(Clone, Debug)]
 pub struct Schedule {
+    /// Scheduled steps, in issue order.
     pub steps: Vec<Step>,
     /// Token count N (uniform across heads of one layer).
     pub n: usize,
+    /// Heads covered by the schedule.
     pub n_heads: usize,
 }
 

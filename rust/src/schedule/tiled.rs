@@ -22,7 +22,9 @@ use crate::mask::SelectiveMask;
 pub struct TileInfo {
     /// Sub-head id used in the schedule's `Step::head`.
     pub tile_id: usize,
+    /// Query-fold coordinate.
     pub qf: usize,
+    /// Key-fold coordinate.
     pub kf: usize,
     /// Global query ids live in this tile.
     pub global_q: Vec<usize>,
@@ -34,10 +36,15 @@ pub struct TileInfo {
 /// fold structure the engine uses for K-reuse (buffer-hit) accounting.
 #[derive(Clone, Debug)]
 pub struct TiledSchedule {
+    /// The compressed sub-head schedule over live tiles.
     pub schedule: Schedule,
+    /// Live tiles, in schedule order.
     pub tiles: Vec<TileInfo>,
+    /// Zero-skip statistics of the tiling.
     pub skip: SkipStats,
+    /// Fold size S_f.
     pub sf: usize,
+    /// Original head size N.
     pub n: usize,
 }
 

@@ -24,8 +24,11 @@ use crate::mask::SelectiveMask;
 /// Per-query tag (Algo 1 `QT`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum QType {
+    /// Selects within the head-side S_h window of the sorted order.
     Head,
+    /// Selects within the tail-side S_h window.
     Tail,
+    /// Touches both ends — needs the full key range resident.
     Glob,
 }
 
@@ -33,8 +36,11 @@ pub enum QType {
 /// concession loop bottomed out with GLOB queries still dominating.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum HeadType {
+    /// Head-dominant local order.
     Head,
+    /// Tail-dominant local order (consumes the spectrum reversed).
     Tail,
+    /// No usable local order; the head wraps conventionally.
     Glob,
 }
 
@@ -57,6 +63,7 @@ impl Classified {
         (0..self.qt.len()).filter(|&q| self.qt[q] == t).collect()
     }
 
+    /// Queries carrying the given tag.
     pub fn count(&self, t: QType) -> usize {
         self.qt.iter().filter(|&&x| x == t).count()
     }

@@ -19,14 +19,20 @@ use crate::util::json::Json;
 /// One layer's worth of selective masks (one per head) plus metadata.
 #[derive(Clone, Debug)]
 pub struct MaskTrace {
+    /// Source model name (Table I workload or loader-provided).
     pub model: String,
+    /// Sequence length N (tokens).
     pub n: usize,
+    /// Embedding dimension D_k.
     pub dk: usize,
+    /// Selected keys per query (informational; the masks are exact).
     pub topk: usize,
+    /// One selective mask per head.
     pub heads: Vec<SelectiveMask>,
 }
 
 impl MaskTrace {
+    /// Emit the on-disk JSON form (per-query selected-key index lists).
     pub fn to_json(&self) -> Json {
         let heads: Vec<Json> = self
             .heads
@@ -52,6 +58,9 @@ impl MaskTrace {
         ])
     }
 
+    /// Total parse: structurally-valid JSON yields `Ok` or a
+    /// descriptive per-file `Err` — never a panic (hostile-input
+    /// discipline; see `SelectiveMask::try_from_topk_indices`).
     pub fn from_json(j: &Json) -> Result<Self, String> {
         let n = j.get("n").as_usize().ok_or("missing 'n'")?;
         if n == 0 {
@@ -104,10 +113,12 @@ impl MaskTrace {
         masks_fingerprint(&self.heads)
     }
 
+    /// Write the trace as JSON.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_json().emit())
     }
 
+    /// Load and validate one trace file.
     pub fn load(path: &std::path::Path) -> Result<Self, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         let j = Json::parse(&text).map_err(|e| e.to_string())?;
@@ -145,10 +156,21 @@ impl TraceDir {
         Ok(TraceDir { paths: paths.into_iter() })
     }
 
+    /// Files remaining in the stream.
     pub fn len(&self) -> usize {
         self.paths.len()
     }
 
+    /// Consume the source into its sorted path list, skipping this
+    /// iterator's `ModelTrace` parse — for callers that dispatch on file
+    /// shape themselves (`serve --traces-dir` loads each file exactly
+    /// once via `crate::coordinator::Request::load`, which also accepts
+    /// decode-session files).
+    pub fn into_paths(self) -> Vec<std::path::PathBuf> {
+        self.paths.collect()
+    }
+
+    /// Whether any files remain.
     pub fn is_empty(&self) -> bool {
         self.paths.len() == 0
     }

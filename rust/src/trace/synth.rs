@@ -17,6 +17,7 @@
 
 use super::MaskTrace;
 use crate::config::WorkloadSpec;
+use crate::decode::{DecodeSession, StepMask};
 use crate::mask::SelectiveMask;
 use crate::model::ModelTrace;
 use crate::util::rng::Rng;
@@ -130,6 +131,159 @@ pub fn gen_models(
     (0..count)
         .map(|i| gen_model(spec, n_layers, rho, seed.wrapping_add(i as u64 * 0x9E37_79B9)))
         .collect()
+}
+
+/// Generate an autoregressive decode session: an `n_layers`-deep prefill
+/// (see [`gen_model`] — `rho` keeps its cross-layer meaning there) plus
+/// `n_steps` generated tokens with tunable **step-to-step selection
+/// overlap** `kappa ∈ [0, 1]`.
+///
+/// `kappa` is `rho`'s temporal analogue — layer 0 of step semantics is
+/// anchored to the existing generators the same way `gen_model` anchors
+/// to [`gen_trace`]: the prefill is exactly `gen_model(spec, n_layers,
+/// rho, seed)`, so a 0-step session is bitwise the model-request corpus
+/// every prefill test runs on. Steps compose the same two mechanisms as
+/// `rho`:
+///
+/// * a **deterministic copy budget** of `round(kappa·(S−1))` transitions
+///   re-selects the previous step *verbatim* — and because
+///   [`StepMask::fingerprint`] is KV-length-independent, those steps
+///   fingerprint identically and produce plan-cache hits that are an
+///   exact, strictly-monotone function of `kappa`
+///   (`benches/decode_serve.rs` asserts this);
+/// * the remaining transitions **blend**: each head retains
+///   `round(kappa·K)` of its previous keys (sampled) and fills the rest
+///   from a fresh recency-biased draw — so measured overlap
+///   ([`DecodeSession::step_overlap`]) and carryover residency rise
+///   smoothly with `kappa` between copy-budget points.
+///
+/// Fresh selections mirror [`gen_head`]'s two populations over the grown
+/// KV set: with probability `glob_frac` a step's head selects uniformly
+/// (GLOB-ish), otherwise inside a contiguous window of `spread·K` keys
+/// placed uniformly in the KV set (windowed decode locality with a
+/// jittered anchor — see `fresh_step`).
+pub fn gen_session(
+    spec: &WorkloadSpec,
+    n_layers: usize,
+    rho: f64,
+    n_steps: usize,
+    kappa: f64,
+    seed: u64,
+) -> DecodeSession {
+    let prefill = gen_model(spec, n_layers, rho, seed);
+    let kappa = kappa.clamp(0.0, 1.0);
+    let copies = if n_steps > 1 {
+        (kappa * (n_steps - 1) as f64).round() as usize
+    } else {
+        0
+    };
+    let mut rng = Rng::new(seed ^ 0x4445_434F_4445_2121); // distinct step stream
+    let mut steps: Vec<StepMask> = Vec::with_capacity(n_steps);
+    for t in 0..n_steps {
+        let kv = prefill.seq_len + t + 1;
+        let step = if t == 0 {
+            fresh_step(spec, kv, &mut rng)
+        } else if t <= copies {
+            // verbatim re-selection over the grown KV set (hit path)
+            StepMask { kv_len: kv, heads: steps[t - 1].heads.clone() }
+        } else {
+            blend_step(spec, &steps[t - 1], kv, kappa, &mut rng)
+        };
+        steps.push(step);
+    }
+    let s = DecodeSession { model: spec.name.clone(), prefill, steps };
+    debug_assert!(s.validate().is_ok());
+    s
+}
+
+/// Generate `count` sessions with derived per-session seeds (distinct
+/// prefills and step streams — hits measure cross-step locality, not
+/// cross-session repetition).
+pub fn gen_sessions(
+    spec: &WorkloadSpec,
+    count: usize,
+    n_layers: usize,
+    rho: f64,
+    n_steps: usize,
+    kappa: f64,
+    seed: u64,
+) -> Vec<DecodeSession> {
+    (0..count)
+        .map(|i| {
+            gen_session(
+                spec,
+                n_layers,
+                rho,
+                n_steps,
+                kappa,
+                seed.wrapping_add(i as u64 * 0x9E37_79B9),
+            )
+        })
+        .collect()
+}
+
+/// One fresh decode step: per head, a TopK selection over the `kv`-sized
+/// KV set — GLOB-ish uniform with probability `glob_frac`, otherwise a
+/// contiguous window of `spread·K` keys placed uniformly at random in the
+/// grown KV set. The jittered anchor keeps step-to-step overlap a
+/// genuine function of `kappa` (a fixed recency anchor would overlap
+/// consecutive independent steps almost fully and flatten the knob).
+fn fresh_step(spec: &WorkloadSpec, kv: usize, rng: &mut Rng) -> StepMask {
+    let k = spec.topk.min(kv).max(1);
+    let heads = (0..spec.n_heads)
+        .map(|_| {
+            if rng.chance(spec.glob_frac) {
+                rng.sample_indices(kv, k)
+            } else {
+                let window = ((k as f64 * spec.spread).ceil() as usize).clamp(k, kv);
+                let lo = rng.gen_range(kv - window + 1);
+                rng.sample_indices(window, k).into_iter().map(|i| lo + i).collect()
+            }
+        })
+        .collect();
+    StepMask { kv_len: kv, heads }
+}
+
+/// One blended step: per head, retain `round(kappa·K)` of the previous
+/// step's keys (sampled), fill to K from a fresh recency-biased draw,
+/// then from any unused index. Every head keeps an exact-K,
+/// duplicate-free, in-range selection for any `kappa`.
+fn blend_step(
+    spec: &WorkloadSpec,
+    prev: &StepMask,
+    kv: usize,
+    kappa: f64,
+    rng: &mut Rng,
+) -> StepMask {
+    let fresh = fresh_step(spec, kv, rng);
+    let heads = prev
+        .heads
+        .iter()
+        .zip(&fresh.heads)
+        .map(|(pk, fk)| {
+            let k_row = spec.topk.min(kv).max(1);
+            let keep = ((kappa * k_row as f64).round() as usize).min(pk.len()).min(k_row);
+            let mut used = vec![false; kv];
+            let mut sel = Vec::with_capacity(k_row);
+            for pos in rng.sample_indices(pk.len(), keep) {
+                let key = pk[pos]; // < prev kv_len < kv, always in range
+                if !used[key] {
+                    used[key] = true;
+                    sel.push(key);
+                }
+            }
+            let mut fill = fk.iter().copied().chain(0..kv);
+            while sel.len() < k_row {
+                let key = fill.next().expect("kv indices suffice for a TopK row");
+                if !used[key] {
+                    used[key] = true;
+                    sel.push(key);
+                }
+            }
+            sel
+        })
+        .collect();
+    StepMask { kv_len: kv, heads }
 }
 
 /// One blended layer: per query, retain `round(rho·K)` of the previous
@@ -344,6 +498,113 @@ mod tests {
         uniq.sort_unstable();
         uniq.dedup();
         assert_eq!(uniq.len(), 6);
+    }
+
+    #[test]
+    fn gen_session_prefill_is_exactly_gen_model_and_replayable() {
+        let spec = WorkloadSpec::ttst();
+        let s = gen_session(&spec, 3, 0.4, 5, 0.5, 11);
+        assert_eq!(s.n_steps(), 5);
+        let m = gen_model(&spec, 3, 0.4, 11);
+        assert_eq!(
+            s.prefill.fingerprint(),
+            m.fingerprint(),
+            "prefill must be gen_model(seed) — 0-step sessions are the model corpus"
+        );
+        // replayable; different seeds / kappa diverge
+        assert_eq!(
+            s.fingerprint(),
+            gen_session(&spec, 3, 0.4, 5, 0.5, 11).fingerprint()
+        );
+        assert_ne!(
+            s.fingerprint(),
+            gen_session(&spec, 3, 0.4, 5, 0.5, 12).fingerprint()
+        );
+        assert_ne!(
+            s.fingerprint(),
+            gen_session(&spec, 3, 0.4, 5, 0.9, 11).fingerprint()
+        );
+    }
+
+    #[test]
+    fn gen_session_is_valid_for_all_kappa() {
+        use crate::util::prop::check;
+        check("gen_session valid over kappa and depth", 10, |rng| {
+            let spec = WorkloadSpec::ttst();
+            let kappa = rng.f64();
+            let steps = rng.gen_range(7);
+            let s = gen_session(&spec, 1 + rng.gen_range(3), rng.f64(), steps, kappa, rng.next_u64());
+            s.validate().map_err(|e| format!("kappa {kappa:.2}: {e}"))?;
+            if s.n_steps() != steps {
+                return Err("wrong step count".into());
+            }
+            for (t, st) in s.steps.iter().enumerate() {
+                for h in &st.heads {
+                    if h.len() != spec.topk.min(s.kv_len_at(t)) {
+                        return Err(format!("step {t}: row not exact-K"));
+                    }
+                }
+            }
+            // the JSON loader re-checks range/duplicate/growth discipline
+            crate::decode::DecodeSession::from_json(&s.to_json())
+                .map_err(|e| format!("reload failed: {e}"))?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_session_step_overlap_is_monotone_in_kappa() {
+        let spec = WorkloadSpec::ttst();
+        let grid = [0.0, 0.25, 0.5, 0.75, 1.0];
+        for seed in [2u64, 9, 33] {
+            let overlaps: Vec<f64> = grid
+                .iter()
+                .map(|&kappa| gen_session(&spec, 1, 0.0, 6, kappa, seed).step_overlap())
+                .collect();
+            for w in overlaps.windows(2) {
+                assert!(
+                    w[1] >= w[0] - 0.03,
+                    "overlap not monotone (seed {seed}): {overlaps:?}"
+                );
+            }
+            assert!(
+                overlaps[4] > overlaps[0] + 0.2,
+                "knob has no dynamic range (seed {seed}): {overlaps:?}"
+            );
+            // kappa = 1: every transition is a verbatim copy.
+            assert!((overlaps[4] - 1.0).abs() < 1e-12, "{overlaps:?}");
+        }
+    }
+
+    #[test]
+    fn gen_session_copy_budget_duplicates_step_fingerprints() {
+        // round(kappa·(S−1)) verbatim transitions → fingerprint-identical
+        // steps (KV growth notwithstanding) — the plan-cache hit path.
+        let spec = WorkloadSpec::kvt_deit_tiny();
+        let s = gen_session(&spec, 1, 0.0, 6, 0.6, 4); // copies = round(0.6·5) = 3
+        let fp: Vec<u64> = s.steps.iter().map(|st| st.fingerprint()).collect();
+        assert_eq!(fp[0], fp[1]);
+        assert_eq!(fp[1], fp[2]);
+        assert_eq!(fp[2], fp[3]);
+        assert_ne!(fp[3], fp[4]);
+        assert_ne!(fp[4], fp[5]);
+        // kappa = 0: every step fingerprint distinct (no accidental hits).
+        let indep = gen_session(&spec, 1, 0.0, 6, 0.0, 4);
+        let mut uniq: Vec<u64> = indep.steps.iter().map(|st| st.fingerprint()).collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 6);
+    }
+
+    #[test]
+    fn gen_sessions_derives_distinct_session_seeds() {
+        let spec = WorkloadSpec::ttst();
+        let ss = gen_sessions(&spec, 3, 1, 0.0, 4, 0.5, 21);
+        assert_eq!(ss.len(), 3);
+        let mut fps: Vec<u64> = ss.iter().map(|s| s.fingerprint()).collect();
+        fps.sort_unstable();
+        fps.dedup();
+        assert_eq!(fps.len(), 3, "sessions must be distinct workloads");
     }
 
     #[test]

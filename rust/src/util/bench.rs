@@ -14,16 +14,24 @@ use super::stats;
 /// One benchmark measurement summary (nanoseconds per iteration).
 #[derive(Clone, Debug)]
 pub struct Sample {
+    /// Benchmark id.
     pub name: String,
+    /// Median ns per iteration.
     pub median_ns: f64,
+    /// Mean ns per iteration.
     pub mean_ns: f64,
+    /// 10th-percentile ns per iteration.
     pub p10_ns: f64,
+    /// 90th-percentile ns per iteration.
     pub p90_ns: f64,
+    /// Iterations per measured sample (calibrated).
     pub iters_per_sample: u64,
+    /// Samples measured.
     pub samples: usize,
 }
 
 impl Sample {
+    /// Print the one-line summary.
     pub fn print(&self) {
         println!(
             "bench {:<44} median {:>12}  mean {:>12}  p10 {:>12}  p90 {:>12}  ({} iters x {} samples)",
@@ -54,6 +62,7 @@ fn fmt_ns(ns: f64) -> String {
 pub struct Bench {
     fast: bool,
     target_sample: Duration,
+    /// Every sample measured so far (summary table input).
     pub results: Vec<Sample>,
 }
 
@@ -64,6 +73,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// Runner with `SATA_BENCH_FAST`-aware sample sizing.
     pub fn new() -> Self {
         let fast = std::env::var("SATA_BENCH_FAST").is_ok();
         Bench {

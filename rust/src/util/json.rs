@@ -12,18 +12,26 @@ use std::fmt;
 /// A parsed JSON value. `Object` is a `BTreeMap` so emission is stable.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (parsed as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (`BTreeMap` keeps emission stable).
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset for debuggability.
 #[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -37,12 +45,14 @@ impl std::error::Error for ParseError {}
 
 impl Json {
     // ------------------------------------------------------------ accessors
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The value as a non-negative integer, if it is one exactly.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
             if n >= 0.0 && n.fract() == 0.0 {
@@ -52,24 +62,28 @@ impl Json {
             }
         })
     }
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// The key → value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -86,23 +100,29 @@ impl Json {
     }
 
     // ----------------------------------------------------------- builders
+    /// Object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// Number value.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
+    /// String value.
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
+    /// Array of integers.
     pub fn arr_usize(xs: &[usize]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
+    /// Array of floats.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
     // ------------------------------------------------------------- parsing
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(text: &str) -> Result<Json, ParseError> {
         let bytes = text.as_bytes();
         let mut p = Parser { b: bytes, pos: 0 };

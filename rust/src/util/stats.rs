@@ -53,18 +53,24 @@ pub fn geomean(xs: &[f64]) -> f64 {
 /// Out-of-range samples clamp into the edge buckets.
 #[derive(Clone, Debug)]
 pub struct Histogram {
+    /// Inclusive lower bound of the range.
     pub lo: f64,
+    /// Exclusive upper bound of the range.
     pub hi: f64,
+    /// Per-bucket sample counts.
     pub counts: Vec<u64>,
+    /// Total samples recorded.
     pub total: u64,
 }
 
 impl Histogram {
+    /// Histogram over `[lo, hi)` with `bins` buckets.
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(hi > lo && bins > 0);
         Histogram { lo, hi, counts: vec![0; bins], total: 0 }
     }
 
+    /// Record one sample (out-of-range clamps into the edge buckets).
     pub fn add(&mut self, x: f64) {
         let bins = self.counts.len();
         let t = (x - self.lo) / (self.hi - self.lo);
@@ -106,6 +112,7 @@ impl LatencyHistogram {
     /// Octaves covered starting at 1 (ns): 1 ns .. 2^64 ns (~584 years).
     const OCTAVES: usize = 64;
 
+    /// Empty histogram covering 1 ns .. 2^64 ns.
     pub fn new() -> Self {
         LatencyHistogram {
             counts: vec![0; Self::OCTAVES * Self::SUB_BUCKETS],
@@ -132,10 +139,12 @@ impl LatencyHistogram {
         self.max = self.max.max(x);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.total
     }
 
+    /// Exact arithmetic mean of the recorded samples.
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             0.0

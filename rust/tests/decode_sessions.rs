@@ -1,0 +1,269 @@
+//! Decode-session acceptance tests: a 0-step session through the
+//! coordinator is **bitwise identical** to the model-request path for
+//! all seven flows on both substrates; `gen_session`'s `kappa` knob
+//! produces valid sessions with monotone step overlap; step-carryover
+//! residency never claims a key the previous step did not fetch; and the
+//! pipelined coordinator path agrees exactly with the single-threaded
+//! `decode::run_session` reference.
+
+use sata::config::{SystemConfig, WorkloadSpec};
+use sata::coordinator::{Coordinator, CoordinatorConfig, Job, Request};
+use sata::decode::{carry_residency, run_session, DecodeSession};
+use sata::engine::{backend, substrate, EngineOpts};
+use sata::trace::synth::{gen_model, gen_session, gen_trace};
+use sata::trace::TraceDir;
+use sata::util::prop::check;
+
+#[test]
+fn zero_step_session_is_bitwise_identical_to_the_model_path_everywhere() {
+    // The decode refactor's golden contract: for every Table-I workload,
+    // every registered flow, and both substrates, a 0-step DecodeSession
+    // served through the coordinator reproduces the model-request path's
+    // reports bit for bit — dense baseline, per-flow totals, and
+    // per-layer entries.
+    for spec in WorkloadSpec::all_paper() {
+        let flow_names: Vec<String> =
+            backend::flow_names().iter().map(|s| s.to_string()).collect();
+        let trace = gen_trace(&spec, 23);
+        for sspec in &substrate::SUBSTRATES {
+            let sys = SystemConfig::for_workload(&spec);
+            let coord = Coordinator::new(2, 4, sys);
+            coord
+                .submit(
+                    Job::with_flows(0, trace.clone(), spec.sf, flow_names.clone())
+                        .on_substrate(sspec.name),
+                )
+                .unwrap();
+            coord
+                .submit(
+                    Job::with_flows(
+                        1,
+                        DecodeSession::from(trace.clone()),
+                        spec.sf,
+                        flow_names.clone(),
+                    )
+                    .on_substrate(sspec.name),
+                )
+                .unwrap();
+            let (results, _) = coord.drain();
+            assert_eq!(results.len(), 2);
+            let (model, decode) = (&results[0], &results[1]);
+            assert!(model.is_ok() && decode.is_ok(), "{:?}", decode.error);
+            assert_eq!(decode.tokens, 0);
+            assert_eq!(decode.layers, model.layers);
+            let tag = format!("{}@{}", spec.name, sspec.name);
+            assert_eq!(decode.dense, model.dense, "{tag}: dense diverged");
+            assert_eq!(decode.flows.len(), model.flows.len());
+            for (d, m) in decode.flows.iter().zip(&model.flows) {
+                assert_eq!(d.flow, m.flow);
+                assert_eq!(d.report, m.report, "{tag} {}: report diverged", d.flow);
+                assert_eq!(d.throughput_gain, m.throughput_gain, "{tag} {}", d.flow);
+                assert_eq!(d.energy_gain, m.energy_gain, "{tag} {}", d.flow);
+            }
+        }
+    }
+}
+
+#[test]
+fn coordinator_decode_path_matches_the_run_session_reference() {
+    // The pipelined, unit-interleaved coordinator path and the
+    // single-threaded decode::run_session reference must agree exactly —
+    // no hidden cross-unit state, no ordering sensitivity.
+    let spec = WorkloadSpec::ttst();
+    let session = gen_session(&spec, 2, 0.5, 5, 0.6, 31);
+    let sys = SystemConfig::for_workload(&spec);
+    let opts = EngineOpts {
+        sf: spec.sf,
+        theta_frac: sys.theta_frac,
+        seed: sys.seed,
+        ..Default::default()
+    };
+    for sspec in &substrate::SUBSTRATES {
+        for carry in [true, false] {
+            let sub = (sspec.build)(&sys, spec.dk);
+            let expected =
+                run_session(&backend::SATA, &session, &*sub, opts, carry);
+
+            let coord = Coordinator::new(2, 4, SystemConfig::for_workload(&spec));
+            coord
+                .submit(
+                    Job::new(0, session.clone(), spec.sf)
+                        .on_substrate(sspec.name)
+                        .with_carryover(carry),
+                )
+                .unwrap();
+            let (results, metrics) = coord.drain();
+            let r = &results[0];
+            assert!(r.is_ok(), "{:?}", r.error);
+            assert_eq!(r.layers, 2);
+            assert_eq!(r.tokens, 5);
+            assert_eq!(
+                r.flows[0].report, expected,
+                "{} carry={carry} diverged from reference",
+                sspec.name
+            );
+            assert_eq!(metrics.tokens_done, 5);
+        }
+    }
+}
+
+#[test]
+fn gen_session_is_valid_and_servable_for_all_kappa() {
+    check("gen_session valid + servable over kappa", 6, |rng| {
+        let spec = WorkloadSpec::ttst();
+        let kappa = rng.f64();
+        let steps = 1 + rng.gen_range(5);
+        let s = gen_session(&spec, 1 + rng.gen_range(2), rng.f64(), steps, kappa, rng.next_u64());
+        s.validate().map_err(|e| format!("kappa {kappa:.2}: {e}"))?;
+        // JSON-reloadable with identical identity.
+        let back = DecodeSession::from_json(&s.to_json())
+            .map_err(|e| format!("reload failed: {e}"))?;
+        if back.fingerprint() != s.fingerprint() {
+            return Err("fingerprint changed across JSON roundtrip".into());
+        }
+        // Servable end to end.
+        let coord = Coordinator::new(1, 2, SystemConfig::for_workload(&spec));
+        coord
+            .submit(Job::new(0, s, spec.sf))
+            .map_err(|_| "submit failed".to_string())?;
+        let (results, _) = coord.drain();
+        if !results[0].is_ok() {
+            return Err(format!("serve failed: {:?}", results[0].error));
+        }
+        if results[0].tokens != steps {
+            return Err("token count mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn step_overlap_is_monotone_in_kappa() {
+    let spec = WorkloadSpec::drsformer();
+    let grid = [0.0, 0.25, 0.5, 0.75, 1.0];
+    for seed in [5u64, 19] {
+        let overlaps: Vec<f64> = grid
+            .iter()
+            .map(|&kappa| gen_session(&spec, 1, 0.0, 6, kappa, seed).step_overlap())
+            .collect();
+        for w in overlaps.windows(2) {
+            assert!(w[1] >= w[0] - 0.03, "not monotone (seed {seed}): {overlaps:?}");
+        }
+        assert!(
+            overlaps[4] > overlaps[0] + 0.15,
+            "no dynamic range (seed {seed}): {overlaps:?}"
+        );
+        assert!((overlaps[4] - 1.0).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn carryover_residency_never_claims_an_unfetched_key() {
+    // The residency contract, property-tested over random kappa/depths:
+    // every key charged resident at step t was selected (hence fetched)
+    // by step t−1 AND is selected by step t; step 0 carries nothing.
+    check("carry residency ⊆ previous fetch set", 12, |rng| {
+        let spec = WorkloadSpec::ttst();
+        let steps = 1 + rng.gen_range(6);
+        let s = gen_session(&spec, 1, 0.0, steps, rng.f64(), rng.next_u64());
+        let res = carry_residency(&s);
+        if res.len() != steps {
+            return Err("residency length mismatch".into());
+        }
+        if !res[0].iter().all(|h| h.is_empty()) {
+            return Err("step 0 must carry nothing".into());
+        }
+        for t in 1..steps {
+            for (h, keys) in res[t].iter().enumerate() {
+                for k in keys {
+                    if !s.steps[t - 1].heads[h].contains(k) {
+                        return Err(format!(
+                            "step {t} head {h}: key {k} claimed resident but not fetched at step {}",
+                            t - 1
+                        ));
+                    }
+                    if !s.steps[t].heads[h].contains(k) {
+                        return Err(format!(
+                            "step {t} head {h}: resident key {k} not selected this step"
+                        ));
+                    }
+                }
+                // And the set is exactly the intersection: nothing
+                // selected-by-both is left unclaimed (the reuse metric
+                // must not undercount either).
+                let missed = s.steps[t].heads[h]
+                    .iter()
+                    .filter(|k| s.steps[t - 1].heads[h].contains(k))
+                    .count();
+                if missed != keys.len() {
+                    return Err(format!(
+                        "step {t} head {h}: residency {} != intersection {missed}",
+                        keys.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn request_load_dispatches_on_file_shape() {
+    // serve --traces-dir's per-file loader: one read + one JSON parse,
+    // dispatched on shape — bare trace, model file, session file; hostile
+    // files yield per-file errors.
+    let dir = std::env::temp_dir().join("sata_request_load_test");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = WorkloadSpec::ttst();
+    gen_trace(&spec, 1).save(&dir.join("a_single.json")).unwrap();
+    gen_model(&spec, 2, 0.5, 2).save(&dir.join("b_model.json")).unwrap();
+    gen_session(&spec, 1, 0.0, 3, 0.5, 3).save(&dir.join("c_session.json")).unwrap();
+    std::fs::write(dir.join("d_bad.json"), "{ nope").unwrap();
+
+    let paths = TraceDir::open(&dir).unwrap().into_paths();
+    assert_eq!(paths.len(), 4, "sorted path listing");
+    match Request::load(&paths[0]).unwrap() {
+        Request::Model(m) => assert_eq!(m.n_layers(), 1),
+        other => panic!("bare trace loaded as {other:?}"),
+    }
+    match Request::load(&paths[1]).unwrap() {
+        Request::Model(m) => assert_eq!(m.n_layers(), 2),
+        other => panic!("model file loaded as {other:?}"),
+    }
+    match Request::load(&paths[2]).unwrap() {
+        Request::Decode(s) => assert_eq!(s.n_steps(), 3),
+        other => panic!("session file loaded as {other:?}"),
+    }
+    assert!(Request::load(&paths[3]).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mixed_corpus_serves_models_and_sessions_together() {
+    // serve's corpus shape: a directory-style mix of prefill requests and
+    // decode sessions interleaving through one coordinator, with decode
+    // metrics folding only the session jobs.
+    let spec = WorkloadSpec::ttst();
+    let sys = SystemConfig::for_workload(&spec);
+    let coord = Coordinator::with_config(
+        sys,
+        CoordinatorConfig { plan_workers: 2, exec_workers: 2, ..Default::default() },
+    );
+    coord.submit(Job::new(0, gen_trace(&spec, 1), spec.sf)).unwrap();
+    coord
+        .submit(Job::new(1, gen_session(&spec, 1, 0.0, 4, 0.7, 2), spec.sf))
+        .unwrap();
+    coord.submit(Job::new(2, gen_trace(&spec, 3), spec.sf)).unwrap();
+    let (results, metrics) = coord.drain();
+    assert_eq!(results.len(), 3);
+    assert!(results.iter().all(|r| r.is_ok()));
+    assert_eq!(results[0].tokens, 0);
+    assert_eq!(results[1].tokens, 4);
+    assert_eq!(results[2].tokens, 0);
+    assert_eq!(metrics.tokens_done, 4);
+    assert_eq!(metrics.layers_planned, 3);
+    assert_eq!(metrics.live_sessions_peak, 1);
+    assert!(metrics.carry_fetched_keys > 0);
+    assert!(metrics.token_p50_ns > 0.0);
+}
