@@ -82,7 +82,7 @@ fn serve_sessions(
 }
 
 fn main() {
-    let b = Bench::new();
+    let mut b = Bench::new();
     let fast = std::env::var("SATA_BENCH_FAST").is_ok();
     let sessions = if fast { 5 } else { 16 };
     // TTST: D_k = 65536 keeps decode steps memory-bound on both
@@ -182,4 +182,7 @@ fn main() {
             }
         }
     }
+
+    let path = b.emit_snapshot("decode_serve").expect("write BENCH_decode_serve.json");
+    println!("perf trajectory snapshot: {}", path.display());
 }

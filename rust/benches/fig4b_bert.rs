@@ -9,7 +9,7 @@ use sata::trace::synth::gen_trace;
 use sata::util::bench::Bench;
 
 fn main() {
-    let b = Bench::new();
+    let mut b = Bench::new();
     // BERT-Base-like dynamic-MatMul workload: N=384, d_h=64, 12 heads,
     // TopK = N/4 (Energon-class selectivity).
     let spec = WorkloadSpec {

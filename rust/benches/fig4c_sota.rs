@@ -16,7 +16,7 @@ use sata::util::bench::Bench;
 use sata::util::stats::geomean;
 
 fn main() {
-    let b = Bench::new();
+    let mut b = Bench::new();
     println!("Fig. 4c — gains from integrating SATA into SOTA accelerators (paper avg: 1.34x energy, 1.3x throughput)");
     println!("analytic fraction model:");
     println!("{:<10} {:>14} {:>14}", "design", "energy gain", "throughput");

@@ -55,7 +55,7 @@ fn serve_models(
 }
 
 fn main() {
-    let b = Bench::new();
+    let mut b = Bench::new();
     let fast = std::env::var("SATA_BENCH_FAST").is_ok();
     let requests = if fast { 6 } else { 24 };
     let spec = WorkloadSpec::ttst();

@@ -10,7 +10,7 @@ use sata::trace::synth::gen_trace;
 use sata::util::bench::Bench;
 
 fn main() {
-    let b = Bench::new();
+    let mut b = Bench::new();
     let spec = WorkloadSpec::kvt_deit_tiny();
     let cim = CimConfig::default_65nm(spec.dk);
     let rtl = SchedRtl::tsmc65();

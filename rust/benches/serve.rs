@@ -55,7 +55,7 @@ fn serve_pass(
 }
 
 fn main() {
-    let b = Bench::new();
+    let mut b = Bench::new();
     let fast = std::env::var("SATA_BENCH_FAST").is_ok();
     let (traces, repeats) = if fast { (4, 3) } else { (16, 6) };
     let flows = ["sata", "spatten+sata"];
@@ -94,4 +94,7 @@ fn main() {
         serve_pass(&spec, traces, repeats, &flows, "systolic", 256);
     assert!(sys_m.cache_hits > 0, "repeat systolic jobs must hit the plan cache");
     b.report_metric("serve.ttst.systolic.jobs_per_s", sys_jps, "jobs/s");
+
+    let path = b.emit_snapshot("serve").expect("write BENCH_serve.json");
+    println!("perf trajectory snapshot: {}", path.display());
 }

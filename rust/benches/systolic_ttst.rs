@@ -11,7 +11,7 @@ use sata::trace::synth::gen_trace;
 use sata::util::bench::Bench;
 
 fn main() {
-    let b = Bench::new();
+    let mut b = Bench::new();
     let spec = WorkloadSpec::ttst();
     let t = gen_trace(&spec, 1);
     let sys = SystemConfig::for_workload(&spec);

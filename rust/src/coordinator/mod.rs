@@ -119,18 +119,23 @@ impl Request {
     }
 
     /// Load a request file of any shape — bare single-layer trace,
-    /// multi-layer model, or decode session — reading and JSON-parsing
-    /// the file **once** and dispatching on shape: a `"prefill"` key
-    /// loads as [`Request::Decode`], anything else through the
-    /// [`ModelTrace`] loader (which accepts bare traces as 1-layer
-    /// models). This is `serve --traces-dir`'s per-file loader.
+    /// multi-layer model, or decode session — reading and lazily scanning
+    /// the file **once** (`crate::util::json::Scanner`: top-level fields
+    /// sliced, no full `Json` tree) and dispatching on shape: a
+    /// `"prefill"` key loads as [`Request::Decode`], anything else
+    /// through the [`ModelTrace`] loader (which accepts bare traces as
+    /// 1-layer models). This is `serve --traces-dir`'s per-file loader.
     pub fn load(path: &std::path::Path) -> Result<Request, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
-        let j = Json::parse(&text).map_err(|e| e.to_string())?;
-        if *j.get("prefill") != Json::Null {
-            return DecodeSession::from_json(&j).map(Request::Decode);
+        let fields = crate::util::json::Scanner::new(&text)
+            .top_fields()
+            .map_err(|e| e.to_string())?;
+        match fields.get("prefill") {
+            Some(raw) if raw.trim() != "null" => {
+                DecodeSession::from_fields(&fields).map(Request::Decode)
+            }
+            _ => ModelTrace::from_fields(&fields).map(Request::Model),
         }
-        ModelTrace::from_json(&j).map(Request::Model)
     }
 }
 
@@ -175,6 +180,12 @@ pub struct Job {
     /// forces every step's fetch fresh — the un-carried baseline
     /// `benches/decode_serve.rs` measures the residency win against.
     pub carryover: bool,
+    /// Delta-planning for decode steps (default on). On a step-cache
+    /// miss whose predecessor plan is in hand, the plan worker patches it
+    /// (`StepPlan::patch_from`) instead of re-planning cold — bitwise
+    /// identical output, strictly less work at high step overlap. `false`
+    /// (`serve --no-delta`) forces every miss through the cold path.
+    pub delta: bool,
 }
 
 impl Job {
@@ -187,6 +198,7 @@ impl Job {
             flows: vec!["sata".into()],
             substrate: "cim".into(),
             carryover: true,
+            delta: true,
         }
     }
 
@@ -204,6 +216,7 @@ impl Job {
             flows,
             substrate: "cim".into(),
             carryover: true,
+            delta: true,
         }
     }
 
@@ -216,6 +229,12 @@ impl Job {
     /// Enable/disable decode step carryover (see [`Job::carryover`]).
     pub fn with_carryover(mut self, carryover: bool) -> Self {
         self.carryover = carryover;
+        self
+    }
+
+    /// Enable/disable delta-planning (see [`Job::delta`]).
+    pub fn with_delta(mut self, delta: bool) -> Self {
+        self.delta = delta;
         self
     }
 }
@@ -546,6 +565,28 @@ pub struct CoordinatorMetrics {
     pub wall_p95_ns: f64,
     /// Wall-latency p99 (submit → result), in ns.
     pub wall_p99_ns: f64,
+    /// Stage-1 planning wall time per job, p50 in ns (validation + every
+    /// layer/step plan for one request, inside one plan worker).
+    pub plan_p50_ns: f64,
+    /// Stage-1 planning wall time per job, p99 in ns.
+    pub plan_p99_ns: f64,
+    /// Total stage-1 planning wall time across all jobs, in ns.
+    pub plan_total_ns: f64,
+    /// Stage-2 execution wall time per unit, p50 in ns (one prefill or
+    /// one decode step, dense + all flows).
+    pub exec_p50_ns: f64,
+    /// Stage-2 execution wall time per unit, p99 in ns.
+    pub exec_p99_ns: f64,
+    /// Total stage-2 execution wall time across all units, in ns.
+    pub exec_total_ns: f64,
+    /// Decode steps planned cold (cache miss, no predecessor plan — full
+    /// Algo-1 sort via `StepPlan::build`).
+    pub steps_planned_cold: usize,
+    /// Decode steps planned by delta-patching the predecessor's plan on a
+    /// cache miss (`StepPlan::patch_from`; 0 with `--no-delta`).
+    pub steps_planned_delta: usize,
+    /// Decode steps whose plan was served straight from the plan cache.
+    pub steps_cache_hit: usize,
     /// Per-token wall-latency p50 (one decode step's execution), in ns.
     pub token_p50_ns: f64,
     /// Per-token wall-latency p95, in ns.
@@ -611,6 +652,15 @@ impl CoordinatorMetrics {
             ("wall_p50_ns", Json::num(self.wall_p50_ns)),
             ("wall_p95_ns", Json::num(self.wall_p95_ns)),
             ("wall_p99_ns", Json::num(self.wall_p99_ns)),
+            ("plan_p50_ns", Json::num(self.plan_p50_ns)),
+            ("plan_p99_ns", Json::num(self.plan_p99_ns)),
+            ("plan_total_ns", Json::num(self.plan_total_ns)),
+            ("exec_p50_ns", Json::num(self.exec_p50_ns)),
+            ("exec_p99_ns", Json::num(self.exec_p99_ns)),
+            ("exec_total_ns", Json::num(self.exec_total_ns)),
+            ("steps_planned_cold", Json::num(self.steps_planned_cold as f64)),
+            ("steps_planned_delta", Json::num(self.steps_planned_delta as f64)),
+            ("steps_cache_hit", Json::num(self.steps_cache_hit as f64)),
             ("total_latency_ns", Json::num(self.total_latency_ns)),
             ("total_energy_pj", Json::num(self.total_energy_pj)),
             ("mean_throughput_gain", Json::num(self.mean_throughput_gain)),
@@ -646,6 +696,18 @@ struct Agg {
     wall: LatencyHistogram,
     /// Per-token execution wall time (one decode step unit, all flows).
     token_wall: LatencyHistogram,
+    /// Stage-1 planning wall time per job (plan worker, submit-to-handoff
+    /// work only — queue wait excluded).
+    plan_wall: LatencyHistogram,
+    /// Stage-2 execution wall time per unit (prefill or step).
+    exec_wall: LatencyHistogram,
+    plan_total_ns: f64,
+    exec_total_ns: f64,
+    /// Decode-step planning outcome counters (cold build / delta patch /
+    /// cache hit); folded once per planned job.
+    steps_cold: usize,
+    steps_delta: usize,
+    steps_cache_hit: usize,
     done: usize,
     failed: usize,
     flow_runs: usize,
@@ -1014,6 +1076,15 @@ impl Coordinator {
             wall_p50_ns: agg.wall.percentile(50.0),
             wall_p95_ns: agg.wall.percentile(95.0),
             wall_p99_ns: agg.wall.percentile(99.0),
+            plan_p50_ns: agg.plan_wall.percentile(50.0),
+            plan_p99_ns: agg.plan_wall.percentile(99.0),
+            plan_total_ns: agg.plan_total_ns,
+            exec_p50_ns: agg.exec_wall.percentile(50.0),
+            exec_p99_ns: agg.exec_wall.percentile(99.0),
+            exec_total_ns: agg.exec_total_ns,
+            steps_planned_cold: agg.steps_cold,
+            steps_planned_delta: agg.steps_delta,
+            steps_cache_hit: agg.steps_cache_hit,
             token_p50_ns: agg.token_wall.percentile(50.0),
             token_p95_ns: agg.token_wall.percentile(95.0),
             token_p99_ns: agg.token_wall.percentile(99.0),
@@ -1098,6 +1169,9 @@ fn plan_worker(
     shared: &Shared,
     sys: &SystemConfig,
 ) {
+    // Per-worker scratch: the delta patch's membership buffer is reused
+    // across every step this worker plans instead of allocated per unit.
+    let mut scratch: Vec<bool> = Vec::new();
     loop {
         // hold the lock only to receive
         let queued = match job_rx.lock().unwrap().recv() {
@@ -1106,6 +1180,7 @@ fn plan_worker(
         };
         shared.plan_q.exit();
         let QueuedJob { job, enqueued } = queued;
+        let t_plan = Instant::now();
 
         let prefill = job.request.prefill();
         let error = if job.flows.is_empty() {
@@ -1179,22 +1254,45 @@ fn plan_worker(
         // step just published.
         let mut step_units: Vec<(usize, usize, Arc<Planned>, Vec<usize>)> = Vec::new();
         let mut carry = (0usize, 0usize);
+        let (mut steps_cold, mut steps_delta, mut steps_hit) = (0usize, 0usize, 0usize);
         if let Request::Decode(session) = &job.request {
             let residency = carry_resident_counts(session);
+            // The predecessor's plan, threaded step to step so a cache
+            // miss can delta-patch it (`StepPlan::patch_from`) instead of
+            // re-sorting cold. Head counts are uniform (validated above),
+            // and the patch is bitwise identical to the cold build, so
+            // hit/miss accounting and every downstream report are
+            // unchanged whether `job.delta` is on or off.
+            let mut prev: Option<Arc<Planned>> = None;
             for (t, step) in session.steps.iter().enumerate() {
                 let key = step.plan_key(opts);
                 let fp = step.fingerprint();
+                let mut built_delta = false;
                 let (p, hit) = cache.get_or_build(key, || {
-                    Planned::Step(StepPlan::build(&step.heads, fp, opts))
+                    let plan = match prev.as_ref().and_then(|pp| pp.as_step()) {
+                        Some(pp) if job.delta => {
+                            built_delta = true;
+                            StepPlan::patch_from(pp, &step.heads, fp, opts, &mut scratch)
+                        }
+                        _ => StepPlan::build(&step.heads, fp, opts),
+                    };
+                    Planned::Step(plan)
                 });
                 let p = if p.as_step().is_some() {
                     if hit {
                         cache_hits += 1;
+                        steps_hit += 1;
+                    } else if built_delta {
+                        steps_delta += 1;
+                    } else {
+                        steps_cold += 1;
                     }
                     p
                 } else {
+                    steps_cold += 1;
                     Arc::new(Planned::Step(StepPlan::build(&step.heads, fp, opts)))
                 };
+                prev = Some(Arc::clone(&p));
                 let resident: Vec<usize> = if job.carryover {
                     residency[t].clone()
                 } else {
@@ -1238,6 +1336,19 @@ fn plan_worker(
             shared.live_sessions.enter();
         }
 
+        // Stage-1 accounting: planning wall time (queue wait and the
+        // blocking handoff below excluded) plus the per-step planning
+        // outcome counters, folded once per job.
+        {
+            let mut agg = shared.agg.lock().unwrap();
+            let dt = t_plan.elapsed().as_nanos() as f64;
+            agg.plan_wall.record(dt);
+            agg.plan_total_ns += dt;
+            agg.steps_cold += steps_cold;
+            agg.steps_delta += steps_delta;
+            agg.steps_cache_hit += steps_hit;
+        }
+
         // Emit units: prefill first (it is the session's own step-0
         // predecessor in queue order), then one unit per decode step.
         // Units from different jobs interleave freely in the exec queue —
@@ -1274,6 +1385,10 @@ fn exec_unit(unit: PlannedUnit, res_tx: &Sender<JobResult>, shared: &Shared) {
     let acc = &unit.accum;
     let sub: &dyn Substrate = &*acc.sub;
 
+    // Stage-2 accounting: execution wall time of this unit (prefill or
+    // step), recorded after the match alongside the existing per-token
+    // histogram.
+    let t_exec = Instant::now();
     match unit.kind {
         UnitKind::Prefill(plans) => {
             // Execution stays layer-scoped (FlowBackend/Substrate simulate
@@ -1334,6 +1449,12 @@ fn exec_unit(unit: PlannedUnit, res_tx: &Sender<JobResult>, shared: &Shared) {
                 parts.flow_steps[f][t] = Some(rep);
             }
         }
+    }
+    {
+        let mut agg = shared.agg.lock().unwrap();
+        let dt = t_exec.elapsed().as_nanos() as f64;
+        agg.exec_wall.record(dt);
+        agg.exec_total_ns += dt;
     }
 
     // The worker completing the last unit finalizes the job.

@@ -35,9 +35,11 @@
 use crate::engine::backend::{FlowBackend, PlanSet, StepPlan};
 use crate::engine::substrate::{StepExec, Substrate};
 use crate::engine::EngineOpts;
+use std::collections::BTreeMap;
+
 use crate::model::report::ModelReport;
 use crate::model::ModelTrace;
-use crate::util::json::Json;
+use crate::util::json::{Json, Scanner};
 use crate::util::rng::mix64;
 
 /// One decode step: the newly generated token's TopK key selection, per
@@ -103,6 +105,32 @@ impl StepMask {
                     .ok_or("head must be an index array".to_string())?
                     .iter()
                     .map(|v| v.as_usize().ok_or("bad index".to_string()))
+                    .collect()
+            })
+            .collect::<Result<_, _>>()?;
+        Ok(StepMask { kv_len, heads })
+    }
+
+    /// Lazy counterpart of [`StepMask::from_json`] over a raw step-object
+    /// slice: indices are converted straight from the text, no tree.
+    fn from_raw(raw: &str) -> Result<Self, String> {
+        let fields = Scanner::new(raw).top_fields().map_err(|e| e.to_string())?;
+        let kv_len = fields
+            .get("kv_len")
+            .and_then(|r| Scanner::as_usize(r))
+            .ok_or("missing 'kv_len'")?;
+        let heads_raw = fields.get("heads").ok_or("missing 'heads'")?;
+        let heads_j = Scanner::elements(heads_raw)
+            .map_err(|e| e.to_string())?
+            .ok_or("missing 'heads'")?;
+        let heads: Vec<Vec<usize>> = heads_j
+            .iter()
+            .map(|hj| {
+                Scanner::elements(hj)
+                    .map_err(|e| e.to_string())?
+                    .ok_or("head must be an index array".to_string())?
+                    .iter()
+                    .map(|v| Scanner::as_usize(v).ok_or("bad index".to_string()))
                     .collect()
             })
             .collect::<Result<_, _>>()?;
@@ -302,16 +330,65 @@ impl DecodeSession {
         Ok(s)
     }
 
+    /// Lazy text-level parse (see [`ModelTrace::from_str`]): one scan of
+    /// the document, raw slices for `prefill` and each step, indices
+    /// converted straight from the text — no full [`Json`] tree. Accepts
+    /// and rejects exactly what [`DecodeSession::from_json`] does (pinned
+    /// by the `lazy_ingestion` equivalence property test).
+    pub fn from_str(text: &str) -> Result<Self, String> {
+        let fields = Scanner::new(text).top_fields().map_err(|e| e.to_string())?;
+        Self::from_fields(&fields)
+    }
+
+    /// Lazy core over pre-scanned top-level fields (also the
+    /// `Request::load` dispatch point, which scans each file once).
+    pub(crate) fn from_fields(
+        fields: &BTreeMap<String, &str>,
+    ) -> Result<Self, String> {
+        // Missing or literal-null "prefill" is the prefill-only shape —
+        // mirroring `from_json`'s `Json::Null` check.
+        let prefill_raw = match fields.get("prefill") {
+            Some(raw) if raw.trim() != "null" => *raw,
+            _ => return ModelTrace::from_fields(fields).map(DecodeSession::from),
+        };
+        let prefill = Scanner::new(prefill_raw)
+            .top_fields()
+            .map_err(|e| e.to_string())
+            .and_then(|f| ModelTrace::from_fields(&f))
+            .map_err(|e| format!("prefill: {e}"))?;
+        let steps: Vec<StepMask> = match fields.get("steps") {
+            None => Vec::new(),
+            Some(raw) if raw.trim() == "null" => Vec::new(),
+            Some(raw) => Scanner::elements(raw)
+                .map_err(|e| e.to_string())?
+                .ok_or("'steps' must be an array of step masks")?
+                .iter()
+                .enumerate()
+                .map(|(t, sj)| {
+                    StepMask::from_raw(sj).map_err(|e| format!("step {t}: {e}"))
+                })
+                .collect::<Result<_, _>>()?,
+        };
+        let model = fields
+            .get("model")
+            .and_then(|raw| Scanner::value(raw).ok())
+            .and_then(|j| j.as_str().map(str::to_string))
+            .unwrap_or_else(|| prefill.model.clone());
+        let s = DecodeSession { model, prefill, steps };
+        s.validate()?;
+        Ok(s)
+    }
+
     /// Write the session as JSON.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_json().emit())
     }
 
-    /// Load and validate a session file (see [`DecodeSession::from_json`]).
+    /// Load and validate a session file (through the lazy
+    /// [`DecodeSession::from_str`] path).
     pub fn load(path: &std::path::Path) -> Result<Self, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
-        let j = Json::parse(&text).map_err(|e| e.to_string())?;
-        Self::from_json(&j)
+        Self::from_str(&text)
     }
 }
 

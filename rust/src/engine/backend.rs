@@ -141,6 +141,78 @@ impl StepPlan {
         StepPlan { heads, opts, fingerprint: Self::fingerprint_for(step_fingerprint, opts) }
     }
 
+    /// Incrementally patch the previous step's plan into this step's plan
+    /// — the delta-planning fast path the coordinator takes on a
+    /// step-cache miss when the predecessor's plan is in hand. Per head,
+    /// the symmetric difference against `prev`'s selection (the same
+    /// membership-array intersection walk as `decode::carry_residency`)
+    /// classifies every key: **retained** keys are kept in `prev`'s
+    /// ascending order with departures dropped in one pass, and
+    /// **arrivals** are sorted and merged in — O(K + |Δ| log |Δ|) instead
+    /// of [`StepPlan::build`]'s full clone + sort of every head.
+    ///
+    /// Bitwise-identity invariant: for any head count match and
+    /// duplicate-free selections (every coordinator input is
+    /// `DecodeSession::validate`d), the patched plan equals
+    /// `StepPlan::build(heads, step_fingerprint, opts)` exactly — same
+    /// ascending per-head key lists, same `opts`, same `fingerprint` —
+    /// for every overlap fraction kappa ∈ [0, 1]. Pinned across all seven
+    /// flows by the `delta_planning` property test.
+    ///
+    /// `scratch` is a caller-owned membership buffer so the plan workers
+    /// reuse one allocation across every step they plan.
+    pub fn patch_from(
+        prev: &StepPlan,
+        heads: &[Vec<usize>],
+        step_fingerprint: u64,
+        opts: EngineOpts,
+        scratch: &mut Vec<bool>,
+    ) -> Self {
+        debug_assert_eq!(prev.heads.len(), heads.len(), "head count must match");
+        let patched: Vec<Vec<usize>> = prev
+            .heads
+            .iter()
+            .zip(heads)
+            .map(|(before, cur)| {
+                // Membership of the current selection over the combined
+                // key-index domain (before is already ascending, so its
+                // last entry bounds it).
+                let dom = cur
+                    .iter()
+                    .copied()
+                    .max()
+                    .map_or(0, |m| m + 1)
+                    .max(before.last().map_or(0, |&m| m + 1));
+                scratch.clear();
+                scratch.resize(dom, false);
+                for &k in cur {
+                    scratch[k] = true;
+                }
+                // Retained = prev ∩ cur in prev's ascending order;
+                // departures fall out of the same pass. Consuming the
+                // marks leaves exactly the arrivals set behind.
+                let mut out = Vec::with_capacity(cur.len());
+                for &k in before {
+                    if scratch[k] {
+                        out.push(k);
+                        scratch[k] = false;
+                    }
+                }
+                // Arrivals = cur \ prev, merged into the ascending run.
+                let mut arrived: Vec<usize> =
+                    cur.iter().copied().filter(|&k| scratch[k]).collect();
+                arrived.sort_unstable();
+                merge_sorted(&mut out, &arrived);
+                out
+            })
+            .collect();
+        StepPlan {
+            heads: patched,
+            opts,
+            fingerprint: Self::fingerprint_for(step_fingerprint, opts),
+        }
+    }
+
     /// The cache key [`StepPlan::build`] stamps for a step with this
     /// content fingerprint under these options — salted so step keys can
     /// never alias layer keys ([`PlanSet::fingerprint_for`]) even for
@@ -158,6 +230,28 @@ impl StepPlan {
     /// Total selected keys across heads (the step's K-fetch demand).
     pub fn total_selected(&self) -> usize {
         self.heads.iter().map(|h| h.len()).sum()
+    }
+}
+
+/// Merge the ascending run `add` into the ascending `base` in place —
+/// the insert half of delta-planning's patch (back-to-front two-pointer,
+/// O(K), no extra allocation).
+fn merge_sorted(base: &mut Vec<usize>, add: &[usize]) {
+    if add.is_empty() {
+        return;
+    }
+    let old = base.len();
+    base.resize(old + add.len(), 0);
+    let (mut i, mut j, mut w) = (old, add.len(), old + add.len());
+    while j > 0 {
+        if i > 0 && base[i - 1] > add[j - 1] {
+            base[w - 1] = base[i - 1];
+            i -= 1;
+        } else {
+            base[w - 1] = add[j - 1];
+            j -= 1;
+        }
+        w -= 1;
     }
 }
 

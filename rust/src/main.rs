@@ -68,13 +68,14 @@ usage: sata <trace-gen|schedule|simulate|flows|serve|e2e> [flags]
   serve:     [--jobs N] [--workers W] [--flows a,b,c] [--flow FLOW]
              [--substrate SUB] [--repeat R] [--traces-dir DIR]
              [--layers L] [--rho R] [--steps S] [--kappa K] [--no-carry]
-             [--json]
+             [--no-delta] [--json]
   e2e:       [--artifacts DIR]           # PJRT end-to-end
 flows: FLOW ∈ registered backends (see `sata flows`); SUB ∈ cim|systolic
 model requests: --layers/--rho shape multi-layer requests (rho =
   cross-layer selection overlap in [0,1]); decode sessions: --steps
   tokens are generated over a growing KV set with --kappa step-to-step
-  overlap; --no-carry disables step-carryover residency";
+  overlap; --no-carry disables step-carryover residency; --no-delta
+  forces cold per-step planning (disables incremental plan patching)";
 
 /// The flags each subcommand accepts (the audit surface for [`USAGE`]).
 const SUBCOMMANDS: &[(&str, &[&str])] = &[
@@ -96,7 +97,7 @@ const SUBCOMMANDS: &[(&str, &[&str])] = &[
         &[
             "workload", "seed", "jobs", "workers", "flows", "flow", "substrate",
             "repeat", "traces-dir", "layers", "rho", "steps", "kappa", "no-carry",
-            "json",
+            "no-delta", "json",
         ],
     ),
     ("e2e", &["artifacts", "seed"]),
@@ -425,6 +426,7 @@ fn main() {
             let steps = usize_flag(&flags, "steps", 0);
             let kappa = f64_flag(&flags, "kappa", 0.0);
             let carry = !flags.contains_key("no-carry");
+            let delta = !flags.contains_key("no-delta");
             let json_out = flags.contains_key("json");
             let sys = SystemConfig::for_workload(&spec);
             let coord = Coordinator::new(workers, 8, sys);
@@ -497,7 +499,8 @@ fn main() {
                     let mut submit = |request: Request| {
                         let job = Job::with_flows(id, request, spec.sf, flows.clone())
                             .on_substrate(sspec.name)
-                            .with_carryover(carry);
+                            .with_carryover(carry)
+                            .with_delta(delta);
                         id += 1;
                         match coord.submit_with_retry(
                             job,
@@ -617,6 +620,24 @@ fn main() {
                 metrics.wall_p95_ns / 1e6,
                 metrics.wall_p99_ns / 1e6,
             );
+            println!(
+                "stages: plan p50 {:.3} ms p99 {:.3} ms (total {:.1} ms) | exec p50 {:.3} ms p99 {:.3} ms (total {:.1} ms)",
+                metrics.plan_p50_ns / 1e6,
+                metrics.plan_p99_ns / 1e6,
+                metrics.plan_total_ns / 1e6,
+                metrics.exec_p50_ns / 1e6,
+                metrics.exec_p99_ns / 1e6,
+                metrics.exec_total_ns / 1e6,
+            );
+            if metrics.steps_planned_cold + metrics.steps_planned_delta + metrics.steps_cache_hit > 0 {
+                println!(
+                    "step plans: {} cold, {} delta-patched, {} cache hits{}",
+                    metrics.steps_planned_cold,
+                    metrics.steps_planned_delta,
+                    metrics.steps_cache_hit,
+                    if delta { "" } else { " (delta planning disabled)" },
+                );
+            }
             if metrics.tokens_done > 0 {
                 println!(
                     "decode: {} tokens at {:.0} tok/s | carry reuse {:.1}% ({}/{} keys) | token p50 {:.3} ms p95 {:.3} ms p99 {:.3} ms | live sessions peak {}",

@@ -18,8 +18,10 @@
 
 pub mod report;
 
+use std::collections::BTreeMap;
+
 use crate::trace::MaskTrace;
-use crate::util::json::Json;
+use crate::util::json::{Json, Scanner};
 use crate::util::rng::mix64;
 
 /// One full model request: the per-layer selective-mask traces of a single
@@ -158,16 +160,71 @@ impl ModelTrace {
         Ok(ModelTrace { model, seq_len: n, layers })
     }
 
+    /// Lazy text-level parse (see [`MaskTrace::from_str`]): scans the
+    /// document once, slices the per-layer objects out of `layers`, and
+    /// hands each to the lazy [`MaskTrace`] core — no full [`Json`] tree.
+    /// Accepts and rejects exactly what [`ModelTrace::from_json`] does
+    /// (pinned by the `lazy_ingestion` equivalence property test).
+    pub fn from_str(text: &str) -> Result<Self, String> {
+        let fields = Scanner::new(text).top_fields().map_err(|e| e.to_string())?;
+        Self::from_fields(&fields)
+    }
+
+    /// Lazy core over pre-scanned top-level fields — shared with the
+    /// session loader, which scans each document exactly once.
+    pub(crate) fn from_fields(
+        fields: &BTreeMap<String, &str>,
+    ) -> Result<Self, String> {
+        // A missing or non-array "layers" is the bare single-layer shape,
+        // mirroring `from_json`'s `as_arr` dispatch.
+        let layers_j = match fields.get("layers").map(|raw| Scanner::elements(raw)) {
+            Some(Ok(Some(elems))) => elems,
+            Some(Err(e)) => return Err(e.to_string()),
+            _ => return MaskTrace::from_fields(fields).map(ModelTrace::from),
+        };
+        if layers_j.is_empty() {
+            return Err("model trace with no layers".into());
+        }
+        let mut layers = Vec::with_capacity(layers_j.len());
+        for (i, lj) in layers_j.iter().enumerate() {
+            let l = Scanner::new(lj)
+                .top_fields()
+                .map_err(|e| e.to_string())
+                .and_then(|f| MaskTrace::from_fields(&f))
+                .map_err(|e| format!("layer {i}: {e}"))?;
+            layers.push(l);
+        }
+        let n = layers[0].n;
+        if let Some((i, l)) = layers.iter().enumerate().find(|(_, l)| l.n != n) {
+            return Err(format!("layer {i} has n = {}, expected {n} (uniform)", l.n));
+        }
+        let dk = layers[0].dk;
+        if let Some((i, l)) = layers.iter().enumerate().find(|(_, l)| l.dk != dk) {
+            return Err(format!("layer {i} has dk = {}, expected {dk} (uniform)", l.dk));
+        }
+        if let Some(sl) = fields.get("seq_len").and_then(|r| Scanner::as_usize(r)) {
+            if sl != n {
+                return Err(format!("seq_len {sl} does not match layer n = {n}"));
+            }
+        }
+        let model = fields
+            .get("model")
+            .and_then(|raw| Scanner::value(raw).ok())
+            .and_then(|j| j.as_str().map(str::to_string))
+            .unwrap_or_else(|| layers[0].model.clone());
+        Ok(ModelTrace { model, seq_len: n, layers })
+    }
+
     /// Write the request as JSON.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_json().emit())
     }
 
-    /// Load and validate one model (or bare single-layer trace) file.
+    /// Load and validate one model (or bare single-layer trace) file
+    /// (through the lazy [`ModelTrace::from_str`] path).
     pub fn load(path: &std::path::Path) -> Result<Self, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
-        let j = Json::parse(&text).map_err(|e| e.to_string())?;
-        Self::from_json(&j)
+        Self::from_str(&text)
     }
 }
 

@@ -13,8 +13,10 @@
 
 pub mod synth;
 
+use std::collections::BTreeMap;
+
 use crate::mask::{masks_fingerprint, SelectiveMask};
-use crate::util::json::Json;
+use crate::util::json::{Json, Scanner};
 
 /// One layer's worth of selective masks (one per head) plus metadata.
 #[derive(Clone, Debug)]
@@ -99,6 +101,69 @@ impl MaskTrace {
         })
     }
 
+    /// Lazy text-level parse via [`Scanner`]: slices the `heads` rows out
+    /// of the raw text and converts indices directly, never building the
+    /// full [`Json`] tree — the `serve --traces-dir` ingestion fast path.
+    /// Accepts and rejects exactly what [`MaskTrace::from_json`] does
+    /// (pinned by the `lazy_ingestion` equivalence property test), with
+    /// the same hostile-input totality: always `Ok`/`Err`, never a panic.
+    pub fn from_str(text: &str) -> Result<Self, String> {
+        let fields = Scanner::new(text).top_fields().map_err(|e| e.to_string())?;
+        Self::from_fields(&fields)
+    }
+
+    /// Lazy core over pre-scanned top-level fields — shared with the
+    /// model/session loaders, which scan each document exactly once.
+    pub(crate) fn from_fields(
+        fields: &BTreeMap<String, &str>,
+    ) -> Result<Self, String> {
+        let n = fields
+            .get("n")
+            .and_then(|raw| Scanner::as_usize(raw))
+            .ok_or("missing 'n'")?;
+        if n == 0 {
+            return Err("trace with n = 0 tokens".into());
+        }
+        let heads_raw = fields.get("heads").ok_or("missing 'heads'")?;
+        let heads_j = Scanner::elements(heads_raw)
+            .map_err(|e| e.to_string())?
+            .ok_or("missing 'heads'")?;
+        let mut heads = Vec::with_capacity(heads_j.len());
+        for hj in heads_j {
+            let rows = Scanner::elements(hj)
+                .map_err(|e| e.to_string())?
+                .ok_or("head must be an array of rows")?;
+            if rows.len() != n {
+                return Err(format!("head has {} rows, expected {n}", rows.len()));
+            }
+            let idx: Vec<Vec<usize>> = rows
+                .iter()
+                .map(|r| {
+                    Scanner::elements(r)
+                        .map_err(|e| e.to_string())?
+                        .ok_or("row must be an index array".to_string())?
+                        .iter()
+                        .map(|v| Scanner::as_usize(v).ok_or("bad index".to_string()))
+                        .collect()
+                })
+                .collect::<Result<_, _>>()?;
+            let mask = SelectiveMask::try_from_topk_indices(n, &idx)
+                .map_err(|e| format!("head {}: {e}", heads.len()))?;
+            heads.push(mask);
+        }
+        Ok(MaskTrace {
+            model: fields
+                .get("model")
+                .and_then(|raw| Scanner::value(raw).ok())
+                .and_then(|j| j.as_str().map(str::to_string))
+                .unwrap_or_else(|| "unknown".to_string()),
+            n,
+            dk: fields.get("dk").and_then(|r| Scanner::as_usize(r)).unwrap_or(0),
+            topk: fields.get("topk").and_then(|r| Scanner::as_usize(r)).unwrap_or(0),
+            heads,
+        })
+    }
+
     /// 64-bit content fingerprint over every head mask — exactly
     /// [`masks_fingerprint`]`(&self.heads)`, the same value the plan-cache
     /// key is built from (`PlanSet::fingerprint_for` mixes it with
@@ -118,11 +183,11 @@ impl MaskTrace {
         std::fs::write(path, self.to_json().emit())
     }
 
-    /// Load and validate one trace file.
+    /// Load and validate one trace file (through the lazy
+    /// [`MaskTrace::from_str`] path).
     pub fn load(path: &std::path::Path) -> Result<Self, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
-        let j = Json::parse(&text).map_err(|e| e.to_string())?;
-        Self::from_json(&j)
+        Self::from_str(&text)
     }
 }
 

@@ -7,8 +7,10 @@
 //!
 //! Set `SATA_BENCH_FAST=1` to shrink sample counts (CI smoke mode).
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats;
 
 /// One benchmark measurement summary (nanoseconds per iteration).
@@ -58,12 +60,26 @@ fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// One `report_metric` record, kept so [`Bench::emit_snapshot`] can write
+/// a machine-readable perf trajectory next to the printed table.
+#[derive(Clone, Debug)]
+pub struct Metric {
+    /// Metric key, e.g. `serve.cim.warm.jobs_per_s`.
+    pub key: String,
+    /// Metric value.
+    pub value: f64,
+    /// Unit label, e.g. `jobs/s`.
+    pub unit: String,
+}
+
 /// Benchmark runner; collects samples for a final summary table.
 pub struct Bench {
     fast: bool,
     target_sample: Duration,
     /// Every sample measured so far (summary table input).
     pub results: Vec<Sample>,
+    /// Every metric reported so far (snapshot input).
+    pub metrics: Vec<Metric>,
 }
 
 impl Default for Bench {
@@ -84,6 +100,7 @@ impl Bench {
                 Duration::from_millis(120)
             },
             results: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -131,10 +148,75 @@ impl Bench {
     }
 
     /// Print a `name: value` line that table-regenerator benches use for
-    /// paper-figure rows (kept distinct from timing samples).
-    pub fn report_metric(&self, key: &str, value: f64, unit: &str) {
+    /// paper-figure rows (kept distinct from timing samples), and record
+    /// it for [`Bench::emit_snapshot`].
+    pub fn report_metric(&mut self, key: &str, value: f64, unit: &str) {
         println!("metric {key:<52} {value:>14.4} {unit}");
+        self.metrics.push(Metric {
+            key: key.to_string(),
+            value,
+            unit: unit.to_string(),
+        });
     }
+
+    /// Machine-readable snapshot of every sample and metric reported so
+    /// far. The shape is pinned by the `bench_snapshots` schema test:
+    /// top-level `name` / `fast` / `samples` / `metrics`, with each
+    /// sample carrying the [`Sample`] fields and each metric the
+    /// [`Metric`] fields.
+    pub fn snapshot_json(&self, name: &str) -> Json {
+        let samples = self
+            .results
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(&s.name)),
+                    ("median_ns", Json::num(s.median_ns)),
+                    ("mean_ns", Json::num(s.mean_ns)),
+                    ("p10_ns", Json::num(s.p10_ns)),
+                    ("p90_ns", Json::num(s.p90_ns)),
+                    ("iters_per_sample", Json::num(s.iters_per_sample as f64)),
+                    ("samples", Json::num(s.samples as f64)),
+                ])
+            })
+            .collect();
+        let metrics = self
+            .metrics
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("key", Json::str(&m.key)),
+                    ("value", Json::num(m.value)),
+                    ("unit", Json::str(&m.unit)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::str(name)),
+            ("fast", Json::Bool(self.fast)),
+            ("samples", Json::Arr(samples)),
+            ("metrics", Json::Arr(metrics)),
+        ])
+    }
+
+    /// Write the [`Bench::snapshot_json`] snapshot to `BENCH_<name>.json`
+    /// at the repo root (resolved from the crate manifest dir so `cargo
+    /// bench` lands it in the same place regardless of cwd). Every bench
+    /// calls this last; CI fails if the file stops appearing.
+    pub fn emit_snapshot(&self, name: &str) -> std::io::Result<PathBuf> {
+        let path = snapshot_path(name);
+        std::fs::write(&path, self.snapshot_json(name).emit())?;
+        println!("snapshot {}", path.display());
+        Ok(path)
+    }
+}
+
+/// Repo-root path where the `BENCH_<name>.json` snapshot for `name`
+/// lives (both the committed baseline and fresh `emit_snapshot` output).
+pub fn snapshot_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join(format!("BENCH_{name}.json"))
 }
 
 #[cfg(test)]
@@ -151,6 +233,28 @@ mod tests {
         });
         assert!(s.median_ns > 0.0);
         assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn snapshot_shape_holds_fields() {
+        std::env::set_var("SATA_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let mut acc = 0u64;
+        b.run("s1", || {
+            acc = std::hint::black_box(acc.wrapping_add(1));
+        });
+        b.report_metric("m.one", 1.5, "jobs/s");
+        let j = b.snapshot_json("unit");
+        assert_eq!(j.get("name").as_str(), Some("unit"));
+        assert!(j.get("fast").as_bool().is_some());
+        assert_eq!(j.get("samples").as_arr().unwrap().len(), 1);
+        let m = &j.get("metrics").as_arr().unwrap()[0];
+        assert_eq!(m.get("key").as_str(), Some("m.one"));
+        assert_eq!(m.get("value").as_f64(), Some(1.5));
+        assert_eq!(m.get("unit").as_str(), Some("jobs/s"));
+        // Round-trips through the parser.
+        let back = Json::parse(&j.emit()).unwrap();
+        assert_eq!(back.emit(), j.emit());
     }
 
     #[test]

@@ -123,9 +123,11 @@ impl Json {
 
     // ------------------------------------------------------------- parsing
     /// Parse a complete JSON document (trailing data is an error).
+    /// Documents nested deeper than [`MAX_DEPTH`] are rejected with a
+    /// [`ParseError`] instead of recursing toward a stack overflow.
     pub fn parse(text: &str) -> Result<Json, ParseError> {
         let bytes = text.as_bytes();
-        let mut p = Parser { b: bytes, pos: 0 };
+        let mut p = Parser { b: bytes, pos: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -203,14 +205,30 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Maximum container nesting depth [`Json::parse`] and [`Scanner`]
+/// accept. A hostile deeply-nested document fails with an explicit
+/// [`ParseError`] ("nesting too deep") instead of blowing the stack —
+/// both the tree parser and the lazy scanner recurse per nesting level,
+/// so the bound is the totality guarantee for `serve --traces-dir`.
+pub const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> ParseError {
         ParseError { pos: self.pos, msg: msg.to_string() }
+    }
+
+    fn enter(&mut self) -> Result<(), ParseError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
     }
 
     fn ws(&mut self) {
@@ -247,10 +265,94 @@ impl<'a> Parser<'a> {
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'"') => self.string().map(Json::Str),
-            Some(b'[') => self.array(),
-            Some(b'{') => self.object(),
+            Some(b'[') => {
+                self.enter()?;
+                let v = self.array();
+                self.depth -= 1;
+                v
+            }
+            Some(b'{') => {
+                self.enter()?;
+                let v = self.object();
+                self.depth -= 1;
+                v
+            }
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    /// Advance past one well-formed value without building it — the lazy
+    /// scanner's core. Shares the tokenizers (`string`, `number`, `lit`)
+    /// with the tree path so accept/reject behavior is identical.
+    fn skip_value(&mut self) -> Result<(), ParseError> {
+        match self.peek() {
+            Some(b'n') => self.lit("null", Json::Null).map(drop),
+            Some(b't') => self.lit("true", Json::Bool(true)).map(drop),
+            Some(b'f') => self.lit("false", Json::Bool(false)).map(drop),
+            Some(b'"') => self.string().map(drop),
+            Some(b'[') => {
+                self.enter()?;
+                let r = self.skip_array();
+                self.depth -= 1;
+                r
+            }
+            Some(b'{') => {
+                self.enter()?;
+                let r = self.skip_object();
+                self.depth -= 1;
+                r
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number().map(drop),
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    fn skip_array(&mut self) -> Result<(), ParseError> {
+        self.eat(b'[')?;
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            self.skip_value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn skip_object(&mut self) -> Result<(), ParseError> {
+        self.eat(b'{')?;
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            self.skip_value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
         }
     }
 
@@ -385,6 +487,136 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Lazy scanner over raw JSON text: finds top-level object fields and
+/// slices array elements as raw `&str` sub-slices **without building the
+/// full [`Json`] tree** — the ingestion fast path for trace/model/session
+/// files, whose bulk is deeply nested index arrays that the scanner
+/// slices and converts to `usize` directly.
+///
+/// Totality contract: the scanner shares the tree parser's tokenizers and
+/// [`MAX_DEPTH`] bound, so it accepts exactly the documents [`Json::parse`]
+/// accepts (hostile files still yield a [`ParseError`], never a panic or
+/// stack overflow), and the lazy loaders built on it are pinned equivalent
+/// to the tree path by the `lazy_ingestion` property test.
+pub struct Scanner<'a> {
+    text: &'a str,
+}
+
+impl<'a> Scanner<'a> {
+    /// Wrap `text`; no work happens until fields are requested.
+    pub fn new(text: &'a str) -> Self {
+        Scanner { text }
+    }
+
+    /// All top-level object fields as `(key, raw value slice)` pairs, last
+    /// duplicate winning (matching `Obj`'s `BTreeMap` insert semantics).
+    /// The whole document's syntax is validated — including trailing
+    /// data — but field payloads are skipped, not built. A structurally
+    /// valid **non-object** document yields an empty map, so callers
+    /// report the same "missing field" errors the tree path would.
+    pub fn top_fields(
+        &self,
+    ) -> Result<std::collections::BTreeMap<String, &'a str>, ParseError> {
+        let b = self.text.as_bytes();
+        let mut p = Parser { b, pos: 0, depth: 0 };
+        p.ws();
+        let mut map = std::collections::BTreeMap::new();
+        if p.peek() != Some(b'{') {
+            p.skip_value()?;
+            p.ws();
+            if p.pos != b.len() {
+                return Err(p.err("trailing data"));
+            }
+            return Ok(map);
+        }
+        p.eat(b'{')?;
+        p.enter()?;
+        p.ws();
+        if p.peek() == Some(b'}') {
+            p.pos += 1;
+        } else {
+            loop {
+                p.ws();
+                let key = p.string()?;
+                p.ws();
+                p.eat(b':')?;
+                p.ws();
+                let start = p.pos;
+                p.skip_value()?;
+                map.insert(key, &self.text[start..p.pos]);
+                p.ws();
+                match p.peek() {
+                    Some(b',') => p.pos += 1,
+                    Some(b'}') => {
+                        p.pos += 1;
+                        break;
+                    }
+                    _ => return Err(p.err("expected ',' or '}'")),
+                }
+            }
+        }
+        p.ws();
+        if p.pos != b.len() {
+            return Err(p.err("trailing data"));
+        }
+        Ok(map)
+    }
+
+    /// Split a raw array slice (a [`Scanner::top_fields`] value or a
+    /// previous `elements` element) into its element slices. `Ok(None)`
+    /// when the value is well-formed but not an array — callers map that
+    /// to the same type errors `Json::as_arr` would produce.
+    pub fn elements(raw: &str) -> Result<Option<Vec<&str>>, ParseError> {
+        let b = raw.as_bytes();
+        let mut p = Parser { b, pos: 0, depth: 0 };
+        p.ws();
+        if p.peek() != Some(b'[') {
+            return Ok(None);
+        }
+        p.eat(b'[')?;
+        let mut out = Vec::new();
+        p.ws();
+        if p.peek() == Some(b']') {
+            p.pos += 1;
+        } else {
+            loop {
+                p.ws();
+                let start = p.pos;
+                p.skip_value()?;
+                out.push(&raw[start..p.pos]);
+                p.ws();
+                match p.peek() {
+                    Some(b',') => p.pos += 1,
+                    Some(b']') => {
+                        p.pos += 1;
+                        break;
+                    }
+                    _ => return Err(p.err("expected ',' or ']'")),
+                }
+            }
+        }
+        Ok(Some(out))
+    }
+
+    /// A raw element slice as an exact non-negative integer — the value
+    /// `Json::as_usize` would see, with a digits-only fast path that
+    /// bypasses `f64` entirely (≤ 15 digits is exactly representable, so
+    /// the fast and slow paths agree bit for bit).
+    pub fn as_usize(raw: &str) -> Option<usize> {
+        let t = raw.trim();
+        if !t.is_empty() && t.len() <= 15 && t.bytes().all(|c| c.is_ascii_digit()) {
+            return t.parse::<usize>().ok();
+        }
+        Json::parse(t).ok().and_then(|j| j.as_usize())
+    }
+
+    /// A raw element slice as a full [`Json`] value (for small scalar
+    /// fields where tree construction is the cheap path).
+    pub fn value(raw: &str) -> Result<Json, ParseError> {
+        Json::parse(raw)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -447,6 +679,74 @@ mod tests {
         assert_eq!(Json::Num(5.0).as_usize(), Some(5));
         assert_eq!(Json::Num(5.5).as_usize(), None);
         assert_eq!(Json::Num(-1.0).as_usize(), None);
+    }
+
+    #[test]
+    fn deep_nesting_is_rejected_not_overflowed() {
+        // Well under the bound parses fine…
+        let ok = format!("{}0{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
+        // …at/over the bound both paths fail with an explicit error.
+        let deep = format!("{}0{}", "[".repeat(MAX_DEPTH + 10), "]".repeat(MAX_DEPTH + 10));
+        let e = Json::parse(&deep).unwrap_err();
+        assert!(e.to_string().contains("nesting too deep"), "{e}");
+        let e = Scanner::new(&deep).top_fields().unwrap_err();
+        assert!(e.to_string().contains("nesting too deep"), "{e}");
+        // A hostile megabyte of open brackets errors instead of recursing.
+        let hostile = "[".repeat(1 << 20);
+        assert!(Json::parse(&hostile).is_err());
+        assert!(Scanner::new(&hostile).top_fields().is_err());
+        // Objects count toward the same bound.
+        let objs = format!(
+            "{}1{}",
+            r#"{"k":"#.repeat(MAX_DEPTH + 10),
+            "}".repeat(MAX_DEPTH + 10)
+        );
+        assert!(Json::parse(&objs).unwrap_err().to_string().contains("deep"));
+    }
+
+    #[test]
+    fn scanner_slices_fields_without_building_the_tree() {
+        let text = r#" {"n": 16, "heads": [[0, 2], [1]], "model": "x"} "#;
+        let fields = Scanner::new(text).top_fields().unwrap();
+        assert_eq!(fields.get("n").copied(), Some("16"));
+        assert_eq!(fields.get("model").copied(), Some(r#""x""#));
+        let rows = Scanner::elements(fields["heads"]).unwrap().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            Scanner::elements(rows[0])
+                .unwrap()
+                .unwrap()
+                .iter()
+                .map(|e| Scanner::as_usize(e).unwrap())
+                .collect::<Vec<_>>(),
+            vec![0, 2]
+        );
+        // Non-array values slice to None, matching as_arr.
+        assert_eq!(Scanner::elements("16").unwrap(), None);
+        // Duplicate keys: last wins, like BTreeMap insertion.
+        let dup = Scanner::new(r#"{"a": 1, "a": 2}"#).top_fields().unwrap();
+        assert_eq!(dup["a"], "2");
+        // Valid non-object documents yield an empty map…
+        assert!(Scanner::new("[1, 2]").top_fields().unwrap().is_empty());
+        // …and malformed ones fail exactly where the tree parser would.
+        assert!(Scanner::new(r#"{"n": 16, "heads": [[[0,"#).top_fields().is_err());
+        assert!(Scanner::new("{} trailing").top_fields().is_err());
+    }
+
+    #[test]
+    fn scanner_as_usize_matches_tree_semantics() {
+        assert_eq!(Scanner::as_usize("7"), Some(7));
+        assert_eq!(Scanner::as_usize("1e3"), Some(1000));
+        assert_eq!(Scanner::as_usize("1.5"), None);
+        assert_eq!(Scanner::as_usize("-1"), None);
+        assert_eq!(Scanner::as_usize(r#""7""#), None);
+        assert_eq!(Scanner::as_usize("[7]"), None);
+        // 15-digit fast path agrees with the f64 path.
+        assert_eq!(
+            Scanner::as_usize("999999999999999"),
+            Json::parse("999999999999999").unwrap().as_usize()
+        );
     }
 
     #[test]

@@ -93,6 +93,130 @@ fn bad_trace_corpus_completes_good_jobs_and_reports_per_file_errors() {
 }
 
 #[test]
+fn deep_nesting_yields_per_file_errors_not_stack_overflow() {
+    let dir = std::env::temp_dir().join("sata_deep_nesting");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // An unbalanced megabyte of '[' and a balanced 100k-deep array bomb:
+    // both must come back as ordinary per-file parse errors from the
+    // recursion-depth bound, never a stack overflow (which would abort
+    // the whole serve process, not one file).
+    let deep = "[".repeat(1_000_000);
+    std::fs::write(dir.join("g_deep.json"), format!(r#"{{"n": 4, "heads": {deep}"#))
+        .unwrap();
+    let bomb = format!("{}4{}", "[".repeat(100_000), "]".repeat(100_000));
+    std::fs::write(
+        dir.join("h_bomb.json"),
+        format!(r#"{{"n": 4, "heads": [[{bomb}]]}}"#),
+    )
+    .unwrap();
+
+    for name in ["g_deep.json", "h_bomb.json"] {
+        let err = MaskTrace::load(&dir.join(name)).unwrap_err();
+        assert!(
+            err.contains("parse") && err.contains("deep"),
+            "{name}: expected a depth-bound parse error, got: {err}"
+        );
+        let err = sata::decode::DecodeSession::load(&dir.join(name)).unwrap_err();
+        assert!(
+            err.contains("parse") && err.contains("deep"),
+            "{name} (session path): expected a depth-bound parse error, got: {err}"
+        );
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn lazy_ingestion_matches_tree_ingestion() {
+    // The lazy `from_str` path (field scanner, no tree) must agree with
+    // `from_json` (full tree) on every structurally-valid document —
+    // same accept/reject decision, same parsed trace, same error text.
+    check("lazy from_str == tree from_json", 80, |rng| {
+        let n = 1 + rng.gen_range(10);
+        let n_heads = rng.gen_range(4);
+        let mut heads_json = Vec::new();
+        for _ in 0..n_heads {
+            let rows =
+                if rng.chance(0.15) { n + 1 + rng.gen_range(3) } else { n };
+            let rows_json = (0..rows)
+                .map(|_| {
+                    let count = rng.gen_range(n + 2);
+                    Json::Arr(
+                        (0..count)
+                            .map(|_| {
+                                let idx = if rng.chance(0.5) {
+                                    rng.gen_range(n)
+                                } else {
+                                    rng.gen_range(3 * n + 2)
+                                };
+                                Json::num(idx as f64)
+                            })
+                            .collect(),
+                    )
+                })
+                .collect();
+            heads_json.push(Json::Arr(rows_json));
+        }
+        let j = Json::obj(vec![
+            ("model", Json::str("prop")),
+            ("n", Json::num(n as f64)),
+            ("dk", Json::num(8.0)),
+            ("topk", Json::num(2.0)),
+            ("heads", Json::Arr(heads_json)),
+        ]);
+        let tree = MaskTrace::from_json(&j);
+        let lazy = MaskTrace::from_str(&j.emit());
+        match (&tree, &lazy) {
+            (Ok(a), Ok(b)) => {
+                if a.fingerprint() != b.fingerprint()
+                    || a.model != b.model
+                    || a.n != b.n
+                    || a.dk != b.dk
+                    || a.topk != b.topk
+                {
+                    Err("lazy and tree ingestion disagree on an accepted trace".into())
+                } else {
+                    Ok(())
+                }
+            }
+            (Err(a), Err(b)) if a == b => Ok(()),
+            (Err(a), Err(b)) => {
+                Err(format!("error texts diverge: tree '{a}' vs lazy '{b}'"))
+            }
+            (Ok(_), Err(e)) => Err(format!("lazy rejected a tree-accepted trace: {e}")),
+            (Err(e), Ok(_)) => Err(format!("lazy accepted a tree-rejected trace: {e}")),
+        }
+    });
+}
+
+#[test]
+fn lazy_ingestion_matches_tree_for_models_and_sessions() {
+    use sata::decode::DecodeSession;
+    use sata::model::ModelTrace;
+    use sata::trace::synth::{gen_models, gen_sessions};
+
+    let spec = sata::config::WorkloadSpec::ttst();
+    for (i, sess) in
+        gen_sessions(&spec, 3, 2, 0.5, 5, 0.5, 99).into_iter().enumerate()
+    {
+        let j = sess.to_json();
+        let tree = DecodeSession::from_json(&j).unwrap();
+        let lazy = DecodeSession::from_str(&j.emit())
+            .unwrap_or_else(|e| panic!("session {i}: lazy path rejected: {e}"));
+        assert_eq!(lazy.fingerprint(), tree.fingerprint(), "session {i}");
+    }
+    for (i, model) in gen_models(&spec, 3, 3, 0.4, 7).into_iter().enumerate() {
+        let j = model.to_json();
+        let tree = ModelTrace::from_json(&j).unwrap();
+        let lazy = ModelTrace::from_str(&j.emit())
+            .unwrap_or_else(|e| panic!("model {i}: lazy path rejected: {e}"));
+        assert_eq!(lazy.fingerprint(), tree.fingerprint(), "model {i}");
+    }
+}
+
+#[test]
 fn from_json_is_total_on_structurally_valid_json() {
     // Arbitrary index values (including far out of range), arbitrary
     // duplication, sometimes-wrong row counts: `from_json` must always

@@ -1,0 +1,70 @@
+//! Perf-trajectory snapshot schema: every serving bench emits a
+//! machine-readable `BENCH_<name>.json` at the repo root, and the
+//! committed baselines must keep the exact shape `Bench::snapshot_json`
+//! pins — top-level `name` / `fast` / `samples` / `metrics`, with the
+//! `Sample` and `Metric` fields per element. CI re-runs the benches in
+//! smoke mode and re-validates the freshly emitted files, so a bench
+//! that stops emitting (or drifts from the schema) fails the build.
+
+use sata::util::bench::{snapshot_path, Bench};
+use sata::util::json::Json;
+
+fn validate_snapshot(j: &Json, expect_name: &str) {
+    assert_eq!(j.get("name").as_str(), Some(expect_name), "snapshot 'name' mismatch");
+    assert!(j.get("fast").as_bool().is_some(), "missing boolean 'fast'");
+    let samples = j.get("samples").as_arr().expect("'samples' must be an array");
+    for s in samples {
+        assert!(s.get("name").as_str().is_some(), "sample missing 'name'");
+        for key in
+            ["median_ns", "mean_ns", "p10_ns", "p90_ns", "iters_per_sample", "samples"]
+        {
+            assert!(s.get(key).as_f64().is_some(), "sample missing numeric '{key}'");
+        }
+    }
+    let metrics = j.get("metrics").as_arr().expect("'metrics' must be an array");
+    for m in metrics {
+        assert!(m.get("key").as_str().is_some(), "metric missing 'key'");
+        assert!(m.get("value").as_f64().is_some(), "metric missing numeric 'value'");
+        assert!(m.get("unit").as_str().is_some(), "metric missing 'unit'");
+    }
+    assert!(
+        !samples.is_empty() || !metrics.is_empty(),
+        "snapshot records neither samples nor metrics"
+    );
+}
+
+#[test]
+fn emitted_snapshot_round_trips_through_the_parser() {
+    std::env::set_var("SATA_BENCH_FAST", "1");
+    let mut b = Bench::new();
+    let mut acc = 0u64;
+    b.run("rt.sample", || {
+        acc = std::hint::black_box(acc.wrapping_add(1));
+    });
+    b.report_metric("rt.metric", 2.5, "x");
+    let path = b.emit_snapshot("unit_roundtrip").expect("emit snapshot");
+    let text = std::fs::read_to_string(&path).expect("read snapshot back");
+    let j = Json::parse(&text).expect("re-parse emitted snapshot");
+    validate_snapshot(&j, "unit_roundtrip");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn committed_baselines_match_schema() {
+    for name in ["serve", "decode_serve", "plan_delta"] {
+        let path = snapshot_path(name);
+        let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+            panic!(
+                "{}: {e} — the perf trajectory requires a committed BENCH_{name}.json baseline at the repo root",
+                path.display()
+            )
+        });
+        let j = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("BENCH_{name}.json: {e}"));
+        validate_snapshot(&j, name);
+        assert!(
+            !j.get("metrics").as_arr().unwrap().is_empty(),
+            "BENCH_{name}.json carries no metrics"
+        );
+    }
+}

@@ -1,0 +1,199 @@
+//! Delta-planning invariants: `StepPlan::patch_from` must be **bitwise
+//! identical** to cold Algo-1 planning (`StepPlan::build`) along any
+//! decode chain, and the coordinator must therefore serve exactly the
+//! same results with delta planning on or off — for every registered
+//! flow and every step-overlap kappa. The only observable difference is
+//! the `steps_planned_cold` / `steps_planned_delta` split in the
+//! metrics, which is pinned exactly here.
+
+use sata::config::{SystemConfig, WorkloadSpec};
+use sata::coordinator::{
+    Coordinator, CoordinatorConfig, CoordinatorMetrics, Job, JobResult,
+};
+use sata::engine::backend::{flow_names, StepPlan};
+use sata::engine::EngineOpts;
+use sata::trace::synth::gen_sessions;
+use sata::util::rng::{mix64, Rng};
+
+const KAPPAS: [f64; 5] = [0.0, 0.25, 0.5, 0.75, 1.0];
+const STEPS: usize = 6;
+
+/// Plan `chain` twice — cold every step, and delta-patched from the
+/// (itself patched) predecessor — and require bitwise-equal plans.
+fn assert_chain_matches(chain: &[(Vec<Vec<usize>>, u64)], opts: EngineOpts) {
+    let mut scratch: Vec<bool> = Vec::new();
+    let mut prev: Option<StepPlan> = None;
+    for (t, (heads, fp)) in chain.iter().enumerate() {
+        let cold = StepPlan::build(heads, *fp, opts);
+        let plan = match &prev {
+            Some(p) => StepPlan::patch_from(p, heads, *fp, opts, &mut scratch),
+            None => StepPlan::build(heads, *fp, opts),
+        };
+        assert_eq!(
+            plan.heads, cold.heads,
+            "step {t}: patched selection order diverges from cold Algo-1 plan"
+        );
+        assert_eq!(plan.fingerprint, cold.fingerprint, "step {t}: cache identity diverges");
+        assert_eq!(plan.opts.cache_key(), cold.opts.cache_key(), "step {t}: opts diverge");
+        prev = Some(plan);
+    }
+}
+
+#[test]
+fn patched_plans_are_bitwise_identical_to_cold() {
+    for &kappa in &KAPPAS {
+        for (spec, seed) in
+            [(WorkloadSpec::ttst(), 11u64), (WorkloadSpec::kvt_deit_tiny(), 23)]
+        {
+            let sessions = gen_sessions(&spec, 2, 1, 0.0, 8, kappa, seed);
+            for opts in [EngineOpts::default(), EngineOpts { seed: 7, ..Default::default() }]
+            {
+                for sess in &sessions {
+                    let chain: Vec<(Vec<Vec<usize>>, u64)> = sess
+                        .steps
+                        .iter()
+                        .map(|s| (s.heads.clone(), s.fingerprint()))
+                        .collect();
+                    assert_chain_matches(&chain, opts);
+                }
+            }
+        }
+    }
+}
+
+/// `gen_sessions` transitions are either verbatim copies (Δ = ∅) or fresh
+/// draws; this chain exercises the in-between — per-key overlap of
+/// exactly `round(kappa·K)` retained keys per transition, over a KV
+/// window that grows step to step (new keys can exceed every old index).
+#[test]
+fn patching_handles_partial_overlap_and_kv_growth() {
+    let opts = EngineOpts::default();
+    let (heads_n, k) = (4usize, 24usize);
+    for &kappa in &KAPPAS {
+        let mut rng = Rng::new(0xD17A ^ kappa.to_bits());
+        let keep = (kappa * k as f64).round() as usize;
+        let mut chain: Vec<(Vec<Vec<usize>>, u64)> = Vec::new();
+        for t in 0..10usize {
+            let kv = 64 + 8 * t;
+            let heads: Vec<Vec<usize>> = (0..heads_n)
+                .map(|h| {
+                    let mut keys: Vec<usize> = match chain.last() {
+                        None => rng.sample_indices(kv, k),
+                        Some((prev, _)) => {
+                            let mut keys: Vec<usize> = prev[h][..keep].to_vec();
+                            while keys.len() < k {
+                                let cand = rng.gen_range(kv);
+                                if !keys.contains(&cand) {
+                                    keys.push(cand);
+                                }
+                            }
+                            keys
+                        }
+                    };
+                    rng.shuffle(&mut keys);
+                    keys
+                })
+                .collect();
+            let fp = mix64(0xC4A1_0000 ^ ((t as u64) << 8) ^ kappa.to_bits());
+            chain.push((heads, fp));
+        }
+        assert_chain_matches(&chain, opts);
+    }
+}
+
+/// Canonical job blob with the nondeterministic wall-latency field
+/// excluded — everything else must be bitwise equal across delta on/off.
+fn canon(r: &JobResult) -> String {
+    let mut s = format!(
+        "{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}",
+        r.id,
+        r.model,
+        r.substrate,
+        r.layers,
+        r.tokens,
+        r.cache_hits,
+        r.carry_resident,
+        r.carry_fetched,
+        r.error,
+        r.dense.to_json().emit(),
+    );
+    for f in &r.flows {
+        s.push_str(&format!(
+            "|{}|{}|{}|{}",
+            f.flow,
+            f.throughput_gain,
+            f.energy_gain,
+            f.report.to_json().emit()
+        ));
+    }
+    s
+}
+
+fn serve(kappa: f64, delta: bool) -> (Vec<String>, CoordinatorMetrics) {
+    let spec = WorkloadSpec::ttst();
+    let sys = SystemConfig::for_workload(&spec);
+    let coord = Coordinator::with_config(
+        sys,
+        // Capacity above the working set: the hit/delta/cold split below
+        // is exact, not eviction luck.
+        CoordinatorConfig { cache_capacity: 1024, ..Default::default() },
+    );
+    // 1-layer prefills with distinct per-session seeds: every step-plan
+    // cache hit is a genuine within-session copy transition.
+    let sessions = gen_sessions(&spec, 3, 1, 0.0, STEPS, kappa, 0xFACE);
+    let n = sessions.len();
+    let mut blobs = Vec::new();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            for (id, sess) in sessions.into_iter().enumerate() {
+                let flows = flow_names().iter().map(|f| f.to_string()).collect();
+                let job = Job::with_flows(id, sess, spec.sf, flows).with_delta(delta);
+                coord.submit(job).expect("submit");
+            }
+        });
+        for r in coord.results().take(n) {
+            assert!(r.is_ok(), "{:?}", r.error);
+            blobs.push(canon(&r));
+        }
+    });
+    blobs.sort();
+    (blobs, coord.finish())
+}
+
+#[test]
+fn delta_on_off_serve_identically_across_flows_and_kappa() {
+    let sessions = 3;
+    for &kappa in &KAPPAS {
+        let copies = (kappa * (STEPS - 1) as f64).round() as usize;
+        let (on_blobs, on_m) = serve(kappa, true);
+        let (off_blobs, off_m) = serve(kappa, false);
+        assert_eq!(
+            on_blobs, off_blobs,
+            "kappa {kappa}: delta-on and delta-off served different results"
+        );
+
+        // Exact per-step planning outcome accounting: with delta on, only
+        // each session's first step plans cold; every non-copy successor
+        // is patched, every copy transition hits the cache. With delta
+        // off every miss plans cold. The hit count must not move at all.
+        assert_eq!(on_m.steps_cache_hit, sessions * copies, "kappa {kappa}");
+        assert_eq!(off_m.steps_cache_hit, sessions * copies, "kappa {kappa}");
+        assert_eq!(on_m.steps_planned_cold, sessions, "kappa {kappa}");
+        assert_eq!(
+            on_m.steps_planned_delta,
+            sessions * (STEPS - 1 - copies),
+            "kappa {kappa}"
+        );
+        assert_eq!(off_m.steps_planned_delta, 0, "kappa {kappa}");
+        assert_eq!(
+            off_m.steps_planned_cold,
+            sessions * (STEPS - copies),
+            "kappa {kappa}"
+        );
+
+        // The stage split sees every job and unit.
+        assert!(on_m.plan_total_ns > 0.0, "plan stage recorded nothing");
+        assert!(on_m.exec_total_ns > 0.0, "exec stage recorded nothing");
+        assert!(on_m.plan_p50_ns > 0.0 && on_m.exec_p50_ns > 0.0);
+    }
+}
