@@ -1,0 +1,369 @@
+//! Cluster serving: fingerprint-affinity routing vs round-robin across a
+//! simulated multi-node fleet, plus an offered-load sweep across the
+//! saturation knee under bounded admission.
+//!
+//! Three passes, all driven by the seeded open-loop arrival generator
+//! (`trace::synth::ArrivalGen`), all asserting their acceptance criteria
+//! in-process:
+//!
+//! 1. **Pin**: a 1-node `FingerprintAffinity` cluster is the degenerate
+//!    case — its results must be *bitwise identical* to a plain
+//!    `Coordinator` fed the same seeded arrival stream (single plan/exec
+//!    worker on both sides, so planning order is deterministic).
+//! 2. **Affinity vs round-robin** at 2 nodes: the same unpaced stream of
+//!    repeat traffic is routed both ways; the affinity fleet's combined
+//!    plan+step cache hit rate must be *strictly* above round-robin's,
+//!    because round-robin re-pays Algo-1 planning once per node while
+//!    affinity concentrates each fingerprint's repeats on its home node.
+//! 3. **Load sweep**: calibrate fleet capacity closed-loop, then sweep
+//!    offered load {0.25, 0.5, 1.0, 2.0}x capacity with Poisson pacing
+//!    and a per-node admission cap. At every point the accounting
+//!    identity `submitted == completed + shed` must hold *exactly* (no
+//!    silent drops); goodput must rise while under capacity and stay
+//!    within 10% of the knee at 2x overload (shedding, not collapse).
+//!
+//! Emits `BENCH_cluster_serve.json` (goodput, shed fraction, token p99,
+//! and the affinity/round-robin hit rates). `SATA_BENCH_FAST=1` shrinks
+//! stream lengths (CI smoke mode).
+
+use std::time::{Duration, Instant};
+
+use sata::cluster::{Admission, Cluster, ClusterConfig, ClusterMetrics, RoutePolicy};
+use sata::config::{SystemConfig, WorkloadSpec};
+use sata::coordinator::{Coordinator, CoordinatorConfig, Job, Request};
+use sata::trace::synth::{ArrivalGen, ArrivalSpec};
+use sata::util::bench::Bench;
+
+const SEED: u64 = 0xC1A5_7E12;
+
+/// The tenant mix every pass draws from: prefill-heavy 3-layer model
+/// requests and decode-heavy 3-step sessions, 4 distinct fingerprints of
+/// each, so streams are dominated by repeat traffic (the regime where
+/// routing policy decides the fleet-wide hit rate).
+fn arrival_spec(rate_per_s: f64) -> ArrivalSpec {
+    ArrivalSpec {
+        rate_per_s,
+        decode_frac: 0.5,
+        distinct: 4,
+        layers: 3,
+        rho: 0.5,
+        steps: 3,
+        kappa: 0.5,
+    }
+}
+
+fn stream(spec: &WorkloadSpec, rate_per_s: f64, n: usize) -> Vec<Request> {
+    ArrivalGen::new(spec, arrival_spec(rate_per_s), SEED)
+        .take(n)
+        .map(|a| a.request)
+        .collect()
+}
+
+/// Deterministic single-pipeline node: one plan worker means plan-cache
+/// lookups happen in submission order, so hit counts replay exactly.
+fn pinned_node_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        plan_workers: 1,
+        exec_workers: 1,
+        cache_capacity: 512,
+        ..Default::default()
+    }
+}
+
+/// Pass 1: 1-node affinity cluster vs plain coordinator, same stream,
+/// bitwise-identical reports.
+fn run_pin_pass(spec: &WorkloadSpec, sys: &SystemConfig, n: usize) {
+    let requests = stream(spec, 0.0, n);
+
+    let coord = Coordinator::with_config(sys.clone(), pinned_node_config());
+    for (id, r) in requests.iter().cloned().enumerate() {
+        coord.submit(Job::new(id, r, spec.sf)).expect("open coordinator");
+    }
+    let (plain, plain_m) = coord.drain();
+
+    let cluster = Cluster::new(
+        sys.clone(),
+        ClusterConfig {
+            nodes: 1,
+            route: RoutePolicy::FingerprintAffinity,
+            admit_cap: None,
+            node: pinned_node_config(),
+        },
+    );
+    for (id, r) in requests.iter().cloned().enumerate() {
+        match cluster.submit(Job::new(id, r, spec.sf)).expect("open cluster") {
+            Admission::Accepted { node } => assert_eq!(node, 0, "1-node fleet"),
+            Admission::Shed { .. } => panic!("no admission cap configured"),
+        }
+    }
+    let (fleet, fleet_m) = cluster.drain();
+
+    assert_eq!(plain.len(), n);
+    assert_eq!(fleet.len(), n);
+    for (a, b) in plain.iter().zip(&fleet) {
+        assert_eq!(b.node, 0);
+        let b = &b.result;
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.substrate, b.substrate);
+        assert_eq!(a.layers, b.layers);
+        assert_eq!(a.tokens, b.tokens);
+        assert!(a.error.is_none() && b.error.is_none(), "{:?} {:?}", a.error, b.error);
+        // Bitwise: the simulated reports are pure functions of the plan,
+        // so the degenerate cluster must not perturb them at all.
+        assert_eq!(a.dense, b.dense, "job {}: dense baseline diverged", a.id);
+        assert_eq!(a.flows.len(), b.flows.len());
+        for (fa, fb) in a.flows.iter().zip(&b.flows) {
+            assert_eq!(fa.flow, fb.flow);
+            assert_eq!(fa.report, fb.report, "job {}: flow report diverged", a.id);
+            assert_eq!(fa.throughput_gain.to_bits(), fb.throughput_gain.to_bits());
+            assert_eq!(fa.energy_gain.to_bits(), fb.energy_gain.to_bits());
+        }
+        // Single plan worker on both sides: cache behaviour replays too.
+        assert_eq!(a.cache_hits, b.cache_hits, "job {}: cache hits diverged", a.id);
+        assert_eq!(a.cache_hit, b.cache_hit);
+        assert_eq!(a.carry_resident, b.carry_resident);
+        assert_eq!(a.carry_fetched, b.carry_fetched);
+    }
+    assert_eq!(plain_m.cache_hits, fleet_m.cache_hits);
+    assert_eq!(plain_m.cache_misses, fleet_m.cache_misses);
+    assert_eq!(plain_m.steps_cache_hit, fleet_m.steps_cache_hit);
+    assert_eq!(fleet_m.submitted, fleet_m.completed + fleet_m.shed);
+    println!("pin: 1-node affinity cluster == plain coordinator over {n} jobs (bitwise)");
+}
+
+/// Serve one unpaced stream through a capless fleet; return the metrics.
+fn serve_unpaced(
+    sys: &SystemConfig,
+    spec: &WorkloadSpec,
+    requests: &[Request],
+    nodes: usize,
+    route: RoutePolicy,
+) -> ClusterMetrics {
+    let cluster = Cluster::new(
+        sys.clone(),
+        ClusterConfig {
+            nodes,
+            route,
+            admit_cap: None,
+            node: pinned_node_config(),
+        },
+    );
+    for (id, r) in requests.iter().cloned().enumerate() {
+        cluster.submit(Job::new(id, r, spec.sf)).expect("open cluster");
+    }
+    let (results, m) = cluster.drain();
+    assert_eq!(results.len(), requests.len());
+    assert_eq!(m.submitted, m.completed + m.shed);
+    m
+}
+
+/// Pass 2: affinity vs round-robin hit rates at 2 nodes.
+fn run_affinity_pass(spec: &WorkloadSpec, sys: &SystemConfig, n: usize, b: &mut Bench) {
+    let requests = stream(spec, 0.0, n);
+    let aff = serve_unpaced(sys, spec, &requests, 2, RoutePolicy::FingerprintAffinity);
+    let rr = serve_unpaced(sys, spec, &requests, 2, RoutePolicy::RoundRobin);
+
+    // `cache_hit_rate` already spans layer plans *and* decode-step plans
+    // (the coordinator counts both through the one plan cache).
+    b.report_metric("cluster_serve.affinity.hit_rate", aff.cache_hit_rate(), "frac");
+    b.report_metric("cluster_serve.rr.hit_rate", rr.cache_hit_rate(), "frac");
+    b.report_metric("cluster_serve.affinity.step_hit_rate", aff.step_hit_rate(), "frac");
+    b.report_metric("cluster_serve.rr.step_hit_rate", rr.step_hit_rate(), "frac");
+
+    // The acceptance criterion: at >= 2 nodes, affinity routing must beat
+    // round-robin on the combined plan+step hit rate, strictly. Round-
+    // robin scatters each fingerprint's repeats across nodes and replans
+    // them per node; affinity pays each plan exactly once fleet-wide.
+    assert!(
+        aff.cache_hit_rate() > rr.cache_hit_rate(),
+        "affinity hit rate {:.4} must beat round-robin {:.4} at 2 nodes",
+        aff.cache_hit_rate(),
+        rr.cache_hit_rate()
+    );
+    assert!(
+        aff.step_hit_rate() >= rr.step_hit_rate(),
+        "affinity step hit rate {:.4} fell below round-robin {:.4}",
+        aff.step_hit_rate(),
+        rr.step_hit_rate()
+    );
+    println!(
+        "2-node hit rate: affinity {:.1}% vs round-robin {:.1}% (step: {:.1}% vs {:.1}%)",
+        100.0 * aff.cache_hit_rate(),
+        100.0 * rr.cache_hit_rate(),
+        100.0 * aff.step_hit_rate(),
+        100.0 * rr.step_hit_rate()
+    );
+}
+
+/// Pace the caller to `at_ns` after `t0` (hybrid sleep/spin: sleep the
+/// bulk, yield the tail — arrival gaps here are fractions of a ms up to
+/// tens of ms).
+fn pace_until(t0: Instant, at_ns: f64) {
+    loop {
+        let now = t0.elapsed().as_nanos() as f64;
+        if now >= at_ns {
+            return;
+        }
+        let rem = at_ns - now;
+        if rem > 2_000_000.0 {
+            std::thread::sleep(Duration::from_nanos((rem / 2.0) as u64));
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
+
+struct SweepPoint {
+    load: f64,
+    goodput_per_s: f64,
+    shed_frac: f64,
+    token_p99_ns: f64,
+}
+
+/// Serve one paced stream through a capped 2-node affinity fleet.
+fn serve_paced(
+    sys: &SystemConfig,
+    spec: &WorkloadSpec,
+    rate_per_s: f64,
+    n: usize,
+    cap: usize,
+) -> (ClusterMetrics, f64) {
+    let cluster = Cluster::new(
+        sys.clone(),
+        ClusterConfig {
+            nodes: 2,
+            route: RoutePolicy::FingerprintAffinity,
+            admit_cap: Some(cap),
+            // Default pipeline (2+2 workers, queue depth 8): the admission
+            // cap is below the queue bound, so `submit` never blocks and
+            // the arrival process stays open-loop.
+            node: CoordinatorConfig::default(),
+        },
+    );
+    let t0 = Instant::now();
+    let mut id = 0usize;
+    for a in ArrivalGen::new(spec, arrival_spec(rate_per_s), SEED).take(n) {
+        pace_until(t0, a.at_ns);
+        cluster.submit(Job::new(id, a.request, spec.sf)).expect("open cluster");
+        id += 1;
+    }
+    let (_, m) = cluster.drain();
+    let wall_s = t0.elapsed().as_secs_f64();
+    (m, wall_s)
+}
+
+/// Pass 3: the offered-load sweep across the saturation knee.
+fn run_load_sweep(spec: &WorkloadSpec, sys: &SystemConfig, n: usize, b: &mut Bench) {
+    // Calibrate fleet capacity closed-loop: the same stream, unpaced,
+    // through the same 2-node fleet shape with no cap — jobs/s with the
+    // intake never idle is what the paced sweep saturates against.
+    let cluster = Cluster::new(
+        sys.clone(),
+        ClusterConfig { nodes: 2, admit_cap: None, ..Default::default() },
+    );
+    let t0 = Instant::now();
+    for (id, r) in stream(spec, 0.0, n).into_iter().enumerate() {
+        cluster.submit(Job::new(id, r, spec.sf)).expect("open cluster");
+    }
+    let (_, cal) = cluster.drain();
+    let capacity = cal.completed as f64 / t0.elapsed().as_secs_f64();
+    b.report_metric("cluster_serve.capacity_jobs_per_s", capacity, "jobs/s");
+    println!("calibrated fleet capacity: {capacity:.0} jobs/s (2 nodes, closed loop)");
+
+    let cap = 4; // per-node in-flight bound, < queue depth => never blocks
+    let mut points = Vec::new();
+    for &load in &[0.25, 0.5, 1.0, 2.0] {
+        let (m, wall_s) = serve_paced(sys, spec, load * capacity, n, cap);
+        // Zero silent losses, at every point, exactly.
+        assert_eq!(m.submitted, n, "every arrival must be accounted");
+        assert_eq!(
+            m.submitted,
+            m.completed + m.shed,
+            "load {load}x: submitted != completed + shed — a job was lost silently"
+        );
+        let point = SweepPoint {
+            load,
+            goodput_per_s: m.jobs_done as f64 / wall_s,
+            shed_frac: m.shed_fraction(),
+            token_p99_ns: m.token_p99_ns,
+        };
+        b.report_metric(
+            &format!("cluster_serve.load{load}.goodput_jobs_per_s"),
+            point.goodput_per_s,
+            "jobs/s",
+        );
+        b.report_metric(
+            &format!("cluster_serve.load{load}.shed_frac"),
+            point.shed_frac,
+            "frac",
+        );
+        b.report_metric(
+            &format!("cluster_serve.load{load}.token_p99_ns"),
+            point.token_p99_ns,
+            "ns",
+        );
+        println!(
+            "load {:>4}x: goodput {:>7.0} jobs/s | shed {:>5.1}% | token p99 {:.3} ms",
+            point.load,
+            point.goodput_per_s,
+            100.0 * point.shed_frac,
+            point.token_p99_ns / 1e6
+        );
+        points.push(point);
+    }
+
+    // Below the knee goodput tracks offered load: doubling 0.25x -> 0.5x
+    // must raise it substantially (the exact ratio is 2; the margin
+    // absorbs scheduler noise on loaded CI machines).
+    assert!(
+        points[1].goodput_per_s > 1.25 * points[0].goodput_per_s,
+        "goodput not rising under capacity: {:.0} -> {:.0} jobs/s",
+        points[0].goodput_per_s,
+        points[1].goodput_per_s
+    );
+    // Across the knee goodput flattens instead of collapsing: 2x overload
+    // stays within 10% of the best point — overload is absorbed by
+    // explicit shedding, not by losing throughput.
+    let knee = points
+        .iter()
+        .map(|p| p.goodput_per_s)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let at_2x = points.last().unwrap().goodput_per_s;
+    assert!(
+        at_2x >= 0.9 * knee,
+        "goodput collapsed past the knee: {at_2x:.0} jobs/s at 2x vs knee {knee:.0}"
+    );
+    // 2x overload must actually shed (the cap is doing its job) …
+    assert!(
+        points.last().unwrap().shed_frac > 0.0,
+        "2x overload shed nothing — the admission cap never engaged"
+    );
+    // … and well under capacity it should shed (almost) nothing.
+    assert!(
+        points[0].shed_frac < 0.5,
+        "shed {:.2} at 0.25x offered load — admission cap far too tight",
+        points[0].shed_frac
+    );
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let fast = sata::util::bench::fast_mode();
+    let spec = WorkloadSpec::ttst();
+    let sys = SystemConfig::for_workload(&spec);
+
+    let n_pin = if fast { 10 } else { 24 };
+    let n_hit = if fast { 40 } else { 120 };
+    let n_sweep = if fast { 16 } else { 48 };
+
+    println!(
+        "cluster serving: pin({n_pin}) + affinity-vs-rr({n_hit}) + load sweep({n_sweep} per point)"
+    );
+    run_pin_pass(&spec, &sys, n_pin);
+    run_affinity_pass(&spec, &sys, n_hit, &mut b);
+    run_load_sweep(&spec, &sys, n_sweep, &mut b);
+
+    let path = b.emit_snapshot("cluster_serve").expect("write BENCH_cluster_serve.json");
+    println!("perf trajectory snapshot: {}", path.display());
+}

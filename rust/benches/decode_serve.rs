@@ -83,7 +83,7 @@ fn serve_sessions(
 
 fn main() {
     let mut b = Bench::new();
-    let fast = std::env::var("SATA_BENCH_FAST").is_ok();
+    let fast = sata::util::bench::fast_mode();
     let sessions = if fast { 5 } else { 16 };
     // TTST: D_k = 65536 keeps decode steps memory-bound on both
     // substrates, so carryover buys wall time as well as energy.

@@ -56,7 +56,7 @@ fn serve_models(
 
 fn main() {
     let mut b = Bench::new();
-    let fast = std::env::var("SATA_BENCH_FAST").is_ok();
+    let fast = sata::util::bench::fast_mode();
     let requests = if fast { 6 } else { 24 };
     let spec = WorkloadSpec::ttst();
     // round(rho·5) copies per request: 0, 2, 3, 5 — strictly increasing.
@@ -110,4 +110,7 @@ fn main() {
             hit_rates[3]
         );
     }
+
+    let path = b.emit_snapshot("model_serve").expect("write BENCH_model_serve.json");
+    println!("perf trajectory snapshot: {}", path.display());
 }

@@ -74,7 +74,7 @@ fn gen_chain(
 
 fn main() {
     let mut b = Bench::new();
-    let fast = std::env::var("SATA_BENCH_FAST").is_ok();
+    let fast = sata::util::bench::fast_mode();
     let (steps, heads, k, kv) =
         if fast { (8, 4, 1024, 2048) } else { (16, 8, 4096, 8192) };
     let opts = EngineOpts::default();

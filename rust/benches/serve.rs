@@ -56,7 +56,7 @@ fn serve_pass(
 
 fn main() {
     let mut b = Bench::new();
-    let fast = std::env::var("SATA_BENCH_FAST").is_ok();
+    let fast = sata::util::bench::fast_mode();
     let (traces, repeats) = if fast { (4, 3) } else { (16, 6) };
     let flows = ["sata", "spatten+sata"];
 

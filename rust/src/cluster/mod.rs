@@ -1,0 +1,647 @@
+//! Layer-4 cluster: a simulated multi-node serving fleet over
+//! [`Coordinator`] shards, with **fingerprint-affinity routing** and
+//! **bounded admission**.
+//!
+//! SATA's thesis — reorder operand flow so locality-dependent state is
+//! exploited instead of thrashed — applied one more level up, to the
+//! *fleet*. Every piece of serving state this repo has grown is
+//! node-local: the fingerprint-keyed plan cache, the per-step plan
+//! cache, and decode-step carryover residency all live inside one
+//! coordinator. A locality-blind router (round-robin) scatters repeat
+//! traffic across nodes and re-pays Algo-1 planning once per node; the
+//! affinity router sends every request with one content fingerprint —
+//! and therefore every resubmission of one decode session — to one
+//! **home node**, so the fleet-wide hit rate matches the single-node
+//! rate. `benches/cluster_serve.rs` measures exactly that gap.
+//!
+//! ```text
+//!  submit ──▶ route (RoutePolicy) ──▶ admission (in-flight < cap?) ──▶ nodes[i].submit
+//!                │                         │ at cap: Admission::Shed        │
+//!                │ FingerprintAffinity:    ▼ (counted, never silent)        ▼
+//!                │ rendezvous mix64     shed[i] += 1          per-node forwarder thread
+//!                │ RoundRobin: i = k%N                        decrements in-flight[i],
+//!                ▼                                            streams NodeResult
+//!          home node index                                    into results()
+//! ```
+//!
+//! * **Routing.** [`RoutePolicy::FingerprintAffinity`] uses rendezvous
+//!   (highest-random-weight) hashing over [`mix64`] scores
+//!   ([`route_affinity`]): the winner is a pure function of
+//!   `(fingerprint, node count)`, so routing is deterministic across
+//!   [`Cluster`] rebuilds, needs no shared routing table, and moves only
+//!   `~1/(N+1)` of the keyspace when a node is added. Decode sessions
+//!   route by [`DecodeSession::fingerprint`]
+//!   (via [`Request::fingerprint`]), and a session is planned/executed
+//!   entirely on the coordinator it lands on — session stickiness is
+//!   structural, not best-effort. [`RoutePolicy::RoundRobin`] is the
+//!   locality-blind baseline the bench compares against.
+//! * **Admission.** With [`ClusterConfig::admit_cap`] set, each node
+//!   accepts at most `cap` in-flight jobs (submitted, not yet
+//!   delivered). A submit that finds the home node at its cap returns
+//!   [`Admission::Shed`] immediately — load shedding is an explicit
+//!   result the caller sees and a per-node counter the metrics report,
+//!   **never** a silent drop: after a drain,
+//!   `submitted == completed + shed` exactly
+//!   (`tests/cluster_serve.rs` pins this at 2× overload). Without a
+//!   cap, intake backpressure blocks in `submit` exactly like a plain
+//!   coordinator.
+//! * **Metrics.** [`ClusterMetrics`] keeps every node's
+//!   [`CoordinatorMetrics`] and adds the fleet rollup: summed
+//!   counters, shed accounting, and cluster-wide latency percentiles
+//!   computed by **merging the per-node histograms**
+//!   ([`LatencyHistogram::merge`] over [`Coordinator::latency_profile`]
+//!   snapshots) — per-node percentiles do not compose, histograms do.
+//!
+//! A 1-node affinity cluster is the degenerate case: every request
+//! routes to node 0 and the result stream is the unmodified coordinator
+//! path — `benches/cluster_serve.rs` pins its reports bitwise identical
+//! to a plain [`Coordinator`] fed the same seeded arrival stream.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::config::SystemConfig;
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, CoordinatorMetrics, Job, JobResult, Request,
+};
+use crate::decode::DecodeSession;
+use crate::util::json::Json;
+use crate::util::rng::mix64;
+use crate::util::stats::LatencyHistogram;
+
+/// Salt for the per-node rendezvous score streams (see [`route_affinity`]).
+const ROUTE_SALT: u64 = 0xAFF1_2077_5A7A_C1D5;
+
+/// How the cluster picks a home node for each submitted job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Rendezvous-hash the request's content fingerprint
+    /// ([`Request::fingerprint`]) over the node set: identical requests
+    /// — and every resubmission of one decode session — always land on
+    /// one node, so node-local plan/step caches and carryover residency
+    /// see the fleet's full repeat traffic.
+    FingerprintAffinity,
+    /// Locality-blind baseline: node `k mod N` for the `k`-th
+    /// submission, regardless of content.
+    RoundRobin,
+}
+
+impl RoutePolicy {
+    /// Parse a CLI spelling: `affinity` or `rr` / `round-robin`.
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "affinity" => Some(RoutePolicy::FingerprintAffinity),
+            "rr" | "round-robin" => Some(RoutePolicy::RoundRobin),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling (`affinity` / `rr`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RoutePolicy::FingerprintAffinity => "affinity",
+            RoutePolicy::RoundRobin => "rr",
+        }
+    }
+}
+
+/// Rendezvous (highest-random-weight) node choice for one fingerprint:
+/// each node scores `mix64(fingerprint ^ mix64(node ^ salt))` and the
+/// highest score wins. Pure and deterministic — the same
+/// `(fingerprint, nodes)` pair picks the same node in every process,
+/// across every [`Cluster`] rebuild — and adding a node only reassigns
+/// the keys whose new score beats their old winner (≈ `1/(N+1)` of the
+/// keyspace), which is why rendezvous beats `fp % N` for fleets that
+/// resize.
+pub fn route_affinity(fingerprint: u64, nodes: usize) -> usize {
+    assert!(nodes > 0, "route_affinity needs at least one node");
+    let mut best = 0usize;
+    let mut best_score = 0u64;
+    for i in 0..nodes {
+        let score = mix64(fingerprint ^ mix64(i as u64 ^ ROUTE_SALT));
+        if i == 0 || score > best_score {
+            best = i;
+            best_score = score;
+        }
+    }
+    best
+}
+
+/// Fleet shape: node count, routing policy, per-node admission cap, and
+/// the pipeline config every node is built with.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Number of coordinator shards (≥ 1).
+    pub nodes: usize,
+    /// Routing policy (see [`RoutePolicy`]).
+    pub route: RoutePolicy,
+    /// Per-node in-flight cap. `Some(cap)`: a submit that finds the home
+    /// node already holding `cap` undelivered jobs is **shed**
+    /// ([`Admission::Shed`]) instead of queued. `None`: unbounded
+    /// admission — intake backpressure blocks, exactly like a plain
+    /// coordinator.
+    pub admit_cap: Option<usize>,
+    /// Per-node pipeline shape + plan-cache sizing.
+    pub node: CoordinatorConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 2,
+            route: RoutePolicy::FingerprintAffinity,
+            admit_cap: None,
+            node: CoordinatorConfig::default(),
+        }
+    }
+}
+
+/// Outcome of a [`Cluster::submit`]: where the job went, or that it was
+/// shed at admission. Shedding is a *successful* submit call with a loud
+/// outcome — the job was counted, the caller knows, and the metrics
+/// know; `Err(Job)` is reserved for a closed/dead cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// The job entered node `node`'s pipeline and will produce exactly
+    /// one [`NodeResult`].
+    Accepted {
+        /// Home node index the router chose.
+        node: usize,
+    },
+    /// The home node was at its in-flight cap; the job was dropped *at
+    /// admission*, counted in [`ClusterMetrics::shed`] (and per-node),
+    /// and will produce no result. Overload therefore degrades goodput
+    /// visibly instead of losing jobs silently.
+    Shed {
+        /// Home node index that was saturated.
+        node: usize,
+    },
+}
+
+/// One streamed result, tagged with the node that served it.
+#[derive(Clone, Debug)]
+pub struct NodeResult {
+    /// Index of the coordinator shard that executed the job.
+    pub node: usize,
+    /// The unmodified per-node result.
+    pub result: JobResult,
+}
+
+/// A simulated serving fleet: `N` independent [`Coordinator`] shards
+/// behind one router with bounded admission. See the module docs for
+/// semantics; see [`ClusterMetrics`] for the rollup.
+pub struct Cluster {
+    nodes: Vec<Arc<Coordinator>>,
+    route: RoutePolicy,
+    admit_cap: Option<usize>,
+    rr_next: AtomicUsize,
+    in_flight: Vec<Arc<AtomicUsize>>,
+    shed: Vec<AtomicUsize>,
+    submitted: AtomicUsize,
+    forwarders: Vec<JoinHandle<()>>,
+    results_rx: Mutex<Receiver<NodeResult>>,
+}
+
+impl Cluster {
+    /// Build the fleet: `cfg.nodes` coordinators (each with its own
+    /// workers, queues, and plan cache, per `cfg.node`) plus one
+    /// forwarder thread per node that streams results into the shared
+    /// [`Cluster::results`] channel and releases the node's admission
+    /// slot as each job is delivered.
+    pub fn new(sys: SystemConfig, cfg: ClusterConfig) -> Self {
+        let n = cfg.nodes.max(1);
+        let (tx, rx) = channel::<NodeResult>();
+        let mut nodes = Vec::with_capacity(n);
+        let mut in_flight = Vec::with_capacity(n);
+        let mut shed = Vec::with_capacity(n);
+        let mut forwarders = Vec::with_capacity(n);
+        for i in 0..n {
+            let node = Arc::new(Coordinator::with_config(sys.clone(), cfg.node.clone()));
+            let slots = Arc::new(AtomicUsize::new(0));
+            let fw_node = Arc::clone(&node);
+            let fw_slots = Arc::clone(&slots);
+            let fw_tx = tx.clone();
+            forwarders.push(std::thread::spawn(move || {
+                for result in fw_node.results() {
+                    // Release the admission slot as soon as the result is
+                    // delivered; the send target is unbounded, so the
+                    // forwarder never blocks a node's pipeline.
+                    fw_slots.fetch_sub(1, Ordering::SeqCst);
+                    if fw_tx.send(NodeResult { node: i, result }).is_err() {
+                        // Receiver gone (cluster dropped mid-stream):
+                        // keep draining so the node can shut down.
+                        continue;
+                    }
+                }
+            }));
+            nodes.push(node);
+            in_flight.push(slots);
+            shed.push(AtomicUsize::new(0));
+        }
+        Cluster {
+            nodes,
+            route: cfg.route,
+            admit_cap: cfg.admit_cap,
+            rr_next: AtomicUsize::new(0),
+            in_flight,
+            shed,
+            submitted: AtomicUsize::new(0),
+            forwarders,
+            results_rx: Mutex::new(rx),
+        }
+    }
+
+    /// Number of coordinator shards.
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The home node affinity routing assigns to `request` — a pure
+    /// function of its fingerprint and the node count. `None` under
+    /// [`RoutePolicy::RoundRobin`], whose choice depends on submission
+    /// order, not content.
+    pub fn home_node(&self, request: &Request) -> Option<usize> {
+        match self.route {
+            RoutePolicy::FingerprintAffinity => {
+                Some(route_affinity(request.fingerprint(), self.nodes.len()))
+            }
+            RoutePolicy::RoundRobin => None,
+        }
+    }
+
+    /// Route + admit + submit one job. Blocks only on intake
+    /// backpressure of the chosen node when no admission cap is set
+    /// (with a cap `<=` the node's pipeline depth, it never blocks).
+    /// Every call that returns `Ok` is **accounted**: accepted jobs
+    /// produce exactly one [`NodeResult`]; shed jobs increment the shed
+    /// counters — `submitted == completed + shed` after a drain.
+    /// `Err(job)` means the cluster (or that node) is closed; the job is
+    /// handed back uncounted.
+    pub fn submit(&self, job: Job) -> Result<Admission, Job> {
+        let node = match self.route {
+            RoutePolicy::FingerprintAffinity => {
+                route_affinity(job.request.fingerprint(), self.nodes.len())
+            }
+            RoutePolicy::RoundRobin => {
+                self.rr_next.fetch_add(1, Ordering::SeqCst) % self.nodes.len()
+            }
+        };
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+        // Reserve an admission slot (CAS loop: never overshoot the cap).
+        if let Some(cap) = self.admit_cap {
+            let slots = &self.in_flight[node];
+            let mut cur = slots.load(Ordering::SeqCst);
+            loop {
+                if cur >= cap {
+                    self.shed[node].fetch_add(1, Ordering::SeqCst);
+                    return Ok(Admission::Shed { node });
+                }
+                match slots.compare_exchange(
+                    cur,
+                    cur + 1,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                ) {
+                    Ok(_) => break,
+                    Err(now) => cur = now,
+                }
+            }
+        } else {
+            self.in_flight[node].fetch_add(1, Ordering::SeqCst);
+        }
+        match self.nodes[node].submit(job) {
+            Ok(()) => Ok(Admission::Accepted { node }),
+            Err(job) => {
+                // Closed node: roll back the slot and the submission count
+                // so the accounting identity stays exact.
+                self.in_flight[node].fetch_sub(1, Ordering::SeqCst);
+                self.submitted.fetch_sub(1, Ordering::SeqCst);
+                Err(job)
+            }
+        }
+    }
+
+    /// Stream results from every node as they finish (completion order
+    /// across the fleet). Ends after [`Cluster::close`] once every
+    /// in-flight job has been yielded.
+    pub fn results(&self) -> impl Iterator<Item = NodeResult> + '_ {
+        std::iter::from_fn(move || self.results_rx.lock().unwrap().recv().ok())
+    }
+
+    /// Close every node's intake; in-flight jobs keep flowing and the
+    /// result stream terminates once they are all delivered.
+    pub fn close(&self) {
+        for node in &self.nodes {
+            node.close();
+        }
+    }
+
+    /// Snapshot of the fleet metrics (callable while serving). Per-node
+    /// [`CoordinatorMetrics`] plus the cluster rollup; fleet percentiles
+    /// come from merged per-node histograms, not averaged percentiles.
+    pub fn metrics(&self) -> ClusterMetrics {
+        let nodes: Vec<CoordinatorMetrics> =
+            self.nodes.iter().map(|n| n.metrics()).collect();
+        let mut wall = LatencyHistogram::new();
+        let mut token = LatencyHistogram::new();
+        for node in &self.nodes {
+            let profile = node.latency_profile();
+            wall.merge(&profile.wall);
+            token.merge(&profile.token);
+        }
+        let shed_per_node: Vec<usize> =
+            self.shed.iter().map(|s| s.load(Ordering::SeqCst)).collect();
+        ClusterMetrics {
+            submitted: self.submitted.load(Ordering::SeqCst),
+            completed: nodes.iter().map(|m| m.jobs_done + m.jobs_failed).sum(),
+            shed: shed_per_node.iter().sum(),
+            shed_per_node,
+            jobs_done: nodes.iter().map(|m| m.jobs_done).sum(),
+            jobs_failed: nodes.iter().map(|m| m.jobs_failed).sum(),
+            tokens_done: nodes.iter().map(|m| m.tokens_done).sum(),
+            cache_hits: nodes.iter().map(|m| m.cache_hits).sum(),
+            cache_misses: nodes.iter().map(|m| m.cache_misses).sum(),
+            steps_cache_hit: nodes.iter().map(|m| m.steps_cache_hit).sum(),
+            steps_planned_cold: nodes.iter().map(|m| m.steps_planned_cold).sum(),
+            steps_planned_delta: nodes.iter().map(|m| m.steps_planned_delta).sum(),
+            wall_p50_ns: wall.percentile(50.0),
+            wall_p95_ns: wall.percentile(95.0),
+            wall_p99_ns: wall.percentile(99.0),
+            token_p50_ns: token.percentile(50.0),
+            token_p95_ns: token.percentile(95.0),
+            token_p99_ns: token.percentile(99.0),
+            nodes,
+        }
+    }
+
+    /// Graceful shutdown after streaming: close intakes, discard any
+    /// results not consumed via [`Cluster::results`], join the
+    /// forwarders and every node's workers, and return final metrics.
+    pub fn finish(mut self) -> ClusterMetrics {
+        self.close();
+        for _ in self.results_rx.get_mut().unwrap().iter() {}
+        self.join_fleet()
+    }
+
+    /// Collect-everything convenience: close intakes, gather every
+    /// remaining result sorted by job id, shut the fleet down, and
+    /// return results + final metrics.
+    pub fn drain(mut self) -> (Vec<NodeResult>, ClusterMetrics) {
+        self.close();
+        let mut results: Vec<NodeResult> =
+            self.results_rx.get_mut().unwrap().iter().collect();
+        results.sort_by_key(|r| r.result.id);
+        let metrics = self.join_fleet();
+        (results, metrics)
+    }
+
+    /// Join forwarders, snapshot final metrics, then tear down each
+    /// coordinator. Callable only after the results channel has fully
+    /// drained (forwarders exit when their node's stream ends).
+    fn join_fleet(&mut self) -> ClusterMetrics {
+        for f in self.forwarders.drain(..) {
+            let _ = f.join();
+        }
+        let metrics = self.metrics();
+        for node in self.nodes.drain(..) {
+            // The forwarder held the only other strong reference and has
+            // been joined, so this unwraps; if it ever did not, dropping
+            // the Arc is still safe — the node is closed and drained.
+            if let Ok(node) = Arc::try_unwrap(node) {
+                node.finish();
+            }
+        }
+        metrics
+    }
+}
+
+/// Fleet-level metrics: every node's [`CoordinatorMetrics`] plus the
+/// cluster rollup — shed accounting (the `submitted == completed + shed`
+/// identity is asserted by `tests/cluster_serve.rs` and the bench) and
+/// cluster-wide latency percentiles from **merged** per-node histograms.
+#[derive(Clone, Debug)]
+pub struct ClusterMetrics {
+    /// Per-node metrics snapshots, indexed by node.
+    pub nodes: Vec<CoordinatorMetrics>,
+    /// Submit calls that returned `Ok` (accepted + shed).
+    pub submitted: usize,
+    /// Jobs delivered (ok or failed) across the fleet.
+    pub completed: usize,
+    /// Jobs shed at admission across the fleet.
+    pub shed: usize,
+    /// Per-node shed counts, indexed by node.
+    pub shed_per_node: Vec<usize>,
+    /// Successfully served jobs across the fleet (goodput numerator).
+    pub jobs_done: usize,
+    /// Failed jobs across the fleet.
+    pub jobs_failed: usize,
+    /// Generated tokens served across the fleet.
+    pub tokens_done: usize,
+    /// Plan-cache hits summed over nodes (layers + decode steps).
+    pub cache_hits: usize,
+    /// Plan-cache misses summed over nodes.
+    pub cache_misses: usize,
+    /// Decode steps served straight from a node's step cache.
+    pub steps_cache_hit: usize,
+    /// Decode steps planned cold across the fleet.
+    pub steps_planned_cold: usize,
+    /// Decode steps delta-patched from a predecessor plan.
+    pub steps_planned_delta: usize,
+    /// Fleet p50 job wall latency (merged histograms), ns.
+    pub wall_p50_ns: f64,
+    /// Fleet p95 job wall latency, ns.
+    pub wall_p95_ns: f64,
+    /// Fleet p99 job wall latency, ns.
+    pub wall_p99_ns: f64,
+    /// Fleet p50 per-token execution wall time, ns.
+    pub token_p50_ns: f64,
+    /// Fleet p95 per-token execution wall time, ns.
+    pub token_p95_ns: f64,
+    /// Fleet p99 per-token execution wall time, ns.
+    pub token_p99_ns: f64,
+}
+
+impl ClusterMetrics {
+    /// Shed jobs as a fraction of everything submitted (0 when idle).
+    pub fn shed_fraction(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.submitted as f64
+        }
+    }
+
+    /// Fleet plan-cache hit rate over layers + decode steps (0 when no
+    /// lookups happened).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let lookups = self.cache_hits + self.cache_misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / lookups as f64
+        }
+    }
+
+    /// Fleet step-cache hit rate over planned decode steps only.
+    pub fn step_hit_rate(&self) -> f64 {
+        let steps =
+            self.steps_cache_hit + self.steps_planned_cold + self.steps_planned_delta;
+        if steps == 0 {
+            0.0
+        } else {
+            self.steps_cache_hit as f64 / steps as f64
+        }
+    }
+
+    /// Machine-readable form: the fleet rollup plus every node's
+    /// [`CoordinatorMetrics::to_json`] under `"nodes"`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::num(self.submitted as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("shed_fraction", Json::num(self.shed_fraction())),
+            (
+                "shed_per_node",
+                Json::Arr(
+                    self.shed_per_node.iter().map(|&s| Json::num(s as f64)).collect(),
+                ),
+            ),
+            ("jobs_done", Json::num(self.jobs_done as f64)),
+            ("jobs_failed", Json::num(self.jobs_failed as f64)),
+            ("tokens_done", Json::num(self.tokens_done as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("cache_misses", Json::num(self.cache_misses as f64)),
+            ("cache_hit_rate", Json::num(self.cache_hit_rate())),
+            ("steps_cache_hit", Json::num(self.steps_cache_hit as f64)),
+            ("step_hit_rate", Json::num(self.step_hit_rate())),
+            ("wall_p50_ns", Json::num(self.wall_p50_ns)),
+            ("wall_p95_ns", Json::num(self.wall_p95_ns)),
+            ("wall_p99_ns", Json::num(self.wall_p99_ns)),
+            ("token_p50_ns", Json::num(self.token_p50_ns)),
+            ("token_p95_ns", Json::num(self.token_p95_ns)),
+            ("token_p99_ns", Json::num(self.token_p99_ns)),
+            (
+                "nodes",
+                Json::Arr(self.nodes.iter().map(|m| m.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Routing fingerprint of a decode session — re-exported here so fleet
+/// callers can reason about stickiness without importing the decode
+/// module: every step of `session` is planned and executed on
+/// `route_affinity(session_route_key(session), nodes)`.
+pub fn session_route_key(session: &DecodeSession) -> u64 {
+    session.fingerprint()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadSpec;
+    use crate::trace::synth::gen_traces;
+    use crate::util::prop::check;
+
+    #[test]
+    fn route_affinity_is_pure_and_in_range() {
+        check("route_affinity deterministic + in range", 200, |rng| {
+            let nodes = 1 + rng.gen_range(8);
+            let fp = rng.next_u64();
+            let a = route_affinity(fp, nodes);
+            let b = route_affinity(fp, nodes);
+            crate::prop_assert!(a == b, "same (fp, n) must route identically");
+            crate::prop_assert!(a < nodes, "node index {a} out of range {nodes}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn route_affinity_moves_few_keys_on_grow() {
+        // Rendezvous property: growing 4 → 5 nodes reassigns roughly
+        // 1/5 of keys (binomial around 0.2; generous band).
+        let keys: Vec<u64> = (0..2000u64).map(|i| mix64(i ^ 0xBEEF)).collect();
+        let moved = keys
+            .iter()
+            .filter(|&&fp| route_affinity(fp, 4) != route_affinity(fp, 5))
+            .count();
+        let frac = moved as f64 / keys.len() as f64;
+        assert!(
+            (0.10..0.30).contains(&frac),
+            "grow 4→5 moved {frac:.3} of keys; rendezvous should move ~0.2"
+        );
+    }
+
+    #[test]
+    fn round_robin_cycles_and_affinity_pins() {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let traces = gen_traces(&spec, 6, 42);
+        let cluster = Cluster::new(
+            sys.clone(),
+            ClusterConfig { nodes: 3, route: RoutePolicy::RoundRobin, ..Default::default() },
+        );
+        let mut seen = Vec::new();
+        for (id, t) in traces.iter().cloned().enumerate() {
+            match cluster.submit(Job::new(id, t, spec.sf)).unwrap() {
+                Admission::Accepted { node } => seen.push(node),
+                Admission::Shed { .. } => panic!("no cap configured"),
+            }
+        }
+        assert_eq!(seen, vec![0, 1, 2, 0, 1, 2], "round robin must cycle");
+        let (results, m) = cluster.drain();
+        assert_eq!(results.len(), 6);
+        assert_eq!(m.submitted, 6);
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.shed, 0);
+
+        // Affinity: submission order is irrelevant — the observed node
+        // always equals the pure route of the fingerprint.
+        let cluster = Cluster::new(
+            sys,
+            ClusterConfig { nodes: 3, ..Default::default() },
+        );
+        let homes: Vec<usize> = traces
+            .iter()
+            .map(|t| route_affinity(crate::model::ModelTrace::from(t.clone()).fingerprint(), 3))
+            .collect();
+        for (id, t) in traces.iter().cloned().enumerate() {
+            let job = Job::new(id, t, spec.sf);
+            assert_eq!(cluster.home_node(&job.request), Some(homes[id]));
+            match cluster.submit(job).unwrap() {
+                Admission::Accepted { node } => assert_eq!(node, homes[id]),
+                Admission::Shed { .. } => panic!("no cap configured"),
+            }
+        }
+        let (results, m) = cluster.drain();
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            assert_eq!(r.node, homes[r.result.id], "result node must match route");
+        }
+        assert_eq!(m.submitted, m.completed + m.shed);
+    }
+
+    #[test]
+    fn fleet_percentiles_come_from_merged_histograms() {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let cluster = Cluster::new(sys, ClusterConfig { nodes: 2, ..Default::default() });
+        for (id, t) in gen_traces(&spec, 8, 7).into_iter().enumerate() {
+            cluster.submit(Job::new(id, t, spec.sf)).unwrap();
+        }
+        let (_, m) = cluster.drain();
+        assert_eq!(m.completed, 8);
+        // The merged wall histogram holds every job across both nodes:
+        // p50 ≤ p95 ≤ p99 and the count identity held per node too.
+        assert!(m.wall_p50_ns > 0.0);
+        assert!(m.wall_p50_ns <= m.wall_p95_ns);
+        assert!(m.wall_p95_ns <= m.wall_p99_ns);
+        assert_eq!(
+            m.nodes.iter().map(|n| n.jobs_done).sum::<usize>(),
+            m.jobs_done
+        );
+    }
+}

@@ -65,7 +65,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::SystemConfig;
 use crate::decode::{carry_resident_counts, DecodeSession};
@@ -75,7 +75,41 @@ use crate::engine::{gains, substrate, EngineOpts, RunReport};
 use crate::model::report::ModelReport;
 use crate::model::ModelTrace;
 use crate::util::json::Json;
+use crate::util::rng::{mix64, Rng};
 use crate::util::stats::LatencyHistogram;
+
+/// Salt mixed into `job.id` to seed the per-job retry-jitter stream.
+const RETRY_JITTER_SALT: u64 = 0x5245_5452_595F_4A49; // "RETRY_JI"
+
+/// Deterministic jittered exponential backoff for submission retries:
+/// attempt `a` (1-based) waits `base · 2^(a−1)` — capped at `100 · base`
+/// — scaled by a uniform jitter factor in `[0.5, 1.0)` drawn from `rng`.
+/// Every wait is therefore bounded by `100 · base` and at least
+/// `base / 2`, and the whole schedule replays bit-exactly for the same
+/// seed: [`Coordinator::submit_with_retry`] seeds the stream from the
+/// job id, so synchronized clients desynchronize without losing
+/// reproducibility.
+pub fn retry_backoff(
+    attempt: usize,
+    base: std::time::Duration,
+    rng: &mut Rng,
+) -> Duration {
+    let doublings = attempt.saturating_sub(1).min(7) as i32; // 2^7 > 100
+    let scale = 2f64.powi(doublings).min(100.0);
+    let jitter = 0.5 + 0.5 * rng.f64();
+    Duration::from_secs_f64(base.as_secs_f64() * scale * jitter)
+}
+
+/// Raw per-node latency histograms exported by
+/// [`Coordinator::latency_profile`] for fleet-level percentile rollups
+/// (merged across nodes by [`crate::cluster::ClusterMetrics`]).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyProfile {
+    /// Per-job wall latency (submit → result), nanoseconds.
+    pub wall: LatencyHistogram,
+    /// Per-token execution wall time, nanoseconds (decode steps only).
+    pub token: LatencyHistogram,
+}
 
 /// What a [`Job`] asks the service to run: a prefill-shaped model request
 /// or a full autoregressive decode session. Constructors take
@@ -115,6 +149,21 @@ impl Request {
         match self {
             Request::Model(m) => &m.model,
             Request::Decode(s) => &s.model,
+        }
+    }
+
+    /// Content fingerprint of the whole request —
+    /// [`ModelTrace::fingerprint`] for model jobs,
+    /// [`DecodeSession::fingerprint`] (prefill ⊕ every step) for decode
+    /// sessions. This is the routing key of the cluster's
+    /// fingerprint-affinity policy ([`crate::cluster`]): identical
+    /// requests — and every resubmission of one decode session — carry
+    /// one fingerprint, so they land on one node and reuse its plan
+    /// cache, step cache, and carryover residency.
+    pub fn fingerprint(&self) -> u64 {
+        match self {
+            Request::Model(m) => m.fingerprint(),
+            Request::Decode(s) => s.fingerprint(),
         }
     }
 
@@ -994,10 +1043,18 @@ impl Coordinator {
 
     /// [`Coordinator::submit`] with a bounded retry/backoff loop: on
     /// `Err(job)` the submission is retried up to `max_attempts` times
-    /// total, sleeping `backoff` (doubling each retry, capped at 100×)
-    /// between attempts. Returns the job only after the budget is
-    /// exhausted, so callers can surface the drop loudly instead of
-    /// silently losing the request (`serve` does exactly this).
+    /// total, sleeping a **jittered** exponential backoff (see
+    /// [`retry_backoff`]; base `backoff`, doubling each retry, capped at
+    /// 100×, scaled by a deterministic per-job jitter factor) between
+    /// attempts. Returns the job only after the budget is exhausted, so
+    /// callers can surface the drop loudly instead of silently losing
+    /// the request (`serve` does exactly this).
+    ///
+    /// The jitter stream is seeded from `job.id`, so a fleet of clients
+    /// that all hit a rejection at the same instant fan their retries
+    /// out instead of re-converging in lockstep — while any single job's
+    /// schedule replays exactly (same id ⇒ same waits), keeping retry
+    /// timing reproducible under test.
     ///
     /// Note `Err` from `submit` means closed-or-dead, never full — a full
     /// intake queue blocks inside `submit`, so backpressure needs no
@@ -1013,15 +1070,14 @@ impl Coordinator {
         backoff: std::time::Duration,
     ) -> Result<(), Job> {
         let mut job = job;
-        let mut wait = backoff;
+        let mut rng = Rng::new(mix64(job.id as u64 ^ RETRY_JITTER_SALT));
         for attempt in 1..=max_attempts.max(1) {
             match self.submit(job) {
                 Ok(()) => return Ok(()),
                 Err(back) => {
                     job = back;
                     if attempt < max_attempts {
-                        std::thread::sleep(wait);
-                        wait = (wait * 2).min(backoff * 100);
+                        std::thread::sleep(retry_backoff(attempt, backoff, &mut rng));
                     }
                 }
             }
@@ -1106,6 +1162,18 @@ impl Coordinator {
     /// Shared plan cache (inspection / pre-warming).
     pub fn cache(&self) -> &PlanCache<Planned> {
         &self.cache
+    }
+
+    /// Snapshot of the raw streaming latency histograms (per-job wall
+    /// time and per-token execution wall time). [`CoordinatorMetrics`]
+    /// already reports this node's percentiles; the histograms
+    /// themselves exist for **fleet rollups** — percentiles do not
+    /// compose across nodes, but histograms merge losslessly
+    /// ([`LatencyHistogram::merge`]), so [`crate::cluster`] folds every
+    /// node's profile into one cluster-wide p50/p95/p99.
+    pub fn latency_profile(&self) -> LatencyProfile {
+        let agg = self.shared.agg.lock().unwrap();
+        LatencyProfile { wall: agg.wall.clone(), token: agg.token_wall.clone() }
     }
 
     /// Graceful shutdown after streaming: close the intake, discard any
@@ -1545,6 +1613,54 @@ mod tests {
             .enumerate()
             .map(|(id, trace)| Job::new(id, trace, spec.sf))
             .collect()
+    }
+
+    #[test]
+    fn retry_backoff_is_bounded_and_reproducible() {
+        let base = Duration::from_millis(1);
+        // Same seed ⇒ bit-identical schedule (reproducibility contract).
+        let mut a = Rng::new(mix64(7 ^ RETRY_JITTER_SALT));
+        let mut b = Rng::new(mix64(7 ^ RETRY_JITTER_SALT));
+        let sched_a: Vec<Duration> =
+            (1..=12).map(|att| retry_backoff(att, base, &mut a)).collect();
+        let sched_b: Vec<Duration> =
+            (1..=12).map(|att| retry_backoff(att, base, &mut b)).collect();
+        assert_eq!(sched_a, sched_b, "same seed must replay the same waits");
+        // Every wait stays within [base/2, 100·base] regardless of attempt.
+        for (i, w) in sched_a.iter().enumerate() {
+            assert!(*w >= base / 2, "attempt {}: wait {w:?} < base/2", i + 1);
+            assert!(*w <= base * 100, "attempt {}: wait {w:?} > 100x base", i + 1);
+        }
+        // Exponential growth up to the cap: attempt 1 waits < 1·base,
+        // attempt 8+ saturates in [50·base, 100·base].
+        assert!(sched_a[0] < base);
+        assert!(sched_a[11] >= base * 50);
+        // Different seeds ⇒ different schedules (the desynchronization
+        // point of jitter — synchronized clients fan out).
+        let mut c = Rng::new(mix64(8 ^ RETRY_JITTER_SALT));
+        let sched_c: Vec<Duration> =
+            (1..=12).map(|att| retry_backoff(att, base, &mut c)).collect();
+        assert_ne!(sched_a, sched_c, "distinct job ids must jitter apart");
+    }
+
+    #[test]
+    fn submit_with_retry_attempts_stay_bounded_after_close() {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::new(1, 2, sys);
+        coord.close();
+        // A closed coordinator rejects every attempt; the retry loop must
+        // exhaust its budget and hand the job back rather than spin.
+        let job = jobs(&spec, 1).remove(0);
+        let t0 = Instant::now();
+        let back = coord
+            .submit_with_retry(job, 3, Duration::from_micros(200))
+            .expect_err("closed coordinator must return the job");
+        assert_eq!(back.id, 0);
+        // 2 sleeps of ≤ 100×base bound the stall: generous ceiling.
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        let m = coord.finish();
+        assert_eq!(m.jobs_submitted, 0);
     }
 
     #[test]

@@ -30,6 +30,9 @@
 //! * [`coordinator`] - the Layer-3 runtime: pipelined plan/execute worker
 //!   stages, fingerprint-keyed plan cache, continuous batching of decode
 //!   steps with prefill jobs, streaming results, backpressure, metrics
+//! * [`cluster`]   - the Layer-4 fleet: coordinator shards behind
+//!   fingerprint-affinity (rendezvous) or round-robin routing, bounded
+//!   per-node admission with loud load-shedding, merged fleet metrics
 //! * [`runtime`]   - PJRT bridge: load AOT HLO-text artifacts and execute
 //!   the Layer-2 JAX model from Rust
 //! * [`metrics`]   - reports and gain tables
@@ -58,6 +61,7 @@
 #![warn(missing_docs)]
 
 pub mod baselines;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod decode;

@@ -35,22 +35,33 @@
 //! per-job latency percentiles; `--repeat` resubmits the trace set to
 //! exercise the cache, `--json` switches per-job lines and the final
 //! metrics block to machine-readable JSON.
+//!
+//! `serve --nodes N` lifts the same serving path to a simulated fleet
+//! ([`sata::cluster`]): N coordinator shards behind `--route affinity`
+//! (fingerprint-affinity rendezvous routing, the default) or `--route rr`
+//! (round-robin baseline), with `--admit CAP` bounding per-node in-flight
+//! jobs (overload is *shed* loudly, never dropped silently) and
+//! `--arrival-rate R` pacing a seeded open-loop Poisson arrival stream
+//! (0 = unpaced burst).
 
 use std::collections::HashMap;
 
+use sata::cluster::{Admission, Cluster, ClusterConfig, RoutePolicy};
 use sata::config::{SystemConfig, WorkloadSpec};
-use sata::coordinator::{Coordinator, Job, Request};
+use sata::coordinator::{Coordinator, CoordinatorConfig, Job, Request};
 use sata::decode::run_session;
 use sata::engine::backend::{self, FlowBackend, PlanSet};
 use sata::engine::{gains, run_dense, run_sata, substrate, EngineOpts};
 use sata::hw::cim::CimConfig;
 use sata::hw::sched_rtl::SchedRtl;
 use sata::metrics::{
-    render_flow_comparison_on, render_model_rollup, render_report,
-    render_session_rollup, schedule_stats,
+    render_fleet_rollup, render_flow_comparison_on, render_model_rollup,
+    render_report, render_session_rollup, schedule_stats,
 };
 use sata::model::report::ModelReport;
-use sata::trace::synth::{gen_models, gen_sessions, gen_trace, gen_traces};
+use sata::trace::synth::{
+    gen_models, gen_sessions, gen_trace, gen_traces, ArrivalGen, ArrivalSpec,
+};
 use sata::trace::TraceDir;
 
 /// Help text. Every `--flag` mentioned here must be accepted by a
@@ -69,13 +80,20 @@ usage: sata <trace-gen|schedule|simulate|flows|serve|e2e> [flags]
              [--substrate SUB] [--repeat R] [--traces-dir DIR]
              [--layers L] [--rho R] [--steps S] [--kappa K] [--no-carry]
              [--no-delta] [--json]
+             [--nodes N] [--route affinity|rr] [--admit CAP]
+             [--arrival-rate R]          # fleet mode (see below)
   e2e:       [--artifacts DIR]           # PJRT end-to-end
 flows: FLOW ∈ registered backends (see `sata flows`); SUB ∈ cim|systolic
 model requests: --layers/--rho shape multi-layer requests (rho =
   cross-layer selection overlap in [0,1]); decode sessions: --steps
   tokens are generated over a growing KV set with --kappa step-to-step
   overlap; --no-carry disables step-carryover residency; --no-delta
-  forces cold per-step planning (disables incremental plan patching)";
+  forces cold per-step planning (disables incremental plan patching)
+fleet mode: --nodes N serves through N coordinator shards routed by
+  content fingerprint (--route affinity, default) or round-robin
+  (--route rr); --admit CAP bounds per-node in-flight jobs (overload
+  sheds loudly); --arrival-rate R paces a seeded Poisson arrival
+  stream at R jobs/s (0 = unpaced burst)";
 
 /// The flags each subcommand accepts (the audit surface for [`USAGE`]).
 const SUBCOMMANDS: &[(&str, &[&str])] = &[
@@ -97,7 +115,7 @@ const SUBCOMMANDS: &[(&str, &[&str])] = &[
         &[
             "workload", "seed", "jobs", "workers", "flows", "flow", "substrate",
             "repeat", "traces-dir", "layers", "rho", "steps", "kappa", "no-carry",
-            "no-delta", "json",
+            "no-delta", "json", "nodes", "route", "admit", "arrival-rate",
         ],
     ),
     ("e2e", &["artifacts", "seed"]),
@@ -429,6 +447,169 @@ fn main() {
             let delta = !flags.contains_key("no-delta");
             let json_out = flags.contains_key("json");
             let sys = SystemConfig::for_workload(&spec);
+
+            // Fleet mode: `--nodes` serves through the Layer-4 cluster —
+            // N coordinator shards, fingerprint-affinity or round-robin
+            // routing, bounded admission, Poisson-paced arrivals.
+            if flags.contains_key("nodes") {
+                let n_nodes = usize_flag(&flags, "nodes", 2).max(1);
+                let route_name =
+                    flags.get("route").map(String::as_str).unwrap_or("affinity");
+                let route = RoutePolicy::parse(route_name).unwrap_or_else(|| {
+                    eprintln!("unknown route '{route_name}' (affinity|rr)");
+                    std::process::exit(2);
+                });
+                let admit_cap: Option<usize> =
+                    flags.get("admit").and_then(|v| v.parse().ok());
+                let rate = f64_flag(&flags, "arrival-rate", 0.0);
+                let cluster = Cluster::new(
+                    sys,
+                    ClusterConfig {
+                        nodes: n_nodes,
+                        route,
+                        admit_cap,
+                        node: CoordinatorConfig {
+                            plan_workers: workers,
+                            exec_workers: workers,
+                            ..Default::default()
+                        },
+                    },
+                );
+
+                // Arrival stream: `--traces-dir` replays the directory
+                // (x --repeat, unpaced); otherwise the seeded open-loop
+                // generator supplies --jobs arrivals drawn from a corpus
+                // of jobs/4 distinct fingerprints per tenant class
+                // (repeat traffic is what routing policy acts on), shaped
+                // by --layers/--rho/--steps/--kappa and paced by
+                // --arrival-rate.
+                let arrivals: Vec<(f64, Request)> = match flags.get("traces-dir") {
+                    Some(dir) => {
+                        let base: Vec<Request> =
+                            TraceDir::open(std::path::Path::new(dir))
+                                .unwrap_or_else(|e| {
+                                    eprintln!("{e}");
+                                    std::process::exit(2);
+                                })
+                                .into_paths()
+                                .iter()
+                                .filter_map(|path| match Request::load(path) {
+                                    Ok(r) => Some(r),
+                                    Err(e) => {
+                                        eprintln!("skipping {}: {e}", path.display());
+                                        None
+                                    }
+                                })
+                                .collect();
+                        let mut out = Vec::new();
+                        for _ in 0..repeat {
+                            out.extend(base.iter().cloned().map(|r| (0.0, r)));
+                        }
+                        out
+                    }
+                    None => ArrivalGen::new(
+                        &spec,
+                        ArrivalSpec {
+                            rate_per_s: rate,
+                            decode_frac: if steps > 0 { 0.5 } else { 0.0 },
+                            distinct: (jobs / 4).max(1),
+                            layers: layers.max(1),
+                            rho,
+                            steps,
+                            kappa,
+                        },
+                        seed,
+                    )
+                    .take(jobs * repeat)
+                    .map(|a| (a.at_ns, a.request))
+                    .collect(),
+                };
+
+                let t0 = std::time::Instant::now();
+                std::thread::scope(|s| {
+                    s.spawn(|| {
+                        for (id, (at_ns, request)) in arrivals.into_iter().enumerate()
+                        {
+                            // Hybrid sleep/spin pacing to the arrival stamp.
+                            loop {
+                                let now = t0.elapsed().as_nanos() as f64;
+                                if now >= at_ns {
+                                    break;
+                                }
+                                let rem = at_ns - now;
+                                if rem > 2_000_000.0 {
+                                    std::thread::sleep(
+                                        std::time::Duration::from_nanos(
+                                            (rem / 2.0) as u64,
+                                        ),
+                                    );
+                                } else {
+                                    std::thread::yield_now();
+                                }
+                            }
+                            let job =
+                                Job::with_flows(id, request, spec.sf, flows.clone())
+                                    .on_substrate(sspec.name)
+                                    .with_carryover(carry)
+                                    .with_delta(delta);
+                            match cluster.submit(job) {
+                                Ok(Admission::Accepted { .. }) => {}
+                                Ok(Admission::Shed { node }) => eprintln!(
+                                    "SHED job {id}: node {node} at admission cap"
+                                ),
+                                Err(job) => {
+                                    eprintln!(
+                                        "DROPPED job {}: cluster closed",
+                                        job.id
+                                    );
+                                    break;
+                                }
+                            }
+                        }
+                        cluster.close(); // ends the result stream below
+                    });
+                    for nr in cluster.results() {
+                        let r = &nr.result;
+                        if json_out {
+                            println!("{}", r.to_json().emit());
+                            continue;
+                        }
+                        match &r.error {
+                            Some(e) => println!(
+                                "node {} job {:>4} {}: ERROR {e}",
+                                nr.node, r.id, r.model
+                            ),
+                            None => println!(
+                                "node {} job {:>4} {} [{} {}L+{}tok {}/{} hit] wall {:.2} ms",
+                                nr.node,
+                                r.id,
+                                r.model,
+                                r.substrate,
+                                r.layers,
+                                r.tokens,
+                                r.cache_hits,
+                                r.layers + r.tokens,
+                                r.wall_ns / 1e6,
+                            ),
+                        }
+                    }
+                });
+                let metrics = cluster.finish();
+                if json_out {
+                    println!("{}", metrics.to_json().emit());
+                    return;
+                }
+                print!("{}", render_fleet_rollup(route.as_str(), &metrics));
+                println!(
+                    "fleet wall {:.1} ms ({} nodes x {}+{} workers)",
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    n_nodes,
+                    workers,
+                    workers,
+                );
+                return;
+            }
+
             let coord = Coordinator::new(workers, 8, sys);
             let t0 = std::time::Instant::now();
 

@@ -256,6 +256,56 @@ pub fn render_session_rollup(
     s
 }
 
+/// Pretty-print the cluster rollup: one row per node (jobs, shed, cache
+/// + step hit rates, tokens, node p99) followed by the fleet totals with
+/// merged-histogram percentiles and the shed-accounting identity. This
+/// is `serve --nodes`'s final block and the human twin of
+/// [`crate::cluster::ClusterMetrics::to_json`].
+pub fn render_fleet_rollup(route: &str, m: &crate::cluster::ClusterMetrics) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "fleet rollup [{route}, {} nodes] — submitted {} = completed {} + shed {} ({:.1}%)\n",
+        m.nodes.len(),
+        m.submitted,
+        m.completed,
+        m.shed,
+        100.0 * m.shed_fraction(),
+    ));
+    s.push_str(&format!(
+        "{:<5} {:>8} {:>7} {:>7} {:>9} {:>9} {:>9} {:>11}\n",
+        "node", "done", "failed", "shed", "tokens", "hit%", "step-hit%", "p99 ms"
+    ));
+    for (i, n) in m.nodes.iter().enumerate() {
+        let steps = n.steps_cache_hit + n.steps_planned_cold + n.steps_planned_delta;
+        let step_hit = if steps > 0 {
+            100.0 * n.steps_cache_hit as f64 / steps as f64
+        } else {
+            0.0
+        };
+        s.push_str(&format!(
+            "{:<5} {:>8} {:>7} {:>7} {:>9} {:>8.1}% {:>8.1}% {:>11.3}\n",
+            i,
+            n.jobs_done,
+            n.jobs_failed,
+            m.shed_per_node.get(i).copied().unwrap_or(0),
+            n.tokens_done,
+            100.0 * n.cache_hit_rate(),
+            step_hit,
+            n.wall_p99_ns / 1e6,
+        ));
+    }
+    s.push_str(&format!(
+        "fleet: cache hit {:.1}% | step hit {:.1}% | wall p50/p95/p99 {:.3}/{:.3}/{:.3} ms | token p99 {:.1} µs\n",
+        100.0 * m.cache_hit_rate(),
+        100.0 * m.step_hit_rate(),
+        m.wall_p50_ns / 1e6,
+        m.wall_p95_ns / 1e6,
+        m.wall_p99_ns / 1e6,
+        m.token_p99_ns / 1e3,
+    ));
+    s
+}
+
 /// Pretty-print an engine report (CLI + examples).
 pub fn render_report(name: &str, r: &RunReport) -> String {
     format!(
@@ -279,6 +329,54 @@ mod tests {
     use super::*;
     use crate::config::WorkloadSpec;
     use crate::trace::synth::gen_trace;
+
+    #[test]
+    fn fleet_rollup_renders_shed_identity_and_per_node_rows() {
+        use crate::cluster::ClusterMetrics;
+        use crate::coordinator::CoordinatorMetrics;
+        let node0 = CoordinatorMetrics {
+            jobs_done: 6,
+            tokens_done: 12,
+            cache_hits: 9,
+            cache_misses: 3,
+            wall_p99_ns: 2.5e6,
+            ..Default::default()
+        };
+        let node1 = CoordinatorMetrics { jobs_done: 4, ..Default::default() };
+        let m = ClusterMetrics {
+            nodes: vec![node0, node1],
+            submitted: 13,
+            completed: 10,
+            shed: 3,
+            shed_per_node: vec![1, 2],
+            jobs_done: 10,
+            jobs_failed: 0,
+            tokens_done: 12,
+            cache_hits: 9,
+            cache_misses: 3,
+            steps_cache_hit: 2,
+            steps_planned_cold: 1,
+            steps_planned_delta: 1,
+            wall_p50_ns: 1e6,
+            wall_p95_ns: 2e6,
+            wall_p99_ns: 3e6,
+            token_p50_ns: 1e3,
+            token_p95_ns: 2e3,
+            token_p99_ns: 3e3,
+        };
+        let s = render_fleet_rollup("affinity", &m);
+        assert!(s.contains("submitted 13 = completed 10 + shed 3"), "{s}");
+        assert!(s.contains("affinity, 2 nodes"), "{s}");
+        // One row per node plus header + fleet line.
+        assert_eq!(s.lines().count(), 2 + 2 + 1, "{s}");
+        assert!(s.contains("cache hit 75.0%"), "{s}");
+        assert!(s.contains("step hit 50.0%"), "{s}");
+        // JSON twin carries the same identity.
+        let j = m.to_json();
+        assert_eq!(j.get("submitted").as_f64(), Some(13.0));
+        assert_eq!(j.get("shed").as_f64(), Some(3.0));
+        assert_eq!(j.get("nodes").as_arr().unwrap().len(), 2);
+    }
 
     #[test]
     fn ttst_stats_land_near_table1() {

@@ -17,6 +17,7 @@
 
 use super::MaskTrace;
 use crate::config::WorkloadSpec;
+use crate::coordinator::Request;
 use crate::decode::{DecodeSession, StepMask};
 use crate::mask::SelectiveMask;
 use crate::model::ModelTrace;
@@ -222,6 +223,142 @@ pub fn gen_sessions(
         .collect()
 }
 
+/// Tenant mix and load shape for [`ArrivalGen`] — the open-loop arrival
+/// process that drives the cluster bench (`benches/cluster_serve.rs`)
+/// and `serve --nodes`.
+#[derive(Clone, Debug)]
+pub struct ArrivalSpec {
+    /// Offered load in arrivals per second. `<= 0` (or non-finite) means
+    /// "no pacing": every arrival is stamped `at_ns = 0` — the closed-
+    /// loop burst shape used to measure capacity and cache affinity.
+    pub rate_per_s: f64,
+    /// Fraction of arrivals that are decode-heavy [`Request::Decode`]
+    /// sessions; the rest are prefill-heavy [`Request::Model`] requests.
+    pub decode_frac: f64,
+    /// Distinct requests per tenant class. Each arrival draws uniformly
+    /// from this corpus, so fingerprints **recur** — the repeat traffic
+    /// affinity routing exists to exploit.
+    pub distinct: usize,
+    /// Prefill depth of every corpus request (see [`gen_model`]).
+    pub layers: usize,
+    /// Cross-layer selection-overlap knob of the corpus prefills.
+    pub rho: f64,
+    /// Generated tokens per decode session (see [`gen_session`]).
+    pub steps: usize,
+    /// Cross-step selection-overlap knob of the corpus sessions.
+    pub kappa: f64,
+}
+
+impl Default for ArrivalSpec {
+    fn default() -> Self {
+        ArrivalSpec {
+            rate_per_s: 0.0,
+            decode_frac: 0.5,
+            distinct: 4,
+            layers: 2,
+            rho: 0.5,
+            steps: 4,
+            kappa: 0.5,
+        }
+    }
+}
+
+/// One open-loop arrival: a request and the instant it enters the
+/// system, in nanoseconds since the stream's start.
+#[derive(Clone, Debug)]
+pub struct Arrival {
+    /// Arrival time offset (ns since stream start); non-decreasing.
+    pub at_ns: f64,
+    /// The request arriving (cloned out of the generator's corpus).
+    pub request: Request,
+}
+
+/// Seeded open-loop arrival generator: Poisson inter-arrival times over
+/// a fixed tenant corpus.
+///
+/// The process is the standard open-loop serving model: exponential
+/// inter-arrival gaps (`Δt = −ln(1−u)/rate`, drawn from the in-tree
+/// [`Rng`]) at the offered rate, each arrival an independent uniform
+/// draw from a pre-generated corpus of `distinct` model requests plus
+/// `distinct` decode sessions ([`ArrivalSpec::decode_frac`] picks the
+/// class). Everything derives from the one seed, so a stream replays
+/// bit-exactly — the cluster bench pins a 1-node affinity cluster
+/// against a plain [`crate::coordinator::Coordinator`] on the *same*
+/// stream, and sweeps offered load by varying only `rate_per_s`.
+///
+/// The iterator is infinite; callers `take(n)`. Corpus requests are
+/// cloned per arrival, so repeats carry identical fingerprints — which
+/// is exactly what [`crate::cluster::RoutePolicy::FingerprintAffinity`]
+/// keys on.
+#[derive(Clone, Debug)]
+pub struct ArrivalGen {
+    spec: ArrivalSpec,
+    models: Vec<ModelTrace>,
+    sessions: Vec<DecodeSession>,
+    rng: Rng,
+    t_ns: f64,
+}
+
+impl ArrivalGen {
+    /// Build the generator for one workload: pre-generates the tenant
+    /// corpus (`distinct` models via [`gen_models`], `distinct` sessions
+    /// via [`gen_sessions`], on disjoint seed streams) and seeds the
+    /// arrival process.
+    pub fn new(spec: &WorkloadSpec, arr: ArrivalSpec, seed: u64) -> Self {
+        let distinct = arr.distinct.max(1);
+        let models = gen_models(spec, distinct, arr.layers, arr.rho, seed);
+        let sessions = gen_sessions(
+            spec,
+            distinct,
+            arr.layers,
+            arr.rho,
+            arr.steps,
+            arr.kappa,
+            seed ^ 0x5E55_1055_C0DE_CAFE, // distinct session stream
+        );
+        ArrivalGen {
+            spec: arr,
+            models,
+            sessions,
+            rng: Rng::new(seed ^ 0x4152_5249_5645_2121), // arrival stream
+            t_ns: 0.0,
+        }
+    }
+
+    /// The corpus fingerprints (models then sessions) — handy for tests
+    /// asserting routing balance over exactly this key population.
+    pub fn corpus_fingerprints(&self) -> Vec<u64> {
+        self.models
+            .iter()
+            .map(|m| m.fingerprint())
+            .chain(self.sessions.iter().map(|s| s.fingerprint()))
+            .collect()
+    }
+}
+
+impl Iterator for ArrivalGen {
+    type Item = Arrival;
+
+    fn next(&mut self) -> Option<Arrival> {
+        if self.spec.rate_per_s.is_finite() && self.spec.rate_per_s > 0.0 {
+            // Exponential gap; 1−u ∈ (0, 1] keeps ln finite.
+            let u = self.rng.f64();
+            let gap_s = -(1.0 - u).ln() / self.spec.rate_per_s;
+            self.t_ns += gap_s * 1e9;
+        }
+        let decode =
+            self.spec.decode_frac > 0.0 && self.rng.chance(self.spec.decode_frac);
+        let request = if decode {
+            let i = self.rng.gen_range(self.sessions.len());
+            Request::Decode(self.sessions[i].clone())
+        } else {
+            let i = self.rng.gen_range(self.models.len());
+            Request::Model(self.models[i].clone())
+        };
+        Some(Arrival { at_ns: self.t_ns, request })
+    }
+}
+
 /// One fresh decode step: per head, a TopK selection over the `kv`-sized
 /// KV set — GLOB-ish uniform with probability `glob_frac`, otherwise a
 /// contiguous window of `spread·K` keys placed uniformly at random in the
@@ -332,6 +469,100 @@ mod tests {
     use super::*;
     use crate::sort::classify::{classify, QType};
     use crate::sort::sort_keys;
+
+    #[test]
+    fn arrival_stream_replays_bit_exactly_for_one_seed() {
+        let spec = WorkloadSpec::ttst();
+        let arr = ArrivalSpec { rate_per_s: 500.0, ..Default::default() };
+        let a: Vec<Arrival> =
+            ArrivalGen::new(&spec, arr.clone(), 0x0A11).take(40).collect();
+        let b: Vec<Arrival> =
+            ArrivalGen::new(&spec, arr.clone(), 0x0A11).take(40).collect();
+        assert_eq!(a.len(), 40);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_ns.to_bits(), y.at_ns.to_bits(), "times must replay");
+            assert_eq!(
+                x.request.fingerprint(),
+                y.request.fingerprint(),
+                "request draws must replay"
+            );
+        }
+        // A different seed produces a different stream.
+        let c: Vec<Arrival> = ArrivalGen::new(&spec, arr, 0x0A12).take(40).collect();
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.at_ns != y.at_ns
+                || x.request.fingerprint() != y.request.fingerprint()),
+            "distinct seeds should diverge"
+        );
+    }
+
+    #[test]
+    fn arrival_times_are_poisson_paced_and_monotone() {
+        let spec = WorkloadSpec::ttst();
+        let rate = 1000.0; // mean gap 1 ms
+        let arr = ArrivalSpec { rate_per_s: rate, ..Default::default() };
+        let n = 400;
+        let stream: Vec<Arrival> =
+            ArrivalGen::new(&spec, arr, 0x7E577).take(n).collect();
+        let mut last = 0.0;
+        for a in &stream {
+            assert!(a.at_ns > last, "arrival times must strictly increase");
+            last = a.at_ns;
+        }
+        // Mean inter-arrival gap near 1/rate over 400 draws (exponential
+        // gaps: stderr of the mean ≈ 5% here, so a 25% band is ~5σ).
+        let mean_gap_s = last / 1e9 / n as f64;
+        assert!(
+            (mean_gap_s * rate - 1.0).abs() < 0.25,
+            "mean gap {mean_gap_s} vs 1/{rate}"
+        );
+        // Unpaced (rate 0): the whole stream arrives at t = 0.
+        let burst: Vec<Arrival> = ArrivalGen::new(
+            &spec,
+            ArrivalSpec { rate_per_s: 0.0, ..Default::default() },
+            0x7E577,
+        )
+        .take(20)
+        .collect();
+        assert!(burst.iter().all(|a| a.at_ns == 0.0));
+    }
+
+    #[test]
+    fn arrival_tenant_mix_and_corpus_draws() {
+        let spec = WorkloadSpec::ttst();
+        let arr = ArrivalSpec {
+            decode_frac: 0.5,
+            distinct: 3,
+            steps: 2,
+            ..Default::default()
+        };
+        let gen = ArrivalGen::new(&spec, arr, 0x3141);
+        let corpus = gen.corpus_fingerprints();
+        assert_eq!(corpus.len(), 6, "3 models + 3 sessions");
+        let stream: Vec<Arrival> = gen.take(200).collect();
+        let (mut decode, mut model) = (0usize, 0usize);
+        for a in &stream {
+            assert!(
+                corpus.contains(&a.request.fingerprint()),
+                "every arrival must come from the pre-generated corpus"
+            );
+            match a.request {
+                Request::Decode(_) => decode += 1,
+                Request::Model(_) => model += 1,
+            }
+        }
+        // 50/50 mix over 200 draws: both classes well-represented.
+        assert!(decode > 60 && model > 60, "mix {decode}/{model}");
+        // decode_frac = 0 ⇒ prefill-only traffic.
+        let prefill_only = ArrivalGen::new(
+            &spec,
+            ArrivalSpec { decode_frac: 0.0, distinct: 2, ..Default::default() },
+            0x3141,
+        );
+        assert!(prefill_only
+            .take(50)
+            .all(|a| matches!(a.request, Request::Model(_))));
+    }
 
     #[test]
     fn traces_have_exact_topk_rows() {

@@ -88,10 +88,32 @@ impl Default for Bench {
     }
 }
 
+/// Whether `SATA_BENCH_FAST` asks for smoke mode. Only the *value*
+/// decides: `0` and the empty string mean OFF (so `SATA_BENCH_FAST=0
+/// cargo bench` runs the full-size bench), anything else set means ON.
+/// Benches branch on this for their own job-count sizing so the whole
+/// binary agrees with [`Bench::new`]'s sample sizing.
+pub fn fast_mode() -> bool {
+    fast_mode_value(std::env::var("SATA_BENCH_FAST").ok().as_deref())
+}
+
+/// Value parse behind [`fast_mode`], split out so it is unit-testable
+/// without racing other tests on the process environment.
+fn fast_mode_value(v: Option<&str>) -> bool {
+    match v {
+        None => false,
+        Some(s) => {
+            let s = s.trim();
+            !s.is_empty() && s != "0"
+        }
+    }
+}
+
 impl Bench {
-    /// Runner with `SATA_BENCH_FAST`-aware sample sizing.
+    /// Runner with `SATA_BENCH_FAST`-aware sample sizing (see
+    /// [`fast_mode`] for how the variable is interpreted).
     pub fn new() -> Self {
-        let fast = std::env::var("SATA_BENCH_FAST").is_ok();
+        let fast = fast_mode();
         Bench {
             fast,
             target_sample: if fast {
@@ -255,6 +277,21 @@ mod tests {
         // Round-trips through the parser.
         let back = Json::parse(&j.emit()).unwrap();
         assert_eq!(back.emit(), j.emit());
+    }
+
+    #[test]
+    fn fast_mode_parses_the_value_not_just_presence() {
+        // Regression: `is_ok()` treated SATA_BENCH_FAST=0 (and empty) as
+        // fast mode. Off: unset, empty, whitespace, and literal "0".
+        assert!(!fast_mode_value(None));
+        assert!(!fast_mode_value(Some("")));
+        assert!(!fast_mode_value(Some("  ")));
+        assert!(!fast_mode_value(Some("0")));
+        assert!(!fast_mode_value(Some(" 0 ")));
+        // On: any other set value.
+        assert!(fast_mode_value(Some("1")));
+        assert!(fast_mode_value(Some("true")));
+        assert!(fast_mode_value(Some("00"))); // not the literal "0"
     }
 
     #[test]

@@ -87,6 +87,29 @@ impl Histogram {
             self.counts[i] as f64 / self.total as f64
         }
     }
+
+    /// Fold another histogram's counts into this one. Both sides must
+    /// have the same shape (`lo`, `hi`, bucket count) — merging
+    /// differently-binned histograms has no well-defined answer, so a
+    /// mismatch panics rather than silently mis-binning.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert!(
+            self.lo == other.lo
+                && self.hi == other.hi
+                && self.counts.len() == other.counts.len(),
+            "Histogram::merge shape mismatch: [{}, {}) x{} vs [{}, {}) x{}",
+            self.lo,
+            self.hi,
+            self.counts.len(),
+            other.lo,
+            other.hi,
+            other.counts.len()
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
 }
 
 /// Streaming log-bucketed latency histogram: O(1) memory regardless of
@@ -172,6 +195,24 @@ impl LatencyHistogram {
             }
         }
         self.max
+    }
+
+    /// Fold another latency histogram into this one, as if every sample
+    /// recorded into `other` had been recorded here instead: bucket
+    /// counts, totals, and sums add; exact min/max widen. All
+    /// `LatencyHistogram`s share one fixed geometric bucketing, so any
+    /// two merge losslessly — after merging, `percentile` answers for
+    /// the concatenated sample stream within the usual bucket
+    /// resolution. This is the fleet-level rollup primitive: per-node
+    /// coordinator histograms merge into one cluster-wide p50/p95/p99.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
     }
 }
 
@@ -263,6 +304,88 @@ mod tests {
         assert_eq!(h.percentile(100.0), 10_000.0);
         // low tail: lowest bucket's midpoint (~1 ns), clamped above min
         assert!(h.percentile(0.0) <= 1.1);
+    }
+
+    #[test]
+    fn latency_histogram_merge_matches_concatenated_samples() {
+        // Two disjoint shards of one sample stream: merging their
+        // histograms must answer percentiles for the concatenation,
+        // within the same bucket-resolution tolerance as direct
+        // recording (the merged histogram IS the directly-recorded one:
+        // bucket counts are additive, so equality is exact, not
+        // approximate).
+        let all: Vec<f64> = (1..=2000).map(|i| (i as f64) * 37.0).collect();
+        let (lo_half, hi_half) = all.split_at(700);
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut direct = LatencyHistogram::new();
+        for &x in lo_half {
+            a.record(x);
+        }
+        for &x in hi_half {
+            b.record(x);
+        }
+        for &x in &all {
+            direct.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 2000);
+        assert!((a.mean() - direct.mean()).abs() < 1e-6);
+        for p in [0.0, 10.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(
+                a.percentile(p),
+                direct.percentile(p),
+                "p{p}: merged must equal direct recording exactly"
+            );
+            let exact = percentile(&all, p);
+            let est = a.percentile(p);
+            assert!(
+                (est / exact - 1.0).abs() < 0.10,
+                "p{p}: merged est {est} vs exact {exact}"
+            );
+        }
+        // p100 stays the exact max across both shards.
+        assert_eq!(a.percentile(100.0), 2000.0 * 37.0);
+    }
+
+    #[test]
+    fn latency_histogram_merge_with_empty_is_identity() {
+        let mut a = LatencyHistogram::new();
+        for x in [10.0, 100.0, 1000.0] {
+            a.record(x);
+        }
+        let before_p50 = a.percentile(50.0);
+        a.merge(&LatencyHistogram::new());
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.percentile(50.0), before_p50);
+        assert_eq!(a.percentile(100.0), 1000.0);
+        // Empty absorbing non-empty adopts its stats wholesale.
+        let mut e = LatencyHistogram::new();
+        e.merge(&a);
+        assert_eq!(e.count(), 3);
+        assert_eq!(e.percentile(100.0), 1000.0);
+        assert_eq!(e.percentile(0.0), a.percentile(0.0));
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts() {
+        let mut a = Histogram::new(0.0, 10.0, 10);
+        let mut b = Histogram::new(0.0, 10.0, 10);
+        a.add(0.5);
+        b.add(0.5);
+        b.add(9.5);
+        a.merge(&b);
+        assert_eq!(a.counts[0], 2);
+        assert_eq!(a.counts[9], 1);
+        assert_eq!(a.total, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn histogram_merge_rejects_mismatched_shapes() {
+        let mut a = Histogram::new(0.0, 10.0, 10);
+        let b = Histogram::new(0.0, 20.0, 10);
+        a.merge(&b);
     }
 
     #[test]

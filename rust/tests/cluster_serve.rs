@@ -1,0 +1,187 @@
+//! Fleet-level properties of the Layer-4 cluster: routing determinism
+//! across rebuilds, decode-session stickiness, balance of the affinity
+//! router over a Table-I corpus, exact shed accounting under overload,
+//! and the 1-node degenerate case matching a plain coordinator.
+
+use sata::cluster::{
+    route_affinity, Admission, Cluster, ClusterConfig, RoutePolicy,
+};
+use sata::config::{SystemConfig, WorkloadSpec};
+use sata::coordinator::{Coordinator, CoordinatorConfig, Job, Request};
+use sata::model::ModelTrace;
+use sata::prop_assert;
+use sata::trace::synth::{gen_sessions, gen_traces};
+use sata::util::prop::check;
+
+fn ttst() -> (WorkloadSpec, SystemConfig) {
+    let spec = WorkloadSpec::ttst();
+    let sys = SystemConfig::for_workload(&spec);
+    (spec, sys)
+}
+
+/// Deterministic node shape for tests that compare exact counts.
+fn one_pipe() -> CoordinatorConfig {
+    CoordinatorConfig { plan_workers: 1, exec_workers: 1, ..Default::default() }
+}
+
+#[test]
+fn affinity_routing_is_deterministic_across_cluster_rebuilds() {
+    let (spec, sys) = ttst();
+    let corpus: Vec<Request> = gen_traces(&spec, 12, 0xD1CE)
+        .into_iter()
+        .map(Request::from)
+        .chain(
+            gen_sessions(&spec, 4, 2, 0.5, 3, 0.5, 0xD1CE).into_iter().map(Request::from),
+        )
+        .collect();
+
+    // Two independently built clusters — different node configs, same
+    // shape — must agree on every home node, and agree with the pure
+    // routing function. Property-checked over random corpus picks.
+    let a = Cluster::new(sys.clone(), ClusterConfig { nodes: 3, ..Default::default() });
+    let b = Cluster::new(
+        sys,
+        ClusterConfig { nodes: 3, node: one_pipe(), ..Default::default() },
+    );
+    check("home node survives cluster rebuilds", 100, |rng| {
+        let r = &corpus[rng.gen_range(corpus.len())];
+        let home = route_affinity(r.fingerprint(), 3);
+        prop_assert!(
+            a.home_node(r) == Some(home),
+            "cluster A disagrees with pure route for fp {:#x}",
+            r.fingerprint()
+        );
+        prop_assert!(
+            b.home_node(r) == Some(home),
+            "cluster B (different node config) disagrees for fp {:#x}",
+            r.fingerprint()
+        );
+        Ok(())
+    });
+    a.finish();
+    b.finish();
+}
+
+#[test]
+fn decode_session_steps_stay_on_one_node() {
+    let (spec, sys) = ttst();
+    let session = gen_sessions(&spec, 1, 2, 0.5, 4, 0.5, 0x5E55).remove(0);
+    let cluster = Cluster::new(sys, ClusterConfig { nodes: 3, ..Default::default() });
+    let home = cluster
+        .home_node(&Request::from(session.clone()))
+        .expect("affinity routes by content");
+
+    // Resubmitting the same session (a later turn of the same dialogue)
+    // must land on the same node every time — stickiness is structural.
+    for id in 0..3 {
+        match cluster.submit(Job::new(id, session.clone(), spec.sf)).unwrap() {
+            Admission::Accepted { node } => assert_eq!(node, home),
+            Admission::Shed { .. } => panic!("no cap configured"),
+        }
+    }
+    let (results, m) = cluster.drain();
+    assert_eq!(results.len(), 3);
+    for r in &results {
+        assert_eq!(r.node, home, "job {} served off the home node", r.result.id);
+        assert_eq!(r.result.tokens, 4);
+    }
+    // Every generated token was served by the home node; the other two
+    // coordinators never saw a decode step.
+    for (i, node) in m.nodes.iter().enumerate() {
+        let expect = if i == home { 3 * 4 } else { 0 };
+        assert_eq!(node.tokens_done, expect, "node {i} token count");
+    }
+}
+
+#[test]
+fn affinity_routing_balances_the_table1_corpus() {
+    // Rendezvous hashing over mix64 scores should spread a real corpus
+    // roughly evenly: max/min per-node key count within a factor of 2.
+    // (Binomial bounds: 256 keys over 2 nodes and 512 over 4 keep the
+    // ratio comfortably inside 2x at >3 sigma.)
+    let spec = WorkloadSpec::ttst();
+    for (nodes, n_keys, seed) in [(2usize, 256usize, 0xBA1A), (4, 512, 0xBA1B)] {
+        let mut counts = vec![0usize; nodes];
+        for t in gen_traces(&spec, n_keys, seed) {
+            let fp = ModelTrace::from(t).fingerprint();
+            counts[route_affinity(fp, nodes)] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(min > 0, "{nodes} nodes: a node got no keys: {counts:?}");
+        assert!(
+            max < 2 * min,
+            "{nodes} nodes: imbalance {counts:?} (max {max} >= 2 x min {min})"
+        );
+    }
+}
+
+#[test]
+fn shed_accounting_is_exact_under_overload() {
+    let (spec, sys) = ttst();
+    // Tiny per-node cap + an unpaced burst of 40 jobs = far past 2x
+    // overload: most of the burst must shed, and every single submission
+    // must be accounted — submitted == completed + shed, exactly.
+    let cluster = Cluster::new(
+        sys,
+        ClusterConfig {
+            nodes: 2,
+            admit_cap: Some(2),
+            node: one_pipe(),
+            ..Default::default()
+        },
+    );
+    let n = 40;
+    let (mut accepted, mut shed) = (0usize, 0usize);
+    for (id, t) in gen_traces(&spec, n, 0x0BAD).into_iter().enumerate() {
+        match cluster.submit(Job::new(id, t, spec.sf)).unwrap() {
+            Admission::Accepted { .. } => accepted += 1,
+            Admission::Shed { .. } => shed += 1,
+        }
+    }
+    let (results, m) = cluster.drain();
+    assert!(shed > 0, "a 2-per-node cap must shed under a 40-job burst");
+    assert_eq!(m.submitted, n, "every submission counted");
+    assert_eq!(m.completed, accepted, "every accepted job delivered a result");
+    assert_eq!(m.shed, shed, "every shed counted");
+    assert_eq!(
+        m.submitted,
+        m.completed + m.shed,
+        "the accounting identity must hold exactly — no silent losses"
+    );
+    assert_eq!(results.len(), accepted);
+    assert_eq!(m.shed_per_node.iter().sum::<usize>(), m.shed);
+}
+
+#[test]
+fn one_node_affinity_cluster_matches_a_plain_coordinator() {
+    let (spec, sys) = ttst();
+    let requests: Vec<Request> =
+        gen_traces(&spec, 8, 0x1807).into_iter().map(Request::from).collect();
+
+    let coord = Coordinator::with_config(sys.clone(), one_pipe());
+    for (id, r) in requests.iter().cloned().enumerate() {
+        coord.submit(Job::new(id, r, spec.sf)).unwrap();
+    }
+    let (plain, pm) = coord.drain();
+
+    let cluster = Cluster::new(
+        sys,
+        ClusterConfig { nodes: 1, node: one_pipe(), ..Default::default() },
+    );
+    for (id, r) in requests.iter().cloned().enumerate() {
+        cluster.submit(Job::new(id, r, spec.sf)).unwrap();
+    }
+    let (fleet, fm) = cluster.drain();
+
+    assert_eq!(plain.len(), fleet.len());
+    for (a, b) in plain.iter().zip(&fleet) {
+        assert_eq!(b.node, 0);
+        assert_eq!(a.id, b.result.id);
+        assert_eq!(a.dense, b.result.dense, "job {}: report diverged", a.id);
+        assert_eq!(a.cache_hits, b.result.cache_hits);
+    }
+    assert_eq!(pm.cache_hits, fm.cache_hits);
+    assert_eq!(pm.cache_misses, fm.cache_misses);
+    assert_eq!(fm.submitted, fm.completed + fm.shed);
+}
