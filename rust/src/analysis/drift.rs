@@ -1,0 +1,453 @@
+//! Cross-artifact drift lint: code, benchmarks, CI, and docs must
+//! name the same things.
+//!
+//! Three artifact families are cross-checked against the source tree:
+//!
+//! * **Perf-trajectory snapshots** — every `emit_snapshot("x")` call in
+//!   `rust/benches/` must have a committed `BENCH_x.json` baseline that
+//!   parses with the in-tree JSON parser and carries the right `name`,
+//!   and the emitting bench must be smoke-run in CI (`--bench <stem>`
+//!   in `.github/workflows/ci.yml`). Orphaned `BENCH_*.json` files with
+//!   no emitting bench are flagged too.
+//! * **CLI surface** — the `--flags` named in `USAGE`, the per-command
+//!   accepted sets in `SUBCOMMANDS` (both in `rust/src/main.rs`), and
+//!   the `--flags` shown in `README.md` must agree (README may also use
+//!   cargo's own flags, e.g. `--release`).
+//! * **Doc paths and registry names** — backticked path tokens in
+//!   `README.md`, `rust/DESIGN.md`, and `docs/PAPER_MAP.md` must exist
+//!   in the tree, and every registered flow backend / substrate name
+//!   must appear (backticked) in `DESIGN.md`'s registry tables.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use super::scan::{is_ident, scan};
+use super::{Family, Finding};
+use crate::engine::{backend, substrate};
+use crate::util::json::Json;
+
+/// Cargo-level flags docs may mention that no subcommand accepts.
+const CARGO_FLAGS: &[&str] = &["release", "bench", "features", "test"];
+
+/// Path prefixes that make a backticked doc token a checkable path.
+const PATH_PREFIXES: &[&str] =
+    &["src/", "rust/", "benches/", "tests/", "docs/", "examples/"];
+
+/// Run every drift check rooted at `root` (the repo root).
+pub fn check(root: &Path, out: &mut Vec<Finding>) {
+    check_snapshots(root, out);
+    check_cli(root, out);
+    check_doc_paths(root, out);
+    check_registry_names(root, out);
+}
+
+/// Read a repo-relative file, flagging (once) when it is missing.
+fn read(root: &Path, rel: &str, out: &mut Vec<Finding>) -> Option<String> {
+    match std::fs::read_to_string(root.join(rel)) {
+        Ok(s) => Some(s),
+        Err(_) => {
+            out.push(Finding::new(
+                Family::Drift,
+                rel,
+                0,
+                "expected artifact is missing or unreadable".to_string(),
+            ));
+            None
+        }
+    }
+}
+
+/// `emit_snapshot` names ↔ `BENCH_*.json` baselines ↔ CI smoke runs.
+fn check_snapshots(root: &Path, out: &mut Vec<Finding>) {
+    let ci = read(root, ".github/workflows/ci.yml", out).unwrap_or_default();
+    let bench_dir = root.join("rust/benches");
+    let mut emitted: BTreeSet<String> = BTreeSet::new();
+    for path in sorted_files(&bench_dir, "rs") {
+        let stem = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or_default()
+            .to_string();
+        let rel = format!("rust/benches/{stem}.rs");
+        let Ok(src) = std::fs::read_to_string(&path) else { continue };
+        let stripped = scan(&rel, &src);
+        let raw_lines: Vec<&str> = src.lines().collect();
+        for (idx, line) in stripped.lines.iter().enumerate() {
+            if !line.code.contains(".emit_snapshot(") {
+                continue;
+            }
+            let raw = raw_lines.get(idx).copied().unwrap_or_default();
+            let Some(name) = quoted_after(raw, ".emit_snapshot(") else {
+                out.push(Finding::new(
+                    Family::Drift,
+                    &rel,
+                    idx + 1,
+                    "emit_snapshot call without a literal snapshot name"
+                        .to_string(),
+                ));
+                continue;
+            };
+            emitted.insert(name.clone());
+            check_one_snapshot(root, &rel, idx + 1, &stem, &name, &ci, out);
+        }
+    }
+    // Orphans: committed baselines nothing emits any more.
+    for path in sorted_files(root, "json") {
+        let file = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .unwrap_or_default()
+            .to_string();
+        let Some(name) = file
+            .strip_prefix("BENCH_")
+            .and_then(|n| n.strip_suffix(".json"))
+        else {
+            continue;
+        };
+        if !emitted.contains(name) {
+            out.push(Finding::new(
+                Family::Drift,
+                &file,
+                0,
+                format!(
+                    "orphaned snapshot baseline: no bench emits \
+                     `emit_snapshot(\"{name}\")`"
+                ),
+            ));
+        }
+    }
+}
+
+/// One emitted snapshot: baseline exists, parses, is self-consistent,
+/// and its bench is exercised by CI.
+fn check_one_snapshot(
+    root: &Path,
+    rel: &str,
+    line: usize,
+    stem: &str,
+    name: &str,
+    ci: &str,
+    out: &mut Vec<Finding>,
+) {
+    let bench_file = format!("BENCH_{name}.json");
+    match std::fs::read_to_string(root.join(&bench_file)) {
+        Err(_) => out.push(Finding::new(
+            Family::Drift,
+            rel,
+            line,
+            format!(
+                "bench emits snapshot `{name}` but `{bench_file}` is not \
+                 committed at the repo root"
+            ),
+        )),
+        Ok(text) => match Json::parse(&text) {
+            Err(e) => out.push(Finding::new(
+                Family::Drift,
+                &bench_file,
+                0,
+                format!("committed baseline does not parse: {e}"),
+            )),
+            Ok(json) => {
+                if json.get("name").as_str() != Some(name) {
+                    out.push(Finding::new(
+                        Family::Drift,
+                        &bench_file,
+                        0,
+                        format!(
+                            "baseline `name` field does not match the \
+                             emitted snapshot name `{name}`"
+                        ),
+                    ));
+                }
+            }
+        },
+    }
+    if !ci.contains(&format!("--bench {stem}")) {
+        out.push(Finding::new(
+            Family::Drift,
+            rel,
+            line,
+            format!(
+                "bench `{stem}` emits snapshot `{name}` but CI never runs \
+                 `--bench {stem}`"
+            ),
+        ));
+    }
+}
+
+/// USAGE ↔ SUBCOMMANDS ↔ README flag agreement.
+fn check_cli(root: &Path, out: &mut Vec<Finding>) {
+    let main_rel = "rust/src/main.rs";
+    let Some(main_src) = read(root, main_rel, out) else { return };
+    let Some(usage) = const_string(&main_src, "const USAGE") else {
+        out.push(Finding::new(
+            Family::Drift,
+            main_rel,
+            0,
+            "could not locate the `USAGE` string constant".to_string(),
+        ));
+        return;
+    };
+    let Some(subcommands) = subcommand_table(&main_src) else {
+        out.push(Finding::new(
+            Family::Drift,
+            main_rel,
+            0,
+            "could not locate the `SUBCOMMANDS` table".to_string(),
+        ));
+        return;
+    };
+    let usage_flags = dash_flags(&usage);
+    let accepted: BTreeSet<String> = subcommands
+        .iter()
+        .flat_map(|(_, flags)| flags.iter().cloned())
+        .collect();
+    for f in usage_flags.difference(&accepted) {
+        out.push(Finding::new(
+            Family::Drift,
+            main_rel,
+            0,
+            format!("USAGE documents `--{f}` but no subcommand accepts it"),
+        ));
+    }
+    for f in accepted.difference(&usage_flags) {
+        out.push(Finding::new(
+            Family::Drift,
+            main_rel,
+            0,
+            format!("a subcommand accepts `--{f}` but USAGE never shows it"),
+        ));
+    }
+    for (cmd, _) in &subcommands {
+        if !usage.contains(cmd) {
+            out.push(Finding::new(
+                Family::Drift,
+                main_rel,
+                0,
+                format!("subcommand `{cmd}` is absent from USAGE"),
+            ));
+        }
+    }
+    if let Some(readme) = read(root, "README.md", out) {
+        for f in dash_flags(&readme) {
+            if !accepted.contains(&f) && !CARGO_FLAGS.contains(&f.as_str()) {
+                out.push(Finding::new(
+                    Family::Drift,
+                    "README.md",
+                    0,
+                    format!(
+                        "README shows `--{f}`, which no subcommand accepts"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Backticked path tokens in the doc surface must exist in the tree.
+fn check_doc_paths(root: &Path, out: &mut Vec<Finding>) {
+    for rel in ["README.md", "rust/DESIGN.md", "docs/PAPER_MAP.md"] {
+        let Some(text) = read(root, rel, out) else { continue };
+        for token in backtick_spans(&strip_fences(&text)) {
+            let clean = token.trim_start_matches("./").trim_end_matches('/');
+            if !PATH_PREFIXES.iter().any(|p| clean.starts_with(p))
+                || clean.contains(['*', ' ', '<', '(', '{'])
+            {
+                continue;
+            }
+            if !root.join(clean).exists() && !root.join("rust").join(clean).exists()
+            {
+                out.push(Finding::new(
+                    Family::Drift,
+                    rel,
+                    0,
+                    format!("doc names `{clean}`, which does not exist"),
+                ));
+            }
+        }
+    }
+}
+
+/// Every registered flow backend and substrate must appear (backticked)
+/// in DESIGN.md's registry tables.
+fn check_registry_names(root: &Path, out: &mut Vec<Finding>) {
+    let mut design = String::new();
+    if let Ok(text) = std::fs::read_to_string(root.join("rust/DESIGN.md")) {
+        design = text; // missing DESIGN.md is already flagged elsewhere
+    }
+    let flows = backend::all().iter().map(|b| b.name()).collect::<Vec<_>>();
+    let subs = substrate::substrate_names();
+    for name in flows.iter().chain(subs.iter()) {
+        if !design.contains(&format!("`{name}`")) {
+            out.push(Finding::new(
+                Family::Drift,
+                "rust/DESIGN.md",
+                0,
+                format!(
+                    "registered name `{name}` is absent from the DESIGN.md \
+                     registry tables"
+                ),
+            ));
+        }
+    }
+}
+
+/// Files with extension `ext` directly under `dir`, sorted by name.
+fn sorted_files(dir: &Path, ext: &str) -> Vec<std::path::PathBuf> {
+    let mut files: Vec<_> = std::fs::read_dir(dir)
+        .into_iter()
+        .flatten()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some(ext))
+        .collect();
+    files.sort();
+    files
+}
+
+/// The first `"quoted"` literal after `marker` on `raw`.
+fn quoted_after(raw: &str, marker: &str) -> Option<String> {
+    let rest = &raw[raw.find(marker)? + marker.len()..];
+    let open = rest.find('"')?;
+    let body = &rest[open + 1..];
+    Some(body[..body.find('"')?].to_string())
+}
+
+/// The body of a `const NAME: &str = "..."` string in `src` (no escaped
+/// quotes supported — the CLI help text has none).
+fn const_string(src: &str, decl: &str) -> Option<String> {
+    let at = src.find(decl)?;
+    let rest = &src[at..];
+    let open = rest.find('"')?;
+    let body = &rest[open + 1..];
+    Some(body[..body.find('"')?].to_string())
+}
+
+/// Parse the `SUBCOMMANDS: &[(&str, &[&str])]` table out of `src`:
+/// the first string after each top-level `(` is the subcommand, the
+/// rest up to the matching `)` are its accepted flags.
+fn subcommand_table(src: &str) -> Option<Vec<(String, Vec<String>)>> {
+    let at = src.find("const SUBCOMMANDS")?;
+    let rest = &src[at + src[at..].find('=')?..]; // skip the type annotation
+    let end = rest.find("];")?;
+    let body = &rest[rest.find('[')?..end];
+    let mut table: Vec<(String, Vec<String>)> = Vec::new();
+    let mut depth = 0i64;
+    let mut chars = body.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '(' => {
+                depth += 1;
+                if depth == 1 {
+                    table.push((String::new(), Vec::new()));
+                }
+            }
+            ')' => depth -= 1,
+            '"' => {
+                let mut s = String::new();
+                for c in chars.by_ref() {
+                    if c == '"' {
+                        break;
+                    }
+                    s.push(c);
+                }
+                if let Some(entry) = table.last_mut() {
+                    if entry.0.is_empty() {
+                        entry.0 = s;
+                    } else {
+                        entry.1.push(s);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    (!table.is_empty()).then_some(table)
+}
+
+/// Every `--flag` token in `text` (lowercase word after a `--`),
+/// without the dashes.
+fn dash_flags(text: &str) -> BTreeSet<String> {
+    let b: Vec<char> = text.chars().collect();
+    let mut flags = BTreeSet::new();
+    for k in 0..b.len().saturating_sub(2) {
+        if b[k] == '-'
+            && b[k + 1] == '-'
+            && b[k + 2].is_ascii_lowercase()
+            && (k == 0 || (b[k - 1] != '-' && !is_ident(b[k - 1])))
+        {
+            let word: String = b[k + 2..]
+                .iter()
+                .take_while(|c| c.is_ascii_lowercase() || **c == '-')
+                .collect();
+            flags.insert(word.trim_end_matches('-').to_string());
+        }
+    }
+    flags
+}
+
+/// Markdown text with fenced code blocks removed (backtick spans inside
+/// fences are shell examples, not doc path references).
+fn strip_fences(text: &str) -> String {
+    let mut out = String::new();
+    let mut in_fence = false;
+    for line in text.lines() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if !in_fence {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Single-backtick inline code spans in markdown `text`.
+fn backtick_spans(text: &str) -> Vec<String> {
+    text.split('`')
+        .enumerate()
+        .filter(|(i, _)| i % 2 == 1)
+        .map(|(_, s)| s.to_string())
+        .filter(|s| !s.is_empty() && !s.contains('\n'))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subcommand_table_parses_the_real_shape() {
+        let src = r#"
+const SUBCOMMANDS: &[(&str, &[&str])] = &[
+    ("trace-gen", &["workload", "seed"]),
+    ("flows", &[]),
+    ("serve", &["jobs", "workers"]),
+];
+"#;
+        let t = subcommand_table(src).expect("table parses");
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].0, "trace-gen");
+        assert_eq!(t[0].1, vec!["workload", "seed"]);
+        assert!(t[1].1.is_empty());
+        assert_eq!(t[2].1, vec!["jobs", "workers"]);
+    }
+
+    #[test]
+    fn dash_flags_ignores_triple_dash_and_mid_word() {
+        let flags = dash_flags("use --jobs and --no-carry; not x--y or ---z");
+        assert!(flags.contains("jobs"));
+        assert!(flags.contains("no-carry"));
+        assert!(!flags.contains("y"));
+        assert!(!flags.contains("z"));
+    }
+
+    #[test]
+    fn fences_are_stripped_and_spans_extracted() {
+        let md = "a `src/x.rs` b\n```sh\n`not/this`\n```\nc `rust/y` d\n";
+        let spans = backtick_spans(&strip_fences(md));
+        assert_eq!(spans, vec!["src/x.rs".to_string(), "rust/y".to_string()]);
+    }
+}

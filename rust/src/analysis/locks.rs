@@ -1,0 +1,512 @@
+//! Lock-order discipline lint for hot-path modules.
+//!
+//! The serving pipeline holds locks briefly and almost never nested,
+//! but "almost" is exactly what a deadlock needs. This lint checks a
+//! declared total order over the crate's lock classes
+//! ([`LOCK_ORDER`]) against every acquisition it can see, and flags:
+//!
+//! * acquiring a class while a *higher-ranked* class is held
+//!   (order inversion — the classic AB/BA deadlock shape),
+//! * nested acquisition of the same class (self-deadlock with
+//!   `std::sync::Mutex`),
+//! * a channel `send` while holding a shard/aggregation lock
+//!   ([`SEND_SENSITIVE`]) — sends can block on an unbounded consumer
+//!   stall and must not extend a critical section,
+//! * an acquisition whose receiver is not in the manifest (new locks
+//!   must be classified before they land in a hot path).
+//!
+//! Guard lifetimes follow Rust 2021 temporary rules conservatively: a
+//! `let`-bound guard lives to the end of its block; a guard consumed
+//! by a method chain (e.g. `lock_recover(rx, c).recv()`) is a
+//! temporary living to the end of the enclosing statement (`;`).
+//! Adapter calls (`.unwrap()`, `.expect(..)`, `.unwrap_or_else(..)`)
+//! pass the guard through and do not count as consuming chains. The
+//! analysis is per-file and flow-insensitive: it cannot see a lock
+//! held across a function call into another function that locks —
+//! that residual risk is why the manifest stays small and coarse.
+
+use super::scan::{is_ident, ScannedFile};
+use super::{Family, Finding, WaiverTracker};
+
+/// The declared lock-class order, outermost-first. Rank is the index:
+/// a class may only be acquired while classes of *lower* rank are
+/// held. Ordering rationale: channel endpoints (coarse, held for one
+/// recv/send) before cache shards, shards before per-batch part
+/// buffers, parts before the aggregation sink, and the
+/// substrate-local baseline memo innermost — it is never held
+/// together with coordinator state.
+pub const LOCK_ORDER: &[(&str, &[&str])] = &[
+    ("intake", &["job_tx"]),
+    ("job_queue", &["job_rx"]),
+    ("unit_queue", &["plan_rx"]),
+    ("results", &["results_rx"]),
+    ("cache_shard", &["shard", "shards"]),
+    ("parts", &["parts"]),
+    ("agg", &["agg"]),
+    ("memo", &["baseline_memo"]),
+];
+
+/// Classes that must not be held across a channel send.
+pub const SEND_SENSITIVE: &[&str] = &["cache_shard", "parts", "agg"];
+
+/// A lock guard the walker currently believes is live.
+struct Guard {
+    /// Rank into [`LOCK_ORDER`].
+    rank: usize,
+    /// Temporaries die at the statement's `;`; bound guards at `}`.
+    transient: bool,
+    /// 1-based line of the acquisition, for messages.
+    line: usize,
+}
+
+/// Rank + class name for a receiver's final field segment.
+fn classify(field: &str) -> Option<(usize, &'static str)> {
+    LOCK_ORDER.iter().enumerate().find_map(|(rank, (class, fields))| {
+        fields.contains(&field).then_some((rank, *class))
+    })
+}
+
+/// Run the lock-discipline walk over one hot-path file.
+pub fn check(file: &ScannedFile, waivers: &mut WaiverTracker, out: &mut Vec<Finding>) {
+    // Flatten to one char stream with a parallel line-number map so
+    // receivers and call chains can span physical lines.
+    let mut b: Vec<char> = Vec::new();
+    let mut lno: Vec<usize> = Vec::new();
+    for (i, line) in file.lines.iter().enumerate() {
+        for c in line.code.chars() {
+            b.push(c);
+            lno.push(i + 1);
+        }
+        b.push('\n');
+        lno.push(i + 1);
+    }
+    let n = b.len();
+    let mut scopes: Vec<Vec<Guard>> = vec![Vec::new()];
+    let mut paren = 0i64;
+    let mut brack = 0i64;
+    let mut stmt_let = false;
+    let mut k = 0usize;
+    while k < n {
+        let line = lno[k];
+        let in_test = file.in_test(line);
+        match b[k] {
+            '{' => {
+                scopes.push(Vec::new());
+                stmt_let = false;
+            }
+            '}' => {
+                if scopes.len() > 1 {
+                    scopes.pop();
+                }
+                stmt_let = false;
+            }
+            '(' => paren += 1,
+            ')' => paren -= 1,
+            '[' => brack += 1,
+            ']' => brack -= 1,
+            ';' if paren == 0 && brack == 0 => {
+                if let Some(scope) = scopes.last_mut() {
+                    scope.retain(|g| !g.transient);
+                }
+                stmt_let = false;
+            }
+            'l' if (k == 0 || !is_ident(b[k - 1])) && token_here(&b, k, "let") => {
+                stmt_let = true;
+                k += 3;
+                continue;
+            }
+            '.' if !in_test => {
+                if let Some((recv_end, open)) = method_lock_at(&b, k) {
+                    let recv = receiver_before(&b, recv_end);
+                    // An acquisition nested inside another call's
+                    // argument list is always a temporary.
+                    let bindable = stmt_let && paren == 0 && brack == 0;
+                    acquire(
+                        file, &mut scopes, &b, open, &recv, bindable, line,
+                        waivers, out,
+                    );
+                } else if send_at(&b, k) {
+                    report_send(file, &scopes, line, waivers, out);
+                }
+            }
+            c if is_ident(c) && !in_test && (k == 0 || !is_ident(b[k - 1])) => {
+                // Free-function acquisitions via the sanctioned
+                // poison-tolerant helpers.
+                for name in ["lock_recover", "get_mut_recover", "lock_tolerant"] {
+                    if !token_here(&b, k, name) {
+                        continue;
+                    }
+                    let open = k + name.chars().count();
+                    if open >= n || b[open] != '(' {
+                        continue;
+                    }
+                    let recv = first_arg(&b, open);
+                    let bindable = stmt_let && paren == 0 && brack == 0;
+                    acquire(
+                        file, &mut scopes, &b, open, &recv, bindable, line,
+                        waivers, out,
+                    );
+                    break;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+}
+
+/// Does `.lock()` / `.read()` / `.write()` (zero-arg) start at the `.`
+/// at `k`? Returns (index of the `.`, index of the call's `(`).
+fn method_lock_at(b: &[char], k: usize) -> Option<(usize, usize)> {
+    for name in ["lock", "read", "write"] {
+        let len = name.chars().count();
+        if !token_here(b, k + 1, name) {
+            continue;
+        }
+        let open = k + 1 + len;
+        if open < b.len()
+            && b[open] == '('
+            && next_non_ws(b, open + 1) == Some(')')
+        {
+            return Some((k, open));
+        }
+    }
+    None
+}
+
+/// Does `.send(` / `.try_send(` start at the `.` at `k`?
+fn send_at(b: &[char], k: usize) -> bool {
+    ["send", "try_send"].iter().any(|name| {
+        token_here(b, k + 1, name)
+            && b.get(k + 1 + name.chars().count()) == Some(&'(')
+    })
+}
+
+/// Process one acquisition: classify, check order, record the guard.
+#[allow(clippy::too_many_arguments)]
+fn acquire(
+    file: &ScannedFile,
+    scopes: &mut [Vec<Guard>],
+    b: &[char],
+    open: usize,
+    recv: &str,
+    bindable: bool,
+    line: usize,
+    waivers: &mut WaiverTracker,
+    out: &mut Vec<Finding>,
+) {
+    let field = final_field(recv);
+    let Some((rank, class)) = classify(&field) else {
+        if !waivers.try_waive(file, line, Family::Lock) {
+            out.push(Finding::new(
+                Family::Lock,
+                &file.rel,
+                line,
+                format!(
+                    "lock acquisition on `{recv}` has no class in the \
+                     lock-order manifest"
+                ),
+            ));
+        }
+        return;
+    };
+    for g in scopes.iter().flatten() {
+        let held = LOCK_ORDER[g.rank].0;
+        let violation = if g.rank == rank {
+            Some(format!(
+                "nested acquisition of lock class `{class}` \
+                 (already held since line {})",
+                g.line
+            ))
+        } else if g.rank > rank {
+            Some(format!(
+                "acquires `{class}` while `{held}` (line {}) is held — \
+                 inverts the declared lock order",
+                g.line
+            ))
+        } else {
+            None
+        };
+        if let Some(msg) = violation {
+            if !waivers.try_waive(file, line, Family::Lock) {
+                out.push(Finding::new(Family::Lock, &file.rel, line, msg));
+            }
+        }
+    }
+    let transient = !guard_is_bound(b, open, bindable);
+    if let Some(scope) = scopes.last_mut() {
+        scope.push(Guard { rank, transient, line });
+    }
+}
+
+/// Report a send performed while a send-sensitive class is held.
+fn report_send(
+    file: &ScannedFile,
+    scopes: &[Vec<Guard>],
+    line: usize,
+    waivers: &mut WaiverTracker,
+    out: &mut Vec<Finding>,
+) {
+    for g in scopes.iter().flatten() {
+        let class = LOCK_ORDER[g.rank].0;
+        if SEND_SENSITIVE.contains(&class) {
+            if !waivers.try_waive(file, line, Family::Lock) {
+                out.push(Finding::new(
+                    Family::Lock,
+                    &file.rel,
+                    line,
+                    format!(
+                        "channel send while holding `{class}` \
+                         (acquired line {})",
+                        g.line
+                    ),
+                ));
+            }
+            return;
+        }
+    }
+}
+
+/// Is the guard produced by the call whose `(` is at `open` bound to a
+/// `let`? Skips pass-through adapters first; a further `.` means a
+/// consuming chain (transient), otherwise the guard is bound iff the
+/// statement started with `let` at top depth (`bindable`).
+fn guard_is_bound(b: &[char], open: usize, bindable: bool) -> bool {
+    let mut j = match close_paren(b, open) {
+        Some(j) => j + 1,
+        None => return false,
+    };
+    loop {
+        let Some(p) = pos_non_ws(b, j) else { return bindable };
+        if b[p] != '.' {
+            return bindable;
+        }
+        let adapter = ["unwrap", "expect", "unwrap_or_else"]
+            .iter()
+            .find(|name| token_here(b, p + 1, name))
+            .copied();
+        let Some(name) = adapter else { return false };
+        let o = p + 1 + name.chars().count();
+        if b.get(o) != Some(&'(') {
+            return false;
+        }
+        j = match close_paren(b, o) {
+            Some(c) => c + 1,
+            None => return false,
+        };
+    }
+}
+
+/// Index of the `)` matching the `(` at `open`.
+fn close_paren(b: &[char], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (k, c) in b.iter().enumerate().skip(open) {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// The receiver expression ending just before index `end` (the `.` of
+/// the lock call): scans back over identifiers, `.`, `::`, and
+/// balanced `[..]`.
+fn receiver_before(b: &[char], end: usize) -> String {
+    let mut s = end;
+    while s > 0 {
+        let c = b[s - 1];
+        if is_ident(c) || c == '.' || c == ':' {
+            s -= 1;
+        } else if c == ']' {
+            let mut depth = 0i64;
+            while s > 0 {
+                match b[s - 1] {
+                    ']' => depth += 1,
+                    '[' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            s -= 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                s -= 1;
+            }
+        } else {
+            break;
+        }
+    }
+    b[s..end].iter().collect::<String>().trim().to_string()
+}
+
+/// The first argument of the call whose `(` is at `open`, with
+/// reference/deref sigils stripped.
+fn first_arg(b: &[char], open: usize) -> String {
+    let mut depth = 0i64;
+    let mut arg = String::new();
+    for &c in &b[open..] {
+        match c {
+            '(' | '[' => {
+                depth += 1;
+                if depth > 1 {
+                    arg.push(c);
+                }
+            }
+            ')' | ']' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+                arg.push(c);
+            }
+            ',' if depth == 1 => break,
+            _ => arg.push(c),
+        }
+    }
+    arg.trim()
+        .trim_start_matches(['&', '*'])
+        .trim_start_matches("mut ")
+        .trim()
+        .to_string()
+}
+
+/// The final field segment of a receiver path:
+/// `self.shared.agg` → `agg`, `cache.shards[0]` → `shards`.
+fn final_field(recv: &str) -> String {
+    recv.split(['.', ':'])
+        .filter(|s| !s.is_empty())
+        .next_back()
+        .unwrap_or("")
+        .chars()
+        .take_while(|c| is_ident(*c))
+        .collect()
+}
+
+/// Does the identifier token `name` start exactly at `pos`, with a
+/// clean right boundary?
+fn token_here(b: &[char], pos: usize, name: &str) -> bool {
+    let chars: Vec<char> = name.chars().collect();
+    if pos + chars.len() > b.len() || b[pos..pos + chars.len()] != chars[..] {
+        return false;
+    }
+    let end = pos + chars.len();
+    end >= b.len() || !is_ident(b[end])
+}
+
+/// First non-whitespace character at or after `pos`.
+fn next_non_ws(b: &[char], pos: usize) -> Option<char> {
+    pos_non_ws(b, pos).map(|p| b[p])
+}
+
+/// Position of the first non-whitespace character at or after `pos`.
+fn pos_non_ws(b: &[char], pos: usize) -> Option<usize> {
+    (pos..b.len()).find(|&p| !b[p].is_whitespace())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scan::scan;
+    use super::super::WaiverTracker;
+    use super::*;
+
+    fn findings_in(src: &str) -> Vec<Finding> {
+        let f = scan("rust/src/coordinator/mod.rs", src);
+        let mut w = WaiverTracker::default();
+        let mut out = Vec::new();
+        check(&f, &mut w, &mut out);
+        out
+    }
+
+    #[test]
+    fn ordered_nesting_is_clean_inverted_nesting_is_flagged() {
+        let ok = findings_in(
+            "fn f(&self) {\n\
+             let shard = lock_recover(&self.shards, &c);\n\
+             let agg = lock_recover(&self.agg, &c);\n\
+             }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+        let bad = findings_in(
+            "fn f(&self) {\n\
+             let agg = lock_recover(&self.agg, &c);\n\
+             let shard = lock_recover(&self.shards, &c);\n\
+             }\n",
+        );
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].message.contains("inverts"), "{bad:?}");
+    }
+
+    #[test]
+    fn transient_guard_dies_at_statement_end() {
+        // The chained guard on line 2 is a temporary: by the send on
+        // line 3 it is gone, so no finding.
+        let ok = findings_in(
+            "fn f(&self) {\n\
+             let got = lock_recover(&self.parts, &c).len();\n\
+             tx.send(got);\n\
+             }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn send_under_bound_guard_is_flagged() {
+        let bad = findings_in(
+            "fn f(&self) {\n\
+             let agg = self.agg.lock().unwrap();\n\
+             tx.send(1);\n\
+             }\n",
+        );
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].message.contains("send"), "{bad:?}");
+        // The block scoping releases the guard: no finding.
+        let ok = findings_in(
+            "fn f(&self) {\n\
+             {\n\
+             let agg = self.agg.lock().unwrap();\n\
+             agg.push(1);\n\
+             }\n\
+             tx.send(1);\n\
+             }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn unknown_receiver_and_same_class_nesting_are_flagged() {
+        let bad = findings_in(
+            "fn f(&self) {\n\
+             let g = self.mystery_lock.lock().unwrap();\n\
+             }\n",
+        );
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].message.contains("no class"), "{bad:?}");
+        let bad = findings_in(
+            "fn f(&self) {\n\
+             let a = lock_recover(&self.agg, &c);\n\
+             let b = lock_recover(&self.agg, &c);\n\
+             }\n",
+        );
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].message.contains("nested"), "{bad:?}");
+    }
+
+    #[test]
+    fn test_regions_are_exempt() {
+        let ok = findings_in(
+            "#[cfg(test)]\n\
+             mod tests {\n\
+             fn t() { let g = m.lock().unwrap(); tx.send(1); }\n\
+             }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+}

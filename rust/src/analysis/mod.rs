@@ -1,0 +1,376 @@
+//! Self-hosted static analysis: the `lint` subsystem.
+//!
+//! The serving pipeline's reliability claims (no panic-poisoned locks,
+//! no deadlocks, benchmarks whose baselines actually exist) are cheap
+//! to state and easy to silently lose. This module makes them
+//! *checked* properties: a zero-dependency, AST-lite linter in the
+//! same hand-rolled idiom as [`crate::util::json`], run as
+//! `sata lint` (CI-enforced) and as the `tests/lint.rs` tier-1 test.
+//!
+//! Three lint families:
+//!
+//! * **panic-freedom** ([`panics`]) — `unwrap`/`expect`/panic macros
+//!   and unchecked indexing are denied inside the hot-path modules
+//!   ([`HOT_MODULES`]); sites with a documented invariant carry a
+//!   waiver comment and draw from the global [`WAIVER_BUDGET`].
+//! * **lock discipline** ([`locks`]) — nested lock acquisitions must
+//!   respect the declared order ([`locks::LOCK_ORDER`]), and channel
+//!   sends must not happen under shard/aggregation locks.
+//! * **cross-artifact drift** ([`drift`]) — bench snapshots ↔
+//!   committed `BENCH_*.json` baselines ↔ CI, CLI help ↔ accepted
+//!   flags ↔ README, doc path tokens ↔ the tree, registry names ↔
+//!   `DESIGN.md`.
+//!
+//! Waiver syntax (a plain `//` comment, trailing the waived line or on
+//! the line directly above it — doc comments never declare waivers):
+//!
+//! ```text
+//! let d = parts.dense_steps[t]; // lint: allow(index, "t < tokens by construction")
+//! ```
+//!
+//! Family is one
+//! of `panic`, `index`, `lock`. Every waiver must be *used* — a stale
+//! waiver is itself a finding — and the total in-use count must stay
+//! within [`WAIVER_BUDGET`], so panic-surface growth is visible in
+//! review rather than silent.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::Path;
+
+pub mod drift;
+pub mod locks;
+pub mod panics;
+pub mod scan;
+
+use scan::ScannedFile;
+
+/// Modules whose files are hot-path: panic-freedom and lock discipline
+/// are enforced here (matched as `rust/src/<name>/**` and
+/// `rust/src/<name>.rs`).
+pub const HOT_MODULES: &[&str] =
+    &["coordinator", "cluster", "decode", "engine", "trace", "metrics"];
+
+/// Global ceiling on in-use waivers across the whole tree. Raising it
+/// is a reviewed change to this constant, not a drive-by comment.
+pub const WAIVER_BUDGET: usize = 60;
+
+/// Lint families a finding can belong to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Possible panic (`unwrap`/`expect`/panic macros) in a hot path.
+    Panic,
+    /// Unchecked indexing in a hot path.
+    Index,
+    /// Lock-order or send-under-lock violation.
+    Lock,
+    /// Waiver bookkeeping: stale, malformed, or over-budget waivers.
+    Waiver,
+    /// Cross-artifact drift between code, benches, CI, and docs.
+    Drift,
+}
+
+impl Family {
+    /// The waiver-comment key for this family.
+    pub fn key(self) -> &'static str {
+        match self {
+            Family::Panic => "panic",
+            Family::Index => "index",
+            Family::Lock => "lock",
+            Family::Waiver => "waiver",
+            Family::Drift => "drift",
+        }
+    }
+}
+
+impl fmt::Display for Family {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.key())
+    }
+}
+
+/// One lint finding.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Which lint family produced it.
+    pub family: Family,
+    /// Repo-relative file the finding is anchored to.
+    pub file: String,
+    /// 1-based line, or 0 for whole-file/whole-repo findings.
+    pub line: usize,
+    /// Human-readable description.
+    pub message: String,
+}
+
+impl Finding {
+    /// Build a finding.
+    pub fn new(family: Family, file: &str, line: usize, message: String) -> Self {
+        Finding { family, file: file.to_string(), line, message }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line == 0 {
+            write!(f, "[{}] {}: {}", self.family, self.file, self.message)
+        } else {
+            write!(
+                f,
+                "[{}] {}:{}: {}",
+                self.family, self.file, self.line, self.message
+            )
+        }
+    }
+}
+
+/// Tracks which waivers have been consumed by an actual violation, so
+/// stale waivers can be flagged and the budget enforced.
+#[derive(Default)]
+pub struct WaiverTracker {
+    used: BTreeSet<(String, usize)>,
+}
+
+impl WaiverTracker {
+    /// If a valid waiver of `family` covers `line`, consume it and
+    /// return `true` (the violation is suppressed).
+    pub fn try_waive(
+        &mut self,
+        file: &ScannedFile,
+        line: usize,
+        family: Family,
+    ) -> bool {
+        match file.waiver_for(line) {
+            Some(w) if w.family == family.key() && !w.reason.is_empty() => {
+                self.used.insert((file.rel.clone(), w.line));
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Distinct waiver comments consumed so far.
+    pub fn used(&self) -> usize {
+        self.used.len()
+    }
+
+    fn is_used(&self, rel: &str, line: usize) -> bool {
+        self.used.contains(&(rel.to_string(), line))
+    }
+}
+
+/// The result of a full lint run.
+pub struct LintReport {
+    /// Every finding, in file order.
+    pub findings: Vec<Finding>,
+    /// Distinct waiver comments consumed by real violations.
+    pub waivers_used: usize,
+    /// The global ceiling those waivers draw from.
+    pub waiver_budget: usize,
+    /// Number of `rust/src` files scanned.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// Whether the tree is clean.
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Render the report for terminal output.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let order = [
+            Family::Panic,
+            Family::Index,
+            Family::Lock,
+            Family::Waiver,
+            Family::Drift,
+        ];
+        for fam in order {
+            for f in self.findings.iter().filter(|f| f.family == fam) {
+                out.push_str(&format!("{f}\n"));
+            }
+        }
+        out.push_str(&format!(
+            "lint: {} finding{} ({} waiver{} in use / budget {}, {} files \
+             scanned)\n",
+            self.findings.len(),
+            if self.findings.len() == 1 { "" } else { "s" },
+            self.waivers_used,
+            if self.waivers_used == 1 { "" } else { "s" },
+            self.waiver_budget,
+            self.files_scanned,
+        ));
+        out
+    }
+}
+
+/// Is `rel` (repo-relative, `/`-separated) inside a hot-path module?
+pub fn is_hot(rel: &str) -> bool {
+    HOT_MODULES.iter().any(|m| {
+        rel.starts_with(&format!("rust/src/{m}/"))
+            || rel == format!("rust/src/{m}.rs")
+    })
+}
+
+/// Run every lint family over the repo rooted at `root` (the directory
+/// holding `rust/`, `README.md`, and the `BENCH_*.json` baselines).
+pub fn run_lint(root: &Path) -> LintReport {
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut tracker = WaiverTracker::default();
+    let mut paths: Vec<std::path::PathBuf> = Vec::new();
+    collect_rs(&root.join("rust/src"), &mut paths);
+    if paths.is_empty() {
+        findings.push(Finding::new(
+            Family::Drift,
+            "rust/src",
+            0,
+            "no Rust sources found under the lint root".to_string(),
+        ));
+    }
+    let mut scanned: Vec<ScannedFile> = Vec::new();
+    for path in &paths {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let Ok(src) = std::fs::read_to_string(path) else {
+            findings.push(Finding::new(
+                Family::Drift,
+                &rel,
+                0,
+                "source file became unreadable mid-scan".to_string(),
+            ));
+            continue;
+        };
+        scanned.push(scan::scan(&rel, &src));
+    }
+    let files_scanned = scanned.len();
+    for file in &scanned {
+        if is_hot(&file.rel) {
+            panics::check(file, &mut tracker, &mut findings);
+            locks::check(file, &mut tracker, &mut findings);
+        }
+    }
+    drift::check(root, &mut findings);
+    audit_waivers(&scanned, &tracker, &mut findings);
+    if tracker.used() > WAIVER_BUDGET {
+        findings.push(Finding::new(
+            Family::Waiver,
+            "rust/src",
+            0,
+            format!(
+                "{} waivers in use exceed the global budget of {} — raise \
+                 `analysis::WAIVER_BUDGET` deliberately or fix sites",
+                tracker.used(),
+                WAIVER_BUDGET
+            ),
+        ));
+    }
+    LintReport {
+        findings,
+        waivers_used: tracker.used(),
+        waiver_budget: WAIVER_BUDGET,
+        files_scanned,
+    }
+}
+
+/// Flag malformed and stale waivers: every waiver must name a known
+/// family, carry a reason, and be consumed by a real violation.
+fn audit_waivers(
+    scanned: &[ScannedFile],
+    tracker: &WaiverTracker,
+    out: &mut Vec<Finding>,
+) {
+    for file in scanned {
+        for w in &file.waivers {
+            if file.in_test(w.line) {
+                continue; // test regions are outside the lint's remit
+            }
+            let known = ["panic", "index", "lock"].contains(&w.family.as_str());
+            if !known {
+                out.push(Finding::new(
+                    Family::Waiver,
+                    &file.rel,
+                    w.line,
+                    format!(
+                        "waiver names unknown family `{}` (expected panic, \
+                         index, or lock)",
+                        w.family
+                    ),
+                ));
+            } else if w.reason.is_empty() {
+                out.push(Finding::new(
+                    Family::Waiver,
+                    &file.rel,
+                    w.line,
+                    "waiver has no reason string — justify the invariant"
+                        .to_string(),
+                ));
+            } else if !tracker.is_used(&file.rel, w.line) {
+                out.push(Finding::new(
+                    Family::Waiver,
+                    &file.rel,
+                    w.line,
+                    "stale waiver: no violation on the covered line — \
+                     delete it"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+/// Collect `.rs` files under `dir` recursively, sorted for
+/// deterministic reports.
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .into_iter()
+        .flatten()
+        .flatten()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hot_module_matching_is_prefix_exact() {
+        assert!(is_hot("rust/src/coordinator/mod.rs"));
+        assert!(is_hot("rust/src/engine/substrate.rs"));
+        assert!(!is_hot("rust/src/util/json.rs"));
+        assert!(!is_hot("rust/src/main.rs"));
+        // A module merely *named like* a hot prefix is not hot.
+        assert!(!is_hot("rust/src/decoder/mod.rs"));
+    }
+
+    #[test]
+    fn report_renders_findings_grouped_and_counted() {
+        let report = LintReport {
+            findings: vec![
+                Finding::new(Family::Drift, "README.md", 0, "d".to_string()),
+                Finding::new(Family::Panic, "a.rs", 3, "p".to_string()),
+            ],
+            waivers_used: 2,
+            waiver_budget: WAIVER_BUDGET,
+            files_scanned: 10,
+        };
+        let text = report.render();
+        let panic_at = text.find("[panic]").expect("panic line");
+        let drift_at = text.find("[drift]").expect("drift line");
+        assert!(panic_at < drift_at, "panic family renders first");
+        assert!(text.contains("2 findings"), "{text}");
+        assert!(!report.is_clean());
+    }
+}

@@ -1,0 +1,216 @@
+//! Panic-freedom lint for hot-path modules.
+//!
+//! Serving-loop code must not abort the process: a panic inside a
+//! worker poisons shared locks and, before the poison-tolerant
+//! refactor ([`crate::util::sync`]), cascaded into a stalled
+//! coordinator. This lint denies the panic surface in hot modules:
+//!
+//! * `.unwrap()` / `.expect(..)` on `Option`/`Result`,
+//! * the `panic!` / `unreachable!` / `todo!` / `unimplemented!` macros,
+//! * unchecked indexing (`x[i]`, `&x[a..b]`) — slice indexing panics
+//!   out of bounds.
+//!
+//! A site with a documented invariant can be waived with a trailing
+//! (or directly-preceding) plain comment carrying
+//! `lint: allow(panic, "<reason>")` or `lint: allow(index, "<reason>")`;
+//! waivers draw from the global budget enforced in
+//! [`crate::analysis::run_lint`]. Test regions are exempt wholesale.
+
+use super::scan::{is_ident, ScannedFile};
+use super::{Family, Finding, WaiverTracker};
+
+/// Keywords that can legally precede `[` without it being an index
+/// expression (slice patterns, array expressions in statement position).
+const KEYWORDS: &[&str] = &[
+    "as", "box", "break", "continue", "dyn", "else", "if", "impl", "in",
+    "let", "loop", "match", "move", "mut", "ref", "return", "static",
+    "where", "while", "yield",
+];
+
+/// Panicking macro names denied in hot paths.
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Run the panic-freedom checks over one hot-path file.
+pub fn check(file: &ScannedFile, waivers: &mut WaiverTracker, out: &mut Vec<Finding>) {
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let lno = idx + 1;
+        let b: Vec<char> = line.code.chars().collect();
+        for (kind, family, msg) in panic_sites(&b) {
+            if waivers.try_waive(file, lno, family) {
+                continue;
+            }
+            out.push(Finding::new(
+                family,
+                &file.rel,
+                lno,
+                format!("{msg} (`{kind}`) in hot-path module"),
+            ));
+        }
+    }
+}
+
+/// All panic-surface sites on one stripped line: (token, family, message).
+fn panic_sites(b: &[char]) -> Vec<(String, Family, &'static str)> {
+    let mut sites = Vec::new();
+    let n = b.len();
+    for k in 0..n {
+        // `.unwrap()` / `.expect(` with a token boundary, so
+        // `unwrap_or_else` and `expect_err` do not match.
+        if b[k] == '.' {
+            for name in ["unwrap", "expect"] {
+                if !token_at(b, k + 1, name) {
+                    continue;
+                }
+                let after = k + 1 + name.len();
+                if after >= n || b[after] != '(' {
+                    continue;
+                }
+                if name == "unwrap" && next_non_ws(b, after + 1) != Some(')') {
+                    continue; // `.unwrap(` with args is not Option::unwrap
+                }
+                sites.push((
+                    format!(".{name}()"),
+                    Family::Panic,
+                    "possible panic",
+                ));
+            }
+        }
+        // Panicking macros: `name!` with a clean left boundary.
+        if b[k] == '!' {
+            for name in PANIC_MACROS {
+                let len = name.chars().count();
+                if k >= len
+                    && token_at(b, k - len, name)
+                    && (k == len || !is_ident(b[k - len - 1]))
+                {
+                    sites.push((
+                        format!("{name}!"),
+                        Family::Panic,
+                        "explicit panic",
+                    ));
+                }
+            }
+        }
+        // Unchecked indexing: `[` preceded by an expression tail.
+        if b[k] == '[' && is_index_bracket(b, k) {
+            sites.push(("[..]".to_string(), Family::Index, "unchecked indexing"));
+        }
+    }
+    sites
+}
+
+/// Does the identifier token `name` start exactly at `pos`?
+fn token_at(b: &[char], pos: usize, name: &str) -> bool {
+    let chars: Vec<char> = name.chars().collect();
+    if pos + chars.len() > b.len() || b[pos..pos + chars.len()] != chars[..] {
+        return false;
+    }
+    let end = pos + chars.len();
+    end >= b.len() || !is_ident(b[end])
+}
+
+/// First non-whitespace character at or after `pos`.
+fn next_non_ws(b: &[char], pos: usize) -> Option<char> {
+    b[pos.min(b.len())..].iter().copied().find(|c| !c.is_whitespace())
+}
+
+/// Is the `[` at `k` an index expression? True when the previous
+/// non-space character ends an expression (identifier, `)`, `]`, `?`)
+/// — but not when that identifier is a keyword (`let [a, b] = ..` is a
+/// pattern) and not after `!` (`vec![..]`) or `#` (attributes).
+fn is_index_bracket(b: &[char], k: usize) -> bool {
+    let mut p = k;
+    while p > 0 && b[p - 1] == ' ' {
+        p -= 1;
+    }
+    if p == 0 {
+        return false;
+    }
+    let pc = b[p - 1];
+    if pc == ')' || pc == ']' || pc == '?' {
+        return true;
+    }
+    if !is_ident(pc) {
+        return false;
+    }
+    let mut s = p - 1;
+    while s > 0 && is_ident(b[s - 1]) {
+        s -= 1;
+    }
+    let word: String = b[s..p].iter().collect();
+    !KEYWORDS.contains(&word.as_str())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scan::scan;
+    use super::super::WaiverTracker;
+    use super::*;
+
+    fn findings_in(src: &str) -> Vec<Finding> {
+        let f = scan("rust/src/coordinator/mod.rs", src);
+        let mut w = WaiverTracker::default();
+        let mut out = Vec::new();
+        check(&f, &mut w, &mut out);
+        out
+    }
+
+    #[test]
+    fn flags_unwrap_expect_and_macros_but_not_lookalikes() {
+        let out = findings_in(
+            "fn f() {\n\
+             let a = x.unwrap();\n\
+             let b = y.expect(\"msg\");\n\
+             let c = z.unwrap_or_else(Default::default);\n\
+             let d = w.unwrap_or(0);\n\
+             let e = v.expect_err(\"msg\");\n\
+             panic!(\"boom\");\n\
+             unreachable!();\n\
+             debug_assert!(true);\n\
+             }\n",
+        );
+        let lines: Vec<usize> = out.iter().map(|f| f.line).collect();
+        assert_eq!(lines, vec![2, 3, 7, 8], "{out:?}");
+    }
+
+    #[test]
+    fn flags_indexing_but_not_macros_attrs_or_patterns() {
+        let out = findings_in(
+            "fn f(s: &[u8]) {\n\
+             let a = s[0];\n\
+             let b = &s[1..3];\n\
+             let v = vec![0; 4];\n\
+             #[derive(Clone)]\n\
+             struct T([u8; 4]);\n\
+             let [x, y] = pair;\n\
+             let c = calls()[2];\n\
+             }\n",
+        );
+        let lines: Vec<usize> = out.iter().map(|f| f.line).collect();
+        assert_eq!(lines, vec![2, 3, 8], "{out:?}");
+    }
+
+    #[test]
+    fn waived_sites_are_skipped_and_tests_exempt() {
+        let f = scan(
+            "rust/src/coordinator/mod.rs",
+            "fn f(v: &[u8]) {\n\
+             let a = v[0]; // lint: allow(index, \"guarded by len check\")\n\
+             let b = v[1];\n\
+             }\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+             fn t() { x.unwrap(); }\n\
+             }\n",
+        );
+        let mut w = WaiverTracker::default();
+        let mut out = Vec::new();
+        check(&f, &mut w, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 3);
+        assert_eq!(w.used(), 1);
+    }
+}

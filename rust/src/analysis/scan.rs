@@ -1,0 +1,367 @@
+//! AST-lite Rust source scanner: the lexical layer under every lint.
+//!
+//! Built in the same idiom as the in-tree JSON parser
+//! ([`crate::util::json`]): a single hand-rolled pass over the bytes,
+//! no external crates, no syntax tree. [`scan`] strips comments,
+//! blanks out string/char literals, tracks `#[cfg(test)]` / `#[test]`
+//! regions by brace depth, and collects waiver comments — leaving
+//! per-line *code text* the lint families can pattern-match without
+//! tripping over doc examples, string payloads, or test code.
+//!
+//! Deliberate approximations (documented once, here): lifetimes are
+//! elided entirely (`&'a [u8]` scans as `& [u8]`, so the slice bracket
+//! is not mistaken for indexing), string literals scan as `""`, char
+//! literals as `' '`, and a waiver comment must be a plain `//`
+//! comment — doc comments (`///`, `//!`) never declare waivers, so the
+//! waiver syntax can be *described* in rustdoc without being parsed.
+
+/// A waiver comment: `lint: allow(<family>, "<reason>")` inside a
+/// plain `//` comment, either trailing the waived line or standing
+/// alone on the line directly above it.
+#[derive(Clone, Debug)]
+pub struct Waiver {
+    /// Lint family the waiver targets (`panic`, `index`, or `lock`).
+    pub family: String,
+    /// The justification string; empty means the waiver is malformed.
+    pub reason: String,
+    /// 1-based line the comment sits on.
+    pub line: usize,
+}
+
+/// One source line after stripping.
+#[derive(Clone, Debug, Default)]
+pub struct Line {
+    /// Comment-free code text with literals blanked.
+    pub code: String,
+    /// Whether the line sits inside a `#[cfg(test)]` / `#[test]` block.
+    pub in_test: bool,
+}
+
+/// A scanned source file: stripped lines plus the waivers found in it.
+#[derive(Clone, Debug)]
+pub struct ScannedFile {
+    /// Path relative to the repo root, `/`-separated.
+    pub rel: String,
+    /// Stripped lines, index 0 = line 1.
+    pub lines: Vec<Line>,
+    /// Every waiver comment in the file, in order.
+    pub waivers: Vec<Waiver>,
+}
+
+impl ScannedFile {
+    /// The waiver covering 1-based `line`, if any: a waiver on the line
+    /// itself (trailing comment) or on a standalone comment line
+    /// directly above (that line carries no code of its own).
+    pub fn waiver_for(&self, line: usize) -> Option<&Waiver> {
+        if let Some(w) = self.waivers.iter().find(|w| w.line == line) {
+            return Some(w);
+        }
+        self.waivers.iter().find(|w| {
+            w.line + 1 == line
+                && self
+                    .lines
+                    .get(w.line - 1)
+                    .is_some_and(|l| l.code.trim().is_empty())
+        })
+    }
+
+    /// Whether 1-based `line` is inside a test region.
+    pub fn in_test(&self, line: usize) -> bool {
+        self.lines.get(line - 1).is_some_and(|l| l.in_test)
+    }
+}
+
+/// Is `c` a Rust identifier character?
+pub fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Parse a waiver out of a plain `//` comment's text (the full comment
+/// including the `//`). Doc comments never match. A comment that
+/// clearly *attempts* the syntax but is malformed still returns a
+/// [`Waiver`] (with what could be salvaged) so the lint can flag it
+/// instead of silently ignoring it.
+fn parse_waiver(comment: &str, line: usize) -> Option<Waiver> {
+    let body = comment.strip_prefix("//")?;
+    if body.starts_with('/') || body.starts_with('!') {
+        return None; // doc comment: never a waiver
+    }
+    let idx = body.find("lint: allow(")?;
+    let rest = &body[idx + "lint: allow(".len()..];
+    let family: String =
+        rest.chars().take_while(|c| is_ident(*c)).collect();
+    let after = &rest[family.len()..];
+    let reason = after
+        .strip_prefix(',')
+        .map(str::trim_start)
+        .and_then(|r| r.strip_prefix('"'))
+        .and_then(|r| r.split('"').next())
+        .unwrap_or("")
+        .trim()
+        .to_string();
+    Some(Waiver { family, reason, line })
+}
+
+/// Strip `src` into code-only lines (see the module docs for the exact
+/// blanking rules), then mark test regions by brace depth.
+pub fn scan(rel: &str, src: &str) -> ScannedFile {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut waivers: Vec<Waiver> = Vec::new();
+    let mut code = String::new();
+    let mut i = 0usize;
+    // Closes the current line; `line_no` below is always lines.len()+1.
+    macro_rules! end_line {
+        () => {
+            lines.push(Line { code: std::mem::take(&mut code), in_test: false })
+        };
+    }
+    while i < n {
+        let c = b[i];
+        let line_no = lines.len() + 1;
+        let prev_ident = code.chars().last().is_some_and(is_ident);
+        match c {
+            '\n' => {
+                end_line!();
+                i += 1;
+            }
+            '/' if i + 1 < n && b[i + 1] == '/' => {
+                let start = i;
+                while i < n && b[i] != '\n' {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                if let Some(w) = parse_waiver(&text, line_no) {
+                    waivers.push(w);
+                }
+            }
+            '/' if i + 1 < n && b[i + 1] == '*' => {
+                // Block comments nest in Rust.
+                let mut depth = 1;
+                i += 2;
+                while i < n && depth > 0 {
+                    if b[i] == '\n' {
+                        end_line!();
+                        i += 1;
+                    } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            '"' => {
+                code.push_str("\"\"");
+                i += 1;
+                while i < n {
+                    match b[i] {
+                        '\\' => i += 2,
+                        '"' => {
+                            i += 1;
+                            break;
+                        }
+                        '\n' => {
+                            end_line!();
+                            i += 1;
+                        }
+                        _ => i += 1,
+                    }
+                }
+            }
+            'r' | 'b' if !prev_ident => {
+                // Raw / byte string or byte char: r"..", r#".."#, br".."
+                // b"..", b'x'. Anything else falls through as code.
+                let mut j = i;
+                let mut is_raw = false;
+                if b[j] == 'b' {
+                    j += 1; // optional byte prefix
+                }
+                if j < n && b[j] == 'r' {
+                    is_raw = true;
+                    j += 1;
+                }
+                let mut hashes = 0usize;
+                while is_raw && j < n && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == '"' {
+                    // String body: raw strings have no escapes and close
+                    // on `"` + their hash count; b".." escapes like a
+                    // plain string.
+                    code.push_str("\"\"");
+                    i = j + 1;
+                    'body: while i < n {
+                        if b[i] == '\n' {
+                            end_line!();
+                            i += 1;
+                            continue;
+                        }
+                        if !is_raw && b[i] == '\\' {
+                            i += 2;
+                            continue;
+                        }
+                        if b[i] == '"' {
+                            let mut k = 0;
+                            while k < hashes && i + 1 + k < n && b[i + 1 + k] == '#'
+                            {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                i += 1 + hashes;
+                                break 'body;
+                            }
+                        }
+                        i += 1;
+                    }
+                } else if b[i] == 'b' && i + 1 < n && b[i + 1] == '\'' {
+                    // Byte char literal b'x' / b'\n'.
+                    code.push_str("' '");
+                    i += 2;
+                    if i < n && b[i] == '\\' {
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                    while i < n && b[i] != '\'' {
+                        i += 1;
+                    }
+                    i += 1;
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            '\'' => {
+                if i + 1 < n && b[i + 1] == '\\' {
+                    // Escaped char literal: '\n', '\'', '\u{1F600}'.
+                    code.push_str("' '");
+                    i += 2; // past the backslash
+                    i += 1; // past the escaped char
+                    while i < n && b[i] != '\'' {
+                        i += 1;
+                    }
+                    i += 1;
+                } else if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                    // Plain char literal 'x' (any single char).
+                    code.push_str("' '");
+                    i += 3;
+                } else {
+                    // Lifetime: elide the quote and its identifier so
+                    // `&'a [u8]` cannot read as indexing.
+                    i += 1;
+                    while i < n && is_ident(b[i]) {
+                        i += 1;
+                    }
+                }
+            }
+            _ => {
+                code.push(c);
+                i += 1;
+            }
+        }
+    }
+    if !code.is_empty() {
+        end_line!();
+    }
+
+    // Second pass: mark `#[cfg(test)]` / `#[test]` brace blocks.
+    let mut depth = 0usize;
+    let mut test_depths: Vec<usize> = Vec::new();
+    let mut pending = false;
+    for line in lines.iter_mut() {
+        line.in_test = !test_depths.is_empty();
+        if line.code.contains("#[cfg(test)]") || line.code.contains("#[test]") {
+            pending = true;
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        test_depths.push(depth);
+                        pending = false;
+                    }
+                }
+                '}' => {
+                    if test_depths.last() == Some(&depth) {
+                        test_depths.pop();
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                // An attribute consumed by a braceless item
+                // (`#[cfg(test)] use x;`) stops pending at the `;`.
+                ';' => pending = false,
+                _ => {}
+            }
+        }
+    }
+
+    ScannedFile { rel: rel.to_string(), lines, waivers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_strings_chars_and_lifetimes() {
+        let f = scan(
+            "x.rs",
+            "let a = v.unwrap(); // trailing\n\
+             /* block\n spans lines */ let b = \"quoted .unwrap()\";\n\
+             let c: &'a [u8] = s; let d = 'x'; let e = '\\n';\n\
+             let r = r#\"raw .unwrap()\"#;\n",
+        );
+        assert!(f.lines[0].code.contains(".unwrap()"));
+        assert!(!f.lines[0].code.contains("trailing"));
+        assert!(!f.lines[1].code.contains("block"));
+        assert!(f.lines[1].code.contains("\"\""), "{}", f.lines[1].code);
+        assert!(!f.lines[1].code.contains("quoted"));
+        assert!(f.lines[2].code.contains("& [u8]"), "{}", f.lines[2].code);
+        assert!(f.lines[2].code.contains("' '"));
+        assert!(!f.lines[3].code.contains("raw"));
+    }
+
+    #[test]
+    fn marks_cfg_test_regions() {
+        let f = scan(
+            "x.rs",
+            "fn live() { a(); }\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+             fn t() { b(); }\n\
+             }\n\
+             fn live2() { c(); }\n",
+        );
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(f.lines[4].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn parses_trailing_and_standalone_waivers() {
+        let f = scan(
+            "x.rs",
+            "let a = v[0]; // lint: allow(index, \"len checked above\")\n\
+             // lint: allow(panic, \"startup only\")\n\
+             let b = w.unwrap();\n\
+             // lint: allow(panic, )\n\
+             /// lint: allow(panic, \"doc comments never waive\")\n",
+        );
+        let w = f.waiver_for(1).expect("trailing waiver");
+        assert_eq!(w.family, "index");
+        assert_eq!(w.reason, "len checked above");
+        let w = f.waiver_for(3).expect("standalone waiver covers next line");
+        assert_eq!(w.family, "panic");
+        // Malformed: captured with an empty reason so lints can flag it.
+        assert!(f.waivers.iter().any(|w| w.line == 4 && w.reason.is_empty()));
+        assert_eq!(f.waivers.len(), 3, "doc-comment waiver must not parse");
+    }
+}

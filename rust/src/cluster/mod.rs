@@ -70,6 +70,7 @@ use crate::decode::DecodeSession;
 use crate::util::json::Json;
 use crate::util::rng::mix64;
 use crate::util::stats::LatencyHistogram;
+use crate::util::sync::{get_mut_recover, lock_recover};
 
 /// Salt for the per-node rendezvous score streams (see [`route_affinity`]).
 const ROUTE_SALT: u64 = 0xAFF1_2077_5A7A_C1D5;
@@ -202,6 +203,9 @@ pub struct Cluster {
     submitted: AtomicUsize,
     forwarders: Vec<JoinHandle<()>>,
     results_rx: Mutex<Receiver<NodeResult>>,
+    /// Poisoned-lock recoveries on the cluster's own result stream (the
+    /// nodes count theirs in [`CoordinatorMetrics::lock_recoveries`]).
+    lock_recoveries: AtomicUsize,
 }
 
 impl Cluster {
@@ -250,6 +254,7 @@ impl Cluster {
             submitted: AtomicUsize::new(0),
             forwarders,
             results_rx: Mutex::new(rx),
+            lock_recoveries: AtomicUsize::new(0),
         }
     }
 
@@ -291,10 +296,12 @@ impl Cluster {
         self.submitted.fetch_add(1, Ordering::SeqCst);
         // Reserve an admission slot (CAS loop: never overshoot the cap).
         if let Some(cap) = self.admit_cap {
+            // lint: allow(index, "node < nodes.len() by rendezvous/rr routing")
             let slots = &self.in_flight[node];
             let mut cur = slots.load(Ordering::SeqCst);
             loop {
                 if cur >= cap {
+                    // lint: allow(index, "node < nodes.len() by rendezvous/rr routing")
                     self.shed[node].fetch_add(1, Ordering::SeqCst);
                     return Ok(Admission::Shed { node });
                 }
@@ -309,13 +316,16 @@ impl Cluster {
                 }
             }
         } else {
+            // lint: allow(index, "node < nodes.len() by rendezvous/rr routing")
             self.in_flight[node].fetch_add(1, Ordering::SeqCst);
         }
+        // lint: allow(index, "node < nodes.len() by rendezvous/rr routing")
         match self.nodes[node].submit(job) {
             Ok(()) => Ok(Admission::Accepted { node }),
             Err(job) => {
                 // Closed node: roll back the slot and the submission count
                 // so the accounting identity stays exact.
+                // lint: allow(index, "node < nodes.len() by rendezvous/rr routing")
                 self.in_flight[node].fetch_sub(1, Ordering::SeqCst);
                 self.submitted.fetch_sub(1, Ordering::SeqCst);
                 Err(job)
@@ -327,7 +337,9 @@ impl Cluster {
     /// across the fleet). Ends after [`Cluster::close`] once every
     /// in-flight job has been yielded.
     pub fn results(&self) -> impl Iterator<Item = NodeResult> + '_ {
-        std::iter::from_fn(move || self.results_rx.lock().unwrap().recv().ok())
+        std::iter::from_fn(move || {
+            lock_recover(&self.results_rx, &self.lock_recoveries).recv().ok()
+        })
     }
 
     /// Close every node's intake; in-flight jobs keep flowing and the
@@ -366,6 +378,8 @@ impl Cluster {
             steps_cache_hit: nodes.iter().map(|m| m.steps_cache_hit).sum(),
             steps_planned_cold: nodes.iter().map(|m| m.steps_planned_cold).sum(),
             steps_planned_delta: nodes.iter().map(|m| m.steps_planned_delta).sum(),
+            lock_recoveries: nodes.iter().map(|m| m.lock_recoveries).sum::<usize>()
+                + self.lock_recoveries.load(Ordering::Relaxed),
             wall_p50_ns: wall.percentile(50.0),
             wall_p95_ns: wall.percentile(95.0),
             wall_p99_ns: wall.percentile(99.0),
@@ -381,7 +395,9 @@ impl Cluster {
     /// forwarders and every node's workers, and return final metrics.
     pub fn finish(mut self) -> ClusterMetrics {
         self.close();
-        for _ in self.results_rx.get_mut().unwrap().iter() {}
+        for _ in get_mut_recover(&mut self.results_rx, &self.lock_recoveries).iter()
+        {
+        }
         self.join_fleet()
     }
 
@@ -391,7 +407,9 @@ impl Cluster {
     pub fn drain(mut self) -> (Vec<NodeResult>, ClusterMetrics) {
         self.close();
         let mut results: Vec<NodeResult> =
-            self.results_rx.get_mut().unwrap().iter().collect();
+            get_mut_recover(&mut self.results_rx, &self.lock_recoveries)
+                .iter()
+                .collect();
         results.sort_by_key(|r| r.result.id);
         let metrics = self.join_fleet();
         (results, metrics)
@@ -449,6 +467,10 @@ pub struct ClusterMetrics {
     pub steps_planned_cold: usize,
     /// Decode steps delta-patched from a predecessor plan.
     pub steps_planned_delta: usize,
+    /// Poisoned-lock recoveries across the fleet: every node's
+    /// [`CoordinatorMetrics::lock_recoveries`] plus the cluster's own
+    /// result-stream mutex. 0 on a healthy fleet.
+    pub lock_recoveries: usize,
     /// Fleet p50 job wall latency (merged histograms), ns.
     pub wall_p50_ns: f64,
     /// Fleet p95 job wall latency, ns.
@@ -517,6 +539,7 @@ impl ClusterMetrics {
             ("cache_hit_rate", Json::num(self.cache_hit_rate())),
             ("steps_cache_hit", Json::num(self.steps_cache_hit as f64)),
             ("step_hit_rate", Json::num(self.step_hit_rate())),
+            ("lock_recoveries", Json::num(self.lock_recoveries as f64)),
             ("wall_p50_ns", Json::num(self.wall_p50_ns)),
             ("wall_p95_ns", Json::num(self.wall_p95_ns)),
             ("wall_p99_ns", Json::num(self.wall_p99_ns)),

@@ -77,6 +77,7 @@ use crate::model::ModelTrace;
 use crate::util::json::Json;
 use crate::util::rng::{mix64, Rng};
 use crate::util::stats::LatencyHistogram;
+use crate::util::sync::{get_mut_recover, lock_recover};
 
 /// Salt mixed into `job.id` to seed the per-job retry-jitter stream.
 const RETRY_JITTER_SALT: u64 = 0x5245_5452_595F_4A49; // "RETRY_JI"
@@ -464,6 +465,7 @@ pub struct PlanCache<V = PlanSet> {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    recoveries: AtomicUsize,
 }
 
 impl<V> PlanCache<V> {
@@ -477,6 +479,7 @@ impl<V> PlanCache<V> {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            recoveries: AtomicUsize::new(0),
         }
     }
 
@@ -497,9 +500,10 @@ impl<V> PlanCache<V> {
             self.misses.fetch_add(1, Ordering::Relaxed);
             return (Arc::new(build()), false);
         }
+        // lint: allow(index, "index is key % shards.len()")
         let shard = &self.shards[key as usize % self.shards.len()];
         {
-            let mut s = shard.lock().unwrap();
+            let mut s = lock_recover(shard, &self.recoveries);
             s.clock += 1;
             let now = s.clock;
             if let Some(e) = s.map.get_mut(&key) {
@@ -510,7 +514,7 @@ impl<V> PlanCache<V> {
         }
         let built = Arc::new(build());
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut s = shard.lock().unwrap();
+        let mut s = lock_recover(shard, &self.recoveries);
         s.clock += 1;
         let now = s.clock;
         if let Some(e) = s.map.get_mut(&key) {
@@ -549,14 +553,27 @@ impl<V> PlanCache<V> {
         self.evictions.load(Ordering::Relaxed) as usize
     }
 
+    /// Poisoned-shard recoveries performed so far (see
+    /// [`crate::util::sync::lock_recover`]): acquisitions that found a
+    /// shard mutex poisoned by a panicked worker and kept serving its
+    /// still-consistent map instead of cascading the panic.
+    pub fn lock_recoveries(&self) -> usize {
+        self.recoveries.load(Ordering::Relaxed)
+    }
+
     /// Cached plan sets right now.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+        self.shards
+            .iter()
+            .map(|shard| lock_recover(shard, &self.recoveries).map.len())
+            .sum()
     }
 
     /// Whether the cache currently holds nothing.
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.shards
+            .iter()
+            .all(|shard| lock_recover(shard, &self.recoveries).map.is_empty())
     }
 }
 
@@ -599,6 +616,14 @@ pub struct CoordinatorMetrics {
     pub cache_misses: usize,
     /// Plan-cache LRU evictions (see [`PlanCache::evictions`]).
     pub cache_evictions: usize,
+    /// Poisoned-lock recoveries across the serving state (shared
+    /// aggregate/queue mutexes plus the plan-cache shards): acquisitions
+    /// that found a mutex poisoned by a panicked worker and recovered
+    /// the still-consistent value instead of cascading the panic (see
+    /// [`crate::util::sync::lock_recover`]). 0 on a healthy service; a
+    /// poisoned mutex stays poisoned, so this counts recovery events,
+    /// not distinct panics.
+    pub lock_recoveries: usize,
     /// Peak jobs pending for stage 1: queued **plus** submitters blocked
     /// on backpressure, so this measures demand and may exceed the
     /// configured `queue_cap`.
@@ -696,6 +721,7 @@ impl CoordinatorMetrics {
             ("cache_misses", Json::num(self.cache_misses as f64)),
             ("cache_evictions", Json::num(self.cache_evictions as f64)),
             ("cache_hit_rate", Json::num(self.cache_hit_rate())),
+            ("lock_recoveries", Json::num(self.lock_recoveries as f64)),
             ("plan_queue_peak", Json::num(self.plan_queue_peak as f64)),
             ("exec_queue_peak", Json::num(self.exec_queue_peak as f64)),
             ("wall_p50_ns", Json::num(self.wall_p50_ns)),
@@ -777,13 +803,17 @@ struct Shared {
     /// Decode sessions in flight (planned → finalized).
     live_sessions: QueueGauge,
     agg: Mutex<Agg>,
+    /// Poisoned-lock recoveries on the shared serving state (see
+    /// [`crate::util::sync::lock_recover`]); the plan-cache shards count
+    /// their own into [`PlanCache::lock_recoveries`].
+    lock_recoveries: AtomicUsize,
 }
 
 /// Fold a finished result into the aggregate, then stream it out. Send
 /// failure (receiver dropped mid-shutdown) is not an error.
 fn record_and_send(shared: &Shared, res_tx: &Sender<JobResult>, r: JobResult) {
     {
-        let mut agg = shared.agg.lock().unwrap();
+        let mut agg = lock_recover(&shared.agg, &shared.lock_recoveries);
         agg.wall.record(r.wall_ns);
         if r.is_ok() {
             agg.done += 1;
@@ -975,6 +1005,7 @@ impl Coordinator {
             exec_q: QueueGauge::default(),
             live_sessions: QueueGauge::default(),
             agg: Mutex::new(Agg::default()),
+            lock_recoveries: AtomicUsize::new(0),
         });
 
         let plan_workers = (0..cfg.plan_workers.max(1))
@@ -1026,7 +1057,9 @@ impl Coordinator {
     pub fn submit(&self, job: Job) -> Result<(), Job> {
         // Clone the sender out so the (possibly blocking) send happens
         // without holding the lock `close()` needs.
-        let Some(tx) = self.job_tx.lock().unwrap().clone() else {
+        let Some(tx) =
+            lock_recover(&self.job_tx, &self.shared.lock_recoveries).clone()
+        else {
             return Err(job);
         };
         self.shared.submitted.fetch_add(1, Ordering::SeqCst);
@@ -1091,7 +1124,7 @@ impl Coordinator {
     /// submitter thread closing while the main thread streams results is
     /// the intended `serve` shape.
     pub fn close(&self) {
-        self.job_tx.lock().unwrap().take();
+        lock_recover(&self.job_tx, &self.shared.lock_recoveries).take();
     }
 
     /// Stream results as execute workers finish them — **no full-drain
@@ -1101,12 +1134,16 @@ impl Coordinator {
     pub fn results(&self) -> impl Iterator<Item = JobResult> + '_ {
         // lock per recv: cheap (one uncontended lock per result) and keeps
         // the receiver shareable across threads
-        std::iter::from_fn(move || self.results_rx.lock().unwrap().recv().ok())
+        std::iter::from_fn(move || {
+            lock_recover(&self.results_rx, &self.shared.lock_recoveries)
+                .recv()
+                .ok()
+        })
     }
 
     /// Snapshot of the service metrics (callable while serving).
     pub fn metrics(&self) -> CoordinatorMetrics {
-        let agg = self.shared.agg.lock().unwrap();
+        let agg = lock_recover(&self.shared.agg, &self.shared.lock_recoveries);
         let elapsed_s = self.started.elapsed().as_secs_f64();
         CoordinatorMetrics {
             jobs_submitted: self.shared.submitted.load(Ordering::SeqCst),
@@ -1127,6 +1164,8 @@ impl Coordinator {
             cache_hits: self.cache.hits(),
             cache_misses: self.cache.misses(),
             cache_evictions: self.cache.evictions(),
+            lock_recoveries: self.shared.lock_recoveries.load(Ordering::Relaxed)
+                + self.cache.lock_recoveries(),
             plan_queue_peak: self.shared.plan_q.peak.load(Ordering::SeqCst),
             exec_queue_peak: self.shared.exec_q.peak.load(Ordering::SeqCst),
             wall_p50_ns: agg.wall.percentile(50.0),
@@ -1172,7 +1211,7 @@ impl Coordinator {
     /// ([`LatencyHistogram::merge`]), so [`crate::cluster`] folds every
     /// node's profile into one cluster-wide p50/p95/p99.
     pub fn latency_profile(&self) -> LatencyProfile {
-        let agg = self.shared.agg.lock().unwrap();
+        let agg = lock_recover(&self.shared.agg, &self.shared.lock_recoveries);
         LatencyProfile { wall: agg.wall.clone(), token: agg.token_wall.clone() }
     }
 
@@ -1181,7 +1220,9 @@ impl Coordinator {
     /// workers, and return the final metrics.
     pub fn finish(mut self) -> CoordinatorMetrics {
         self.close();
-        for _ in self.results_rx.get_mut().unwrap().iter() {}
+        let rx =
+            get_mut_recover(&mut self.results_rx, &self.shared.lock_recoveries);
+        for _ in rx.iter() {}
         self.join_workers();
         self.metrics()
     }
@@ -1191,7 +1232,9 @@ impl Coordinator {
     pub fn drain(mut self) -> (Vec<JobResult>, CoordinatorMetrics) {
         self.close();
         let mut results: Vec<JobResult> =
-            self.results_rx.get_mut().unwrap().iter().collect();
+            get_mut_recover(&mut self.results_rx, &self.shared.lock_recoveries)
+                .iter()
+                .collect();
         self.join_workers();
         results.sort_by_key(|r| r.id);
         let m = self.metrics();
@@ -1242,7 +1285,7 @@ fn plan_worker(
     let mut scratch: Vec<bool> = Vec::new();
     loop {
         // hold the lock only to receive
-        let queued = match job_rx.lock().unwrap().recv() {
+        let queued = match lock_recover(job_rx, &shared.lock_recoveries).recv() {
             Ok(j) => j,
             Err(_) => break, // intake closed and drained
         };
@@ -1362,6 +1405,7 @@ fn plan_worker(
                 };
                 prev = Some(Arc::clone(&p));
                 let resident: Vec<usize> = if job.carryover {
+                    // lint: allow(index, "residency has one entry per step t by construction")
                     residency[t].clone()
                 } else {
                     vec![0; step.heads.len()]
@@ -1377,6 +1421,7 @@ fn plan_worker(
         // the config the pre-substrate worker used, so CIM reports stay
         // bitwise identical.
         let sspec =
+            // lint: allow(panic, "substrate validated at submit; absence is a wiring bug worth a loud stop")
             substrate::by_name(&job.substrate).expect("validated above");
         let sub = (sspec.build)(sys, prefill.dk());
         let layers = prefill.layers.len();
@@ -1408,7 +1453,7 @@ fn plan_worker(
         // blocking handoff below excluded) plus the per-step planning
         // outcome counters, folded once per job.
         {
-            let mut agg = shared.agg.lock().unwrap();
+            let mut agg = lock_recover(&shared.agg, &shared.lock_recoveries);
             let dt = t_plan.elapsed().as_nanos() as f64;
             agg.plan_wall.record(dt);
             agg.plan_total_ns += dt;
@@ -1465,6 +1510,7 @@ fn exec_unit(unit: PlannedUnit, res_tx: &Sender<JobResult>, shared: &Shared) {
             let run_layers = |b: &dyn FlowBackend| -> Vec<RunReport> {
                 plans
                     .iter()
+                    // lint: allow(panic, "prefill units are built with layer plans two lines above")
                     .map(|p| b.run_on(p.as_layer().expect("prefill unit"), sub))
                     .collect()
             };
@@ -1473,6 +1519,7 @@ fn exec_unit(unit: PlannedUnit, res_tx: &Sender<JobResult>, shared: &Shared) {
                 .flows
                 .iter()
                 .map(|name| {
+                    // lint: allow(panic, "flow names resolved against the registry at plan stage")
                     let b = backend::by_name(name).expect("validated at plan stage");
                     if b.name() == "dense" {
                         dense.clone() // already executed as the baseline
@@ -1481,11 +1528,12 @@ fn exec_unit(unit: PlannedUnit, res_tx: &Sender<JobResult>, shared: &Shared) {
                     }
                 })
                 .collect();
-            let mut parts = acc.parts.lock().unwrap();
+            let mut parts = lock_recover(&acc.parts, &shared.lock_recoveries);
             parts.dense_prefill = dense;
             parts.flow_prefill = flows;
         }
         UnitKind::Step { t, kv_len, plan, resident } => {
+            // lint: allow(panic, "step units are built with step plans by plan_worker")
             let plan = plan.as_step().expect("step unit");
             let exec = StepExec { kv_len, plan, resident: &resident };
             let t0 = Instant::now();
@@ -1494,6 +1542,7 @@ fn exec_unit(unit: PlannedUnit, res_tx: &Sender<JobResult>, shared: &Shared) {
                 .flows
                 .iter()
                 .map(|name| {
+                    // lint: allow(panic, "flow names resolved against the registry at plan stage")
                     let b = backend::by_name(name).expect("validated at plan stage");
                     if b.name() == "dense" {
                         dense
@@ -1502,24 +1551,23 @@ fn exec_unit(unit: PlannedUnit, res_tx: &Sender<JobResult>, shared: &Shared) {
                     }
                 })
                 .collect();
-            shared
-                .agg
-                .lock()
-                .unwrap()
+            lock_recover(&shared.agg, &shared.lock_recoveries)
                 .token_wall
                 .record(t0.elapsed().as_nanos() as f64);
-            let mut parts = acc.parts.lock().unwrap();
+            let mut parts = lock_recover(&acc.parts, &shared.lock_recoveries);
+            // lint: allow(index, "dense_steps sized to the session token count at job assembly")
             parts.dense_steps[t] = Some(dense);
             if parts.flow_steps.is_empty() {
                 parts.flow_steps = vec![vec![None; acc.tokens]; acc.flows.len()];
             }
             for (f, rep) in flows.into_iter().enumerate() {
+                // lint: allow(index, "flow_steps sized flows x tokens four lines above")
                 parts.flow_steps[f][t] = Some(rep);
             }
         }
     }
     {
-        let mut agg = shared.agg.lock().unwrap();
+        let mut agg = lock_recover(&shared.agg, &shared.lock_recoveries);
         let dt = t_exec.elapsed().as_nanos() as f64;
         agg.exec_wall.record(dt);
         agg.exec_total_ns += dt;
@@ -1532,9 +1580,11 @@ fn exec_unit(unit: PlannedUnit, res_tx: &Sender<JobResult>, shared: &Shared) {
     if acc.tokens > 0 {
         shared.live_sessions.exit();
     }
-    let parts = std::mem::take(&mut *acc.parts.lock().unwrap());
+    let parts =
+        std::mem::take(&mut *lock_recover(&acc.parts, &shared.lock_recoveries));
     let fold = |prefill: Vec<RunReport>, steps: Vec<Option<RunReport>>| -> ModelReport {
         let mut all = prefill;
+        // lint: allow(panic, "units_left hit zero, so every step slot was filled")
         all.extend(steps.into_iter().map(|r| r.expect("all units executed")));
         ModelReport::fold(all)
     };
@@ -1549,6 +1599,7 @@ fn exec_unit(unit: PlannedUnit, res_tx: &Sender<JobResult>, shared: &Shared) {
         .iter()
         .zip(parts.flow_prefill.into_iter().zip(flow_steps))
         .map(|(name, (prefill, steps))| {
+            // lint: allow(panic, "flow names resolved against the registry at plan stage")
             let b = backend::by_name(name).expect("validated at plan stage");
             let report = fold(prefill, steps);
             let g = gains(&dense.total, &report.total);
@@ -1592,7 +1643,7 @@ fn exec_worker(
     shared: &Shared,
 ) {
     loop {
-        let unit = match plan_rx.lock().unwrap().recv() {
+        let unit = match lock_recover(plan_rx, &shared.lock_recoveries).recv() {
             Ok(p) => p,
             Err(_) => break, // plan stage closed and drained
         };
@@ -1686,6 +1737,66 @@ mod tests {
         assert!(metrics.wall_p99_ns >= metrics.wall_p50_ns);
         assert!(metrics.plan_queue_peak >= 1);
         assert!(metrics.exec_queue_peak >= 1);
+    }
+
+    #[test]
+    fn poisoned_cache_shard_recovers_and_counts() {
+        let cache: PlanCache<u64> = PlanCache::new(8, 1);
+        let (v, hit) = cache.get_or_build(1, || 10);
+        assert!(!hit);
+        assert_eq!(*v, 10);
+        // Poison the sole shard (scoped thread: the shard lives inside
+        // the cache, not behind its own Arc); lookups must keep serving
+        // the intact map and count the recoveries.
+        std::thread::scope(|s| {
+            let t = s.spawn(|| {
+                let _g = cache.shards[0].lock().unwrap();
+                panic!("simulated worker crash");
+            });
+            assert!(t.join().is_err());
+        });
+        assert!(cache.shards[0].is_poisoned());
+        let (v, hit) = cache.get_or_build(1, || 99);
+        assert!(hit, "poisoned shard must still serve its cached entries");
+        assert_eq!(*v, 10, "recovered map content is intact");
+        assert!(cache.lock_recoveries() >= 1);
+        // A miss still inserts through the poisoned lock.
+        let (v, hit) = cache.get_or_build(2, || 20);
+        assert!(!hit);
+        assert_eq!(*v, 20);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn poisoned_agg_mutex_does_not_cascade_and_is_counted() {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::new(1, 2, sys);
+        // A worker panicking while holding the shared aggregate mutex
+        // used to turn every later `.lock().unwrap()` into a secondary
+        // panic, deadlocking submit/metrics. Simulate the crash, then
+        // prove the service keeps accounting jobs exactly.
+        {
+            let sh = Arc::clone(&coord.shared);
+            let t = std::thread::spawn(move || {
+                let _g = sh.agg.lock().unwrap();
+                panic!("simulated worker crash");
+            });
+            assert!(t.join().is_err());
+        }
+        assert!(coord.shared.agg.is_poisoned());
+        for j in jobs(&spec, 3) {
+            coord.submit(j).unwrap();
+        }
+        let (results, metrics) = coord.drain();
+        assert_eq!(results.len(), 3);
+        assert!(results.iter().all(|r| r.is_ok()));
+        assert!(
+            metrics.lock_recoveries >= 1,
+            "recoveries must be observable: {}",
+            metrics.lock_recoveries
+        );
+        assert_eq!(metrics.jobs_done, 3);
     }
 
     #[test]

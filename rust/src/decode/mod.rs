@@ -235,11 +235,13 @@ impl DecodeSession {
                             step.kv_len
                         ));
                     }
+                    // lint: allow(index, "k >= kv_len rejected just above; seen sized kv_len")
                     if seen[k] {
                         return Err(format!(
                             "step {t} head {h}: duplicate key index {k}"
                         ));
                     }
+                    // lint: allow(index, "k >= kv_len rejected just above; seen sized kv_len")
                     seen[k] = true;
                 }
             }
@@ -270,6 +272,7 @@ impl DecodeSession {
         let mut acc = 0.0;
         let mut rows = 0usize;
         for w in self.steps.windows(2) {
+            // lint: allow(index, "windows(2) yields exactly two elements")
             let (a, b) = (&w[0], &w[1]);
             for (ha, hb) in a.heads.iter().zip(&b.heads) {
                 let inter = hb.iter().filter(|k| ha.contains(k)).count();
@@ -433,6 +436,7 @@ fn residency_impl<T>(
         let per_head: Vec<T> = if t == 0 {
             step.heads.iter().map(|_| finish(Vec::new())).collect()
         } else {
+            // lint: allow(index, "t >= 1 inside the per-step loop")
             let prev = &s.steps[t - 1];
             step.heads
                 .iter()
@@ -441,11 +445,13 @@ fn residency_impl<T>(
                     in_prev.clear();
                     in_prev.resize(prev.kv_len, false);
                     for &k in before {
+                        // lint: allow(index, "in_prev sized to the current kv_len; k < prev.kv_len <= kv_len")
                         in_prev[k] = true;
                     }
                     finish(
                         cur.iter()
                             .copied()
+                            // lint: allow(index, "k < prev.kv_len guard precedes the lookup")
                             .filter(|&k| k < prev.kv_len && in_prev[k])
                             .collect(),
                     )
@@ -486,6 +492,7 @@ pub fn run_session(
     for (t, step) in session.steps.iter().enumerate() {
         let plan = step.plan(opts);
         let resident: Vec<usize> = if carryover {
+            // lint: allow(index, "residency has one entry per step t by construction")
             residency[t].clone()
         } else {
             vec![0; step.heads.len()]

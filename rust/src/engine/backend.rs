@@ -57,6 +57,7 @@ impl PlanSet {
     /// Run Algo 1 over every head mask (θ = `theta_frac · N`).
     pub fn build(masks: &[SelectiveMask], opts: EngineOpts) -> Self {
         assert!(!masks.is_empty(), "no heads to plan");
+        // lint: allow(index, "non-empty masks asserted one line above")
         let n = masks[0].n();
         let theta = (n as f64 * opts.theta_frac) as usize;
         let plans: Vec<HeadPlan> = masks
@@ -80,6 +81,7 @@ impl PlanSet {
 
     /// Token count N (uniform across heads of one trace).
     pub fn n(&self) -> usize {
+        // lint: allow(index, "PlanSet::build rejects empty traces")
         self.plans[0].mask.n()
     }
 
@@ -186,6 +188,7 @@ impl StepPlan {
                 scratch.clear();
                 scratch.resize(dom, false);
                 for &k in cur {
+                    // lint: allow(index, "scratch sized to n; k < n from the plan rows")
                     scratch[k] = true;
                 }
                 // Retained = prev ∩ cur in prev's ascending order;
@@ -193,13 +196,16 @@ impl StepPlan {
                 // marks leaves exactly the arrivals set behind.
                 let mut out = Vec::with_capacity(cur.len());
                 for &k in before {
+                    // lint: allow(index, "scratch sized to n; k < n from the plan rows")
                     if scratch[k] {
                         out.push(k);
+                        // lint: allow(index, "scratch sized to n; k < n from the plan rows")
                         scratch[k] = false;
                     }
                 }
                 // Arrivals = cur \ prev, merged into the ascending run.
                 let mut arrived: Vec<usize> =
+                    // lint: allow(index, "scratch sized to n; k < n from the plan rows")
                     cur.iter().copied().filter(|&k| scratch[k]).collect();
                 arrived.sort_unstable();
                 merge_sorted(&mut out, &arrived);
@@ -244,10 +250,13 @@ fn merge_sorted(base: &mut Vec<usize>, add: &[usize]) {
     base.resize(old + add.len(), 0);
     let (mut i, mut j, mut w) = (old, add.len(), old + add.len());
     while j > 0 {
+        // lint: allow(index, "merge cursors stay in 1..=len by the loop conditions")
         if i > 0 && base[i - 1] > add[j - 1] {
+            // lint: allow(index, "merge cursors stay in 1..=len by the loop conditions")
             base[w - 1] = base[i - 1];
             i -= 1;
         } else {
+            // lint: allow(index, "merge cursors stay in 1..=len by the loop conditions")
             base[w - 1] = add[j - 1];
             j -= 1;
         }
@@ -615,6 +624,7 @@ fn execute_sata_core(
                 let mut live_total = 0usize;
                 for k in 0..n_h {
                     if m.col_popcount(k) > 0 {
+                        // lint: allow(index, "k < n and the vec is sized n.div_ceil(sf)")
                         live_per_kf[k / sf] += 1;
                         live_total += 1;
                     }
@@ -691,6 +701,7 @@ impl FlowBackend for DenseBackend {
     ) -> RunReport {
         match sched {
             FlowSchedule::Whole(s) => execute_dense_core(plans, s, cim),
+            // lint: allow(panic, "dense builds Whole schedules only; Tiled here is a registry bug")
             FlowSchedule::Tiled(_) => unreachable!("dense flow schedules whole-head"),
         }
     }
@@ -728,6 +739,7 @@ impl FlowBackend for GatedBackend {
     ) -> RunReport {
         let mut rep = match sched {
             FlowSchedule::Whole(s) => execute_gated_core(plans, s, cim),
+            // lint: allow(panic, "gated builds Whole schedules only; Tiled here is a registry bug")
             FlowSchedule::Tiled(_) => unreachable!("gated flow schedules whole-head"),
         };
         for p in &plans.plans {

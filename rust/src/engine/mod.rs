@@ -86,6 +86,7 @@ pub fn chunked_k_uses_ref(
             for &q in chunk {
                 for k in 0..n {
                     if mask.get(q, k) {
+                        // lint: allow(index, "seen sized to mask.n(); k ranges over mask rows")
                         seen[k] = true;
                     }
                 }

@@ -282,7 +282,10 @@ impl SystolicSubstrate {
     /// The design's own un-scheduled selective execution on this array
     /// (fragmented demand fetches), memoized by plan-set fingerprint.
     fn baseline(&self, plans: &PlanSet) -> RunReport {
-        let mut memo = self.baseline_memo.lock().unwrap();
+        // Poison-tolerant: a worker that panicked mid-`execute` never
+        // holds this lock half-written (the memo is replaced atomically
+        // below), so the memo stays valid to serve.
+        let mut memo = crate::util::sync::lock_tolerant(&self.baseline_memo);
         if let Some((fp, rep)) = *memo {
             if fp == plans.fingerprint {
                 return rep;
@@ -428,7 +431,9 @@ fn first_occurrence(seq: impl Iterator<Item = usize>, n: usize) -> Vec<usize> {
     let mut seen = vec![false; n];
     let mut out = Vec::new();
     for q in seq {
+        // lint: allow(index, "q < n guard precedes the lookup")
         if q < n && !seen[q] {
+            // lint: allow(index, "q < n guard precedes the lookup")
             seen[q] = true;
             out.push(q);
         }

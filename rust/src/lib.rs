@@ -38,6 +38,8 @@
 //! * [`metrics`]   - reports and gain tables
 //! * [`util`]      - in-tree RNG / JSON / stats / property-test / bench
 //!   infrastructure (offline build: no external crates)
+//! * [`analysis`]  - self-hosted static analysis (`sata lint`): hot-path
+//!   panic-freedom, lock-order discipline, cross-artifact drift
 //!
 //! ## Quick start
 //!
@@ -60,6 +62,7 @@
 
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod baselines;
 pub mod cluster;
 pub mod config;

@@ -69,7 +69,7 @@ use sata::trace::TraceDir;
 /// `usage_and_accepted_flags_agree` unit test, and at run time by
 /// [`check_flags`].
 const USAGE: &str = "sata — SATA reproduction CLI
-usage: sata <trace-gen|schedule|simulate|flows|serve|e2e> [flags]
+usage: sata <trace-gen|schedule|simulate|flows|serve|e2e|lint> [flags]
   common: [--workload ttst|kvt-tiny|kvt-base|drsformer] [--seed N]
   trace-gen: [--count N] [--out DIR] [--layers L] [--rho R]
              [--steps S] [--kappa K]     # L>1 → model files; S>0 → sessions
@@ -83,6 +83,7 @@ usage: sata <trace-gen|schedule|simulate|flows|serve|e2e> [flags]
              [--nodes N] [--route affinity|rr] [--admit CAP]
              [--arrival-rate R]          # fleet mode (see below)
   e2e:       [--artifacts DIR]           # PJRT end-to-end
+  lint:      (self-hosted static analysis; exits 1 on findings)
 flows: FLOW ∈ registered backends (see `sata flows`); SUB ∈ cim|systolic
 model requests: --layers/--rho shape multi-layer requests (rho =
   cross-layer selection overlap in [0,1]); decode sessions: --steps
@@ -119,6 +120,7 @@ const SUBCOMMANDS: &[(&str, &[&str])] = &[
         ],
     ),
     ("e2e", &["artifacts", "seed"]),
+    ("lint", &[]),
 ];
 
 /// Reject flags the subcommand does not read — the anti-drift guarantee
@@ -891,6 +893,16 @@ fn main() {
                 "e2e gains: throughput {:.2}x, energy {:.2}x",
                 g.throughput, g.energy_eff
             );
+        }
+        "lint" => {
+            // The binary lives at rust/target/..; the lint root is the
+            // repo directory holding rust/, README.md, and BENCH_*.json.
+            let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+            let report = sata::analysis::run_lint(&root);
+            print!("{}", report.render());
+            if !report.is_clean() {
+                std::process::exit(1);
+            }
         }
         _ => {
             println!("{USAGE}");

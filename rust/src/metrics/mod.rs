@@ -239,7 +239,9 @@ pub fn render_session_rollup(
     ));
     for (name, r) in rows {
         let split = prefill_layers.min(r.layers.len());
+        // lint: allow(index, "split clamped to layers.len() one line above")
         let prefill_ns: f64 = r.layers[..split].iter().map(|l| l.latency_ns).sum();
+        // lint: allow(index, "split clamped to layers.len() two lines above")
         let decode_ns: f64 = r.layers[split..].iter().map(|l| l.latency_ns).sum();
         let per_token = if tokens > 0 { decode_ns / tokens as f64 } else { 0.0 };
         let g = crate::engine::gains(&base.total, &r.total);
@@ -357,6 +359,7 @@ mod tests {
             steps_cache_hit: 2,
             steps_planned_cold: 1,
             steps_planned_delta: 1,
+            lock_recoveries: 0,
             wall_p50_ns: 1e6,
             wall_p95_ns: 2e6,
             wall_p99_ns: 3e6,

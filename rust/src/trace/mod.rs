@@ -237,7 +237,7 @@ impl TraceDir {
 
     /// Whether any files remain.
     pub fn is_empty(&self) -> bool {
-        self.paths.len() == 0
+        self.paths.is_empty()
     }
 }
 

@@ -112,8 +112,10 @@ pub fn gen_model(spec: &WorkloadSpec, n_layers: usize, rho: f64, seed: u64) -> M
     layers.push(gen_trace(spec, seed));
     for l in 1..n_layers {
         let layer = if l <= copies {
+            // lint: allow(index, "l >= 1 inside the per-layer loop")
             layers[l - 1].clone() // verbatim re-selection (cache-hit path)
         } else {
+            // lint: allow(index, "l >= 1 inside the per-layer loop")
             blend_layer(spec, &layers[l - 1], rho, &mut rng)
         };
         layers.push(layer);
@@ -186,8 +188,10 @@ pub fn gen_session(
             fresh_step(spec, kv, &mut rng)
         } else if t <= copies {
             // verbatim re-selection over the grown KV set (hit path)
+            // lint: allow(index, "t >= 1 inside the per-step loop")
             StepMask { kv_len: kv, heads: steps[t - 1].heads.clone() }
         } else {
+            // lint: allow(index, "t >= 1 inside the per-step loop")
             blend_step(spec, &steps[t - 1], kv, kappa, &mut rng)
         };
         steps.push(step);
@@ -350,9 +354,11 @@ impl Iterator for ArrivalGen {
             self.spec.decode_frac > 0.0 && self.rng.chance(self.spec.decode_frac);
         let request = if decode {
             let i = self.rng.gen_range(self.sessions.len());
+            // lint: allow(index, "gen_range draws below sessions.len()")
             Request::Decode(self.sessions[i].clone())
         } else {
             let i = self.rng.gen_range(self.models.len());
+            // lint: allow(index, "gen_range draws below models.len()")
             Request::Model(self.models[i].clone())
         };
         Some(Arrival { at_ns: self.t_ns, request })
@@ -403,16 +409,24 @@ fn blend_step(
             let mut used = vec![false; kv];
             let mut sel = Vec::with_capacity(k_row);
             for pos in rng.sample_indices(pk.len(), keep) {
+                // lint: allow(index, "sample_indices draws below prev kv_len")
                 let key = pk[pos]; // < prev kv_len < kv, always in range
+                // lint: allow(index, "used sized to kv; key < kv")
                 if !used[key] {
+                    // lint: allow(index, "used sized to kv; key < kv")
                     used[key] = true;
                     sel.push(key);
                 }
             }
             let mut fill = fk.iter().copied().chain(0..kv);
             while sel.len() < k_row {
-                let key = fill.next().expect("kv indices suffice for a TopK row");
+                // The chain ends in 0..kv ⊇ every candidate, so this can
+                // only exhaust if k_row was clamped wrong — under-fill the
+                // row rather than panicking a worker thread.
+                let Some(key) = fill.next() else { break };
+                // lint: allow(index, "fill chain yields indices below kv")
                 if !used[key] {
+                    // lint: allow(index, "fill chain yields indices below kv")
                     used[key] = true;
                     sel.push(key);
                 }
@@ -443,15 +457,22 @@ fn blend_layer(spec: &WorkloadSpec, prev: &MaskTrace, rho: f64, rng: &mut Rng) -
                 let mut sel = Vec::with_capacity(k_row);
                 if keep > 0 {
                     for pos in rng.sample_indices(k_row, keep) {
+                        // lint: allow(index, "sample_indices draws below k_row <= prev_keys.len()")
                         let k = prev_keys[pos];
+                        // lint: allow(index, "used sized to n; k < n")
                         used[k] = true;
                         sel.push(k);
                     }
                 }
                 let mut fill = (0..n).filter(|&k| fresh.get(q, k)).chain(0..n);
                 while sel.len() < k_row {
-                    let k = fill.next().expect("n indices suffice for a TopK row");
+                    // Same under-fill-not-panic stance as `gen_trace`'s
+                    // row fill: the trailing 0..n makes None unreachable
+                    // unless k_row was mis-clamped upstream.
+                    let Some(k) = fill.next() else { break };
+                    // lint: allow(index, "fill chain yields indices below n")
                     if !used[k] {
+                        // lint: allow(index, "fill chain yields indices below n")
                         used[k] = true;
                         sel.push(k);
                     }

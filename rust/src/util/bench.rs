@@ -299,6 +299,6 @@ mod tests {
         assert!(fmt_ns(5.0).ends_with("ns"));
         assert!(fmt_ns(5e3).ends_with("µs"));
         assert!(fmt_ns(5e6).ends_with("ms"));
-        assert!(fmt_ns(5e9).ends_with("s"));
+        assert!(fmt_ns(5e9).ends_with('s'));
     }
 }

@@ -18,14 +18,22 @@ fn validate_snapshot(j: &Json, expect_name: &str) {
         for key in
             ["median_ns", "mean_ns", "p10_ns", "p90_ns", "iters_per_sample", "samples"]
         {
-            assert!(s.get(key).as_f64().is_some(), "sample missing numeric '{key}'");
+            let v = s.get(key).as_f64();
+            assert!(v.is_some(), "sample missing numeric '{key}'");
+            assert!(
+                v.is_some_and(f64::is_finite),
+                "sample '{key}' is not finite"
+            );
         }
     }
     let metrics = j.get("metrics").as_arr().expect("'metrics' must be an array");
     for m in metrics {
-        assert!(m.get("key").as_str().is_some(), "metric missing 'key'");
-        assert!(m.get("value").as_f64().is_some(), "metric missing numeric 'value'");
-        assert!(m.get("unit").as_str().is_some(), "metric missing 'unit'");
+        let key = m.get("key").as_str().expect("metric missing 'key'");
+        assert!(!key.is_empty(), "metric has an empty 'key'");
+        let value = m.get("value").as_f64().expect("metric missing numeric 'value'");
+        assert!(value.is_finite(), "metric '{key}' value is not finite");
+        let unit = m.get("unit").as_str().expect("metric missing 'unit'");
+        assert!(!unit.is_empty(), "metric '{key}' has an empty 'unit'");
     }
     assert!(
         !samples.is_empty() || !metrics.is_empty(),

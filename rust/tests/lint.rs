@@ -1,0 +1,114 @@
+//! Tier-1 self-test for the `lint` subsystem (`sata lint`).
+//!
+//! Two halves:
+//!
+//! * the **live tree lints clean** — the panic/index/lock/waiver/drift
+//!   families find nothing in the repo as committed, and the waiver
+//!   count stays within the global budget;
+//! * the **fixture corpus trips every family** — a mini repo root
+//!   under `tests/lint_fixtures/` seeds one of each violation class,
+//!   and each must surface as a finding (so a lint that silently stops
+//!   firing fails the build, not just a lint that over-fires).
+
+use std::path::{Path, PathBuf};
+
+use sata::analysis::{run_lint, Family, Finding, LintReport};
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+fn fixture_report() -> LintReport {
+    run_lint(&repo_root().join("rust/tests/lint_fixtures"))
+}
+
+/// Assert some finding of `family` anchored to a file containing
+/// `file_part` mentions `msg_part`.
+fn assert_finding(report: &LintReport, family: Family, file_part: &str, msg_part: &str) {
+    assert!(
+        report.findings.iter().any(|f| f.family == family
+            && f.file.contains(file_part)
+            && f.message.contains(msg_part)),
+        "expected a [{family}] finding in *{file_part}* mentioning {msg_part:?};\ngot:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn live_tree_is_lint_clean() {
+    let report = run_lint(&repo_root());
+    assert!(
+        report.is_clean(),
+        "the live tree must lint clean; findings:\n{}",
+        report.render()
+    );
+    assert!(
+        report.waivers_used <= report.waiver_budget,
+        "waivers in use ({}) exceed the budget ({})",
+        report.waivers_used,
+        report.waiver_budget
+    );
+    assert!(
+        report.files_scanned > 30,
+        "suspiciously few files scanned ({}) — lint root miswired?",
+        report.files_scanned
+    );
+}
+
+#[test]
+fn fixture_trips_panic_and_index_and_honours_waivers() {
+    let report = fixture_report();
+    assert!(!report.is_clean(), "fixture corpus must not lint clean");
+    assert_finding(&report, Family::Panic, "coordinator/mod.rs", ".unwrap()");
+    assert_finding(&report, Family::Index, "coordinator/mod.rs", "indexing");
+    // The waived `xs[3]` consumed exactly one waiver, and no index
+    // finding lands on the waived line.
+    assert_eq!(report.waivers_used, 1, "exactly the waived site consumes a waiver");
+    let src = std::fs::read_to_string(
+        repo_root().join("rust/tests/lint_fixtures/rust/src/coordinator/mod.rs"),
+    )
+    .expect("fixture source");
+    let waived_line = 1 + src
+        .lines()
+        .position(|l| l.contains("lint: allow(index"))
+        .expect("waived site present")
+        + 1; // the waiver comment sits directly above the indexing line
+    let on_waived: Vec<&Finding> = report
+        .findings
+        .iter()
+        .filter(|f| f.family == Family::Index && f.line == waived_line)
+        .collect();
+    assert!(on_waived.is_empty(), "waived line still flagged: {on_waived:?}");
+}
+
+#[test]
+fn fixture_trips_waiver_bookkeeping() {
+    let report = fixture_report();
+    assert_finding(&report, Family::Waiver, "coordinator/mod.rs", "stale waiver");
+    assert_finding(&report, Family::Waiver, "coordinator/mod.rs", "unknown family");
+}
+
+#[test]
+fn fixture_trips_lock_discipline() {
+    let report = fixture_report();
+    assert_finding(&report, Family::Lock, "coordinator/mod.rs", "lock order");
+    assert_finding(&report, Family::Lock, "coordinator/mod.rs", "send");
+    assert_finding(&report, Family::Lock, "coordinator/mod.rs", "lock-order manifest");
+}
+
+#[test]
+fn fixture_trips_every_drift_check() {
+    let report = fixture_report();
+    // Snapshot family: missing baseline, bench absent from CI, orphan.
+    assert_finding(&report, Family::Drift, "benches/ghost.rs", "is not committed");
+    assert_finding(&report, Family::Drift, "benches/ghost.rs", "--bench ghost");
+    assert_finding(&report, Family::Drift, "BENCH_orphan.json", "orphaned snapshot");
+    // CLI family: usage/table/README disagreement.
+    assert_finding(&report, Family::Drift, "main.rs", "--ghost-flag");
+    assert_finding(&report, Family::Drift, "main.rs", "--hidden");
+    assert_finding(&report, Family::Drift, "main.rs", "`phantom` is absent");
+    assert_finding(&report, Family::Drift, "README.md", "--frobnicate");
+    // Doc paths and registry names.
+    assert_finding(&report, Family::Drift, "README.md", "src/ghost.rs");
+    assert_finding(&report, Family::Drift, "DESIGN.md", "`systolic`");
+}

@@ -1,0 +1,8 @@
+//! Lint fixture: a bench that emits a snapshot nothing commits and CI
+//! never smoke-runs. Test data only — never compiled.
+
+fn main() {
+    let mut b = Bench::new();
+    b.run("ghost.step", || {});
+    b.emit_snapshot("ghost").expect("emit");
+}

@@ -1,0 +1,49 @@
+//! Lint fixture: a hot-path module seeded with one of every violation
+//! the `panic`, `index`, `lock`, and `waiver` families must catch.
+//! This tree is test data for `tests/lint.rs` — it is never compiled.
+
+use std::sync::{mpsc, Mutex};
+
+/// A shard-shaped struct so lock receivers classify like the real ones.
+pub struct Shard {
+    pub shard: Mutex<Vec<u64>>,
+    pub job_tx: Mutex<mpsc::Sender<u64>>,
+    pub mystery: Mutex<u64>,
+}
+
+pub fn seeded_unwrap(v: Option<u64>) -> u64 {
+    v.unwrap()
+}
+
+pub fn seeded_index(xs: &[u64]) -> u64 {
+    xs[3]
+}
+
+pub fn waived_index(xs: &[u64]) -> u64 {
+    // lint: allow(index, "fixture invariant: callers pass four elements")
+    xs[3]
+}
+
+// lint: allow(panic, "stale: nothing on the covered line can panic")
+pub fn stale_waiver_site() -> u64 {
+    7
+}
+
+// lint: allow(frobnicate, "no such lint family")
+pub fn unknown_family_site() -> u64 {
+    8
+}
+
+pub fn inverted_order(s: &Shard) {
+    let _shard = lock_recover(&s.shard, "fixture shard");
+    let _tx = lock_recover(&s.job_tx, "fixture intake under shard");
+}
+
+pub fn send_under_shard_lock(s: &Shard, tx: &mpsc::Sender<u64>) {
+    let _shard = lock_recover(&s.shard, "fixture shard");
+    tx.send(1).ok();
+}
+
+pub fn unclassified_lock(s: &Shard) {
+    let _m = lock_recover(&s.mystery, "not in the manifest");
+}

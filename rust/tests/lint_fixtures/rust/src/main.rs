@@ -1,0 +1,15 @@
+//! Lint fixture: a CLI surface whose help text, parser table, and
+//! README have drifted apart. Test data only — never compiled.
+
+const USAGE: &str = "fixture CLI
+usage: fixture <run> [flags]
+  run: [--jobs N] [--ghost-flag X]";
+
+const SUBCOMMANDS: &[(&str, &[&str])] = &[
+    ("run", &["jobs", "hidden"]),
+    ("phantom", &[]),
+];
+
+fn main() {
+    println!("{USAGE} {SUBCOMMANDS:?}");
+}
