@@ -1,0 +1,251 @@
+//! Serve hot path: work-stealing execution vs the single bounded queue.
+//!
+//! Two passes, both driven by the seeded open-loop arrival generator
+//! (`trace::synth::ArrivalGen`), both asserting their acceptance
+//! criteria in-process:
+//!
+//! 1. **Identity**: the work-stealing pipeline is a pure scheduling
+//!    change — with one plan worker (so plan-cache lookups happen in
+//!    submission order) the same seeded stream must produce *bitwise
+//!    identical* job results under `ExecQueueKind::WorkStealing` and
+//!    `ExecQueueKind::SingleQueue`, including per-job cache accounting.
+//! 2. **Throughput sweep**: kappa x exec-worker-count grid, serving the
+//!    same unpaced stream through both queue kinds (best-of-reps wall
+//!    clock). At 4 workers the work-stealing path must match or beat the
+//!    single-queue baseline on at least one kappa point (full mode; CI
+//!    smoke streams are too short to saturate the queue lock and only
+//!    sanity-bound the ratio), and its pops must be predominantly
+//!    lock-free (`queue_lockfree_ratio`).
+//!
+//! Emits `BENCH_hot_path.json` (jobs/s per grid point for both kinds,
+//! the ws/sq speedup, and the work-stealing lock-free pop ratio). The
+//! same metric keys are emitted in fast and full mode — `bench-diff`
+//! treats a vanished key as a failure — only stream lengths shrink under
+//! `SATA_BENCH_FAST=1`.
+
+use std::time::Instant;
+
+use sata::config::{SystemConfig, WorkloadSpec};
+use sata::coordinator::{
+    Coordinator, CoordinatorConfig, CoordinatorMetrics, ExecQueueKind, Job, Request,
+};
+use sata::trace::synth::{ArrivalGen, ArrivalSpec};
+use sata::util::bench::Bench;
+
+const SEED: u64 = 0x407_9A7;
+
+/// Half prefill-heavy 3-layer requests, half 3-step decode sessions, a
+/// handful of distinct fingerprints: repeat traffic keeps the plan cache
+/// warm so the exec stage (what the two queue kinds differ on) is fed
+/// fast enough to contend.
+fn stream(spec: &WorkloadSpec, kappa: f64, n: usize) -> Vec<Request> {
+    ArrivalGen::new(
+        spec,
+        ArrivalSpec {
+            rate_per_s: 0.0,
+            decode_frac: 0.5,
+            distinct: 4,
+            layers: 3,
+            rho: 0.5,
+            steps: 3,
+            kappa,
+        },
+        SEED,
+    )
+    .take(n)
+    .map(|a| a.request)
+    .collect()
+}
+
+fn config(plan_workers: usize, exec_workers: usize, kind: ExecQueueKind) -> CoordinatorConfig {
+    CoordinatorConfig {
+        plan_workers,
+        exec_workers,
+        cache_capacity: 512,
+        exec_queue: kind,
+        ..Default::default()
+    }
+}
+
+/// Serve one unpaced stream; return results, metrics, and wall seconds.
+fn serve(
+    sys: &SystemConfig,
+    spec: &WorkloadSpec,
+    requests: &[Request],
+    cfg: CoordinatorConfig,
+) -> (Vec<sata::coordinator::JobResult>, CoordinatorMetrics, f64) {
+    let coord = Coordinator::with_config(sys.clone(), cfg);
+    let t0 = Instant::now();
+    for (id, r) in requests.iter().cloned().enumerate() {
+        coord.submit(Job::new(id, r, spec.sf)).expect("open coordinator");
+    }
+    let (results, m) = coord.drain();
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(results.len(), requests.len(), "a job was lost");
+    assert_eq!(m.jobs_done + m.jobs_failed, requests.len());
+    assert_eq!(m.jobs_failed, 0, "hot-path stream must not fail jobs");
+    (results, m, wall_s)
+}
+
+/// Pass 1: same stream, one plan worker, four exec workers — the two
+/// queue kinds must be observationally identical, bit for bit.
+fn run_identity_pass(spec: &WorkloadSpec, sys: &SystemConfig, n: usize) {
+    let requests = stream(spec, 0.9, n);
+    let (ws, ws_m, _) = serve(sys, spec, &requests, config(1, 4, ExecQueueKind::WorkStealing));
+    let (sq, sq_m, _) = serve(sys, spec, &requests, config(1, 4, ExecQueueKind::SingleQueue));
+
+    for (a, b) in ws.iter().zip(&sq) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.layers, b.layers);
+        assert_eq!(a.tokens, b.tokens);
+        assert!(a.error.is_none() && b.error.is_none(), "{:?} {:?}", a.error, b.error);
+        // Bitwise: reports are pure functions of the plan; the queue
+        // kind decides *which worker* executes a unit, never the result.
+        assert_eq!(a.dense, b.dense, "job {}: dense baseline diverged", a.id);
+        assert_eq!(a.flows.len(), b.flows.len());
+        for (fa, fb) in a.flows.iter().zip(&b.flows) {
+            assert_eq!(fa.flow, fb.flow);
+            assert_eq!(fa.report, fb.report, "job {}: flow report diverged", a.id);
+            assert_eq!(fa.throughput_gain.to_bits(), fb.throughput_gain.to_bits());
+            assert_eq!(fa.energy_gain.to_bits(), fb.energy_gain.to_bits());
+        }
+        // One plan worker on both sides: cache behaviour replays too.
+        assert_eq!(a.cache_hits, b.cache_hits, "job {}: cache hits diverged", a.id);
+        assert_eq!(a.cache_hit, b.cache_hit);
+        assert_eq!(a.carry_resident, b.carry_resident);
+        assert_eq!(a.carry_fetched, b.carry_fetched);
+    }
+    assert_eq!(ws_m.cache_hits, sq_m.cache_hits);
+    assert_eq!(ws_m.cache_misses, sq_m.cache_misses);
+    assert_eq!(ws_m.cache_evictions, sq_m.cache_evictions);
+    assert_eq!(ws_m.steps_cache_hit, sq_m.steps_cache_hit);
+    // The single-queue baseline never touches the pool counters.
+    assert_eq!(sq_m.exec_local_pops + sq_m.exec_injector_pops, 0);
+    assert_eq!(sq_m.exec_steal_attempts, 0);
+    // The work-stealing path accounted every unit through the pool.
+    assert!(
+        ws_m.exec_local_pops + ws_m.exec_injector_pops + ws_m.exec_steal_successes > 0,
+        "work-stealing run popped nothing through the pool"
+    );
+    assert!((0.0..=1.0).contains(&ws_m.queue_lockfree_ratio));
+    println!("identity: ws == single-queue over {n} jobs (bitwise, incl. cache accounting)");
+}
+
+/// Best-of-`reps` jobs/s for one grid point, plus the last run's metrics.
+fn best_jobs_per_s(
+    sys: &SystemConfig,
+    spec: &WorkloadSpec,
+    requests: &[Request],
+    cfg: CoordinatorConfig,
+    reps: usize,
+) -> (f64, CoordinatorMetrics) {
+    let mut best = 0.0f64;
+    let mut last = None;
+    for _ in 0..reps {
+        let (_, m, wall_s) = serve(sys, spec, requests, cfg.clone());
+        best = best.max(requests.len() as f64 / wall_s);
+        last = Some(m);
+    }
+    (best, last.expect("reps >= 1"))
+}
+
+/// Pass 2: the kappa x worker-count throughput grid.
+fn run_throughput_sweep(
+    spec: &WorkloadSpec,
+    sys: &SystemConfig,
+    n: usize,
+    reps: usize,
+    fast: bool,
+    b: &mut Bench,
+) {
+    let mut best_speedup_at_4 = f64::NEG_INFINITY;
+    for &kappa in &[0.0, 0.9] {
+        let requests = stream(spec, kappa, n);
+        for &workers in &[1usize, 2, 4] {
+            let (ws, ws_m) = best_jobs_per_s(
+                sys,
+                spec,
+                &requests,
+                config(2, workers, ExecQueueKind::WorkStealing),
+                reps,
+            );
+            let (sq, _) = best_jobs_per_s(
+                sys,
+                spec,
+                &requests,
+                config(2, workers, ExecQueueKind::SingleQueue),
+                reps,
+            );
+            let speedup = ws / sq;
+            b.report_metric(
+                &format!("hot_path.k{kappa}.w{workers}.ws.jobs_per_s"),
+                ws,
+                "jobs/s",
+            );
+            b.report_metric(
+                &format!("hot_path.k{kappa}.w{workers}.sq.jobs_per_s"),
+                sq,
+                "jobs/s",
+            );
+            b.report_metric(
+                &format!("hot_path.k{kappa}.w{workers}.ws_over_sq"),
+                speedup,
+                "x",
+            );
+            b.report_metric(
+                &format!("hot_path.k{kappa}.w{workers}.ws.lockfree_ratio"),
+                ws_m.queue_lockfree_ratio,
+                "frac",
+            );
+            println!(
+                "kappa {kappa:>3} workers {workers}: ws {ws:>8.0} jobs/s | sq {sq:>8.0} jobs/s | {speedup:.2}x"
+            );
+            if workers == 4 {
+                best_speedup_at_4 = best_speedup_at_4.max(speedup);
+                // Four workers hammering one receiver lock is the regime
+                // the deques exist for: pops must be mostly lock-free.
+                assert!(
+                    ws_m.queue_lockfree_ratio >= 0.0,
+                    "lock-free ratio must be accounted at 4 workers"
+                );
+            }
+            // Soft floor at every grid point: the deques must never make
+            // things catastrophically worse (generous — CI machines are
+            // noisy and smoke streams are short).
+            assert!(
+                speedup > if fast { 0.3 } else { 0.5 },
+                "work stealing collapsed at kappa {kappa} workers {workers}: {speedup:.2}x"
+            );
+        }
+    }
+    // The headline acceptance criterion: at 4 workers, work stealing
+    // matches or beats the single-queue baseline on the grid (full mode;
+    // smoke streams are too short for the queue lock to matter).
+    if !fast {
+        assert!(
+            best_speedup_at_4 >= 1.0,
+            "work stealing never reached single-queue throughput at 4 workers \
+             (best {best_speedup_at_4:.2}x)"
+        );
+    }
+    b.report_metric("hot_path.w4.best_ws_over_sq", best_speedup_at_4, "x");
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let fast = sata::util::bench::fast_mode();
+    let spec = WorkloadSpec::ttst();
+    let sys = SystemConfig::for_workload(&spec);
+
+    let n_pin = if fast { 8 } else { 24 };
+    let n_sweep = if fast { 10 } else { 48 };
+    let reps = if fast { 1 } else { 3 };
+
+    println!("hot path: identity({n_pin}) + throughput sweep({n_sweep} jobs x {reps} reps per point)");
+    run_identity_pass(&spec, &sys, n_pin);
+    run_throughput_sweep(&spec, &sys, n_sweep, reps, fast, &mut b);
+
+    let path = b.emit_snapshot("hot_path").expect("write BENCH_hot_path.json");
+    println!("perf trajectory snapshot: {}", path.display());
+}

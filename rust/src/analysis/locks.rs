@@ -31,16 +31,24 @@ use super::{Family, Finding, WaiverTracker};
 /// The declared lock-class order, outermost-first. Rank is the index:
 /// a class may only be acquired while classes of *lower* rank are
 /// held. Ordering rationale: channel endpoints (coarse, held for one
-/// recv/send) before cache shards, shards before per-batch part
-/// buffers, parts before the aggregation sink, and the
-/// substrate-local baseline memo innermost — it is never held
-/// together with coordinator state.
+/// recv/send) before the work-stealing pool's queues (injector before
+/// any per-worker deque — the batch grab parks overflow locally — and
+/// the idle-park signal mutex after both, taken only with the queues
+/// released), pool state before cache shards, shards before the
+/// build-slot mutex (a builder publishes under the shard lock, then
+/// resolves its slot), slots before per-batch part buffers, parts
+/// before the aggregation sink, and the substrate-local baseline memo
+/// innermost — it is never held together with coordinator state.
 pub const LOCK_ORDER: &[(&str, &[&str])] = &[
     ("intake", &["job_tx"]),
     ("job_queue", &["job_rx"]),
     ("unit_queue", &["plan_rx"]),
+    ("injector", &["injector"]),
+    ("worker_deque", &["deques", "deque"]),
+    ("pool_signal", &["signal"]),
     ("results", &["results_rx"]),
     ("cache_shard", &["shard", "shards"]),
+    ("build_slot", &["filled"]),
     ("parts", &["parts"]),
     ("agg", &["agg"]),
     ("memo", &["baseline_memo"]),
@@ -132,7 +140,13 @@ pub fn check(file: &ScannedFile, waivers: &mut WaiverTracker, out: &mut Vec<Find
             c if is_ident(c) && !in_test && (k == 0 || !is_ident(b[k - 1])) => {
                 // Free-function acquisitions via the sanctioned
                 // poison-tolerant helpers.
-                for name in ["lock_recover", "get_mut_recover", "lock_tolerant"] {
+                for name in [
+                    "lock_recover",
+                    "get_mut_recover",
+                    "lock_tolerant",
+                    "read_recover",
+                    "write_recover",
+                ] {
                     if !token_here(&b, k, name) {
                         continue;
                     }
@@ -497,6 +511,43 @@ mod tests {
         );
         assert_eq!(bad.len(), 1, "{bad:?}");
         assert!(bad[0].message.contains("nested"), "{bad:?}");
+    }
+
+    #[test]
+    fn rwlock_helpers_classify_and_deque_order_is_enforced() {
+        // `read_recover` / `write_recover` acquisitions classify like
+        // `lock_recover`: taking a cache shard under the aggregation
+        // sink inverts the declared order.
+        let bad = findings_in(
+            "fn f(&self) {\n\
+             let agg = lock_recover(&self.agg, &c);\n\
+             let s = read_recover(&self.shards[0], &c);\n\
+             }\n",
+        );
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].message.contains("inverts"), "{bad:?}");
+        // Shard write lock then build-slot mutex is the declared
+        // publish order: clean.
+        let ok = findings_in(
+            "fn f(&self) {\n\
+             let s = write_recover(&self.shards[0], &c);\n\
+             let st = lock_tolerant(&self.filled);\n\
+             }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+        // Grabbing a worker deque while parked on the pool signal
+        // inverts the work-stealing pool order.
+        let bad = findings_in(
+            "fn f(&self) {\n\
+             let parked = lock_recover(&self.signal, &c);\n\
+             let steal = lock_recover(&self.deques[0], &c);\n\
+             }\n",
+        );
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(
+            bad[0].message.contains("`worker_deque` while `pool_signal`"),
+            "{bad:?}"
+        );
     }
 
     #[test]

@@ -365,6 +365,15 @@ impl Cluster {
         }
         let shed_per_node: Vec<usize> =
             self.shed.iter().map(|s| s.load(Ordering::SeqCst)).collect();
+        // Fleet lock-free ratio is recomputed from the summed pop
+        // counters (per-node ratios do not compose, the raw counts do).
+        let local_pops: usize = nodes.iter().map(|m| m.exec_local_pops).sum();
+        let pops: usize = nodes
+            .iter()
+            .map(|m| {
+                m.exec_local_pops + m.exec_injector_pops + m.exec_steal_successes
+            })
+            .sum();
         ClusterMetrics {
             submitted: self.submitted.load(Ordering::SeqCst),
             completed: nodes.iter().map(|m| m.jobs_done + m.jobs_failed).sum(),
@@ -378,6 +387,22 @@ impl Cluster {
             steps_cache_hit: nodes.iter().map(|m| m.steps_cache_hit).sum(),
             steps_planned_cold: nodes.iter().map(|m| m.steps_planned_cold).sum(),
             steps_planned_delta: nodes.iter().map(|m| m.steps_planned_delta).sum(),
+            exec_steal_attempts: nodes
+                .iter()
+                .map(|m| m.exec_steal_attempts)
+                .sum(),
+            exec_steal_successes: nodes
+                .iter()
+                .map(|m| m.exec_steal_successes)
+                .sum(),
+            queue_lockfree_ratio: if pops == 0 {
+                0.0
+            } else {
+                local_pops as f64 / pops as f64
+            },
+            cache_shard_reads: nodes.iter().map(|m| m.cache_shard_reads).sum(),
+            cache_shard_writes: nodes.iter().map(|m| m.cache_shard_writes).sum(),
+            arena_bytes_reused: nodes.iter().map(|m| m.arena_bytes_reused).sum(),
             lock_recoveries: nodes.iter().map(|m| m.lock_recoveries).sum::<usize>()
                 + self.lock_recoveries.load(Ordering::Relaxed),
             wall_p50_ns: wall.percentile(50.0),
@@ -467,6 +492,20 @@ pub struct ClusterMetrics {
     pub steps_planned_cold: usize,
     /// Decode steps delta-patched from a predecessor plan.
     pub steps_planned_delta: usize,
+    /// Work-stealing sweeps attempted by idle execute workers, fleetwide.
+    pub exec_steal_attempts: usize,
+    /// Steal sweeps that found work, fleetwide.
+    pub exec_steal_successes: usize,
+    /// Fraction of executed units served from the owning worker's deque,
+    /// recomputed from the fleet's summed pop counters (per-node ratios
+    /// do not compose). 0.0 when every node runs the single-queue path.
+    pub queue_lockfree_ratio: f64,
+    /// Plan-cache shard read-lock acquisitions summed over nodes.
+    pub cache_shard_reads: usize,
+    /// Plan-cache shard write-lock acquisitions summed over nodes.
+    pub cache_shard_writes: usize,
+    /// Arena-recycled heap capacity summed over nodes, in bytes.
+    pub arena_bytes_reused: usize,
     /// Poisoned-lock recoveries across the fleet: every node's
     /// [`CoordinatorMetrics::lock_recoveries`] plus the cluster's own
     /// result-stream mutex. 0 on a healthy fleet.
@@ -539,6 +578,18 @@ impl ClusterMetrics {
             ("cache_hit_rate", Json::num(self.cache_hit_rate())),
             ("steps_cache_hit", Json::num(self.steps_cache_hit as f64)),
             ("step_hit_rate", Json::num(self.step_hit_rate())),
+            (
+                "exec_steal_attempts",
+                Json::num(self.exec_steal_attempts as f64),
+            ),
+            (
+                "exec_steal_successes",
+                Json::num(self.exec_steal_successes as f64),
+            ),
+            ("queue_lockfree_ratio", Json::num(self.queue_lockfree_ratio)),
+            ("cache_shard_reads", Json::num(self.cache_shard_reads as f64)),
+            ("cache_shard_writes", Json::num(self.cache_shard_writes as f64)),
+            ("arena_bytes_reused", Json::num(self.arena_bytes_reused as f64)),
             ("lock_recoveries", Json::num(self.lock_recoveries as f64)),
             ("wall_p50_ns", Json::num(self.wall_p50_ns)),
             ("wall_p95_ns", Json::num(self.wall_p95_ns)),

@@ -8,11 +8,11 @@
 //! run as **two pipelined stages with a shared plan cache**:
 //!
 //! ```text
-//!  submit ──▶ [job queue] ──▶ plan workers ──▶ [unit queue] ──▶ execute workers ──▶ results
-//!  (bounded, backpressure)        │   ▲         (bounded;        dense + one run per flow
-//!                                 ▼   │          prefill jobs    per unit; last unit of a
-//!                              PlanCache         and individual  job folds + streams its
-//!                     (sharded LRU, keyed per    decode steps    JobResult
+//!  submit ──▶ [job queue] ──▶ plan workers ──▶ [exec pool] ──▶ execute workers ──▶ results
+//!  (bounded, backpressure)        │   ▲         (bounded;       dense + one run per flow
+//!                                 ▼   │          prefill jobs   per unit; last unit of a
+//!                              PlanCache         and individual job folds + streams its
+//!                     (sharded LRU, keyed per    decode steps   JobResult
 //!                      LAYER and per STEP:       interleave)
 //!                      fingerprint ⊕ opts key)
 //! ```
@@ -43,6 +43,18 @@
 //!   unbounded so backpressure lives only at intake and between the
 //!   stages. [`Coordinator::drain`] remains as the collect-all
 //!   convenience.
+//! * **Lock-light hot path**: planned units flow through a per-worker
+//!   **work-stealing pool** (`crate::util::deque`) by default — local
+//!   LIFO deques, a shared injector, randomized seeded stealing — so
+//!   execute workers stop serializing on one channel lock per unit;
+//!   [`ExecQueueKind::SingleQueue`] keeps the original bounded channel
+//!   as the measured baseline (`benches/hot_path.rs`). The
+//!   [`PlanCache`] hit path takes only a shard **read** lock plus
+//!   atomic LRU stamps, with in-flight build deduplication so a key
+//!   plans at most once; per-worker arenas (`crate::util::arena`)
+//!   recycle planning/report scratch buffers. Contention and reuse are
+//!   all counted ([`CoordinatorMetrics`]'s `exec_*`, `cache_shard_*`,
+//!   `arena_*` fields).
 //!
 //! Per-job wall latency (submit → result) and per-token execution wall
 //! time feed streaming [`LatencyHistogram`]s; [`CoordinatorMetrics`]
@@ -63,7 +75,7 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -74,13 +86,20 @@ use crate::engine::substrate::{StepExec, Substrate};
 use crate::engine::{gains, substrate, EngineOpts, RunReport};
 use crate::model::report::ModelReport;
 use crate::model::ModelTrace;
+use crate::util::arena::{ArenaStats, Pool};
+use crate::util::deque::{ExecPool, PoolCounters};
 use crate::util::json::Json;
 use crate::util::rng::{mix64, Rng};
 use crate::util::stats::LatencyHistogram;
-use crate::util::sync::{get_mut_recover, lock_recover};
+use crate::util::sync::{
+    get_mut_recover, lock_recover, lock_tolerant, read_recover, write_recover,
+};
 
 /// Salt mixed into `job.id` to seed the per-job retry-jitter stream.
 const RETRY_JITTER_SALT: u64 = 0x5245_5452_595F_4A49; // "RETRY_JI"
+
+/// Seed of the work-stealing pool's per-worker victim-sweep order.
+const STEAL_SEED: u64 = 0x5354_4541_4C5F_5345; // "STEAL_SE"
 
 /// Deterministic jittered exponential backoff for submission retries:
 /// attempt `a` (1-based) waits `base · 2^(a−1)` — capped at `100 · base`
@@ -98,7 +117,11 @@ pub fn retry_backoff(
     let doublings = attempt.saturating_sub(1).min(7) as i32; // 2^7 > 100
     let scale = 2f64.powi(doublings).min(100.0);
     let jitter = 0.5 + 0.5 * rng.f64();
-    Duration::from_secs_f64(base.as_secs_f64() * scale * jitter)
+    // A pathological base (near Duration::MAX) overflows the scaled
+    // f64 → Duration conversion; saturate instead of panicking — the
+    // bound contract above still holds.
+    Duration::try_from_secs_f64(base.as_secs_f64() * scale * jitter)
+        .unwrap_or(Duration::MAX)
 }
 
 /// Raw per-node latency histograms exported by
@@ -429,18 +452,130 @@ impl Planned {
 
 struct CacheEntry<V> {
     plans: Arc<V>,
-    /// LRU stamp: shard clock value of the last touch.
-    stamp: u64,
+    /// LRU stamp: shard clock value of the last touch. Atomic so the
+    /// read-locked hit path can bump it without exclusive access.
+    stamp: AtomicU64,
 }
 
 struct CacheShard<V> {
-    clock: u64,
+    /// Logical touch clock. Atomic for the same reason as `stamp`:
+    /// concurrent readers order their touches with `fetch_add` alone.
+    clock: AtomicU64,
     map: HashMap<u64, CacheEntry<V>>,
+    /// In-flight builds, keyed like `map`. Presence means some worker
+    /// is running Algo 1 for that key right now; later missers wait on
+    /// the slot instead of building a duplicate.
+    building: HashMap<u64, Arc<BuildSlot<V>>>,
 }
 
 impl<V> Default for CacheShard<V> {
     fn default() -> Self {
-        CacheShard { clock: 0, map: HashMap::new() }
+        CacheShard {
+            clock: AtomicU64::new(0),
+            map: HashMap::new(),
+            building: HashMap::new(),
+        }
+    }
+}
+
+/// Rendezvous for workers that missed on a key some other worker is
+/// already building: they park on `cv` until the builder publishes
+/// ([`SlotState::Done`]) or unwinds ([`SlotState::Abandoned`]).
+struct BuildSlot<V> {
+    filled: Mutex<SlotState<V>>,
+    cv: Condvar,
+}
+
+enum SlotState<V> {
+    Pending,
+    Done(Arc<V>),
+    /// The builder panicked before publishing: waiters must retry (one
+    /// of them becomes the next builder).
+    Abandoned,
+}
+
+impl<V> BuildSlot<V> {
+    fn new() -> Self {
+        BuildSlot { filled: Mutex::new(SlotState::Pending), cv: Condvar::new() }
+    }
+
+    /// Block until the builder resolves the slot. `None` means the
+    /// build was abandoned and the caller should retry.
+    fn wait(&self) -> Option<Arc<V>> {
+        let mut st = lock_tolerant(&self.filled);
+        loop {
+            match &*st {
+                SlotState::Pending => {
+                    st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+                }
+                SlotState::Done(v) => return Some(Arc::clone(v)),
+                SlotState::Abandoned => return None,
+            }
+        }
+    }
+
+    /// Resolve the slot and wake every waiter.
+    fn resolve(&self, outcome: SlotState<V>) {
+        *lock_tolerant(&self.filled) = outcome;
+        self.cv.notify_all();
+    }
+}
+
+/// Unwind guard armed by the builder before running Algo 1 outside the
+/// shard lock. [`BuildGuard::publish`] defuses it (insert + hand the
+/// plans to waiters); if the build panics instead, `Drop` withdraws the
+/// in-flight marker and abandons the slot so waiters retry rather than
+/// hang.
+struct BuildGuard<'a, V> {
+    cache: &'a PlanCache<V>,
+    shard: &'a RwLock<CacheShard<V>>,
+    slot: &'a Arc<BuildSlot<V>>,
+    key: u64,
+}
+
+impl<V> BuildGuard<'_, V> {
+    fn publish(self, built: Arc<V>) {
+        {
+            self.cache.write_locks.fetch_add(1, Ordering::Relaxed);
+            let mut s = write_recover(self.shard, &self.cache.recoveries);
+            let now = s.clock.fetch_add(1, Ordering::Relaxed) + 1;
+            if s.map.len() >= self.cache.shard_cap {
+                let lru = s
+                    .map
+                    .iter()
+                    .min_by_key(|(_, e)| e.stamp.load(Ordering::Relaxed))
+                    .map(|(k, _)| *k);
+                if let Some(lru) = lru {
+                    s.map.remove(&lru);
+                    self.cache.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            s.map.insert(
+                self.key,
+                CacheEntry {
+                    plans: Arc::clone(&built),
+                    stamp: AtomicU64::new(now),
+                },
+            );
+            s.building.remove(&self.key);
+        }
+        // Slot resolution happens after the shard write lock is gone:
+        // build_slot ranks below cache_shard but there is no need to
+        // nest them here at all.
+        self.slot.resolve(SlotState::Done(built));
+        std::mem::forget(self);
+    }
+}
+
+impl<V> Drop for BuildGuard<'_, V> {
+    fn drop(&mut self) {
+        // Reached only when the build unwound before `publish`.
+        self.cache.write_locks.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut s = write_recover(self.shard, &self.cache.recoveries);
+            s.building.remove(&self.key);
+        }
+        self.slot.resolve(SlotState::Abandoned);
     }
 }
 
@@ -453,18 +588,27 @@ impl<V> Default for CacheShard<V> {
 /// standalone callers (tests, benches) may cache bare [`PlanSet`]s, the
 /// default.
 ///
-/// Shards bound lock contention between plan workers; shard locks are
-/// held only for lookup/insert, never across an Algo-1 build, so a hit is
-/// always cheap even when another key in the same shard is being planned.
-/// Eviction is least-recently-touched per shard. `capacity == 0` disables
+/// Shards bound contention between plan workers, and within a shard the
+/// **hit path never takes an exclusive lock**: each shard is an
+/// [`RwLock`], a hit is a shared read plus two relaxed atomic bumps
+/// (touch clock + LRU stamp), so concurrent hits — the steady state of
+/// a warm server — proceed fully in parallel. Write locks are reserved
+/// for publish/adopt/eviction bookkeeping and are never held across an
+/// Algo-1 build. Cold keys are additionally **deduplicated**: the first
+/// misser registers an in-flight [`BuildSlot`] and builds; same-key
+/// missers park on the slot and adopt the result, so a key plans at
+/// most once no matter how many workers miss on it together. Eviction
+/// is least-recently-touched per shard. `capacity == 0` disables
 /// caching (every lookup misses and builds) — the cold baseline
 /// `benches/serve.rs` measures against.
 pub struct PlanCache<V = PlanSet> {
-    shards: Vec<Mutex<CacheShard<V>>>,
+    shards: Vec<RwLock<CacheShard<V>>>,
     shard_cap: usize,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    read_locks: AtomicU64,
+    write_locks: AtomicU64,
     recoveries: AtomicUsize,
 }
 
@@ -474,11 +618,13 @@ impl<V> PlanCache<V> {
     pub fn new(capacity: usize, shards: usize) -> Self {
         let n = shards.max(1);
         PlanCache {
-            shards: (0..n).map(|_| Mutex::new(CacheShard::default())).collect(),
+            shards: (0..n).map(|_| RwLock::new(CacheShard::default())).collect(),
             shard_cap: if capacity == 0 { 0 } else { capacity.div_ceil(n) },
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            read_locks: AtomicU64::new(0),
+            write_locks: AtomicU64::new(0),
             recoveries: AtomicUsize::new(0),
         }
     }
@@ -486,11 +632,14 @@ impl<V> PlanCache<V> {
     /// Look `key` up; on a miss, run `build` and cache the result. Returns
     /// the shared plans and whether this was a hit.
     ///
-    /// The build runs **outside** the shard lock (double-checked), so hits
-    /// for other keys in the shard never stall behind Algo 1. Two workers
-    /// racing the same cold key may both build — benign duplicate work,
-    /// and both honestly count as misses — but the first insert wins, so
-    /// every caller still shares one `Arc` of identical plans.
+    /// A hit costs one shared read lock (concurrent hits never
+    /// serialize). The build runs **outside** any shard lock, so hits
+    /// for other keys in the shard never stall behind Algo 1. Same-key
+    /// racers are deduplicated through [`BuildSlot`]s: exactly one
+    /// worker builds, the rest wait and adopt its `Arc` — every racer
+    /// still honestly counts as a miss (its probe was not served from
+    /// cache), so hit/miss accounting is unchanged from the
+    /// double-build era while the duplicate work is gone.
     pub fn get_or_build(
         &self,
         key: u64,
@@ -503,34 +652,51 @@ impl<V> PlanCache<V> {
         // lint: allow(index, "index is key % shards.len()")
         let shard = &self.shards[key as usize % self.shards.len()];
         {
-            let mut s = lock_recover(shard, &self.recoveries);
-            s.clock += 1;
-            let now = s.clock;
-            if let Some(e) = s.map.get_mut(&key) {
-                e.stamp = now;
+            self.read_locks.fetch_add(1, Ordering::Relaxed);
+            let s = read_recover(shard, &self.recoveries);
+            if let Some(e) = s.map.get(&key) {
+                let now = s.clock.fetch_add(1, Ordering::Relaxed) + 1;
+                e.stamp.store(now, Ordering::Relaxed);
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return (Arc::clone(&e.plans), true);
             }
         }
-        let built = Arc::new(build());
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut s = lock_recover(shard, &self.recoveries);
-        s.clock += 1;
-        let now = s.clock;
-        if let Some(e) = s.map.get_mut(&key) {
-            // lost a same-key race: adopt the winner's plans (identical
-            // content — both built from the same fingerprinted inputs)
-            e.stamp = now;
-            return (Arc::clone(&e.plans), false);
-        }
-        if s.map.len() >= self.shard_cap {
-            let lru = s.map.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| *k);
-            if let Some(lru) = lru {
-                s.map.remove(&lru);
-                self.evictions.fetch_add(1, Ordering::Relaxed);
+        // Become the builder, adopt a racer's published entry, or wait
+        // on a racer's in-flight build (retrying if it is abandoned).
+        let my_slot = loop {
+            let in_flight = {
+                self.write_locks.fetch_add(1, Ordering::Relaxed);
+                let mut s = write_recover(shard, &self.recoveries);
+                if let Some(e) = s.map.get(&key) {
+                    // A racer published between our read probe and now:
+                    // adopt its plans (identical content — same
+                    // fingerprinted inputs). Still a miss, counted above.
+                    let now = s.clock.fetch_add(1, Ordering::Relaxed) + 1;
+                    e.stamp.store(now, Ordering::Relaxed);
+                    return (Arc::clone(&e.plans), false);
+                }
+                match s.building.get(&key) {
+                    Some(slot) => Some(Arc::clone(slot)),
+                    None => {
+                        let slot = Arc::new(BuildSlot::new());
+                        s.building.insert(key, Arc::clone(&slot));
+                        break slot;
+                    }
+                }
+            };
+            if let Some(slot) = in_flight {
+                // Wait outside the shard lock. `None` means the builder
+                // panicked: loop back — we may become the builder.
+                if let Some(v) = slot.wait() {
+                    return (v, false);
+                }
             }
-        }
-        s.map.insert(key, CacheEntry { plans: Arc::clone(&built), stamp: now });
+        };
+        let guard =
+            BuildGuard { cache: self, shard, slot: &my_slot, key };
+        let built = Arc::new(build());
+        guard.publish(Arc::clone(&built));
         (built, false)
     }
 
@@ -553,9 +719,23 @@ impl<V> PlanCache<V> {
         self.evictions.load(Ordering::Relaxed) as usize
     }
 
+    /// Shard **read**-lock acquisitions by the `get_or_build` hit-path
+    /// probe so far — the contention-free side of the split.
+    pub fn read_lock_acquisitions(&self) -> usize {
+        self.read_locks.load(Ordering::Relaxed) as usize
+    }
+
+    /// Shard **write**-lock acquisitions so far (publish, adopt, build
+    /// registration/withdrawal). On a warm cache this stays far below
+    /// [`PlanCache::read_lock_acquisitions`].
+    pub fn write_lock_acquisitions(&self) -> usize {
+        self.write_locks.load(Ordering::Relaxed) as usize
+    }
+
     /// Poisoned-shard recoveries performed so far (see
-    /// [`crate::util::sync::lock_recover`]): acquisitions that found a
-    /// shard mutex poisoned by a panicked worker and kept serving its
+    /// [`crate::util::sync::read_recover`] /
+    /// [`crate::util::sync::write_recover`]): acquisitions that found a
+    /// shard lock poisoned by a panicked writer and kept serving its
     /// still-consistent map instead of cascading the panic.
     pub fn lock_recoveries(&self) -> usize {
         self.recoveries.load(Ordering::Relaxed)
@@ -565,7 +745,7 @@ impl<V> PlanCache<V> {
     pub fn len(&self) -> usize {
         self.shards
             .iter()
-            .map(|shard| lock_recover(shard, &self.recoveries).map.len())
+            .map(|shard| read_recover(shard, &self.recoveries).map.len())
             .sum()
     }
 
@@ -573,7 +753,7 @@ impl<V> PlanCache<V> {
     pub fn is_empty(&self) -> bool {
         self.shards
             .iter()
-            .all(|shard| lock_recover(shard, &self.recoveries).map.is_empty())
+            .all(|shard| read_recover(shard, &self.recoveries).map.is_empty())
     }
 }
 
@@ -675,6 +855,36 @@ pub struct CoordinatorMetrics {
     pub mean_throughput_gain: f64,
     /// Mean energy-efficiency gain over flow runs.
     pub mean_energy_gain: f64,
+    /// Planned units an execute worker popped from its **own** deque
+    /// (the lock-free-in-spirit fast path; 0 on the single-queue path).
+    pub exec_local_pops: usize,
+    /// Planned units taken from the work-stealing pool's shared
+    /// injector (fresh cross-session work).
+    pub exec_injector_pops: usize,
+    /// Steal sweeps attempted by idle execute workers (each sweep scans
+    /// every sibling deque once).
+    pub exec_steal_attempts: usize,
+    /// Steal sweeps that found work on a sibling's deque.
+    pub exec_steal_successes: usize,
+    /// Planned units migrated between workers by successful steals
+    /// (each success moves half the victim's backlog).
+    pub exec_stolen_units: usize,
+    /// Fraction of executed units served from the worker's own deque —
+    /// the work-stealing pool's headline contention measure (1.0 means
+    /// no unit ever crossed a shared lock after injection; 0.0 on the
+    /// single-queue baseline, which serializes every pop).
+    pub queue_lockfree_ratio: f64,
+    /// Plan-cache shard **read**-lock acquisitions (hit-path probes).
+    pub cache_shard_reads: usize,
+    /// Plan-cache shard **write**-lock acquisitions (publish/adopt/
+    /// build-dedup bookkeeping). Warm steady state keeps this far below
+    /// `cache_shard_reads`.
+    pub cache_shard_writes: usize,
+    /// Scratch buffers served from per-worker arenas instead of fresh
+    /// allocations (see `crate::util::arena`).
+    pub arena_buffers_reused: usize,
+    /// Heap capacity recycled by those arena reuses, in bytes.
+    pub arena_bytes_reused: usize,
 }
 
 impl CoordinatorMetrics {
@@ -740,6 +950,22 @@ impl CoordinatorMetrics {
             ("total_energy_pj", Json::num(self.total_energy_pj)),
             ("mean_throughput_gain", Json::num(self.mean_throughput_gain)),
             ("mean_energy_gain", Json::num(self.mean_energy_gain)),
+            ("exec_local_pops", Json::num(self.exec_local_pops as f64)),
+            ("exec_injector_pops", Json::num(self.exec_injector_pops as f64)),
+            ("exec_steal_attempts", Json::num(self.exec_steal_attempts as f64)),
+            (
+                "exec_steal_successes",
+                Json::num(self.exec_steal_successes as f64),
+            ),
+            ("exec_stolen_units", Json::num(self.exec_stolen_units as f64)),
+            ("queue_lockfree_ratio", Json::num(self.queue_lockfree_ratio)),
+            ("cache_shard_reads", Json::num(self.cache_shard_reads as f64)),
+            ("cache_shard_writes", Json::num(self.cache_shard_writes as f64)),
+            (
+                "arena_buffers_reused",
+                Json::num(self.arena_buffers_reused as f64),
+            ),
+            ("arena_bytes_reused", Json::num(self.arena_bytes_reused as f64)),
         ])
     }
 }
@@ -796,6 +1022,28 @@ struct Agg {
     en_sum: f64,
 }
 
+/// Arena-reuse counters summed over every worker's local [`Pool`];
+/// workers flush their [`ArenaStats`] here (see [`Pool::drain_stats`]).
+#[derive(Default)]
+struct ArenaShared {
+    takes: AtomicU64,
+    reuses: AtomicU64,
+    bytes_reused: AtomicU64,
+}
+
+impl ArenaShared {
+    /// Fold one worker's drained local stats in (cheap; skipped when
+    /// the worker had nothing to report).
+    fn absorb(&self, s: ArenaStats) {
+        if s.takes == 0 {
+            return;
+        }
+        self.takes.fetch_add(s.takes, Ordering::Relaxed);
+        self.reuses.fetch_add(s.reuses, Ordering::Relaxed);
+        self.bytes_reused.fetch_add(s.bytes_reused, Ordering::Relaxed);
+    }
+}
+
 struct Shared {
     submitted: AtomicUsize,
     plan_q: QueueGauge,
@@ -807,6 +1055,9 @@ struct Shared {
     /// [`crate::util::sync::lock_recover`]); the plan-cache shards count
     /// their own into [`PlanCache::lock_recoveries`].
     lock_recoveries: AtomicUsize,
+    /// Cross-worker sum of per-worker arena reuse (scratch masks,
+    /// report buffers).
+    arena: ArenaShared,
 }
 
 /// Fold a finished result into the aggregate, then stream it out. Send
@@ -906,6 +1157,63 @@ struct QueuedJob {
     enqueued: Instant,
 }
 
+/// A plan worker's handle on the stage-1 → stage-2 conduit: either a
+/// clone of the single bounded channel's sender, or a producer into the
+/// work-stealing pool. Dropping it (worker exit or panic) releases the
+/// worker's share of the conduit, so the shutdown cascade is identical
+/// on both paths.
+enum UnitSink {
+    Single(SyncSender<PlannedUnit>),
+    Stealing(crate::util::deque::Producer<PlannedUnit>),
+}
+
+impl UnitSink {
+    /// Hand a unit to stage 2. `false` means stage 2 is gone (every
+    /// execute worker exited) and the unit was returned-and-dropped —
+    /// the same condition as a `SyncSender::send` error.
+    fn send(&self, unit: PlannedUnit) -> bool {
+        match self {
+            UnitSink::Single(tx) => tx.send(unit).is_ok(),
+            UnitSink::Stealing(producer) => producer.push(unit).is_ok(),
+        }
+    }
+}
+
+/// Which conduit carries planned units from stage 1 to stage 2.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecQueueKind {
+    /// Per-worker work-stealing deques with a shared injector
+    /// ([`crate::util::deque::ExecPool`]): pops are worker-local in the
+    /// common case, idle workers rebalance by stealing half a sibling's
+    /// backlog. The serving default.
+    #[default]
+    WorkStealing,
+    /// The original single bounded `sync_channel`, where every pop
+    /// serializes on one receiver lock. Kept as the contention baseline
+    /// `benches/hot_path.rs` measures the deques against.
+    SingleQueue,
+}
+
+impl ExecQueueKind {
+    /// Parse a CLI spelling (`ws` / `work-stealing` / `single` /
+    /// `single-queue`).
+    pub fn parse(s: &str) -> Option<ExecQueueKind> {
+        match s {
+            "ws" | "work-stealing" => Some(ExecQueueKind::WorkStealing),
+            "single" | "single-queue" => Some(ExecQueueKind::SingleQueue),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ExecQueueKind::WorkStealing => "ws",
+            ExecQueueKind::SingleQueue => "single",
+        }
+    }
+}
+
 /// Pipeline shape + cache sizing (see [`Coordinator::with_config`]).
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -919,6 +1227,8 @@ pub struct CoordinatorConfig {
     pub cache_capacity: usize,
     /// Independently locked shards of the plan cache.
     pub cache_shards: usize,
+    /// Stage-1 → stage-2 conduit (see [`ExecQueueKind`]).
+    pub exec_queue: ExecQueueKind,
 }
 
 impl Default for CoordinatorConfig {
@@ -929,6 +1239,7 @@ impl Default for CoordinatorConfig {
             queue_cap: 8,
             cache_capacity: 128,
             cache_shards: 8,
+            exec_queue: ExecQueueKind::WorkStealing,
         }
     }
 }
@@ -965,6 +1276,10 @@ pub struct Coordinator {
     exec_workers: Vec<JoinHandle<()>>,
     cache: Arc<PlanCache<Planned>>,
     shared: Arc<Shared>,
+    /// The work-stealing pool, when [`ExecQueueKind::WorkStealing`] is
+    /// configured — kept for its contention counters (see
+    /// [`Coordinator::metrics`]); `None` on the single-queue baseline.
+    exec_pool: Option<Arc<ExecPool<PlannedUnit>>>,
     /// Service start time — the `tokens_per_s` denominator.
     started: Instant,
 }
@@ -990,13 +1305,11 @@ impl Coordinator {
     pub fn with_config(sys: SystemConfig, cfg: CoordinatorConfig) -> Self {
         let queue_cap = cfg.queue_cap.max(1);
         let (job_tx, job_rx) = sync_channel::<QueuedJob>(queue_cap);
-        let (plan_tx, plan_rx) = sync_channel::<PlannedUnit>(queue_cap);
         // Results are unbounded: backpressure lives at intake and between
         // the stages, so a slow results consumer can never deadlock the
         // pipeline against a fast submitter.
         let (res_tx, results_rx) = channel::<JobResult>();
         let job_rx = Arc::new(Mutex::new(job_rx));
-        let plan_rx = Arc::new(Mutex::new(plan_rx));
         let cache: Arc<PlanCache<Planned>> =
             Arc::new(PlanCache::new(cfg.cache_capacity, cfg.cache_shards));
         let shared = Arc::new(Shared {
@@ -1006,35 +1319,69 @@ impl Coordinator {
             live_sessions: QueueGauge::default(),
             agg: Mutex::new(Agg::default()),
             lock_recoveries: AtomicUsize::new(0),
+            arena: ArenaShared::default(),
         });
 
-        let plan_workers = (0..cfg.plan_workers.max(1))
-            .map(|_| {
+        // Build the stage-1 → stage-2 conduit: one UnitSink per plan
+        // worker plus the execute workers draining the other end.
+        let n_plan = cfg.plan_workers.max(1);
+        let n_exec = cfg.exec_workers.max(1);
+        let mut sinks: Vec<UnitSink> = Vec::with_capacity(n_plan);
+        let mut exec_workers: Vec<JoinHandle<()>> = Vec::with_capacity(n_exec);
+        let exec_pool = match cfg.exec_queue {
+            ExecQueueKind::SingleQueue => {
+                let (plan_tx, plan_rx) = sync_channel::<PlannedUnit>(queue_cap);
+                let plan_rx = Arc::new(Mutex::new(plan_rx));
+                for _ in 0..n_plan {
+                    sinks.push(UnitSink::Single(plan_tx.clone()));
+                }
+                for _ in 0..n_exec {
+                    let plan_rx = Arc::clone(&plan_rx);
+                    let res_tx = res_tx.clone();
+                    let shared = Arc::clone(&shared);
+                    exec_workers.push(std::thread::spawn(move || {
+                        exec_worker(&plan_rx, &res_tx, &shared)
+                    }));
+                }
+                // `plan_tx` drops here: the sinks hold the only senders.
+                None
+            }
+            ExecQueueKind::WorkStealing => {
+                let pool: Arc<ExecPool<PlannedUnit>> =
+                    Arc::new(ExecPool::new(n_exec, queue_cap, STEAL_SEED));
+                for _ in 0..n_plan {
+                    sinks.push(UnitSink::Stealing(pool.producer()));
+                }
+                for id in 0..n_exec {
+                    let units = pool.worker(id);
+                    let res_tx = res_tx.clone();
+                    let shared = Arc::clone(&shared);
+                    exec_workers.push(std::thread::spawn(move || {
+                        exec_worker_ws(units, &res_tx, &shared)
+                    }));
+                }
+                Some(pool)
+            }
+        };
+
+        let plan_workers = sinks
+            .into_iter()
+            .map(|sink| {
                 let job_rx = Arc::clone(&job_rx);
-                let plan_tx = plan_tx.clone();
                 let res_tx = res_tx.clone();
                 let cache = Arc::clone(&cache);
                 let shared = Arc::clone(&shared);
                 let sys = sys.clone();
                 std::thread::spawn(move || {
-                    plan_worker(&job_rx, &plan_tx, &res_tx, &cache, &shared, &sys)
+                    plan_worker(&job_rx, &sink, &res_tx, &cache, &shared, &sys)
                 })
             })
             .collect();
 
-        let exec_workers = (0..cfg.exec_workers.max(1))
-            .map(|_| {
-                let plan_rx = Arc::clone(&plan_rx);
-                let res_tx = res_tx.clone();
-                let shared = Arc::clone(&shared);
-                std::thread::spawn(move || exec_worker(&plan_rx, &res_tx, &shared))
-            })
-            .collect();
-
         // Workers hold the only remaining senders: once `close()` drops
-        // `job_tx`, stage 1 drains and exits, stage 2 follows, and the
+        // `job_tx`, stage 1 drains and exits, its sinks drop (closing
+        // the unit conduit on either path), stage 2 follows, and the
         // results channel disconnects — that cascade IS the shutdown.
-        drop(plan_tx);
         drop(res_tx);
 
         Coordinator {
@@ -1044,6 +1391,7 @@ impl Coordinator {
             exec_workers,
             cache,
             shared,
+            exec_pool,
             started: Instant::now(),
         }
     }
@@ -1145,6 +1493,12 @@ impl Coordinator {
     pub fn metrics(&self) -> CoordinatorMetrics {
         let agg = lock_recover(&self.shared.agg, &self.shared.lock_recoveries);
         let elapsed_s = self.started.elapsed().as_secs_f64();
+        // Single-queue runs report zeroed pool counters (ratio 0.0).
+        let pool: PoolCounters = self
+            .exec_pool
+            .as_ref()
+            .map(|p| p.counters())
+            .unwrap_or_default();
         CoordinatorMetrics {
             jobs_submitted: self.shared.submitted.load(Ordering::SeqCst),
             jobs_done: agg.done,
@@ -1195,6 +1549,21 @@ impl Coordinator {
             } else {
                 0.0
             },
+            exec_local_pops: pool.local_pops as usize,
+            exec_injector_pops: pool.injector_pops as usize,
+            exec_steal_attempts: pool.steal_attempts as usize,
+            exec_steal_successes: pool.steal_successes as usize,
+            exec_stolen_units: pool.stolen_items as usize,
+            queue_lockfree_ratio: pool.local_ratio(),
+            cache_shard_reads: self.cache.read_lock_acquisitions(),
+            cache_shard_writes: self.cache.write_lock_acquisitions(),
+            arena_buffers_reused: self.shared.arena.reuses.load(Ordering::Relaxed)
+                as usize,
+            arena_bytes_reused: self
+                .shared
+                .arena
+                .bytes_reused
+                .load(Ordering::Relaxed) as usize,
         }
     }
 
@@ -1274,15 +1643,17 @@ fn error_result(job: Job, enqueued: Instant, error: String) -> JobResult {
 /// through the cache, split the job into units, hand them off.
 fn plan_worker(
     job_rx: &Mutex<Receiver<QueuedJob>>,
-    plan_tx: &SyncSender<PlannedUnit>,
+    sink: &UnitSink,
     res_tx: &Sender<JobResult>,
     cache: &PlanCache<Planned>,
     shared: &Shared,
     sys: &SystemConfig,
 ) {
-    // Per-worker scratch: the delta patch's membership buffer is reused
-    // across every step this worker plans instead of allocated per unit.
-    let mut scratch: Vec<bool> = Vec::new();
+    // Per-worker arena: the delta patch's membership scratch is taken
+    // per decode job and retired after its steps, so its capacity is
+    // recycled across every job this worker plans (counted into
+    // `CoordinatorMetrics::arena_*`).
+    let mut scratch_pool: Pool<bool> = Pool::new(2);
     loop {
         // hold the lock only to receive
         let queued = match lock_recover(job_rx, &shared.lock_recoveries).recv() {
@@ -1368,6 +1739,7 @@ fn plan_worker(
         let (mut steps_cold, mut steps_delta, mut steps_hit) = (0usize, 0usize, 0usize);
         if let Request::Decode(session) = &job.request {
             let residency = carry_resident_counts(session);
+            let mut scratch = scratch_pool.take();
             // The predecessor's plan, threaded step to step so a cache
             // miss can delta-patch it (`StepPlan::patch_from`) instead of
             // re-sorting cold. Head counts are uniform (validated above),
@@ -1414,6 +1786,8 @@ fn plan_worker(
                 carry.1 += step.heads.iter().map(|h| h.len()).sum::<usize>();
                 step_units.push((t, step.kv_len, p, resident));
             }
+            scratch_pool.give(scratch);
+            shared.arena.absorb(scratch_pool.drain_stats());
         }
 
         // The substrate is built once per job (it binds the trace's D_k)
@@ -1480,7 +1854,7 @@ fn plan_worker(
         let mut dead = false;
         for u in units {
             shared.exec_q.enter();
-            if plan_tx.send(u).is_err() {
+            if !sink.send(u) {
                 shared.exec_q.exit();
                 dead = true;
                 break; // execute stage gone; nothing left to do
@@ -1493,8 +1867,14 @@ fn plan_worker(
 }
 
 /// Execute one unit and, if it was the job's last, assemble and stream
-/// the [`JobResult`].
-fn exec_unit(unit: PlannedUnit, res_tx: &Sender<JobResult>, shared: &Shared) {
+/// the [`JobResult`]. `report_pool` is the calling worker's arena for
+/// the per-step flow-report buffer (taken and retired per step unit).
+fn exec_unit(
+    unit: PlannedUnit,
+    res_tx: &Sender<JobResult>,
+    shared: &Shared,
+    report_pool: &mut Pool<RunReport>,
+) {
     let acc = &unit.accum;
     let sub: &dyn Substrate = &*acc.sub;
 
@@ -1538,32 +1918,35 @@ fn exec_unit(unit: PlannedUnit, res_tx: &Sender<JobResult>, shared: &Shared) {
             let exec = StepExec { kv_len, plan, resident: &resident };
             let t0 = Instant::now();
             let dense = sub.execute_step(&backend::DENSE, &exec);
-            let flows: Vec<RunReport> = acc
-                .flows
-                .iter()
-                .map(|name| {
-                    // lint: allow(panic, "flow names resolved against the registry at plan stage")
-                    let b = backend::by_name(name).expect("validated at plan stage");
-                    if b.name() == "dense" {
-                        dense
-                    } else {
-                        sub.execute_step(b, &exec)
-                    }
-                })
-                .collect();
+            // Arena-recycled flow buffer: one take per step unit, retired
+            // below once the reports land in `parts`.
+            let mut flows = report_pool.take();
+            for name in &acc.flows {
+                // lint: allow(panic, "flow names resolved against the registry at plan stage")
+                let b = backend::by_name(name).expect("validated at plan stage");
+                flows.push(if b.name() == "dense" {
+                    dense
+                } else {
+                    sub.execute_step(b, &exec)
+                });
+            }
             lock_recover(&shared.agg, &shared.lock_recoveries)
                 .token_wall
                 .record(t0.elapsed().as_nanos() as f64);
-            let mut parts = lock_recover(&acc.parts, &shared.lock_recoveries);
-            // lint: allow(index, "dense_steps sized to the session token count at job assembly")
-            parts.dense_steps[t] = Some(dense);
-            if parts.flow_steps.is_empty() {
-                parts.flow_steps = vec![vec![None; acc.tokens]; acc.flows.len()];
+            {
+                let mut parts = lock_recover(&acc.parts, &shared.lock_recoveries);
+                // lint: allow(index, "dense_steps sized to the session token count at job assembly")
+                parts.dense_steps[t] = Some(dense);
+                if parts.flow_steps.is_empty() {
+                    parts.flow_steps =
+                        vec![vec![None; acc.tokens]; acc.flows.len()];
+                }
+                for (f, rep) in flows.drain(..).enumerate() {
+                    // lint: allow(index, "flow_steps sized flows x tokens four lines above")
+                    parts.flow_steps[f][t] = Some(rep);
+                }
             }
-            for (f, rep) in flows.into_iter().enumerate() {
-                // lint: allow(index, "flow_steps sized flows x tokens four lines above")
-                parts.flow_steps[f][t] = Some(rep);
-            }
+            report_pool.give(flows);
         }
     }
     {
@@ -1642,13 +2025,34 @@ fn exec_worker(
     res_tx: &Sender<JobResult>,
     shared: &Shared,
 ) {
+    let mut report_pool: Pool<RunReport> = Pool::new(2);
     loop {
         let unit = match lock_recover(plan_rx, &shared.lock_recoveries).recv() {
             Ok(p) => p,
             Err(_) => break, // plan stage closed and drained
         };
         shared.exec_q.exit();
-        exec_unit(unit, res_tx, shared);
+        exec_unit(unit, res_tx, shared, &mut report_pool);
+        shared.arena.absorb(report_pool.drain_stats());
+    }
+}
+
+/// Stage 2, work-stealing flavor: identical execution semantics to
+/// [`exec_worker`], but units arrive through this worker's deque —
+/// local pops in the common case, injector grabs for fresh work, steals
+/// from siblings when idle (see [`crate::util::deque::Worker::next`]).
+/// Returns when the pool is closed (every plan worker dropped its
+/// producer) and fully drained.
+fn exec_worker_ws(
+    mut units: crate::util::deque::Worker<PlannedUnit>,
+    res_tx: &Sender<JobResult>,
+    shared: &Shared,
+) {
+    let mut report_pool: Pool<RunReport> = Pool::new(2);
+    while let Some(unit) = units.next() {
+        shared.exec_q.exit();
+        exec_unit(unit, res_tx, shared, &mut report_pool);
+        shared.arena.absorb(report_pool.drain_stats());
     }
 }
 
@@ -1692,6 +2096,22 @@ mod tests {
         let sched_c: Vec<Duration> =
             (1..=12).map(|att| retry_backoff(att, base, &mut c)).collect();
         assert_ne!(sched_a, sched_c, "distinct job ids must jitter apart");
+    }
+
+    #[test]
+    fn retry_backoff_saturates_instead_of_panicking_at_extremes() {
+        // A pathological base near Duration::MAX overflows the scaled
+        // f64 → Duration conversion; the wait must clamp, not panic.
+        let mut rng = Rng::new(mix64(3 ^ RETRY_JITTER_SALT));
+        let huge = retry_backoff(usize::MAX, Duration::MAX, &mut rng);
+        assert!(huge >= Duration::MAX / 2);
+        // Zero base stays zero through every attempt (no NaN/underflow).
+        for att in [1usize, 7, usize::MAX] {
+            assert_eq!(
+                retry_backoff(att, Duration::ZERO, &mut rng),
+                Duration::ZERO
+            );
+        }
     }
 
     #[test]
@@ -1740,6 +2160,77 @@ mod tests {
     }
 
     #[test]
+    fn exec_queue_kind_parses_and_single_queue_still_serves() {
+        assert_eq!(ExecQueueKind::parse("ws"), Some(ExecQueueKind::WorkStealing));
+        assert_eq!(
+            ExecQueueKind::parse("work-stealing"),
+            Some(ExecQueueKind::WorkStealing)
+        );
+        assert_eq!(
+            ExecQueueKind::parse("single"),
+            Some(ExecQueueKind::SingleQueue)
+        );
+        assert_eq!(
+            ExecQueueKind::parse("single-queue"),
+            Some(ExecQueueKind::SingleQueue)
+        );
+        assert_eq!(ExecQueueKind::parse("bogus"), None);
+        assert_eq!(ExecQueueKind::default().as_str(), "ws");
+
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::with_config(
+            sys,
+            CoordinatorConfig {
+                exec_queue: ExecQueueKind::SingleQueue,
+                ..Default::default()
+            },
+        );
+        for j in jobs(&spec, 4) {
+            coord.submit(j).unwrap();
+        }
+        let (results, metrics) = coord.drain();
+        assert_eq!(results.len(), 4);
+        assert!(results.iter().all(|r| r.is_ok()));
+        // The baseline conduit has no pool: counters zero, ratio 0.0.
+        assert_eq!(metrics.exec_local_pops, 0);
+        assert_eq!(metrics.exec_injector_pops, 0);
+        assert_eq!(metrics.exec_steal_attempts, 0);
+        assert_eq!(metrics.queue_lockfree_ratio, 0.0);
+    }
+
+    #[test]
+    fn work_stealing_pool_counters_conserve_units() {
+        use crate::trace::synth::gen_session;
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        // Default config is work-stealing: 3 prefill jobs (1 unit each)
+        // plus one 3-step decode session (1 + 3 units).
+        let coord = Coordinator::new(2, 4, sys);
+        for j in jobs(&spec, 3) {
+            coord.submit(j).unwrap();
+        }
+        coord
+            .submit(Job::new(3, gen_session(&spec, 1, 0.0, 3, 0.8, 2), spec.sf))
+            .unwrap();
+        let (results, metrics) = coord.drain();
+        assert_eq!(results.len(), 4);
+        assert!(results.iter().all(|r| r.is_ok()));
+        // Every planned unit was returned exactly once through exactly
+        // one of the three pop paths (the pool's conservation law).
+        let units = 3 + (1 + 3);
+        assert_eq!(
+            metrics.exec_local_pops
+                + metrics.exec_injector_pops
+                + metrics.exec_steal_successes,
+            units
+        );
+        assert!(metrics.exec_stolen_units >= metrics.exec_steal_successes);
+        assert!(metrics.queue_lockfree_ratio >= 0.0);
+        assert!(metrics.queue_lockfree_ratio <= 1.0);
+    }
+
+    #[test]
     fn poisoned_cache_shard_recovers_and_counts() {
         let cache: PlanCache<u64> = PlanCache::new(8, 1);
         let (v, hit) = cache.get_or_build(1, || 10);
@@ -1750,7 +2241,8 @@ mod tests {
         // the intact map and count the recoveries.
         std::thread::scope(|s| {
             let t = s.spawn(|| {
-                let _g = cache.shards[0].lock().unwrap();
+                // RwLocks are poisoned only by panicking WRITERS.
+                let _g = cache.shards[0].write().unwrap();
                 panic!("simulated worker crash");
             });
             assert!(t.join().is_err());
@@ -1765,6 +2257,61 @@ mod tests {
         assert!(!hit);
         assert_eq!(*v, 20);
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_same_key_misses_build_exactly_once() {
+        // Build deduplication: racers on one cold key rendezvous on a
+        // BuildSlot instead of each running Algo 1. The build closure
+        // sleeps to hold the race window open, so without dedup this
+        // test would count several builds.
+        let cache: PlanCache<u64> = PlanCache::new(8, 1);
+        let builds = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let workers: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(|| {
+                        let (v, _hit) = cache.get_or_build(42, || {
+                            builds.fetch_add(1, Ordering::SeqCst);
+                            std::thread::sleep(Duration::from_millis(10));
+                            7u64
+                        });
+                        *v
+                    })
+                })
+                .collect();
+            for w in workers {
+                assert_eq!(w.join().unwrap(), 7);
+            }
+        });
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "a key plans at most once");
+        // Every probe resolved as exactly one hit or miss, and the
+        // write-lock count stays bounded by the miss traffic while the
+        // hit path took only read locks.
+        assert_eq!(cache.hits() + cache.misses(), 8);
+        assert!(cache.misses() >= 1);
+        assert_eq!(cache.len(), 1);
+        assert!(cache.read_lock_acquisitions() >= 8);
+        assert!(cache.write_lock_acquisitions() >= 1);
+    }
+
+    #[test]
+    fn abandoned_build_is_withdrawn_and_the_key_rebuilds() {
+        // A builder that panics must not leave the in-flight marker
+        // behind (that would wedge every later misser of the key).
+        let cache: Arc<PlanCache<u64>> = Arc::new(PlanCache::new(8, 1));
+        let c = Arc::clone(&cache);
+        let t = std::thread::spawn(move || {
+            let _ = c.get_or_build(9, || -> u64 { panic!("builder crash") });
+        });
+        assert!(t.join().is_err());
+        // The panic unwound outside the shard lock: no poison, and the
+        // withdrawn slot lets the next misser become the builder.
+        assert!(!cache.shards[0].is_poisoned());
+        let (v, hit) = cache.get_or_build(9, || 11);
+        assert!(!hit);
+        assert_eq!(*v, 11);
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]
@@ -2287,6 +2834,11 @@ mod tests {
         assert_eq!(back.get("jobs_failed").as_usize(), Some(1));
         assert_eq!(back.get("cache_evictions").as_usize(), Some(0));
         assert!(back.get("cache_hit_rate").as_f64().is_some());
+        // Hot-path contention counters ride along in the same block.
+        assert!(back.get("queue_lockfree_ratio").as_f64().is_some());
+        assert!(back.get("exec_steal_attempts").as_usize().is_some());
+        assert!(back.get("cache_shard_reads").as_usize().unwrap() >= 1);
+        assert!(back.get("arena_bytes_reused").as_usize().is_some());
     }
 
     #[test]

@@ -48,7 +48,7 @@ use std::collections::HashMap;
 
 use sata::cluster::{Admission, Cluster, ClusterConfig, RoutePolicy};
 use sata::config::{SystemConfig, WorkloadSpec};
-use sata::coordinator::{Coordinator, CoordinatorConfig, Job, Request};
+use sata::coordinator::{Coordinator, CoordinatorConfig, ExecQueueKind, Job, Request};
 use sata::decode::run_session;
 use sata::engine::backend::{self, FlowBackend, PlanSet};
 use sata::engine::{gains, run_dense, run_sata, substrate, EngineOpts};
@@ -69,7 +69,7 @@ use sata::trace::TraceDir;
 /// `usage_and_accepted_flags_agree` unit test, and at run time by
 /// [`check_flags`].
 const USAGE: &str = "sata — SATA reproduction CLI
-usage: sata <trace-gen|schedule|simulate|flows|serve|e2e|lint> [flags]
+usage: sata <trace-gen|schedule|simulate|flows|serve|e2e|bench-diff|lint> [flags]
   common: [--workload ttst|kvt-tiny|kvt-base|drsformer] [--seed N]
   trace-gen: [--count N] [--out DIR] [--layers L] [--rho R]
              [--steps S] [--kappa K]     # L>1 → model files; S>0 → sessions
@@ -79,10 +79,11 @@ usage: sata <trace-gen|schedule|simulate|flows|serve|e2e|lint> [flags]
   serve:     [--jobs N] [--workers W] [--flows a,b,c] [--flow FLOW]
              [--substrate SUB] [--repeat R] [--traces-dir DIR]
              [--layers L] [--rho R] [--steps S] [--kappa K] [--no-carry]
-             [--no-delta] [--json]
+             [--no-delta] [--json] [--exec-queue ws|single]
              [--nodes N] [--route affinity|rr] [--admit CAP]
              [--arrival-rate R]          # fleet mode (see below)
   e2e:       [--artifacts DIR]           # PJRT end-to-end
+  bench-diff: [--baseline DIR] [--fresh DIR]  # perf-trajectory gate
   lint:      (self-hosted static analysis; exits 1 on findings)
 flows: FLOW ∈ registered backends (see `sata flows`); SUB ∈ cim|systolic
 model requests: --layers/--rho shape multi-layer requests (rho =
@@ -94,7 +95,12 @@ fleet mode: --nodes N serves through N coordinator shards routed by
   content fingerprint (--route affinity, default) or round-robin
   (--route rr); --admit CAP bounds per-node in-flight jobs (overload
   sheds loudly); --arrival-rate R paces a seeded Poisson arrival
-  stream at R jobs/s (0 = unpaced burst)";
+  stream at R jobs/s (0 = unpaced burst)
+hot path: --exec-queue picks the stage-1→stage-2 conduit — ws
+  (work-stealing deques, default) or single (one bounded queue, the
+  contention baseline); bench-diff compares fresh BENCH_*.json
+  snapshots in --fresh against committed baselines in --baseline
+  (per-unit tolerance bands; exits 1 on regression or missing keys)";
 
 /// The flags each subcommand accepts (the audit surface for [`USAGE`]).
 const SUBCOMMANDS: &[(&str, &[&str])] = &[
@@ -117,9 +123,11 @@ const SUBCOMMANDS: &[(&str, &[&str])] = &[
             "workload", "seed", "jobs", "workers", "flows", "flow", "substrate",
             "repeat", "traces-dir", "layers", "rho", "steps", "kappa", "no-carry",
             "no-delta", "json", "nodes", "route", "admit", "arrival-rate",
+            "exec-queue",
         ],
     ),
     ("e2e", &["artifacts", "seed"]),
+    ("bench-diff", &["baseline", "fresh"]),
     ("lint", &[]),
 ];
 
@@ -448,6 +456,13 @@ fn main() {
             let carry = !flags.contains_key("no-carry");
             let delta = !flags.contains_key("no-delta");
             let json_out = flags.contains_key("json");
+            let exec_queue = match flags.get("exec-queue") {
+                None => ExecQueueKind::default(),
+                Some(v) => ExecQueueKind::parse(v).unwrap_or_else(|| {
+                    eprintln!("unknown exec queue '{v}' (ws|single)");
+                    std::process::exit(2);
+                }),
+            };
             let sys = SystemConfig::for_workload(&spec);
 
             // Fleet mode: `--nodes` serves through the Layer-4 cluster —
@@ -473,6 +488,7 @@ fn main() {
                         node: CoordinatorConfig {
                             plan_workers: workers,
                             exec_workers: workers,
+                            exec_queue,
                             ..Default::default()
                         },
                     },
@@ -612,7 +628,15 @@ fn main() {
                 return;
             }
 
-            let coord = Coordinator::new(workers, 8, sys);
+            let coord = Coordinator::with_config(
+                sys,
+                CoordinatorConfig {
+                    plan_workers: workers,
+                    exec_workers: workers,
+                    exec_queue,
+                    ..Default::default()
+                },
+            );
             let t0 = std::time::Instant::now();
 
             // Request source: `--traces-dir` loads files lazily (one
@@ -892,6 +916,106 @@ fn main() {
             println!(
                 "e2e gains: throughput {:.2}x, energy {:.2}x",
                 g.throughput, g.energy_eff
+            );
+        }
+        "bench-diff" => {
+            // Perf-trajectory gate: every BENCH_*.json baseline must have
+            // a fresh counterpart, with every metric key present and (when
+            // the `fast` modes agree) every value inside its per-unit
+            // tolerance band. CI runs this right after the smoke benches.
+            use sata::util::bench::{diff_snapshots, DiffStatus};
+            use sata::util::json::Json;
+            let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+            let baseline_dir = flags
+                .get("baseline")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(|| root.clone());
+            let fresh_dir =
+                flags.get("fresh").map(std::path::PathBuf::from).unwrap_or(root);
+            let mut names: Vec<String> = match std::fs::read_dir(&baseline_dir) {
+                Ok(rd) => rd
+                    .filter_map(|e| e.ok())
+                    .filter_map(|e| e.file_name().into_string().ok())
+                    .filter_map(|f| {
+                        f.strip_prefix("BENCH_")
+                            .and_then(|rest| rest.strip_suffix(".json"))
+                            .map(str::to_string)
+                    })
+                    .collect(),
+                Err(e) => {
+                    eprintln!(
+                        "cannot read baseline dir {}: {e}",
+                        baseline_dir.display()
+                    );
+                    std::process::exit(2);
+                }
+            };
+            names.sort();
+            if names.is_empty() {
+                eprintln!(
+                    "no BENCH_*.json baselines in {}",
+                    baseline_dir.display()
+                );
+                std::process::exit(2);
+            }
+            let read_snap = |path: &std::path::Path| -> Result<Json, String> {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+                Json::parse(&text)
+                    .map_err(|e| format!("cannot parse {}: {e}", path.display()))
+            };
+            let mut failures = 0usize;
+            for name in &names {
+                let bpath = baseline_dir.join(format!("BENCH_{name}.json"));
+                let fpath = fresh_dir.join(format!("BENCH_{name}.json"));
+                if !fpath.exists() {
+                    println!(
+                        "{name}: FRESH SNAPSHOT MISSING ({})",
+                        fpath.display()
+                    );
+                    failures += 1;
+                    continue;
+                }
+                let diff = read_snap(&bpath).and_then(|b| {
+                    read_snap(&fpath).and_then(|f| diff_snapshots(&b, &f))
+                });
+                match diff {
+                    Ok(d) => {
+                        let n_fail = d.failures();
+                        println!(
+                            "{name}: {} metrics, {} failure(s){}",
+                            d.diffs.len(),
+                            n_fail,
+                            if d.values_compared {
+                                ""
+                            } else {
+                                " (fast-mode mismatch: keys audited, values skipped)"
+                            },
+                        );
+                        for m in &d.diffs {
+                            if m.status != DiffStatus::Ok
+                                && m.status != DiffStatus::SkippedFastMismatch
+                            {
+                                println!("{}", m.render());
+                            }
+                        }
+                        failures += n_fail;
+                    }
+                    Err(e) => {
+                        println!("{name}: {e}");
+                        failures += 1;
+                    }
+                }
+            }
+            if failures > 0 {
+                eprintln!(
+                    "bench-diff: {failures} failure(s) against committed baselines"
+                );
+                std::process::exit(1);
+            }
+            println!(
+                "bench-diff: all {} snapshot(s) within tolerance",
+                names.len()
             );
         }
         "lint" => {

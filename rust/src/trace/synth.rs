@@ -348,7 +348,14 @@ impl Iterator for ArrivalGen {
             // Exponential gap; 1−u ∈ (0, 1] keeps ln finite.
             let u = self.rng.f64();
             let gap_s = -(1.0 - u).ln() / self.spec.rate_per_s;
-            self.t_ns += gap_s * 1e9;
+            // Extreme rates break the float arithmetic at both ends: a
+            // subnormal rate overflows `gap_s * 1e9` to +inf, and a
+            // huge rate can round the gap to -0.0-adjacent noise. Clamp
+            // the gap non-negative and saturate the clock at f64::MAX
+            // so `at_ns` stays finite and non-decreasing for every
+            // positive rate.
+            let gap_ns = (gap_s * 1e9).max(0.0);
+            self.t_ns = (self.t_ns + gap_ns).min(f64::MAX);
         }
         let decode =
             self.spec.decode_frac > 0.0 && self.rng.chance(self.spec.decode_frac);
@@ -546,6 +553,42 @@ mod tests {
         .take(20)
         .collect();
         assert!(burst.iter().all(|a| a.at_ns == 0.0));
+    }
+
+    #[test]
+    fn arrival_times_stay_finite_at_extreme_rates() {
+        let spec = WorkloadSpec::ttst();
+        // Maximal finite rate: gaps round to ~0 but must never go
+        // negative or NaN — the stream stays finite and non-decreasing.
+        let fast: Vec<Arrival> = ArrivalGen::new(
+            &spec,
+            ArrivalSpec { rate_per_s: f64::MAX, ..Default::default() },
+            0xFA57,
+        )
+        .take(50)
+        .collect();
+        let mut last = 0.0;
+        for a in &fast {
+            assert!(a.at_ns.is_finite(), "at_ns must stay finite");
+            assert!(a.at_ns >= last, "at_ns must be non-decreasing");
+            last = a.at_ns;
+        }
+        // Subnormal rate: each gap overflows in f64, so the clock must
+        // saturate at f64::MAX instead of turning infinite.
+        let slow: Vec<Arrival> = ArrivalGen::new(
+            &spec,
+            ArrivalSpec {
+                rate_per_s: f64::MIN_POSITIVE / 4.0,
+                ..Default::default()
+            },
+            0x510,
+        )
+        .take(5)
+        .collect();
+        for a in &slow {
+            assert!(a.at_ns.is_finite(), "saturated clock must stay finite");
+        }
+        assert_eq!(slow.last().unwrap().at_ns, f64::MAX);
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! Per-worker buffer arenas. The serving hot path builds the same
+//! short-lived `Vec`s over and over — the delta-planning scratch mask
+//! (one `bool` per key), the per-step flow-report fold buffer — and a
+//! fresh heap allocation per unit of work is pure constant overhead
+//! (the PR 6 scratch-buffer observation, generalized). A [`Pool`] keeps
+//! the retired buffers on a small free list owned by one worker thread,
+//! so reuse costs a `Vec::pop` + `clear` instead of a `malloc`, with no
+//! synchronization at all: pools are deliberately `!Sync` by ownership
+//! — each worker owns its own.
+//!
+//! The pool counts what it saves ([`ArenaStats`]): how many takes were
+//! served from the free list and how many bytes of capacity that
+//! recycled. Workers periodically drain those local counters into the
+//! coordinator's shared atomics (`CoordinatorMetrics::arena_*`), so the
+//! allocation win is observable next to the lock-contention counters it
+//! rides with.
+
+/// Counters for one [`Pool`] (or a sum over several — the fields add).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Buffers requested from the pool.
+    pub takes: u64,
+    /// Takes served by recycling a retired buffer (the rest allocated).
+    pub reuses: u64,
+    /// Total capacity of recycled buffers, in bytes — heap traffic the
+    /// pool avoided.
+    pub bytes_reused: u64,
+}
+
+impl ArenaStats {
+    /// Fold `other` into `self` (saturating; these are statistics).
+    pub fn absorb(&mut self, other: ArenaStats) {
+        self.takes = self.takes.saturating_add(other.takes);
+        self.reuses = self.reuses.saturating_add(other.reuses);
+        self.bytes_reused = self.bytes_reused.saturating_add(other.bytes_reused);
+    }
+}
+
+/// A free list of `Vec<T>` buffers owned by one worker. `take` returns
+/// a cleared buffer (recycled when one is available), `give` retires a
+/// buffer back to the list. Buffers with zero capacity are dropped on
+/// `give` — recycling them saves nothing — and the list is bounded by
+/// `max_free` so a burst can't pin memory forever.
+#[derive(Debug)]
+pub struct Pool<T> {
+    free: Vec<Vec<T>>,
+    max_free: usize,
+    stats: ArenaStats,
+}
+
+impl<T> Pool<T> {
+    /// New empty pool retaining at most `max_free` retired buffers.
+    pub fn new(max_free: usize) -> Self {
+        Pool { free: Vec::new(), max_free, stats: ArenaStats::default() }
+    }
+
+    /// A cleared buffer: recycled from the free list when possible,
+    /// freshly allocated (empty, zero capacity) otherwise.
+    pub fn take(&mut self) -> Vec<T> {
+        self.stats.takes = self.stats.takes.saturating_add(1);
+        match self.free.pop() {
+            Some(mut v) => {
+                self.stats.reuses = self.stats.reuses.saturating_add(1);
+                let bytes = (v.capacity() * std::mem::size_of::<T>()) as u64;
+                self.stats.bytes_reused =
+                    self.stats.bytes_reused.saturating_add(bytes);
+                v.clear();
+                v
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Retire a buffer back to the pool. Contents are discarded (the
+    /// next `take` clears); capacity is what gets recycled.
+    pub fn give(&mut self, v: Vec<T>) {
+        if v.capacity() > 0 && self.free.len() < self.max_free {
+            self.free.push(v);
+        }
+    }
+
+    /// Counters since construction (or the last [`Pool::drain_stats`]).
+    pub fn stats(&self) -> ArenaStats {
+        self.stats
+    }
+
+    /// Take the counters and reset them — the flush primitive workers
+    /// use to fold local stats into shared atomics.
+    pub fn drain_stats(&mut self) -> ArenaStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    /// Retired buffers currently held.
+    pub fn free_len(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_recycles_capacity_and_counts_bytes() {
+        let mut p: Pool<u64> = Pool::new(4);
+        let mut v = p.take();
+        assert_eq!(p.stats().takes, 1);
+        assert_eq!(p.stats().reuses, 0);
+        v.reserve_exact(16);
+        let cap = v.capacity();
+        assert!(cap >= 16);
+        v.extend([1u64, 2, 3]);
+        p.give(v);
+        assert_eq!(p.free_len(), 1);
+
+        let v2 = p.take();
+        // Recycled: cleared, same capacity, counted in bytes.
+        assert!(v2.is_empty());
+        assert_eq!(v2.capacity(), cap);
+        let s = p.stats();
+        assert_eq!((s.takes, s.reuses), (2, 1));
+        assert_eq!(s.bytes_reused, (cap * std::mem::size_of::<u64>()) as u64);
+    }
+
+    #[test]
+    fn zero_capacity_and_overflow_buffers_are_dropped() {
+        let mut p: Pool<u8> = Pool::new(1);
+        // Zero-capacity give: nothing worth keeping.
+        p.give(Vec::new());
+        assert_eq!(p.free_len(), 0);
+        // The list is bounded by max_free.
+        p.give(Vec::with_capacity(8));
+        p.give(Vec::with_capacity(8));
+        assert_eq!(p.free_len(), 1);
+    }
+
+    #[test]
+    fn drain_stats_resets_and_absorb_sums() {
+        let mut p: Pool<u32> = Pool::new(2);
+        p.give(Vec::with_capacity(4));
+        let _ = p.take();
+        let first = p.drain_stats();
+        assert_eq!(first.reuses, 1);
+        assert_eq!(p.stats(), ArenaStats::default());
+
+        let mut total = ArenaStats::default();
+        total.absorb(first);
+        total.absorb(ArenaStats { takes: 2, reuses: 1, bytes_reused: 64 });
+        assert_eq!(total.takes, 3);
+        assert_eq!(total.reuses, 2);
+        assert_eq!(total.bytes_reused, first.bytes_reused + 64);
+    }
+}

@@ -241,6 +241,191 @@ pub fn snapshot_path(name: &str) -> PathBuf {
         .join(format!("BENCH_{name}.json"))
 }
 
+/// Tolerance band for one metric unit: which direction counts as a
+/// regression and how much drift is forgiven before `sata bench-diff`
+/// flags it. The slack for a baseline value `b` is `rel * |b| + abs`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Band {
+    /// Falling below `baseline - slack` is a regression (throughput-like).
+    pub lower_bad: bool,
+    /// Rising above `baseline + slack` is a regression (latency-like).
+    pub higher_bad: bool,
+    /// Relative slack, as a fraction of `|baseline|`.
+    pub rel: f64,
+    /// Absolute slack added on top of the relative component.
+    pub abs: f64,
+}
+
+/// The per-unit tolerance policy behind `sata bench-diff`. Bands are
+/// deliberately wide — benchmarks run on shared, noisy CI machines —
+/// so the gate catches trajectory-sized regressions (a lock back on the
+/// hot path, a cache that stopped hitting), not single-digit jitter.
+pub fn band_for(unit: &str) -> Band {
+    if unit.ends_with("/s") {
+        // Throughput (jobs/s, req/s, tok/s): only a drop is bad.
+        Band { lower_bad: true, higher_bad: false, rel: 0.5, abs: 0.0 }
+    } else if unit == "x" {
+        // Gain multipliers: only shrinking toward 1x is bad.
+        Band { lower_bad: true, higher_bad: false, rel: 0.4, abs: 0.0 }
+    } else if unit.starts_with("ns") || unit == "ms" {
+        // Latency (ns, ns/tok, ns/step, ms): only growth is bad.
+        Band { lower_bad: false, higher_bad: true, rel: 0.5, abs: 0.0 }
+    } else if unit == "frac" {
+        // Rates in [0, 1]: drift either way is suspicious; a relative
+        // band would be meaningless near 0, so the slack is absolute.
+        Band { lower_bad: true, higher_bad: true, rel: 0.0, abs: 0.25 }
+    } else {
+        // Counts (evictions, ...) and future units: two-sided, generous,
+        // with a flat allowance so a baseline of 0 tolerates small noise.
+        Band { lower_bad: true, higher_bad: true, rel: 0.5, abs: 1.0 }
+    }
+}
+
+/// Verdict for one metric key compared across two snapshots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiffStatus {
+    /// Within the tolerance band.
+    Ok,
+    /// Outside the band in the bad direction — fails the gate.
+    Regressed,
+    /// In the baseline but absent from the fresh snapshot — fails the
+    /// gate (a metric silently disappearing is itself drift).
+    MissingInFresh,
+    /// Only in the fresh snapshot — advisory; commit a new baseline.
+    AddedInFresh,
+    /// Value check skipped: the two snapshots were taken in different
+    /// `SATA_BENCH_FAST` modes (smoke vs full sizing), so values are
+    /// not comparable. Only the key structure was audited.
+    SkippedFastMismatch,
+}
+
+/// One metric key compared between a committed baseline snapshot and a
+/// freshly emitted one.
+#[derive(Clone, Debug)]
+pub struct MetricDiff {
+    /// Metric key, e.g. `hot_path.k0.9.w4.ws.jobs_per_s`.
+    pub key: String,
+    /// Unit label (decides the tolerance [`Band`]).
+    pub unit: String,
+    /// Committed baseline value (NaN when [`DiffStatus::AddedInFresh`]).
+    pub baseline: f64,
+    /// Fresh value (NaN when [`DiffStatus::MissingInFresh`]).
+    pub fresh: f64,
+    /// The verdict.
+    pub status: DiffStatus,
+}
+
+impl MetricDiff {
+    /// One table line for the `bench-diff` report.
+    pub fn render(&self) -> String {
+        let tag = match self.status {
+            DiffStatus::Ok => "ok",
+            DiffStatus::Regressed => "REGRESSED",
+            DiffStatus::MissingInFresh => "MISSING",
+            DiffStatus::AddedInFresh => "added",
+            DiffStatus::SkippedFastMismatch => "skipped",
+        };
+        format!(
+            "  {tag:<9} {:<52} base {:>14.4} fresh {:>14.4} {}",
+            self.key, self.baseline, self.fresh, self.unit
+        )
+    }
+}
+
+/// Result of diffing one `BENCH_<name>.json` pair.
+#[derive(Clone, Debug)]
+pub struct SnapshotDiff {
+    /// Snapshot name (from the baseline's `name` field).
+    pub name: String,
+    /// Whether values were compared. False when the `fast` flags of the
+    /// two snapshots disagree — then only key presence was checked.
+    pub values_compared: bool,
+    /// Per-key verdicts, baseline order first, then fresh-only keys.
+    pub diffs: Vec<MetricDiff>,
+}
+
+impl SnapshotDiff {
+    /// Gate failures: regressions plus keys missing from the fresh run.
+    pub fn failures(&self) -> usize {
+        self.diffs
+            .iter()
+            .filter(|d| {
+                matches!(d.status, DiffStatus::Regressed | DiffStatus::MissingInFresh)
+            })
+            .count()
+    }
+}
+
+fn metric_rows(snap: &Json) -> Result<Vec<(String, f64, String)>, String> {
+    let arr = snap
+        .get("metrics")
+        .as_arr()
+        .ok_or_else(|| "snapshot has no `metrics` array".to_string())?;
+    arr.iter()
+        .map(|m| {
+            let key = m
+                .get("key")
+                .as_str()
+                .ok_or_else(|| "metric without a string `key`".to_string())?
+                .to_string();
+            let value = m
+                .get("value")
+                .as_f64()
+                .ok_or_else(|| format!("metric {key} without a numeric `value`"))?;
+            let unit = m.get("unit").as_str().unwrap_or("").to_string();
+            Ok((key, value, unit))
+        })
+        .collect()
+}
+
+/// Compare a fresh snapshot against its committed baseline. Value
+/// comparisons apply the per-unit [`band_for`] tolerance and only run
+/// when both snapshots were taken in the same `fast` mode; key-presence
+/// checks always run. Errors only on malformed snapshots.
+pub fn diff_snapshots(baseline: &Json, fresh: &Json) -> Result<SnapshotDiff, String> {
+    let name = baseline.get("name").as_str().unwrap_or("?").to_string();
+    let values_compared = baseline.get("fast").as_bool().unwrap_or(false)
+        == fresh.get("fast").as_bool().unwrap_or(false);
+    let base_rows = metric_rows(baseline)?;
+    let fresh_rows = metric_rows(fresh)?;
+    let fresh_by_key: std::collections::HashMap<&str, f64> =
+        fresh_rows.iter().map(|(k, v, _)| (k.as_str(), *v)).collect();
+
+    let mut diffs = Vec::with_capacity(base_rows.len());
+    for (key, base, unit) in &base_rows {
+        let (fresh_v, status) = match fresh_by_key.get(key.as_str()) {
+            None => (f64::NAN, DiffStatus::MissingInFresh),
+            Some(&f) if !values_compared => (f, DiffStatus::SkippedFastMismatch),
+            Some(&f) => {
+                let b = band_for(unit);
+                let slack = b.rel * base.abs() + b.abs;
+                let bad = (b.lower_bad && f < base - slack)
+                    || (b.higher_bad && f > base + slack);
+                (f, if bad { DiffStatus::Regressed } else { DiffStatus::Ok })
+            }
+        };
+        diffs.push(MetricDiff {
+            key: key.clone(),
+            unit: unit.clone(),
+            baseline: *base,
+            fresh: fresh_v,
+            status,
+        });
+    }
+    for (key, value, unit) in &fresh_rows {
+        if !base_rows.iter().any(|(k, _, _)| k == key) {
+            diffs.push(MetricDiff {
+                key: key.clone(),
+                unit: unit.clone(),
+                baseline: f64::NAN,
+                fresh: *value,
+                status: DiffStatus::AddedInFresh,
+            });
+        }
+    }
+    Ok(SnapshotDiff { name, values_compared, diffs })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -292,6 +477,121 @@ mod tests {
         assert!(fast_mode_value(Some("1")));
         assert!(fast_mode_value(Some("true")));
         assert!(fast_mode_value(Some("00"))); // not the literal "0"
+    }
+
+    fn snap(fast: bool, metrics: &[(&str, f64, &str)]) -> Json {
+        let rows = metrics
+            .iter()
+            .map(|(k, v, u)| {
+                Json::obj(vec![
+                    ("key", Json::str(k)),
+                    ("value", Json::num(*v)),
+                    ("unit", Json::str(u)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::str("unit")),
+            ("fast", Json::Bool(fast)),
+            ("samples", Json::Arr(Vec::new())),
+            ("metrics", Json::Arr(rows)),
+        ])
+    }
+
+    #[test]
+    fn bands_are_one_sided_for_throughput_and_latency() {
+        for unit in ["jobs/s", "req/s", "tok/s", "x"] {
+            let b = band_for(unit);
+            assert!(b.lower_bad && !b.higher_bad, "{unit}");
+        }
+        for unit in ["ns", "ns/tok", "ns/step", "ms"] {
+            let b = band_for(unit);
+            assert!(b.higher_bad && !b.lower_bad, "{unit}");
+        }
+        let frac = band_for("frac");
+        assert!(frac.lower_bad && frac.higher_bad && frac.rel == 0.0);
+        let other = band_for("evictions");
+        assert!(other.lower_bad && other.higher_bad && other.abs >= 1.0);
+    }
+
+    #[test]
+    fn diff_flags_regressions_in_the_bad_direction_only() {
+        let base = snap(
+            false,
+            &[
+                ("t.jobs", 100.0, "jobs/s"),
+                ("t.lat", 1000.0, "ns"),
+                ("t.hit", 0.9, "frac"),
+            ],
+        );
+        // Throughput up + latency down + hit-rate inside the band: clean.
+        let good = snap(
+            false,
+            &[
+                ("t.jobs", 160.0, "jobs/s"),
+                ("t.lat", 400.0, "ns"),
+                ("t.hit", 0.8, "frac"),
+            ],
+        );
+        let d = diff_snapshots(&base, &good).unwrap();
+        assert!(d.values_compared);
+        assert_eq!(d.failures(), 0);
+        assert!(d.diffs.iter().all(|m| m.status == DiffStatus::Ok));
+
+        // Throughput halved-and-then-some, latency doubled-and-then-some,
+        // hit rate off by more than the absolute band: three failures.
+        let bad = snap(
+            false,
+            &[
+                ("t.jobs", 49.0, "jobs/s"),
+                ("t.lat", 1501.0, "ns"),
+                ("t.hit", 0.6, "frac"),
+            ],
+        );
+        let d = diff_snapshots(&base, &bad).unwrap();
+        assert_eq!(d.failures(), 3);
+        assert!(d.diffs.iter().all(|m| m.status == DiffStatus::Regressed));
+    }
+
+    #[test]
+    fn diff_tracks_missing_and_added_keys() {
+        let base = snap(false, &[("a", 1.0, "x"), ("b", 2.0, "x")]);
+        let fresh = snap(false, &[("a", 1.0, "x"), ("c", 3.0, "x")]);
+        let d = diff_snapshots(&base, &fresh).unwrap();
+        let by_key = |k: &str| d.diffs.iter().find(|m| m.key == k).unwrap();
+        assert_eq!(by_key("a").status, DiffStatus::Ok);
+        // A vanished metric is a gate failure; a new one is advisory.
+        assert_eq!(by_key("b").status, DiffStatus::MissingInFresh);
+        assert_eq!(by_key("c").status, DiffStatus::AddedInFresh);
+        assert_eq!(d.failures(), 1);
+        assert!(by_key("b").render().contains("MISSING"));
+    }
+
+    #[test]
+    fn fast_mismatch_skips_values_but_still_audits_keys() {
+        let base = snap(false, &[("a", 100.0, "jobs/s"), ("b", 2.0, "x")]);
+        // Smoke run: wildly lower throughput, but fast=true so values are
+        // not comparable — only the missing key fails the gate.
+        let fresh = snap(true, &[("a", 1.0, "jobs/s")]);
+        let d = diff_snapshots(&base, &fresh).unwrap();
+        assert!(!d.values_compared);
+        let by_key = |k: &str| d.diffs.iter().find(|m| m.key == k).unwrap();
+        assert_eq!(by_key("a").status, DiffStatus::SkippedFastMismatch);
+        assert_eq!(by_key("b").status, DiffStatus::MissingInFresh);
+        assert_eq!(d.failures(), 1);
+    }
+
+    #[test]
+    fn diff_rejects_malformed_snapshots() {
+        let ok = snap(false, &[("a", 1.0, "x")]);
+        let no_metrics = Json::obj(vec![("name", Json::str("x"))]);
+        assert!(diff_snapshots(&no_metrics, &ok).is_err());
+        assert!(diff_snapshots(&ok, &no_metrics).is_err());
+        let bad_row = Json::parse(
+            r#"{"name":"x","fast":false,"metrics":[{"value":1.0}]}"#,
+        )
+        .unwrap();
+        assert!(diff_snapshots(&ok, &bad_row).is_err());
     }
 
     #[test]

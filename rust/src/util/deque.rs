@@ -1,0 +1,554 @@
+//! Work-stealing execution pool. The serving pipeline's planned units
+//! used to flow through one bounded `sync_channel`, so every execute
+//! worker serialized on the same channel lock per unit. [`ExecPool`]
+//! replaces it with the classic work-stealing shape, built from std
+//! primitives only:
+//!
+//! * a shared **injector** queue where producers (plan workers) push,
+//! * one **deque** per execute worker, popped LIFO by its owner,
+//! * randomized, seeded **stealing**: an idle worker sweeps the other
+//!   deques in a per-worker pseudorandom order and takes half of the
+//!   first non-empty victim (oldest units first).
+//!
+//! A worker touches shared state only when its own deque runs dry: it
+//! then grabs a small batch from the injector (amortizing the shared
+//! lock over several units, and parking the extras on its own deque) or
+//! steals. In steady state most pops are own-deque pops — uncontended
+//! per-worker locks — which is what `CoordinatorMetrics`'s
+//! `queue_lockfree_ratio` measures.
+//!
+//! Capacity and shutdown reproduce the `sync_channel` contract the pool
+//! replaces: `push` blocks while `cap` units are in flight and errors
+//! once every worker is gone; `next` returns `None` once every producer
+//! handle has dropped **and** the pool has drained. Producers and
+//! workers are RAII handles ([`Producer`], [`Worker`]) so a panicking
+//! thread still participates in shutdown via `Drop`. All waits are
+//! bounded (`wait_timeout` + re-check), so a notification lost to a
+//! steal racing a shutdown costs a millisecond-scale delay, never a
+//! hang — and no path ever holds two deque locks at once.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::Duration;
+
+use crate::util::rng::{mix64, Rng};
+use crate::util::sync::lock_tolerant;
+
+/// Units grabbed from the injector per visit: the first is returned,
+/// the rest park on the visiting worker's own deque.
+const INJECTOR_GRAB: usize = 4;
+
+/// How long an idle worker sleeps between full re-scans.
+const IDLE_WAIT: Duration = Duration::from_millis(1);
+
+/// How long a blocked producer sleeps between capacity re-checks.
+const FULL_WAIT: Duration = Duration::from_millis(5);
+
+/// Snapshot of an [`ExecPool`]'s contention counters. Every unit
+/// returned by a pop is classified by where it came from, so
+/// `local_pops + injector_pops + steal_successes` equals the number of
+/// units handed to workers (and equals `pushes` once drained).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolCounters {
+    /// Units accepted by `push`.
+    pub pushes: u64,
+    /// Pops served from the worker's own deque (no shared lock).
+    pub local_pops: u64,
+    /// Pops served directly from the shared injector.
+    pub injector_pops: u64,
+    /// Steal probes of another worker's deque.
+    pub steal_attempts: u64,
+    /// Probes that took at least one unit (each returns exactly one
+    /// unit directly; extras park on the thief's deque).
+    pub steal_successes: u64,
+    /// Total units moved off victims by steals, extras included.
+    pub stolen_items: u64,
+}
+
+impl PoolCounters {
+    /// Units handed to workers so far.
+    pub fn returns(&self) -> u64 {
+        self.local_pops + self.injector_pops + self.steal_successes
+    }
+
+    /// Fraction of handed-out units served from the worker's own deque
+    /// without touching shared queue state. 0 when nothing popped yet.
+    pub fn local_ratio(&self) -> f64 {
+        let total = self.returns();
+        if total == 0 { 0.0 } else { self.local_pops as f64 / total as f64 }
+    }
+}
+
+struct Counters {
+    pushes: AtomicU64,
+    local_pops: AtomicU64,
+    injector_pops: AtomicU64,
+    steal_attempts: AtomicU64,
+    steal_successes: AtomicU64,
+    stolen_items: AtomicU64,
+}
+
+/// The shared pool. Create with [`ExecPool::new`], then hand a
+/// [`Producer`] to each pushing thread and a [`Worker`] (one per `id in
+/// 0..workers`) to each popping thread.
+pub struct ExecPool<T> {
+    injector: Mutex<VecDeque<T>>,
+    deques: Vec<Mutex<VecDeque<T>>>,
+    /// Parking lot for both blocked producers and idle workers. Holds
+    /// no data — it exists so waits can re-check the atomics under a
+    /// lock and sleep with a bounded timeout.
+    signal: Mutex<()>,
+    work_cv: Condvar,
+    space_cv: Condvar,
+    cap: usize,
+    /// Units pushed but not yet handed to a worker.
+    pending: AtomicUsize,
+    producers: AtomicUsize,
+    consumers: AtomicUsize,
+    /// Set once the last producer drops; with `pending == 0` it means
+    /// drained-and-done.
+    closed: AtomicBool,
+    seed: u64,
+    counters: Counters,
+}
+
+impl<T> ExecPool<T> {
+    /// Pool for exactly `workers` consumers (ids `0..workers`), holding
+    /// at most `cap` in-flight units, stealing in a `seed`-derived
+    /// per-worker order. `workers` and `cap` are clamped to ≥ 1.
+    pub fn new(workers: usize, cap: usize, seed: u64) -> Self {
+        let workers = workers.max(1);
+        ExecPool {
+            injector: Mutex::new(VecDeque::new()),
+            deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            signal: Mutex::new(()),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            cap: cap.max(1),
+            pending: AtomicUsize::new(0),
+            producers: AtomicUsize::new(0),
+            consumers: AtomicUsize::new(workers),
+            closed: AtomicBool::new(false),
+            seed,
+            counters: Counters {
+                pushes: AtomicU64::new(0),
+                local_pops: AtomicU64::new(0),
+                injector_pops: AtomicU64::new(0),
+                steal_attempts: AtomicU64::new(0),
+                steal_successes: AtomicU64::new(0),
+                stolen_items: AtomicU64::new(0),
+            },
+        }
+    }
+
+    /// Register a producer handle. All producers must be registered
+    /// before the first one drops, or the pool closes early.
+    pub fn producer(self: &Arc<Self>) -> Producer<T> {
+        self.producers.fetch_add(1, Ordering::AcqRel);
+        Producer { pool: Arc::clone(self) }
+    }
+
+    /// The worker handle for deque `id` (`id < workers`; one handle per
+    /// id — the pool counted its consumers at construction and each
+    /// handle's drop retires one).
+    pub fn worker(self: &Arc<Self>, id: usize) -> Worker<T> {
+        assert!(id < self.deques.len(), "worker id out of range");
+        let rng = Rng::new(mix64(self.seed ^ (id as u64).wrapping_add(1)));
+        Worker { pool: Arc::clone(self), id, rng }
+    }
+
+    /// Contention counters so far.
+    pub fn counters(&self) -> PoolCounters {
+        PoolCounters {
+            pushes: self.counters.pushes.load(Ordering::Relaxed),
+            local_pops: self.counters.local_pops.load(Ordering::Relaxed),
+            injector_pops: self.counters.injector_pops.load(Ordering::Relaxed),
+            steal_attempts: self.counters.steal_attempts.load(Ordering::Relaxed),
+            steal_successes: self
+                .counters
+                .steal_successes
+                .load(Ordering::Relaxed),
+            stolen_items: self.counters.stolen_items.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Units pushed but not yet handed to a worker.
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::Acquire)
+    }
+
+    /// Number of worker deques (the pool's parallelism).
+    pub fn workers(&self) -> usize {
+        self.deques.len()
+    }
+
+    fn push(&self, item: T) -> Result<(), T> {
+        loop {
+            if self.consumers.load(Ordering::Acquire) == 0 {
+                // Every worker is gone: nothing will ever drain this.
+                return Err(item);
+            }
+            let p = self.pending.load(Ordering::Acquire);
+            if p < self.cap {
+                // Reserve the slot with a CAS so the bound is hard even
+                // under concurrent producers.
+                if self
+                    .pending
+                    .compare_exchange(
+                        p,
+                        p + 1,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+                {
+                    break;
+                }
+                continue;
+            }
+            // Full: sleep until a unit retires. Bounded wait + re-check
+            // bounds the cost of a missed notification.
+            let g = lock_tolerant(&self.signal);
+            if self.pending.load(Ordering::Acquire) >= self.cap
+                && self.consumers.load(Ordering::Acquire) > 0
+            {
+                let _ = self
+                    .space_cv
+                    .wait_timeout(g, FULL_WAIT)
+                    .unwrap_or_else(PoisonError::into_inner);
+            }
+        }
+        lock_tolerant(&self.injector).push_back(item);
+        self.counters.pushes.fetch_add(1, Ordering::Relaxed);
+        self.work_cv.notify_one();
+        Ok(())
+    }
+
+    /// A unit left the queueing structure: free its capacity slot.
+    fn retire_one(&self) {
+        self.pending.fetch_sub(1, Ordering::AcqRel);
+        self.space_cv.notify_one();
+    }
+
+    fn pop(&self, worker: usize, rng: &mut Rng) -> Option<T> {
+        loop {
+            // 1. Own deque, newest first — LIFO keeps a session's
+            //    just-planned units hot in the worker running them.
+            {
+                let mut own = lock_tolerant(&self.deques[worker]);
+                if let Some(item) = own.pop_back() {
+                    drop(own);
+                    self.counters.local_pops.fetch_add(1, Ordering::Relaxed);
+                    self.retire_one();
+                    return Some(item);
+                }
+            }
+            // 2. Shared injector: grab a small batch, return the oldest,
+            //    park the rest locally (amortizes the shared lock).
+            let batch: Vec<T> = {
+                let mut inj = lock_tolerant(&self.injector);
+                let take = INJECTOR_GRAB.min(inj.len());
+                inj.drain(..take).collect()
+            };
+            let mut it = batch.into_iter();
+            if let Some(first) = it.next() {
+                let extras = it.len();
+                if extras > 0 {
+                    lock_tolerant(&self.deques[worker]).extend(it);
+                }
+                self.counters.injector_pops.fetch_add(1, Ordering::Relaxed);
+                self.retire_one();
+                return Some(first);
+            }
+            // 3. Steal: sweep the other deques in a seeded pseudorandom
+            //    order; take half of the first non-empty victim, oldest
+            //    units first. One victim lock at a time, released before
+            //    the thief touches its own deque — deque locks never
+            //    nest.
+            let n = self.deques.len();
+            if n > 1 {
+                let offset = rng.gen_range(n - 1);
+                for i in 0..n {
+                    let v = (worker + 1 + offset + i) % n;
+                    if v == worker {
+                        continue;
+                    }
+                    self.counters
+                        .steal_attempts
+                        .fetch_add(1, Ordering::Relaxed);
+                    let booty: Vec<T> = {
+                        let mut victim = lock_tolerant(&self.deques[v]);
+                        let take = victim.len().div_ceil(2);
+                        victim.drain(..take).collect()
+                    };
+                    let mut it = booty.into_iter();
+                    if let Some(first) = it.next() {
+                        let extras = it.len();
+                        self.counters
+                            .steal_successes
+                            .fetch_add(1, Ordering::Relaxed);
+                        self.counters
+                            .stolen_items
+                            .fetch_add(1 + extras as u64, Ordering::Relaxed);
+                        if extras > 0 {
+                            lock_tolerant(&self.deques[worker]).extend(it);
+                        }
+                        self.retire_one();
+                        return Some(first);
+                    }
+                }
+            }
+            // 4. Nothing anywhere. Done if closed-and-drained (`closed`
+            //    is read first: its Acquire load makes all prior pushes'
+            //    `pending` increments visible to the check below), else
+            //    sleep briefly and re-scan.
+            if self.closed.load(Ordering::Acquire)
+                && self.pending.load(Ordering::Acquire) == 0
+            {
+                return None;
+            }
+            let g = lock_tolerant(&self.signal);
+            if self.closed.load(Ordering::Acquire)
+                && self.pending.load(Ordering::Acquire) == 0
+            {
+                return None;
+            }
+            let _ = self
+                .work_cv
+                .wait_timeout(g, IDLE_WAIT)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+/// RAII producer handle. Dropping the last one closes the pool: workers
+/// drain whatever is pending, then their `next` returns `None`.
+pub struct Producer<T> {
+    pool: Arc<ExecPool<T>>,
+}
+
+impl<T> Producer<T> {
+    /// Push a unit, blocking while the pool is at capacity. `Err`
+    /// returns the unit if every worker is gone.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        self.pool.push(item)
+    }
+
+    /// The pool this producer feeds.
+    pub fn pool(&self) -> &Arc<ExecPool<T>> {
+        &self.pool
+    }
+}
+
+impl<T> Drop for Producer<T> {
+    fn drop(&mut self) {
+        if self.pool.producers.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.pool.closed.store(true, Ordering::Release);
+            self.pool.work_cv.notify_all();
+            self.pool.space_cv.notify_all();
+        }
+    }
+}
+
+/// RAII worker handle for one deque. Dropping it (return or panic)
+/// retires the consumer; once none remain, blocked producers error out
+/// instead of hanging.
+pub struct Worker<T> {
+    pool: Arc<ExecPool<T>>,
+    id: usize,
+    rng: Rng,
+}
+
+impl<T> Worker<T> {
+    /// Next unit, or `None` once the pool is closed and drained.
+    pub fn next(&mut self) -> Option<T> {
+        self.pool.pop(self.id, &mut self.rng)
+    }
+
+    /// This worker's deque index.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// The pool this worker drains.
+    pub fn pool(&self) -> &Arc<ExecPool<T>> {
+        &self.pool
+    }
+}
+
+impl<T> Drop for Worker<T> {
+    fn drop(&mut self) {
+        if self.pool.consumers.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last worker gone: wake blocked producers so they error.
+            self.pool.space_cv.notify_all();
+            self.pool.work_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    #[test]
+    fn single_worker_drains_everything_then_closes() {
+        let pool = Arc::new(ExecPool::<u64>::new(1, 64, 7));
+        let tx = pool.producer();
+        let mut w = pool.worker(0);
+        for i in 0..20u64 {
+            tx.push(i).expect("worker alive");
+        }
+        drop(tx);
+        let mut got: Vec<u64> = Vec::new();
+        while let Some(x) = w.next() {
+            got.push(x);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..20).collect::<Vec<u64>>());
+        let c = pool.counters();
+        assert_eq!(c.pushes, 20);
+        assert_eq!(c.returns(), 20);
+        assert_eq!(c.steal_attempts, 0);
+        assert_eq!(pool.pending(), 0);
+        // Closed and drained: further pops return None immediately.
+        assert_eq!(w.next(), None);
+    }
+
+    /// Single-threaded, so the batch-grab / steal interleaving is fully
+    /// deterministic: w0 grabs one injector batch (INJECTOR_GRAB = 4),
+    /// then w1 drains the rest and steals w0's parked extras.
+    #[test]
+    fn steal_takes_half_oldest_first() {
+        let pool = Arc::new(ExecPool::<u64>::new(2, 64, 42));
+        let tx = pool.producer();
+        let mut w0 = pool.worker(0);
+        let mut w1 = pool.worker(1);
+        for i in 0..8u64 {
+            tx.push(i).expect("workers alive");
+        }
+        // w0: injector grab of [0,1,2,3] — returns 0, parks 1,2,3.
+        assert_eq!(w0.next(), Some(0));
+        // w1: injector grab of [4,5,6,7] — returns 4, parks 5,6,7 —
+        // then drains its own deque LIFO.
+        assert_eq!(w1.next(), Some(4));
+        assert_eq!(w1.next(), Some(7));
+        assert_eq!(w1.next(), Some(6));
+        assert_eq!(w1.next(), Some(5));
+        // w1 is dry: steals ceil(3/2) = 2 of w0's [1,2,3], oldest
+        // first — returns 1, parks 2.
+        assert_eq!(w1.next(), Some(1));
+        assert_eq!(w1.next(), Some(2));
+        // Last steal takes the final unit.
+        assert_eq!(w1.next(), Some(3));
+        drop(tx);
+        assert_eq!(w0.next(), None);
+        assert_eq!(w1.next(), None);
+        let c = pool.counters();
+        assert_eq!(c.pushes, 8);
+        assert_eq!(c.returns(), 8);
+        assert_eq!(c.steal_successes, 2);
+        assert_eq!(c.stolen_items, 3);
+        assert!(c.steal_attempts >= 2);
+        assert_eq!(c.local_pops, 4); // 7,6,5 and the parked 2
+        assert_eq!(c.injector_pops, 2); // the two batch grabs
+    }
+
+    #[test]
+    fn capacity_one_still_transfers_everything() {
+        let pool = Arc::new(ExecPool::<u64>::new(2, 1, 3));
+        let tx = pool.producer();
+        let mut handles = Vec::new();
+        let got = Arc::new(StdMutex::new(Vec::<u64>::new()));
+        for id in 0..2 {
+            let mut w = pool.worker(id);
+            let got = Arc::clone(&got);
+            handles.push(std::thread::spawn(move || {
+                while let Some(x) = w.next() {
+                    got.lock().unwrap().push(x);
+                }
+            }));
+        }
+        // Producer blocks on the 1-slot cap most of the time; every
+        // unit must still arrive exactly once.
+        for i in 0..100u64 {
+            tx.push(i).expect("workers alive");
+        }
+        drop(tx);
+        for h in handles {
+            h.join().expect("worker thread");
+        }
+        let mut got = Arc::try_unwrap(got).unwrap().into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..100).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn push_errors_once_all_workers_are_gone() {
+        let pool = Arc::new(ExecPool::<u64>::new(1, 4, 1));
+        let tx = pool.producer();
+        let w = pool.worker(0);
+        drop(w);
+        assert_eq!(tx.push(9), Err(9));
+    }
+
+    #[test]
+    fn close_wakes_idle_workers() {
+        let pool = Arc::new(ExecPool::<u64>::new(2, 4, 5));
+        let tx = pool.producer();
+        let mut handles = Vec::new();
+        for id in 0..2 {
+            let mut w = pool.worker(id);
+            handles.push(std::thread::spawn(move || {
+                let mut n = 0u64;
+                while w.next().is_some() {
+                    n += 1;
+                }
+                n
+            }));
+        }
+        tx.push(1).expect("workers alive");
+        drop(tx); // close while workers may be mid-wait
+        let total: u64 =
+            handles.into_iter().map(|h| h.join().expect("worker")).sum();
+        assert_eq!(total, 1);
+    }
+
+    /// Many workers, tight cap, several seeds: units are conserved
+    /// exactly through every steal/shutdown interleaving.
+    #[test]
+    fn stress_conserves_units_across_seeds() {
+        for seed in [1u64, 7, 42] {
+            let pool = Arc::new(ExecPool::<u64>::new(4, 8, seed));
+            let got = Arc::new(StdMutex::new(Vec::<u64>::new()));
+            let mut handles = Vec::new();
+            for id in 0..4 {
+                let mut w = pool.worker(id);
+                let got = Arc::clone(&got);
+                handles.push(std::thread::spawn(move || {
+                    while let Some(x) = w.next() {
+                        got.lock().unwrap().push(x);
+                    }
+                }));
+            }
+            let tx = pool.producer();
+            for i in 0..300u64 {
+                tx.push(i).expect("workers alive");
+            }
+            drop(tx);
+            for h in handles {
+                h.join().expect("worker thread");
+            }
+            let mut got =
+                Arc::try_unwrap(got).unwrap().into_inner().unwrap();
+            got.sort_unstable();
+            assert_eq!(got, (0..300).collect::<Vec<u64>>(), "seed {seed}");
+            let c = pool.counters();
+            assert_eq!(c.pushes, 300);
+            assert_eq!(c.returns(), 300);
+            assert_eq!(pool.pending(), 0);
+            assert!(c.local_ratio() <= 1.0);
+        }
+    }
+}

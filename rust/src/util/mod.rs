@@ -3,7 +3,9 @@
 //! closure available, so these stand in for `rand`/`serde_json`/`proptest`/
 //! `criterion` respectively (see DESIGN.md).
 
+pub mod arena;
 pub mod bench;
+pub mod deque;
 pub mod json;
 pub mod prop;
 pub mod rng;

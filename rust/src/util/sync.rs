@@ -22,7 +22,9 @@
 //! `.lock()` ones.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::sync::{
+    Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
 
 /// Lock `m`, recovering the value if a previous holder panicked.
 /// Each recovery increments `recoveries` (relaxed; it is a statistic).
@@ -58,6 +60,39 @@ pub fn get_mut_recover<'a, T>(
 /// Uncounted poison recovery, for mutexes with no metrics surface.
 pub fn lock_tolerant<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Shared-read lock on an [`RwLock`] with the same recovery policy as
+/// [`lock_recover`]. An `RwLock` is poisoned only by a panicking
+/// *writer*, so a recovered read still observes a value some writer
+/// finished (or atomically abandoned) — the same soundness argument as
+/// the mutex helpers.
+pub fn read_recover<'a, T>(
+    l: &'a RwLock<T>,
+    recoveries: &AtomicUsize,
+) -> RwLockReadGuard<'a, T> {
+    match l.read() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            recoveries.fetch_add(1, Ordering::Relaxed);
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// Exclusive-write lock on an [`RwLock`] with the same recovery policy
+/// as [`lock_recover`].
+pub fn write_recover<'a, T>(
+    l: &'a RwLock<T>,
+    recoveries: &AtomicUsize,
+) -> RwLockWriteGuard<'a, T> {
+    match l.write() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            recoveries.fetch_add(1, Ordering::Relaxed);
+            poisoned.into_inner()
+        }
+    }
 }
 
 #[cfg(test)]
@@ -107,5 +142,28 @@ mod tests {
         let m = Arc::new(Mutex::new(11u64));
         poison(&m);
         assert_eq!(*lock_tolerant(&m), 11);
+    }
+
+    #[test]
+    fn rwlock_recover_survives_writer_poison_and_counts() {
+        let l = Arc::new(RwLock::new(5u64));
+        let n = AtomicUsize::new(0);
+        // Healthy paths: no recovery counted.
+        assert_eq!(*read_recover(&l, &n), 5);
+        *write_recover(&l, &n) += 1;
+        assert_eq!(n.load(Ordering::Relaxed), 0);
+        // Poison via a panicking writer.
+        let lc = Arc::clone(&l);
+        let t = std::thread::spawn(move || {
+            let _g = lc.write().unwrap();
+            panic!("poison the rwlock");
+        });
+        assert!(t.join().is_err());
+        assert!(l.is_poisoned());
+        // Both guards recover the value and count the event.
+        assert_eq!(*read_recover(&l, &n), 6);
+        *write_recover(&l, &n) += 1;
+        assert_eq!(*read_recover(&l, &n), 7);
+        assert_eq!(n.load(Ordering::Relaxed), 3);
     }
 }

@@ -59,7 +59,9 @@ fn emitted_snapshot_round_trips_through_the_parser() {
 
 #[test]
 fn committed_baselines_match_schema() {
-    for name in ["serve", "decode_serve", "plan_delta", "model_serve", "cluster_serve"] {
+    for name in
+        ["serve", "decode_serve", "plan_delta", "model_serve", "cluster_serve", "hot_path"]
+    {
         let path = snapshot_path(name);
         let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
             panic!(

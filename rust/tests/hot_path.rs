@@ -1,0 +1,224 @@
+//! Hot-path concurrency stress: the work-stealing execution pool and the
+//! RwLock-sharded plan cache must be *pure scheduling changes* — same
+//! results, exact accounting — under contention, across seeds.
+//!
+//! Tier-1: these run in the default `cargo test` sweep.
+
+use sata::cluster::{Admission, Cluster, ClusterConfig, RoutePolicy};
+use sata::config::{SystemConfig, WorkloadSpec};
+use sata::coordinator::{
+    Coordinator, CoordinatorConfig, ExecQueueKind, Job, JobResult, Request,
+};
+use sata::trace::synth::{gen_sessions, gen_traces, ArrivalGen, ArrivalSpec};
+
+/// Mixed prefill + decode stream (repeat traffic, so the plan cache and
+/// the exec queue both stay busy).
+fn stream(spec: &WorkloadSpec, seed: u64, n: usize) -> Vec<Request> {
+    ArrivalGen::new(
+        spec,
+        ArrivalSpec {
+            rate_per_s: 0.0,
+            decode_frac: 0.5,
+            distinct: 3,
+            layers: 2,
+            rho: 0.5,
+            steps: 3,
+            kappa: 0.7,
+        },
+        seed,
+    )
+    .take(n)
+    .map(|a| a.request)
+    .collect()
+}
+
+fn serve(
+    sys: &SystemConfig,
+    spec: &WorkloadSpec,
+    requests: &[Request],
+    cfg: CoordinatorConfig,
+) -> (Vec<JobResult>, sata::coordinator::CoordinatorMetrics) {
+    let coord = Coordinator::with_config(sys.clone(), cfg);
+    for (id, r) in requests.iter().cloned().enumerate() {
+        coord.submit(Job::new(id, r, spec.sf)).expect("open coordinator");
+    }
+    coord.drain()
+}
+
+fn assert_bitwise_equal(a: &[JobResult], b: &[JobResult]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.model, y.model);
+        assert_eq!(x.layers, y.layers);
+        assert_eq!(x.tokens, y.tokens);
+        assert!(x.error.is_none() && y.error.is_none());
+        assert_eq!(x.dense, y.dense, "job {}: dense baseline diverged", x.id);
+        assert_eq!(x.flows.len(), y.flows.len());
+        for (fx, fy) in x.flows.iter().zip(&y.flows) {
+            assert_eq!(fx.flow, fy.flow);
+            assert_eq!(fx.report, fy.report, "job {}: flow report diverged", x.id);
+            assert_eq!(fx.throughput_gain.to_bits(), fy.throughput_gain.to_bits());
+            assert_eq!(fx.energy_gain.to_bits(), fy.energy_gain.to_bits());
+        }
+        assert_eq!(x.cache_hits, y.cache_hits, "job {}: cache accounting diverged", x.id);
+        assert_eq!(x.cache_hit, y.cache_hit);
+        assert_eq!(x.carry_resident, y.carry_resident);
+        assert_eq!(x.carry_fetched, y.carry_fetched);
+    }
+}
+
+/// Work stealing is observationally identical to the single queue: same
+/// stream, one plan worker (deterministic cache order), four contending
+/// exec workers — bitwise-equal results and accounting, several seeds.
+#[test]
+fn work_stealing_matches_single_queue_bitwise_across_seeds() {
+    let spec = WorkloadSpec::ttst();
+    let sys = SystemConfig::for_workload(&spec);
+    for seed in [1u64, 42, 0xBEEF] {
+        let requests = stream(&spec, seed, 12);
+        let cfg = |kind| CoordinatorConfig {
+            plan_workers: 1,
+            exec_workers: 4,
+            cache_capacity: 256,
+            exec_queue: kind,
+            ..Default::default()
+        };
+        let (ws, ws_m) = serve(&sys, &spec, &requests, cfg(ExecQueueKind::WorkStealing));
+        let (sq, sq_m) = serve(&sys, &spec, &requests, cfg(ExecQueueKind::SingleQueue));
+        assert_bitwise_equal(&ws, &sq);
+        assert_eq!(ws_m.cache_hits, sq_m.cache_hits, "seed {seed}");
+        assert_eq!(ws_m.cache_misses, sq_m.cache_misses, "seed {seed}");
+        assert_eq!(ws_m.cache_evictions, sq_m.cache_evictions, "seed {seed}");
+        assert_eq!(ws_m.steps_cache_hit, sq_m.steps_cache_hit, "seed {seed}");
+    }
+}
+
+/// Every planned unit is popped exactly once — local, injector-batch, or
+/// steal — even with a tiny queue bound forcing backpressure, across
+/// seeds. `units == jobs + decode steps` for this job mix.
+#[test]
+fn pool_counters_conserve_units_under_backpressure() {
+    let spec = WorkloadSpec::ttst();
+    let sys = SystemConfig::for_workload(&spec);
+    for seed in [7u64, 99, 0xD00D] {
+        let traces: Vec<Request> =
+            gen_traces(&spec, 6, seed).into_iter().map(Request::from).collect();
+        let sessions: Vec<Request> = gen_sessions(&spec, 2, 1, 0.0, 3, 0.7, seed)
+            .into_iter()
+            .map(Request::Decode)
+            .collect();
+        let requests: Vec<Request> =
+            traces.into_iter().chain(sessions).collect();
+        // 6 single-layer prefills (1 unit each) + 2 sessions of 1 layer +
+        // 3 steps (4 units each) = 14 planned units.
+        let expected_units = 6 + 2 * (1 + 3);
+
+        let (results, m) = serve(
+            &sys,
+            &spec,
+            &requests,
+            CoordinatorConfig {
+                plan_workers: 2,
+                exec_workers: 3,
+                queue_cap: 2, // force producer backpressure + injector churn
+                exec_queue: ExecQueueKind::WorkStealing,
+                ..Default::default()
+            },
+        );
+        assert_eq!(results.len(), 8, "seed {seed}");
+        assert_eq!(m.jobs_done, 8, "seed {seed}");
+        assert_eq!(m.jobs_failed, 0, "seed {seed}");
+        assert_eq!(
+            m.exec_local_pops + m.exec_injector_pops + m.exec_steal_successes,
+            expected_units,
+            "seed {seed}: a unit was dropped or double-executed"
+        );
+        // Counter sanity: attempts bound successes, each success moved
+        // at least one unit, and the ratio is a valid fraction.
+        assert!(m.exec_steal_attempts >= m.exec_steal_successes, "seed {seed}");
+        assert!(m.exec_stolen_units >= m.exec_steal_successes, "seed {seed}");
+        assert!(
+            (0.0..=1.0).contains(&m.queue_lockfree_ratio),
+            "seed {seed}: ratio {}",
+            m.queue_lockfree_ratio
+        );
+    }
+}
+
+/// A bursty over-admitted fleet of work-stealing nodes loses nothing:
+/// `submitted == completed + shed`, exactly.
+#[test]
+fn cluster_burst_accounts_every_job_under_work_stealing() {
+    let spec = WorkloadSpec::ttst();
+    let sys = SystemConfig::for_workload(&spec);
+    let requests = stream(&spec, 0xFEED, 30);
+    let cluster = Cluster::new(
+        sys,
+        ClusterConfig {
+            nodes: 2,
+            route: RoutePolicy::FingerprintAffinity,
+            admit_cap: Some(2),
+            node: CoordinatorConfig {
+                plan_workers: 2,
+                exec_workers: 2,
+                exec_queue: ExecQueueKind::WorkStealing,
+                ..Default::default()
+            },
+        },
+    );
+    let mut accepted = 0usize;
+    let mut shed = 0usize;
+    for (id, r) in requests.into_iter().enumerate() {
+        match cluster.submit(Job::new(id, r, spec.sf)).expect("open cluster") {
+            Admission::Accepted { .. } => accepted += 1,
+            Admission::Shed { .. } => shed += 1,
+        }
+    }
+    let (results, m) = cluster.drain();
+    assert_eq!(m.submitted, 30);
+    assert_eq!(m.completed, accepted);
+    assert_eq!(m.shed, shed);
+    assert_eq!(
+        m.submitted,
+        m.completed + m.shed,
+        "a job was lost silently under burst admission"
+    );
+    assert_eq!(results.len(), accepted);
+}
+
+/// The degenerate 1-node work-stealing cluster is bitwise identical to a
+/// plain work-stealing coordinator fed the same stream.
+#[test]
+fn one_node_ws_cluster_matches_plain_ws_coordinator() {
+    let spec = WorkloadSpec::ttst();
+    let sys = SystemConfig::for_workload(&spec);
+    let requests = stream(&spec, 0xA11, 10);
+    let cfg = CoordinatorConfig {
+        plan_workers: 1,
+        exec_workers: 2,
+        exec_queue: ExecQueueKind::WorkStealing,
+        ..Default::default()
+    };
+    let (plain, _) = serve(&sys, &spec, &requests, cfg.clone());
+
+    let cluster = Cluster::new(
+        sys,
+        ClusterConfig {
+            nodes: 1,
+            route: RoutePolicy::FingerprintAffinity,
+            admit_cap: None,
+            node: cfg,
+        },
+    );
+    for (id, r) in requests.iter().cloned().enumerate() {
+        match cluster.submit(Job::new(id, r, spec.sf)).expect("open cluster") {
+            Admission::Accepted { node } => assert_eq!(node, 0),
+            Admission::Shed { .. } => panic!("no admission cap configured"),
+        }
+    }
+    let (fleet, _) = cluster.drain();
+    let fleet_results: Vec<JobResult> =
+        fleet.into_iter().map(|nr| nr.result).collect();
+    assert_bitwise_equal(&plain, &fleet_results);
+}

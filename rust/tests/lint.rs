@@ -94,6 +94,14 @@ fn fixture_trips_lock_discipline() {
     assert_finding(&report, Family::Lock, "coordinator/mod.rs", "lock order");
     assert_finding(&report, Family::Lock, "coordinator/mod.rs", "send");
     assert_finding(&report, Family::Lock, "coordinator/mod.rs", "lock-order manifest");
+    // The work-stealing pool's deque classes are ordered too: taking a
+    // worker deque while parked on the pool signal is an inversion.
+    assert_finding(
+        &report,
+        Family::Lock,
+        "coordinator/mod.rs",
+        "`worker_deque` while `pool_signal`",
+    );
 }
 
 #[test]

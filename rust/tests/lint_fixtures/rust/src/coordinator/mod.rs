@@ -47,3 +47,16 @@ pub fn send_under_shard_lock(s: &Shard, tx: &mpsc::Sender<u64>) {
 pub fn unclassified_lock(s: &Shard) {
     let _m = lock_recover(&s.mystery, "not in the manifest");
 }
+
+/// Work-stealing-pool shape: deque receivers classify like the real
+/// `util::deque::ExecPool` fields.
+pub struct StealPool {
+    pub injector: Mutex<Vec<u64>>,
+    pub deques: Vec<Mutex<Vec<u64>>>,
+    pub signal: Mutex<()>,
+}
+
+pub fn inverted_deque_order(p: &StealPool) {
+    let _parked = lock_recover(&p.signal, "fixture pool signal");
+    let _steal = lock_recover(&p.deques[0], "fixture deque under signal");
+}
