@@ -34,11 +34,17 @@ use super::{Family, Finding, WaiverTracker};
 /// recv/send) before the work-stealing pool's queues (injector before
 /// any per-worker deque — the batch grab parks overflow locally — and
 /// the idle-park signal mutex after both, taken only with the queues
-/// released), pool state before cache shards, shards before the
-/// build-slot mutex (a builder publishes under the shard lock, then
-/// resolves its slot), slots before per-batch part buffers, parts
-/// before the aggregation sink, and the substrate-local baseline memo
-/// innermost — it is never held together with coordinator state.
+/// released), pool state before the crash-tolerance trio — the fault
+/// plan's event log (consulted at unit entry, never held with session
+/// state), then the checkpoint writer, then the live-session registry:
+/// `Coordinator::checkpoint` nests writer → registry → per-session
+/// parts, so both must outrank every buffer they snapshot — then cache
+/// shards, shards before the build-slot mutex (a builder publishes
+/// under the shard lock, then resolves its slot), slots before
+/// per-batch part buffers, parts before the aggregation sink, then the
+/// substrate-local baseline memo, and the record/replay log sink
+/// innermost — sealing a log line must never be able to wait on
+/// serving state.
 pub const LOCK_ORDER: &[(&str, &[&str])] = &[
     ("intake", &["job_tx"]),
     ("job_queue", &["job_rx"]),
@@ -47,11 +53,15 @@ pub const LOCK_ORDER: &[(&str, &[&str])] = &[
     ("worker_deque", &["deques", "deque"]),
     ("pool_signal", &["signal"]),
     ("results", &["results_rx"]),
+    ("fault_plan", &["fault_plan"]),
+    ("ckpt_writer", &["ckpt"]),
+    ("live_sessions", &["live"]),
     ("cache_shard", &["shard", "shards"]),
     ("build_slot", &["filled"]),
     ("parts", &["parts"]),
     ("agg", &["agg"]),
     ("memo", &["baseline_memo"]),
+    ("replay_log", &["replay_log"]),
 ];
 
 /// Classes that must not be held across a channel send.
@@ -546,6 +556,48 @@ mod tests {
         assert_eq!(bad.len(), 1, "{bad:?}");
         assert!(
             bad[0].message.contains("`worker_deque` while `pool_signal`"),
+            "{bad:?}"
+        );
+    }
+
+    #[test]
+    fn checkpoint_classes_order_writer_registry_then_parts() {
+        // The declared snapshot order — checkpoint writer, then the
+        // live-session registry, then a session's part buffers — is
+        // clean…
+        let ok = findings_in(
+            "fn f(&self) {\n\
+             let w = lock_recover(&self.ckpt, &c);\n\
+             let live = lock_recover(&self.shared.live, &c);\n\
+             let parts = lock_recover(&acc.parts, &c);\n\
+             }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+        // …and grabbing the writer while a session's parts are held
+        // inverts it (a worker finalizing under the checkpointer's
+        // locks is the deadlock this order exists to prevent).
+        let bad = findings_in(
+            "fn f(&self) {\n\
+             let parts = lock_recover(&acc.parts, &c);\n\
+             let w = lock_recover(&self.ckpt, &c);\n\
+             }\n",
+        );
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(
+            bad[0].message.contains("`ckpt_writer` while `parts`"),
+            "{bad:?}"
+        );
+        // The replay-log sink is innermost: sealing a line while the
+        // fault plan's state is held is ordered, the reverse is not.
+        let bad = findings_in(
+            "fn f(&self) {\n\
+             let log = lock_recover(&self.replay_log, &c);\n\
+             let plan = lock_recover(&self.fault_plan, &c);\n\
+             }\n",
+        );
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(
+            bad[0].message.contains("`fault_plan` while `replay_log`"),
             "{bad:?}"
         );
     }

@@ -403,6 +403,9 @@ impl Cluster {
             cache_shard_reads: nodes.iter().map(|m| m.cache_shard_reads).sum(),
             cache_shard_writes: nodes.iter().map(|m| m.cache_shard_writes).sum(),
             arena_bytes_reused: nodes.iter().map(|m| m.arena_bytes_reused).sum(),
+            worker_deaths: nodes.iter().map(|m| m.worker_deaths).sum(),
+            units_requeued: nodes.iter().map(|m| m.units_requeued).sum(),
+            units_abandoned: nodes.iter().map(|m| m.units_abandoned).sum(),
             lock_recoveries: nodes.iter().map(|m| m.lock_recoveries).sum::<usize>()
                 + self.lock_recoveries.load(Ordering::Relaxed),
             wall_p50_ns: wall.percentile(50.0),
@@ -506,6 +509,16 @@ pub struct ClusterMetrics {
     pub cache_shard_writes: usize,
     /// Arena-recycled heap capacity summed over nodes, in bytes.
     pub arena_bytes_reused: usize,
+    /// Worker panics caught and survived across the fleet (injected
+    /// faults included) — see [`CoordinatorMetrics::worker_deaths`].
+    pub worker_deaths: usize,
+    /// Units returned to a node's pool after a worker died processing
+    /// them, fleetwide.
+    pub units_requeued: usize,
+    /// Units abandoned after their job's retry budget ran out,
+    /// fleetwide: each failed its job with an explicit error, keeping
+    /// `submitted == completed + shed` exact even under crashes.
+    pub units_abandoned: usize,
     /// Poisoned-lock recoveries across the fleet: every node's
     /// [`CoordinatorMetrics::lock_recoveries`] plus the cluster's own
     /// result-stream mutex. 0 on a healthy fleet.
@@ -590,6 +603,9 @@ impl ClusterMetrics {
             ("cache_shard_reads", Json::num(self.cache_shard_reads as f64)),
             ("cache_shard_writes", Json::num(self.cache_shard_writes as f64)),
             ("arena_bytes_reused", Json::num(self.arena_bytes_reused as f64)),
+            ("worker_deaths", Json::num(self.worker_deaths as f64)),
+            ("units_requeued", Json::num(self.units_requeued as f64)),
+            ("units_abandoned", Json::num(self.units_abandoned as f64)),
             ("lock_recoveries", Json::num(self.lock_recoveries as f64)),
             ("wall_p50_ns", Json::num(self.wall_p50_ns)),
             ("wall_p95_ns", Json::num(self.wall_p95_ns)),
@@ -696,6 +712,67 @@ mod tests {
             assert_eq!(r.node, homes[r.result.id], "result node must match route");
         }
         assert_eq!(m.submitted, m.completed + m.shed);
+    }
+
+    #[test]
+    fn crash_failed_jobs_release_admission_slots_and_stay_accounted() {
+        use crate::util::fault::FaultPlan;
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        // Jobs are submitted one at a time (each result is read back
+        // before the next submit), so the shared global unit ordinal is
+        // deterministic: job 0's only unit is killed on its 1st, 2nd,
+        // and 3rd attempt, exhausting the default retry budget (2) and
+        // failing the job; every later unit runs clean.
+        let fault = Arc::new(FaultPlan::at_global_units(&[1, 2, 3]));
+        let cluster = Cluster::new(
+            sys,
+            ClusterConfig {
+                nodes: 2,
+                route: RoutePolicy::RoundRobin,
+                admit_cap: Some(1),
+                node: CoordinatorConfig {
+                    plan_workers: 1,
+                    exec_workers: 1,
+                    fault: Some(Arc::clone(&fault)),
+                    ..Default::default()
+                },
+            },
+        );
+        let traces = gen_traces(&spec, 4, 11);
+        let mut results = Vec::new();
+        for (id, t) in traces.into_iter().enumerate() {
+            // admit_cap = 1: this submit can only be Accepted if the
+            // previous job — including the crash-failed one — released
+            // its admission slot when its result was delivered.
+            match cluster.submit(Job::new(id, t, spec.sf)).unwrap() {
+                Admission::Accepted { .. } => {}
+                Admission::Shed { node } => {
+                    panic!("job {id} shed at node {node}: slot leaked")
+                }
+            }
+            results.push(cluster.results().next().expect("job resolves"));
+        }
+        cluster.close();
+        assert_eq!(results.len(), 4);
+        let err = results[0]
+            .result
+            .error
+            .as_deref()
+            .expect("exhausted job fails loudly");
+        assert!(err.contains("retry budget"), "got: {err}");
+        assert!(results[1..].iter().all(|r| r.result.is_ok()));
+        assert_eq!(fault.fired(), 3, "the Arc-shared plan fired fleetwide");
+        let m = cluster.metrics();
+        // Accounting identity holds even with a crash-failed job, and
+        // the crash counters roll up across nodes.
+        assert_eq!(m.submitted, 4);
+        assert_eq!(m.completed, 4);
+        assert_eq!(m.shed, 0);
+        assert_eq!(m.worker_deaths, 3);
+        assert_eq!(m.units_requeued, 2);
+        assert_eq!(m.units_abandoned, 1);
+        assert_eq!(m.nodes.iter().map(|n| n.jobs_failed).sum::<usize>(), 1);
     }
 
     #[test]

@@ -1,0 +1,501 @@
+//! Session checkpoints: durable snapshots of a decode job's completed
+//! units, so a killed serve process resumes without replanning or
+//! re-executing finished steps.
+//!
+//! A [`SessionCheckpoint`] is captured by [`super::Coordinator::checkpoint`]
+//! (the completed-unit prefix of every live session) and re-attached via
+//! [`super::Job::with_checkpoint`]. The plan stage verifies the binding —
+//! session fingerprint, shape, flows, substrate — and seeds the job's
+//! positional report storage with the checkpointed reports, emitting
+//! units only for what remains. Because every report is recomputed
+//! deterministically, a resumed job's folded result is **bitwise equal**
+//! to the undisturbed run's (pinned by `tests/bad_traces.rs` and
+//! `tests/chaos.rs`).
+//!
+//! On disk a checkpoint is one JSON file per session (see
+//! [`checkpoint_file_name`]), parsed with the same depth-bounded
+//! [`Json::parse`] the trace loader uses: hostile, truncated, or
+//! over-deep files are per-file `Err`s ([`load_dir`] reports them
+//! loudly and keeps the good ones), never a panic.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::SystemConfig;
+use crate::decode::{carry_resident_counts, DecodeSession};
+use crate::engine::backend::{self, PlanSet, StepPlan};
+use crate::engine::substrate::{StepExec, Substrate};
+use crate::engine::{substrate, EngineOpts, RunReport};
+use crate::util::json::Json;
+
+/// One completed decode step inside a [`SessionCheckpoint`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepCheckpoint {
+    /// Step index within the session (`< SessionCheckpoint::tokens`).
+    pub t: usize,
+    /// The dense baseline's report for this step.
+    pub dense: RunReport,
+    /// One report per requested flow, in [`SessionCheckpoint::flows`]
+    /// order.
+    pub flows: Vec<RunReport>,
+}
+
+/// The completed-unit prefix of one in-flight decode session, snapshot
+/// under the session's parts lock so dense and flow reports are
+/// mutually consistent.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionCheckpoint {
+    /// The job id the session was submitted under.
+    pub id: usize,
+    /// Source model name (informational).
+    pub model: String,
+    /// Canonical substrate name the session executes on.
+    pub substrate: String,
+    /// Requested flows, in job order.
+    pub flows: Vec<String>,
+    /// [`DecodeSession::fingerprint`] of the session this checkpoint
+    /// binds to — resume against any other session is rejected.
+    pub session_fp: u64,
+    /// Prefill layer count (shape check on resume).
+    pub layers: usize,
+    /// Decode step count (shape check on resume).
+    pub tokens: usize,
+    /// Whether the prefill unit completed.
+    pub prefill_done: bool,
+    /// Per-layer dense prefill reports (empty unless `prefill_done`).
+    pub dense_prefill: Vec<RunReport>,
+    /// Per-flow, per-layer prefill reports (empty unless `prefill_done`).
+    pub flow_prefill: Vec<Vec<RunReport>>,
+    /// Completed decode steps, each with its full report set.
+    pub steps: Vec<StepCheckpoint>,
+}
+
+impl SessionCheckpoint {
+    /// Serialize to the on-disk JSON object. The fingerprint travels as
+    /// a 16-digit hex string (JSON numbers are `f64` and cannot hold a
+    /// `u64` exactly); every `RunReport` field round-trips bitwise (see
+    /// [`RunReport::to_json`]).
+    pub fn to_json(&self) -> Json {
+        let reports = |rs: &[RunReport]| {
+            Json::Arr(rs.iter().map(RunReport::to_json).collect())
+        };
+        Json::obj(vec![
+            ("kind", Json::str("session-checkpoint")),
+            ("id", Json::num(self.id as f64)),
+            ("model", Json::str(&self.model)),
+            ("substrate", Json::str(&self.substrate)),
+            (
+                "flows",
+                Json::Arr(self.flows.iter().map(|f| Json::str(f)).collect()),
+            ),
+            ("session_fp", Json::str(&format!("{:016x}", self.session_fp))),
+            ("layers", Json::num(self.layers as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("prefill_done", Json::Bool(self.prefill_done)),
+            ("dense_prefill", reports(&self.dense_prefill)),
+            (
+                "flow_prefill",
+                Json::Arr(self.flow_prefill.iter().map(|r| reports(r)).collect()),
+            ),
+            (
+                "steps",
+                Json::Arr(
+                    self.steps
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("t", Json::num(s.t as f64)),
+                                ("dense", s.dense.to_json()),
+                                ("flows", reports(&s.flows)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse and validate one checkpoint object. Every failure is an
+    /// explicit, field-naming `Err`: wrong `kind`, missing or
+    /// mistyped fields, a step index at or past `tokens`, duplicate
+    /// step indices.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        if v.get("kind").as_str() != Some("session-checkpoint") {
+            return Err(
+                "checkpoint: missing or wrong 'kind' (want 'session-checkpoint')"
+                    .to_string(),
+            );
+        }
+        let num = |k: &str| {
+            v.get(k)
+                .as_usize()
+                .ok_or_else(|| format!("checkpoint: missing/invalid '{k}'"))
+        };
+        let text = |k: &str| {
+            v.get(k)
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| format!("checkpoint: missing/invalid '{k}'"))
+        };
+        let reports = |val: &Json, what: &str| -> Result<Vec<RunReport>, String> {
+            val.as_arr()
+                .ok_or_else(|| format!("checkpoint: '{what}' is not an array"))?
+                .iter()
+                .map(|r| {
+                    RunReport::from_json(r)
+                        .map_err(|e| format!("checkpoint: {what}: {e}"))
+                })
+                .collect()
+        };
+        let fp_hex = text("session_fp")?;
+        let session_fp = u64::from_str_radix(&fp_hex, 16).map_err(|_| {
+            format!("checkpoint: 'session_fp' is not a 64-bit hex string: '{fp_hex}'")
+        })?;
+        let flows: Vec<String> = v
+            .get("flows")
+            .as_arr()
+            .ok_or_else(|| "checkpoint: missing/invalid 'flows'".to_string())?
+            .iter()
+            .map(|f| {
+                f.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| "checkpoint: non-string flow name".to_string())
+            })
+            .collect::<Result<_, _>>()?;
+        let prefill_done = v
+            .get("prefill_done")
+            .as_bool()
+            .ok_or_else(|| "checkpoint: missing/invalid 'prefill_done'".to_string())?;
+        let tokens = num("tokens")?;
+        let flow_prefill: Vec<Vec<RunReport>> = v
+            .get("flow_prefill")
+            .as_arr()
+            .ok_or_else(|| "checkpoint: missing/invalid 'flow_prefill'".to_string())?
+            .iter()
+            .map(|row| reports(row, "flow_prefill"))
+            .collect::<Result<_, _>>()?;
+        let mut steps = Vec::new();
+        let mut seen = vec![false; tokens];
+        for (i, s) in v
+            .get("steps")
+            .as_arr()
+            .ok_or_else(|| "checkpoint: missing/invalid 'steps'".to_string())?
+            .iter()
+            .enumerate()
+        {
+            let t = s
+                .get("t")
+                .as_usize()
+                .ok_or_else(|| format!("checkpoint: step {i}: missing/invalid 't'"))?;
+            let Some(slot) = seen.get_mut(t) else {
+                return Err(format!(
+                    "checkpoint: step {i}: index {t} out of range (tokens = {tokens})"
+                ));
+            };
+            if *slot {
+                return Err(format!("checkpoint: step {i}: duplicate index {t}"));
+            }
+            *slot = true;
+            steps.push(StepCheckpoint {
+                t,
+                dense: RunReport::from_json(s.get("dense"))
+                    .map_err(|e| format!("checkpoint: step {i}: dense: {e}"))?,
+                flows: reports(s.get("flows"), "step flows")
+                    .map_err(|e| format!("checkpoint: step {i}: {e}"))?,
+            });
+        }
+        Ok(SessionCheckpoint {
+            id: num("id")?,
+            model: text("model")?,
+            substrate: text("substrate")?,
+            flows,
+            session_fp,
+            layers: num("layers")?,
+            tokens,
+            prefill_done,
+            dense_prefill: reports(v.get("dense_prefill"), "dense_prefill")?,
+            flow_prefill,
+            steps,
+        })
+    }
+}
+
+/// Canonical file name for one session's checkpoint inside a
+/// `--checkpoint-dir`.
+pub fn checkpoint_file_name(id: usize) -> String {
+    format!("session-{id:06}.ckpt.json")
+}
+
+/// Write every checkpoint into `dir` (created if missing) and remove
+/// files for `previous` ids no longer live — a finished session's
+/// checkpoint must not resurrect it on resume. Returns the ids written,
+/// which become the next cycle's `previous`.
+pub fn sync_dir(
+    dir: &Path,
+    ckpts: &[SessionCheckpoint],
+    previous: &[usize],
+) -> Result<Vec<usize>, String> {
+    std::fs::create_dir_all(dir).map_err(|e| {
+        format!("cannot create checkpoint dir {}: {e}", dir.display())
+    })?;
+    let mut written = Vec::with_capacity(ckpts.len());
+    for ck in ckpts {
+        let path = dir.join(checkpoint_file_name(ck.id));
+        let mut text = ck.to_json().emit();
+        text.push('\n');
+        std::fs::write(&path, text).map_err(|e| {
+            format!("cannot write checkpoint {}: {e}", path.display())
+        })?;
+        written.push(ck.id);
+    }
+    for id in previous {
+        if !written.contains(id) {
+            // Best-effort: the file may already be gone.
+            let _ = std::fs::remove_file(dir.join(checkpoint_file_name(*id)));
+        }
+    }
+    Ok(written)
+}
+
+/// Load one checkpoint file: read, depth-bounded parse, validate.
+pub fn load_file(path: &Path) -> Result<SessionCheckpoint, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read checkpoint {}: {e}", path.display()))?;
+    let v = Json::parse(&text)
+        .map_err(|e| format!("checkpoint {}: {e}", path.display()))?;
+    SessionCheckpoint::from_json(&v)
+}
+
+/// Load every `*.json` file in `dir`, in sorted filename order.
+/// Returns the checkpoints that parsed plus one error string per file
+/// that did not — a mixed good/bad directory resumes the good sessions
+/// and reports the bad files loudly instead of failing wholesale (or
+/// worse, silently skipping them). The outer `Err` is reserved for the
+/// directory itself being unreadable.
+pub fn load_dir(
+    dir: &Path,
+) -> Result<(Vec<SessionCheckpoint>, Vec<String>), String> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| format!("cannot read checkpoint dir {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("json"))
+        .collect();
+    paths.sort();
+    let mut good = Vec::new();
+    let mut bad = Vec::new();
+    for p in paths {
+        match load_file(&p) {
+            Ok(ck) => good.push(ck),
+            Err(e) => bad.push(e),
+        }
+    }
+    Ok((good, bad))
+}
+
+/// Build the checkpoint a half-completed run would have produced, by
+/// direct engine execution: the prefill (if `prefill_done`) and the
+/// first `steps_done` decode steps, planned cold and executed on a
+/// freshly built substrate. Cold plans are bitwise identical to the
+/// coordinator's cached/delta-patched ones, so the captured reports
+/// equal what [`super::Coordinator::checkpoint`] snapshots mid-flight —
+/// the resume-equivalence tests lean on exactly this.
+#[allow(clippy::too_many_arguments)]
+pub fn capture_prefix(
+    session: &DecodeSession,
+    flows: &[String],
+    substrate_name: &str,
+    sys: &SystemConfig,
+    sf: Option<usize>,
+    carryover: bool,
+    prefill_done: bool,
+    steps_done: usize,
+    id: usize,
+) -> Result<SessionCheckpoint, String> {
+    let sspec = substrate::by_name(substrate_name)
+        .ok_or_else(|| format!("unknown substrate '{substrate_name}'"))?;
+    let backends = flows
+        .iter()
+        .map(|name| {
+            backend::by_name(name).ok_or_else(|| format!("unknown flow '{name}'"))
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    if steps_done > session.n_steps() {
+        return Err(format!(
+            "cannot capture {steps_done} steps of a {}-step session",
+            session.n_steps()
+        ));
+    }
+    let opts = EngineOpts {
+        sf,
+        theta_frac: sys.theta_frac,
+        seed: sys.seed,
+        ..Default::default()
+    };
+    let sub = (sspec.build)(sys, session.prefill.dk());
+    let subr: &dyn Substrate = &*sub;
+
+    let (mut dense_prefill, mut flow_prefill) = (Vec::new(), Vec::new());
+    if prefill_done {
+        let plans: Vec<PlanSet> = session
+            .prefill
+            .layers
+            .iter()
+            .map(|l| PlanSet::build(&l.heads, opts))
+            .collect();
+        dense_prefill =
+            plans.iter().map(|p| backend::DENSE.run_on(p, subr)).collect();
+        flow_prefill = backends
+            .iter()
+            .map(|b| {
+                if b.name() == "dense" {
+                    dense_prefill.clone()
+                } else {
+                    plans.iter().map(|p| b.run_on(p, subr)).collect()
+                }
+            })
+            .collect();
+    }
+
+    let residency = carry_resident_counts(session);
+    let mut steps = Vec::with_capacity(steps_done);
+    for (t, step) in session.steps.iter().enumerate().take(steps_done) {
+        let plan = StepPlan::build(&step.heads, step.fingerprint(), opts);
+        let resident: Vec<usize> = if carryover {
+            residency.get(t).cloned().unwrap_or_default()
+        } else {
+            vec![0; step.heads.len()]
+        };
+        let exec = StepExec { kv_len: step.kv_len, plan: &plan, resident: &resident };
+        let dense = subr.execute_step(&backend::DENSE, &exec);
+        let flow_reports = backends
+            .iter()
+            .map(|b| {
+                if b.name() == "dense" {
+                    dense
+                } else {
+                    subr.execute_step(*b, &exec)
+                }
+            })
+            .collect();
+        steps.push(StepCheckpoint { t, dense, flows: flow_reports });
+    }
+
+    Ok(SessionCheckpoint {
+        id,
+        model: session.model.clone(),
+        substrate: sspec.name.to_string(),
+        flows: flows.to_vec(),
+        session_fp: session.fingerprint(),
+        layers: session.prefill.layers.len(),
+        tokens: session.n_steps(),
+        prefill_done,
+        dense_prefill,
+        flow_prefill,
+        steps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadSpec;
+    use crate::trace::synth::gen_session;
+
+    fn sample() -> SessionCheckpoint {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let session = gen_session(&spec, 2, 0.7, 3, 0.8, 9);
+        capture_prefix(
+            &session,
+            &["sata".to_string(), "dense".to_string()],
+            "cim",
+            &sys,
+            spec.sf,
+            true,
+            true,
+            2,
+            7,
+        )
+        .expect("capture must succeed on a valid session")
+    }
+
+    #[test]
+    fn json_round_trip_is_bitwise() {
+        let ck = sample();
+        let back = SessionCheckpoint::from_json(&ck.to_json())
+            .expect("own serialization must parse");
+        assert_eq!(back, ck, "round trip must preserve every field bitwise");
+        // Emission is deterministic too (stable field order).
+        assert_eq!(back.to_json().emit(), ck.to_json().emit());
+    }
+
+    #[test]
+    fn fingerprint_travels_as_hex_text() {
+        let mut ck = sample();
+        ck.session_fp = u64::MAX; // not representable as an f64 integer
+        let back = SessionCheckpoint::from_json(&ck.to_json()).expect("parse");
+        assert_eq!(back.session_fp, u64::MAX);
+    }
+
+    #[test]
+    fn wrong_kind_and_missing_fields_are_explicit_errors() {
+        let err = SessionCheckpoint::from_json(&Json::obj(vec![(
+            "kind",
+            Json::str("trace"),
+        )]))
+        .expect_err("wrong kind must fail");
+        assert!(err.contains("kind"), "got: {err}");
+        let mut v = sample().to_json();
+        if let Json::Obj(map) = &mut v {
+            map.remove("session_fp");
+        }
+        let err = SessionCheckpoint::from_json(&v).expect_err("missing fp");
+        assert!(err.contains("session_fp"), "got: {err}");
+    }
+
+    #[test]
+    fn out_of_range_and_duplicate_steps_are_rejected() {
+        let mut ck = sample();
+        let mut bad = ck.steps[0].clone();
+        bad.t = ck.tokens; // one past the end
+        ck.steps.push(bad);
+        let err = SessionCheckpoint::from_json(&ck.to_json())
+            .expect_err("out-of-range step index must fail");
+        assert!(err.contains("out of range"), "got: {err}");
+
+        let mut ck = sample();
+        let dup = ck.steps[0].clone();
+        ck.steps.push(dup);
+        let err = SessionCheckpoint::from_json(&ck.to_json())
+            .expect_err("duplicate step index must fail");
+        assert!(err.contains("duplicate"), "got: {err}");
+    }
+
+    #[test]
+    fn capture_rejects_unknown_names_and_over_capture() {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let session = gen_session(&spec, 1, 0.5, 2, 0.8, 3);
+        let flows = vec!["sata".to_string()];
+        assert!(capture_prefix(
+            &session, &flows, "nonsense", &sys, spec.sf, true, true, 1, 0
+        )
+        .is_err());
+        assert!(capture_prefix(
+            &session,
+            &["nope".to_string()],
+            "cim",
+            &sys,
+            spec.sf,
+            true,
+            true,
+            1,
+            0
+        )
+        .is_err());
+        let err = capture_prefix(
+            &session, &flows, "cim", &sys, spec.sf, true, true, 99, 0,
+        )
+        .expect_err("over-capture must fail");
+        assert!(err.contains("cannot capture"), "got: {err}");
+    }
+}

@@ -72,8 +72,9 @@
 //! No `tokio` offline — std threads + `mpsc` channels; the queue bounds
 //! give backpressure exactly like bounded async channels would.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::collections::{BTreeMap, HashMap};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Condvar, Mutex, PoisonError, RwLock};
 use std::thread::JoinHandle;
@@ -88,12 +89,18 @@ use crate::model::report::ModelReport;
 use crate::model::ModelTrace;
 use crate::util::arena::{ArenaStats, Pool};
 use crate::util::deque::{ExecPool, PoolCounters};
+use crate::util::fault::FaultPlan;
 use crate::util::json::Json;
 use crate::util::rng::{mix64, Rng};
 use crate::util::stats::LatencyHistogram;
 use crate::util::sync::{
     get_mut_recover, lock_recover, lock_tolerant, read_recover, write_recover,
 };
+
+pub mod checkpoint;
+pub mod record;
+
+use checkpoint::{SessionCheckpoint, StepCheckpoint};
 
 /// Salt mixed into `job.id` to seed the per-job retry-jitter stream.
 const RETRY_JITTER_SALT: u64 = 0x5245_5452_595F_4A49; // "RETRY_JI"
@@ -259,6 +266,19 @@ pub struct Job {
     /// identical output, strictly less work at high step overlap. `false`
     /// (`serve --no-delta`) forces every miss through the cold path.
     pub delta: bool,
+    /// How many times a unit of this job may be **re-executed** after a
+    /// worker died processing it (crash tolerance; default 2). The
+    /// budget is per job, shared by all its units. Exhausting it fails
+    /// the job with an explicit [`JobResult::error`] — never silently —
+    /// counted in `CoordinatorMetrics::units_abandoned`.
+    pub retry_budget: usize,
+    /// Partial results from a previous run of this exact request
+    /// ([`Coordinator::checkpoint`] / `serve --resume`). The plan worker
+    /// verifies the binding (decode request, matching fingerprint /
+    /// shape / flows / substrate — mismatch is an explicit error), seeds
+    /// the completed steps, and plans only the remaining ones. Boxed:
+    /// most jobs carry no checkpoint and a checkpoint is large.
+    pub ckpt: Option<Box<SessionCheckpoint>>,
 }
 
 impl Job {
@@ -272,6 +292,8 @@ impl Job {
             substrate: "cim".into(),
             carryover: true,
             delta: true,
+            retry_budget: 2,
+            ckpt: None,
         }
     }
 
@@ -290,6 +312,8 @@ impl Job {
             substrate: "cim".into(),
             carryover: true,
             delta: true,
+            retry_budget: 2,
+            ckpt: None,
         }
     }
 
@@ -308,6 +332,18 @@ impl Job {
     /// Enable/disable delta-planning (see [`Job::delta`]).
     pub fn with_delta(mut self, delta: bool) -> Self {
         self.delta = delta;
+        self
+    }
+
+    /// Set the crash-retry budget (see [`Job::retry_budget`]).
+    pub fn with_retry_budget(mut self, budget: usize) -> Self {
+        self.retry_budget = budget;
+        self
+    }
+
+    /// Attach a session checkpoint to resume from (see [`Job::ckpt`]).
+    pub fn with_checkpoint(mut self, ckpt: SessionCheckpoint) -> Self {
+        self.ckpt = Some(Box::new(ckpt));
         self
     }
 }
@@ -885,6 +921,17 @@ pub struct CoordinatorMetrics {
     pub arena_buffers_reused: usize,
     /// Heap capacity recycled by those arena reuses, in bytes.
     pub arena_bytes_reused: usize,
+    /// Worker panics caught by the crash-tolerance isolation (injected
+    /// faults included). Each death is survived: the worker's in-flight
+    /// unit is requeued or its job failed explicitly — never lost.
+    pub worker_deaths: usize,
+    /// Units returned to the pool after a worker died processing them
+    /// (each consumed one slot of its job's [`Job::retry_budget`]).
+    pub units_requeued: usize,
+    /// Units whose job's retry budget was exhausted: the job fails with
+    /// an explicit [`JobResult::error`] — `submitted == done + failed`
+    /// stays exact even under crashes.
+    pub units_abandoned: usize,
 }
 
 impl CoordinatorMetrics {
@@ -966,6 +1013,9 @@ impl CoordinatorMetrics {
                 Json::num(self.arena_buffers_reused as f64),
             ),
             ("arena_bytes_reused", Json::num(self.arena_bytes_reused as f64)),
+            ("worker_deaths", Json::num(self.worker_deaths as f64)),
+            ("units_requeued", Json::num(self.units_requeued as f64)),
+            ("units_abandoned", Json::num(self.units_abandoned as f64)),
         ])
     }
 }
@@ -1058,6 +1108,19 @@ struct Shared {
     /// Cross-worker sum of per-worker arena reuse (scratch masks,
     /// report buffers).
     arena: ArenaShared,
+    /// Worker panics caught and survived (see `CoordinatorMetrics`).
+    worker_deaths: AtomicUsize,
+    /// Units requeued after a worker death.
+    units_requeued: AtomicUsize,
+    /// Units abandoned on retry-budget exhaustion (job failed loudly).
+    units_abandoned: AtomicUsize,
+    /// Live decode-session registry: the accum of every decode job
+    /// between unit emission and finalize, keyed by job id, so
+    /// [`Coordinator::checkpoint`] can snapshot partial results.
+    /// Assumes caller-chosen job ids are unique among concurrently live
+    /// decode jobs (duplicate ids would alias one registry slot; the
+    /// jobs still finalize correctly, only checkpoint coverage suffers).
+    live: Mutex<BTreeMap<usize, Arc<SessionAccum>>>,
 }
 
 /// Fold a finished result into the aggregate, then stream it out. Send
@@ -1119,9 +1182,41 @@ struct SessionAccum {
     carry: (usize, usize),
     enqueued: Instant,
     /// Units not yet executed; the worker that decrements this to zero
-    /// finalizes the job.
+    /// finalizes the job. The decrement is the LAST act of a unit's
+    /// retirement, so a worker that dies mid-unit leaves the count
+    /// intact and the requeued unit re-runs to completion.
     units_left: AtomicUsize,
+    /// [`DecodeSession::fingerprint`] for decode jobs (0 for model
+    /// jobs) — the binding key checkpoints carry.
+    session_fp: u64,
+    /// The job's [`Job::retry_budget`] (for the exhaustion error text).
+    retry_budget: usize,
+    /// Remaining crash-retry slots, CAS-decremented by dying units.
+    retries_left: AtomicUsize,
+    /// Set (before the failing unit retires) once the retry budget is
+    /// exhausted: remaining units skip execution and the finalizer
+    /// emits an explicit error result instead of assembling reports.
+    failed: AtomicBool,
     parts: Mutex<Parts>,
+}
+
+impl SessionAccum {
+    /// Claim one crash-retry slot; `false` once the budget is spent.
+    fn consume_retry(&self) -> bool {
+        let mut cur = self.retries_left.load(Ordering::Acquire);
+        while cur > 0 {
+            match self.retries_left.compare_exchange(
+                cur,
+                cur - 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+        false
+    }
 }
 
 /// Positional report storage: `dense_*`/`flow_*` slots filled by units as
@@ -1143,6 +1238,28 @@ struct PlannedUnit {
     kind: UnitKind,
 }
 
+impl PlannedUnit {
+    /// Cheap structural copy (Arc bumps + small Vec clones) taken
+    /// **before** a unit enters the `catch_unwind` region: the original
+    /// is destroyed during unwind if the worker dies, and this copy is
+    /// what gets requeued.
+    fn clone_unit(&self) -> PlannedUnit {
+        PlannedUnit {
+            accum: Arc::clone(&self.accum),
+            kind: match &self.kind {
+                UnitKind::Prefill(plans) => UnitKind::Prefill(plans.clone()),
+                UnitKind::Step { t, kv_len, plan, resident } => UnitKind::Step {
+                    t: *t,
+                    kv_len: *kv_len,
+                    plan: Arc::clone(plan),
+                    resident: resident.clone(),
+                },
+                UnitKind::Finalize => UnitKind::Finalize,
+            },
+        }
+    }
+}
+
 enum UnitKind {
     /// All prefill layers of the job, planned (one [`Arc`] per layer so
     /// cache hits share allocations across jobs and layers).
@@ -1150,6 +1267,9 @@ enum UnitKind {
     /// One decode step: its index, KV length, shared plan, and per-head
     /// resident-key counts (empty when carryover is off).
     Step { t: usize, kv_len: usize, plan: Arc<Planned>, resident: Vec<usize> },
+    /// A resumed job whose checkpoint already covered every unit:
+    /// executes nothing, exists only to drive the finalize countdown.
+    Finalize,
 }
 
 struct QueuedJob {
@@ -1229,6 +1349,10 @@ pub struct CoordinatorConfig {
     pub cache_shards: usize,
     /// Stage-1 → stage-2 conduit (see [`ExecQueueKind`]).
     pub exec_queue: ExecQueueKind,
+    /// Deterministic fault-injection schedule consulted by every worker
+    /// at each unit start (chaos testing; see [`crate::util::fault`]).
+    /// `None` — the production default — injects nothing.
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -1240,6 +1364,7 @@ impl Default for CoordinatorConfig {
             cache_capacity: 128,
             cache_shards: 8,
             exec_queue: ExecQueueKind::WorkStealing,
+            fault: None,
         }
     }
 }
@@ -1280,6 +1405,10 @@ pub struct Coordinator {
     /// configured — kept for its contention counters (see
     /// [`Coordinator::metrics`]); `None` on the single-queue baseline.
     exec_pool: Option<Arc<ExecPool<PlannedUnit>>>,
+    /// Checkpoint-writer lock: serializes concurrent
+    /// [`Coordinator::checkpoint`] callers so two snapshot threads never
+    /// interleave their live-registry walks.
+    ckpt: Mutex<()>,
     /// Service start time — the `tokens_per_s` denominator.
     started: Instant,
 }
@@ -1320,7 +1449,12 @@ impl Coordinator {
             agg: Mutex::new(Agg::default()),
             lock_recoveries: AtomicUsize::new(0),
             arena: ArenaShared::default(),
+            worker_deaths: AtomicUsize::new(0),
+            units_requeued: AtomicUsize::new(0),
+            units_abandoned: AtomicUsize::new(0),
+            live: Mutex::new(BTreeMap::new()),
         });
+        let fault = cfg.fault.clone();
 
         // Build the stage-1 → stage-2 conduit: one UnitSink per plan
         // worker plus the execute workers draining the other end.
@@ -1335,12 +1469,13 @@ impl Coordinator {
                 for _ in 0..n_plan {
                     sinks.push(UnitSink::Single(plan_tx.clone()));
                 }
-                for _ in 0..n_exec {
+                for id in 0..n_exec {
                     let plan_rx = Arc::clone(&plan_rx);
                     let res_tx = res_tx.clone();
                     let shared = Arc::clone(&shared);
+                    let fault = fault.clone();
                     exec_workers.push(std::thread::spawn(move || {
-                        exec_worker(&plan_rx, &res_tx, &shared)
+                        exec_worker(id, &plan_rx, &res_tx, &shared, fault)
                     }));
                 }
                 // `plan_tx` drops here: the sinks hold the only senders.
@@ -1356,8 +1491,9 @@ impl Coordinator {
                     let units = pool.worker(id);
                     let res_tx = res_tx.clone();
                     let shared = Arc::clone(&shared);
+                    let fault = fault.clone();
                     exec_workers.push(std::thread::spawn(move || {
-                        exec_worker_ws(units, &res_tx, &shared)
+                        exec_worker_ws(units, &res_tx, &shared, fault)
                     }));
                 }
                 Some(pool)
@@ -1366,14 +1502,19 @@ impl Coordinator {
 
         let plan_workers = sinks
             .into_iter()
-            .map(|sink| {
+            .enumerate()
+            .map(|(id, sink)| {
                 let job_rx = Arc::clone(&job_rx);
                 let res_tx = res_tx.clone();
                 let cache = Arc::clone(&cache);
                 let shared = Arc::clone(&shared);
                 let sys = sys.clone();
+                let fault = fault.clone();
                 std::thread::spawn(move || {
-                    plan_worker(&job_rx, &sink, &res_tx, &cache, &shared, &sys)
+                    plan_worker(
+                        id, &job_rx, &sink, &res_tx, &cache, &shared, &sys,
+                        fault,
+                    )
                 })
             })
             .collect();
@@ -1392,6 +1533,7 @@ impl Coordinator {
             cache,
             shared,
             exec_pool,
+            ckpt: Mutex::new(()),
             started: Instant::now(),
         }
     }
@@ -1439,11 +1581,14 @@ impl Coordinator {
     ///
     /// Note `Err` from `submit` means closed-or-dead, never full — a full
     /// intake queue blocks inside `submit`, so backpressure needs no
-    /// retry. Today that rejection is permanent (there is no worker
-    /// restart path), so the budget mostly bounds how long a caller
-    /// stalls before reporting the drop; keep `max_attempts` small. The
-    /// loop is the submission contract for any future rejection mode
-    /// (load shedding, draining) that IS transient.
+    /// retry. An explicit [`Coordinator::close`] IS permanent, but
+    /// "workers gone" no longer is: panic isolation catches a dying
+    /// worker in place and the logically-respawned worker keeps
+    /// draining the same queues, so a rejection raced against a crash
+    /// can succeed on retry (`tests` pins this with an injected fault).
+    /// Keep `max_attempts` small all the same — the loop is also the
+    /// submission contract for transient rejection modes (load
+    /// shedding, draining).
     pub fn submit_with_retry(
         &self,
         job: Job,
@@ -1564,7 +1709,70 @@ impl Coordinator {
                 .arena
                 .bytes_reused
                 .load(Ordering::Relaxed) as usize,
+            worker_deaths: self.shared.worker_deaths.load(Ordering::Relaxed),
+            units_requeued: self.shared.units_requeued.load(Ordering::Relaxed),
+            units_abandoned: self
+                .shared
+                .units_abandoned
+                .load(Ordering::Relaxed),
         }
+    }
+
+    /// Snapshot every live decode session's completed work as
+    /// [`SessionCheckpoint`]s (callable while serving — `serve
+    /// --checkpoint-dir` calls it periodically). A session appears once
+    /// per call with whatever units had fully retired at snapshot time:
+    /// the prefill if done, plus each completed step's folded reports.
+    /// Jobs already failed by retry exhaustion are skipped (there is
+    /// nothing worth resuming). Resume by attaching a checkpoint to the
+    /// same request via [`Job::with_checkpoint`].
+    pub fn checkpoint(&self) -> Vec<SessionCheckpoint> {
+        let _writer = lock_recover(&self.ckpt, &self.shared.lock_recoveries);
+        let live = lock_recover(&self.shared.live, &self.shared.lock_recoveries);
+        let mut out = Vec::new();
+        for acc in live.values() {
+            if acc.failed.load(Ordering::Acquire) {
+                continue;
+            }
+            let parts = lock_recover(&acc.parts, &self.shared.lock_recoveries);
+            // A step's dense and flow reports land under ONE parts-lock
+            // acquisition (see `exec_unit_body`), so `dense_steps[t]`
+            // being filled implies every flow's slot for `t` is too; the
+            // length check below is pure defense.
+            let mut steps = Vec::new();
+            for (t, dense) in parts.dense_steps.iter().enumerate() {
+                let Some(dense) = dense else { continue };
+                let flows: Vec<RunReport> = (0..acc.flows.len())
+                    .filter_map(|f| {
+                        parts
+                            .flow_steps
+                            .get(f)
+                            .and_then(|row| row.get(t))
+                            .copied()
+                            .flatten()
+                    })
+                    .collect();
+                if flows.len() != acc.flows.len() {
+                    continue;
+                }
+                steps.push(StepCheckpoint { t, dense: *dense, flows });
+            }
+            let prefill_done = !parts.dense_prefill.is_empty();
+            out.push(SessionCheckpoint {
+                id: acc.id,
+                model: acc.model.clone(),
+                substrate: acc.substrate.clone(),
+                flows: acc.flows.clone(),
+                session_fp: acc.session_fp,
+                layers: acc.layers,
+                tokens: acc.tokens,
+                prefill_done,
+                dense_prefill: parts.dense_prefill.clone(),
+                flow_prefill: parts.flow_prefill.clone(),
+                steps,
+            });
+        }
+        out
     }
 
     /// Shared plan cache (inspection / pre-warming).
@@ -1639,15 +1847,35 @@ fn error_result(job: Job, enqueued: Instant, error: String) -> JobResult {
     }
 }
 
+/// Stage-1 planning output for one job: the shared accum, the units to
+/// emit, and the step planning-outcome counters the aggregate folds.
+struct PlannedJobOut {
+    accum: Arc<SessionAccum>,
+    units: Vec<PlannedUnit>,
+    steps_cold: usize,
+    steps_delta: usize,
+    steps_hit: usize,
+}
+
 /// Stage 1: validate, fingerprint **per layer and per step**, plan each
 /// through the cache, split the job into units, hand them off.
+///
+/// Crash tolerance: the pure planning work ([`plan_job`]) runs inside
+/// `catch_unwind`, and nothing is emitted or registered until it
+/// returns — so a worker dying mid-plan (injected fault or real bug)
+/// orphans no units and the job resolves with an explicit error result.
+/// The thread itself survives the catch and keeps draining the queue
+/// (the "logical respawn": same deque, same arenas, fresh stack).
+#[allow(clippy::too_many_arguments)]
 fn plan_worker(
+    worker: usize,
     job_rx: &Mutex<Receiver<QueuedJob>>,
     sink: &UnitSink,
     res_tx: &Sender<JobResult>,
     cache: &PlanCache<Planned>,
     shared: &Shared,
     sys: &SystemConfig,
+    fault: Option<Arc<FaultPlan>>,
 ) {
     // Per-worker arena: the delta patch's membership scratch is taken
     // per decode job and retired after its steps, so its capacity is
@@ -1663,56 +1891,233 @@ fn plan_worker(
         shared.plan_q.exit();
         let QueuedJob { job, enqueued } = queued;
         let t_plan = Instant::now();
+        // Identity pre-extracted: the job itself is destroyed by an
+        // unwind, but the error result must still name it.
+        let job_id = job.id;
+        let model = job.request.model().to_string();
+        let substrate_name = job.substrate.clone();
+        let layers_n = job.request.prefill().layers.len();
+        let tokens_n = job.request.n_steps();
+        let planned = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(f) = &fault {
+                f.check_plan(worker);
+            }
+            plan_job(job, enqueued, cache, shared, sys, &mut scratch_pool)
+        }));
+        let ready = match planned {
+            Err(_) => {
+                // The plan stage has no partial progress to salvage
+                // (nothing was emitted), so a plan death is not
+                // retried: the job fails explicitly and at once.
+                shared.worker_deaths.fetch_add(1, Ordering::Relaxed);
+                record_and_send(
+                    shared,
+                    res_tx,
+                    JobResult {
+                        id: job_id,
+                        model,
+                        substrate: substrate_name,
+                        layers: layers_n,
+                        tokens: tokens_n,
+                        dense: ModelReport::default(),
+                        flows: Vec::new(),
+                        cache_hits: 0,
+                        cache_hit: false,
+                        carry_resident: 0,
+                        carry_fetched: 0,
+                        wall_ns: enqueued.elapsed().as_nanos() as f64,
+                        error: Some(
+                            "worker panicked while planning the job"
+                                .to_string(),
+                        ),
+                    },
+                );
+                continue;
+            }
+            Ok(Err(res)) => {
+                record_and_send(shared, res_tx, res);
+                continue;
+            }
+            Ok(Ok(ready)) => ready,
+        };
 
-        let prefill = job.request.prefill();
-        let error = if job.flows.is_empty() {
-            Some("no flows requested".to_string())
-        } else if let Some(bad) =
-            job.flows.iter().find(|f| backend::by_name(f).is_none())
+        // Stage-1 accounting: planning wall time (queue wait and the
+        // blocking handoff below excluded) plus the per-step planning
+        // outcome counters, folded once per job.
         {
+            let mut agg = lock_recover(&shared.agg, &shared.lock_recoveries);
+            let dt = t_plan.elapsed().as_nanos() as f64;
+            agg.plan_wall.record(dt);
+            agg.plan_total_ns += dt;
+            agg.steps_cold += ready.steps_cold;
+            agg.steps_delta += ready.steps_delta;
+            agg.steps_cache_hit += ready.steps_hit;
+        }
+        if ready.accum.tokens > 0 {
+            shared.live_sessions.enter();
+            // Register BEFORE emitting: finalize removes the entry, so
+            // inserting after emission could leak a slot for a job that
+            // finished in between.
+            lock_recover(&shared.live, &shared.lock_recoveries)
+                .insert(ready.accum.id, Arc::clone(&ready.accum));
+        }
+
+        let mut dead = false;
+        for u in ready.units {
+            shared.exec_q.enter();
+            if !sink.send(u) {
+                shared.exec_q.exit();
+                dead = true;
+                break; // execute stage gone; nothing left to do
+            }
+        }
+        if dead {
+            break;
+        }
+    }
+}
+
+/// Pure stage-1 planning of one job, run inside the plan worker's catch
+/// region: validation, checkpoint binding, per-layer and per-step cache
+/// planning, parts seeding. Emits nothing and touches no registries —
+/// the caller does both after this returns — so an unwind out of here
+/// cannot orphan units. `Err` carries the explicit validation-failure
+/// result.
+fn plan_job(
+    mut job: Job,
+    enqueued: Instant,
+    cache: &PlanCache<Planned>,
+    shared: &Shared,
+    sys: &SystemConfig,
+    scratch_pool: &mut Pool<bool>,
+) -> Result<PlannedJobOut, JobResult> {
+    let ckpt = job.ckpt.take();
+    let prefill = job.request.prefill();
+    let error = if job.flows.is_empty() {
+        Some("no flows requested".to_string())
+    } else if let Some(bad) =
+        job.flows.iter().find(|f| backend::by_name(f).is_none())
+    {
+        Some(format!(
+            "unknown flow '{bad}' (registered: {})",
+            backend::flow_names().join("|")
+        ))
+    } else if substrate::by_name(&job.substrate).is_none() {
+        Some(format!(
+            "unknown substrate '{}' (registered: {})",
+            job.substrate,
+            substrate::substrate_names().join("|")
+        ))
+    } else if prefill.layers.is_empty() {
+        Some("model trace has no layers".to_string())
+    } else if let Some((i, _)) = prefill
+        .layers
+        .iter()
+        .enumerate()
+        .find(|(_, l)| l.heads.is_empty())
+    {
+        Some(format!("layer {i} has no heads"))
+    } else if let Request::Decode(s) = &job.request {
+        // Directly-constructed sessions get the same structural
+        // checks the JSON loader enforces (KV growth, head counts,
+        // in-range duplicate-free selections).
+        s.validate().err()
+    } else {
+        None
+    };
+    if let Some(error) = error {
+        return Err(error_result(job, enqueued, error));
+    }
+
+    // The substrate spec is resolved once (validated non-None above) —
+    // the checkpoint binding below compares against its canonical name.
+    let sspec =
+        // lint: allow(panic, "substrate validated at submit; absence is a wiring bug worth a loud stop")
+        substrate::by_name(&job.substrate).expect("validated above");
+    let session_fp = match &job.request {
+        Request::Decode(s) => s.fingerprint(),
+        Request::Model(_) => 0,
+    };
+
+    // Checkpoint binding: a checkpoint resumes exactly the session it
+    // was taken from. Any mismatch — shape, fingerprint, flows,
+    // substrate — is an explicit error, never a silent partial resume.
+    let layers_n = prefill.layers.len();
+    let tokens_n = job.request.n_steps();
+    let mut prefill_done = false;
+    let mut step_done = vec![false; tokens_n];
+    if let Some(ck) = &ckpt {
+        let err = if !matches!(job.request, Request::Decode(_)) {
+            Some("checkpoint attached to a non-decode request".to_string())
+        } else if ck.session_fp != session_fp {
             Some(format!(
-                "unknown flow '{bad}' (registered: {})",
-                backend::flow_names().join("|")
+                "checkpoint session fingerprint {:016x} does not match the \
+                 submitted session ({session_fp:016x})",
+                ck.session_fp
             ))
-        } else if substrate::by_name(&job.substrate).is_none() {
+        } else if ck.layers != layers_n || ck.tokens != tokens_n {
             Some(format!(
-                "unknown substrate '{}' (registered: {})",
-                job.substrate,
-                substrate::substrate_names().join("|")
+                "checkpoint shape {}x{} does not match the submitted \
+                 session {layers_n}x{tokens_n} (layers x tokens)",
+                ck.layers, ck.tokens
             ))
-        } else if prefill.layers.is_empty() {
-            Some("model trace has no layers".to_string())
-        } else if let Some((i, _)) = prefill
-            .layers
+        } else if ck.flows != job.flows {
+            Some(format!(
+                "checkpoint flows [{}] do not match the job's [{}]",
+                ck.flows.join(","),
+                job.flows.join(",")
+            ))
+        } else if ck.substrate != sspec.name {
+            Some(format!(
+                "checkpoint substrate '{}' does not match the job's '{}'",
+                ck.substrate, sspec.name
+            ))
+        } else if ck.prefill_done
+            && (ck.dense_prefill.len() != layers_n
+                || ck.flow_prefill.len() != job.flows.len()
+                || ck.flow_prefill.iter().any(|f| f.len() != layers_n))
+        {
+            Some(
+                "checkpoint prefill reports do not match the session shape"
+                    .to_string(),
+            )
+        } else if ck
+            .steps
             .iter()
-            .enumerate()
-            .find(|(_, l)| l.heads.is_empty())
+            .any(|s| s.t >= tokens_n || s.flows.len() != job.flows.len())
         {
-            Some(format!("layer {i} has no heads"))
-        } else if let Request::Decode(s) = &job.request {
-            // Directly-constructed sessions get the same structural
-            // checks the JSON loader enforces (KV growth, head counts,
-            // in-range duplicate-free selections).
-            s.validate().err()
+            Some(
+                "checkpoint step reports do not match the session shape"
+                    .to_string(),
+            )
         } else {
             None
         };
-        if let Some(error) = error {
-            record_and_send(shared, res_tx, error_result(job, enqueued, error));
-            continue;
+        if let Some(error) = err {
+            return Err(error_result(job, enqueued, error));
         }
+        prefill_done = ck.prefill_done;
+        for s in &ck.steps {
+            if let Some(slot) = step_done.get_mut(s.t) {
+                *slot = true;
+            }
+        }
+    }
 
-        let opts = EngineOpts {
-            sf: job.sf,
-            theta_frac: sys.theta_frac,
-            seed: sys.seed,
-            ..Default::default()
-        };
-        // Each layer keys the cache independently — layers of one request
-        // that re-select the previous layer's keys (high-rho workloads)
-        // hit the plans the previous layer just published.
-        let mut cache_hits = 0usize;
-        let mut layer_plans = Vec::with_capacity(prefill.layers.len());
+    let opts = EngineOpts {
+        sf: job.sf,
+        theta_frac: sys.theta_frac,
+        seed: sys.seed,
+        ..Default::default()
+    };
+    // Each layer keys the cache independently — layers of one request
+    // that re-select the previous layer's keys (high-rho workloads)
+    // hit the plans the previous layer just published. A checkpointed
+    // prefill skips planning entirely (no cache probes), so a resumed
+    // job's `cache_hits` counts fresh probes only.
+    let mut cache_hits = 0usize;
+    let mut layer_plans = Vec::with_capacity(prefill.layers.len());
+    if !prefill_done {
         for layer in &prefill.layers {
             let key = PlanSet::fingerprint_for(&layer.heads, opts);
             let (p, hit) = cache
@@ -1729,153 +2134,193 @@ fn plan_worker(
             }
             layer_plans.push(p);
         }
+    }
 
-        // Decode steps plan through the SAME cache: a step that
-        // re-selects the previous step's keys fingerprints identically
-        // (KV growth notwithstanding) and hits the plan the previous
-        // step just published.
-        let mut step_units: Vec<(usize, usize, Arc<Planned>, Vec<usize>)> = Vec::new();
-        let mut carry = (0usize, 0usize);
-        let (mut steps_cold, mut steps_delta, mut steps_hit) = (0usize, 0usize, 0usize);
-        if let Request::Decode(session) = &job.request {
-            let residency = carry_resident_counts(session);
-            let mut scratch = scratch_pool.take();
-            // The predecessor's plan, threaded step to step so a cache
-            // miss can delta-patch it (`StepPlan::patch_from`) instead of
-            // re-sorting cold. Head counts are uniform (validated above),
-            // and the patch is bitwise identical to the cold build, so
-            // hit/miss accounting and every downstream report are
-            // unchanged whether `job.delta` is on or off.
-            let mut prev: Option<Arc<Planned>> = None;
-            for (t, step) in session.steps.iter().enumerate() {
-                let key = step.plan_key(opts);
-                let fp = step.fingerprint();
-                let mut built_delta = false;
-                let (p, hit) = cache.get_or_build(key, || {
-                    let plan = match prev.as_ref().and_then(|pp| pp.as_step()) {
-                        Some(pp) if job.delta => {
-                            built_delta = true;
-                            StepPlan::patch_from(pp, &step.heads, fp, opts, &mut scratch)
-                        }
-                        _ => StepPlan::build(&step.heads, fp, opts),
-                    };
-                    Planned::Step(plan)
-                });
-                let p = if p.as_step().is_some() {
-                    if hit {
-                        cache_hits += 1;
-                        steps_hit += 1;
-                    } else if built_delta {
-                        steps_delta += 1;
-                    } else {
-                        steps_cold += 1;
+    // Decode steps plan through the SAME cache: a step that
+    // re-selects the previous step's keys fingerprints identically
+    // (KV growth notwithstanding) and hits the plan the previous
+    // step just published.
+    let mut step_units: Vec<(usize, usize, Arc<Planned>, Vec<usize>)> = Vec::new();
+    let mut carry = (0usize, 0usize);
+    let (mut steps_cold, mut steps_delta, mut steps_hit) = (0usize, 0usize, 0usize);
+    if let Request::Decode(session) = &job.request {
+        let residency = carry_resident_counts(session);
+        let mut scratch = scratch_pool.take();
+        // The predecessor's plan, threaded step to step so a cache
+        // miss can delta-patch it (`StepPlan::patch_from`) instead of
+        // re-sorting cold. Head counts are uniform (validated above),
+        // and the patch is bitwise identical to the cold build, so
+        // hit/miss accounting and every downstream report are
+        // unchanged whether `job.delta` is on or off.
+        let mut prev: Option<Arc<Planned>> = None;
+        for (t, step) in session.steps.iter().enumerate() {
+            // Carryover accounting covers EVERY step — including ones a
+            // checkpoint already completed — so a resumed job's carry
+            // numbers equal the undisturbed run's bitwise.
+            let resident: Vec<usize> = if job.carryover {
+                // lint: allow(index, "residency has one entry per step t by construction")
+                residency[t].clone()
+            } else {
+                vec![0; step.heads.len()]
+            };
+            carry.0 += resident.iter().sum::<usize>();
+            carry.1 += step.heads.iter().map(|h| h.len()).sum::<usize>();
+            if step_done.get(t).copied().unwrap_or(false) {
+                // Completed in the checkpoint: no probe, no unit. The
+                // next pending step plans without a predecessor — cold
+                // and delta builds are bitwise identical, so resumed
+                // plans match the undisturbed run's.
+                prev = None;
+                continue;
+            }
+            let key = step.plan_key(opts);
+            let fp = step.fingerprint();
+            let mut built_delta = false;
+            let (p, hit) = cache.get_or_build(key, || {
+                let plan = match prev.as_ref().and_then(|pp| pp.as_step()) {
+                    Some(pp) if job.delta => {
+                        built_delta = true;
+                        StepPlan::patch_from(pp, &step.heads, fp, opts, &mut scratch)
                     }
-                    p
+                    _ => StepPlan::build(&step.heads, fp, opts),
+                };
+                Planned::Step(plan)
+            });
+            let p = if p.as_step().is_some() {
+                if hit {
+                    cache_hits += 1;
+                    steps_hit += 1;
+                } else if built_delta {
+                    steps_delta += 1;
                 } else {
                     steps_cold += 1;
-                    Arc::new(Planned::Step(StepPlan::build(&step.heads, fp, opts)))
-                };
-                prev = Some(Arc::clone(&p));
-                let resident: Vec<usize> = if job.carryover {
-                    // lint: allow(index, "residency has one entry per step t by construction")
-                    residency[t].clone()
-                } else {
-                    vec![0; step.heads.len()]
-                };
-                carry.0 += resident.iter().sum::<usize>();
-                carry.1 += step.heads.iter().map(|h| h.len()).sum::<usize>();
-                step_units.push((t, step.kv_len, p, resident));
+                }
+                p
+            } else {
+                steps_cold += 1;
+                Arc::new(Planned::Step(StepPlan::build(&step.heads, fp, opts)))
+            };
+            prev = Some(Arc::clone(&p));
+            step_units.push((t, step.kv_len, p, resident));
+        }
+        scratch_pool.give(scratch);
+        shared.arena.absorb(scratch_pool.drain_stats());
+    }
+
+    // Seed the positional report storage with whatever the checkpoint
+    // completed; pending units fill the rest exactly as on a cold run.
+    let mut dense_steps: Vec<Option<RunReport>> = vec![None; tokens_n];
+    let mut flow_steps: Vec<Vec<Option<RunReport>>> = Vec::new();
+    let (dense_prefill, flow_prefill) = match &ckpt {
+        Some(ck) if ck.prefill_done => {
+            (ck.dense_prefill.clone(), ck.flow_prefill.clone())
+        }
+        _ => (Vec::new(), Vec::new()),
+    };
+    if let Some(ck) = &ckpt {
+        if !ck.steps.is_empty() {
+            flow_steps = vec![vec![None; tokens_n]; job.flows.len()];
+            for s in &ck.steps {
+                if let Some(slot) = dense_steps.get_mut(s.t) {
+                    *slot = Some(s.dense);
+                }
+                for (f, rep) in s.flows.iter().enumerate() {
+                    if let Some(slot) =
+                        flow_steps.get_mut(f).and_then(|row| row.get_mut(s.t))
+                    {
+                        *slot = Some(*rep);
+                    }
+                }
             }
-            scratch_pool.give(scratch);
-            shared.arena.absorb(scratch_pool.drain_stats());
         }
+    }
 
-        // The substrate is built once per job (it binds the trace's D_k)
-        // and shared by every unit; the default `cim` path builds exactly
-        // the config the pre-substrate worker used, so CIM reports stay
-        // bitwise identical.
-        let sspec =
-            // lint: allow(panic, "substrate validated at submit; absence is a wiring bug worth a loud stop")
-            substrate::by_name(&job.substrate).expect("validated above");
-        let sub = (sspec.build)(sys, prefill.dk());
-        let layers = prefill.layers.len();
-        let tokens = step_units.len();
-        let accum = Arc::new(SessionAccum {
-            id: job.id,
-            model: job.request.model().to_string(),
-            flows: job.flows,
-            substrate: sspec.name.to_string(),
-            sub,
-            layers,
-            tokens,
-            cache_hits,
-            carry,
-            enqueued,
-            units_left: AtomicUsize::new(1 + tokens),
-            parts: Mutex::new(Parts {
-                dense_prefill: Vec::new(),
-                flow_prefill: Vec::new(),
-                dense_steps: vec![None; tokens],
-                flow_steps: Vec::new(),
-            }),
-        });
-        if tokens > 0 {
-            shared.live_sessions.enter();
-        }
+    // The substrate is built once per job (it binds the trace's D_k)
+    // and shared by every unit; the default `cim` path builds exactly
+    // the config the pre-substrate worker used, so CIM reports stay
+    // bitwise identical.
+    let sub = (sspec.build)(sys, prefill.dk());
+    // A fully-checkpointed job still emits one unit — a no-op Finalize
+    // — so the standard countdown assembles and streams its result.
+    let pending_units =
+        usize::from(!prefill_done) + step_units.len();
+    let accum = Arc::new(SessionAccum {
+        id: job.id,
+        model: job.request.model().to_string(),
+        flows: job.flows,
+        substrate: sspec.name.to_string(),
+        sub,
+        layers: layers_n,
+        tokens: tokens_n,
+        cache_hits,
+        carry,
+        enqueued,
+        units_left: AtomicUsize::new(pending_units.max(1)),
+        session_fp,
+        retry_budget: job.retry_budget,
+        retries_left: AtomicUsize::new(job.retry_budget),
+        failed: AtomicBool::new(false),
+        parts: Mutex::new(Parts {
+            dense_prefill,
+            flow_prefill,
+            dense_steps,
+            flow_steps,
+        }),
+    });
 
-        // Stage-1 accounting: planning wall time (queue wait and the
-        // blocking handoff below excluded) plus the per-step planning
-        // outcome counters, folded once per job.
-        {
-            let mut agg = lock_recover(&shared.agg, &shared.lock_recoveries);
-            let dt = t_plan.elapsed().as_nanos() as f64;
-            agg.plan_wall.record(dt);
-            agg.plan_total_ns += dt;
-            agg.steps_cold += steps_cold;
-            agg.steps_delta += steps_delta;
-            agg.steps_cache_hit += steps_hit;
-        }
-
-        // Emit units: prefill first (it is the session's own step-0
-        // predecessor in queue order), then one unit per decode step.
-        // Units from different jobs interleave freely in the exec queue —
-        // that is the continuous batch.
-        let mut units = Vec::with_capacity(1 + tokens);
+    // Emit units: prefill first (it is the session's own step-0
+    // predecessor in queue order), then one unit per decode step.
+    // Units from different jobs interleave freely in the exec queue —
+    // that is the continuous batch.
+    let mut units = Vec::with_capacity(pending_units.max(1));
+    if !prefill_done {
         units.push(PlannedUnit {
             accum: Arc::clone(&accum),
             kind: UnitKind::Prefill(layer_plans),
         });
-        for (t, kv_len, plan, resident) in step_units {
-            units.push(PlannedUnit {
-                accum: Arc::clone(&accum),
-                kind: UnitKind::Step { t, kv_len, plan, resident },
-            });
-        }
-        let mut dead = false;
-        for u in units {
-            shared.exec_q.enter();
-            if !sink.send(u) {
-                shared.exec_q.exit();
-                dead = true;
-                break; // execute stage gone; nothing left to do
-            }
-        }
-        if dead {
-            break;
-        }
     }
+    for (t, kv_len, plan, resident) in step_units {
+        units.push(PlannedUnit {
+            accum: Arc::clone(&accum),
+            kind: UnitKind::Step { t, kv_len, plan, resident },
+        });
+    }
+    if units.is_empty() {
+        units.push(PlannedUnit {
+            accum: Arc::clone(&accum),
+            kind: UnitKind::Finalize,
+        });
+    }
+    Ok(PlannedJobOut {
+        accum,
+        units,
+        steps_cold,
+        steps_delta,
+        steps_hit,
+    })
 }
 
-/// Execute one unit and, if it was the job's last, assemble and stream
-/// the [`JobResult`]. `report_pool` is the calling worker's arena for
-/// the per-step flow-report buffer (taken and retired per step unit).
-fn exec_unit(
+/// Execute one unit's computational work — the crash-isolated half of
+/// unit processing, run INSIDE the worker's `catch_unwind`. Everything
+/// here is safe to re-run from scratch on a retry: the parts writes are
+/// idempotent (the recomputed reports are bitwise identical, slotted by
+/// position), and the `units_left` countdown is untouched — that
+/// decrement is the last act of retirement ([`retire_unit`]), outside
+/// the catch, so a unit killed mid-execution leaves the count intact.
+/// `report_pool` is the calling worker's arena for the per-step
+/// flow-report buffer (taken and retired per step unit).
+fn exec_unit_body(
     unit: PlannedUnit,
-    res_tx: &Sender<JobResult>,
     shared: &Shared,
     report_pool: &mut Pool<RunReport>,
 ) {
     let acc = &unit.accum;
+    if acc.failed.load(Ordering::Acquire) {
+        // A sibling unit exhausted the job's retry budget: the job is
+        // already doomed to an error result, so skip the work and let
+        // retirement drive the countdown.
+        return;
+    }
     let sub: &dyn Substrate = &*acc.sub;
 
     // Stage-2 accounting: execution wall time of this unit (prefill or
@@ -1883,6 +2328,10 @@ fn exec_unit(
     // histogram.
     let t_exec = Instant::now();
     match unit.kind {
+        UnitKind::Finalize => {
+            // A fully-checkpointed resume: no compute left, the unit
+            // exists only so retirement assembles the result.
+        }
         UnitKind::Prefill(plans) => {
             // Execution stays layer-scoped (FlowBackend/Substrate simulate
             // one layer's schedule); the request view is the fold of its
@@ -1955,13 +2404,57 @@ fn exec_unit(
         agg.exec_wall.record(dt);
         agg.exec_total_ns += dt;
     }
+}
 
-    // The worker completing the last unit finalizes the job.
+/// Retire one unit: decrement the job's countdown and, if this was the
+/// last unit, assemble and stream the [`JobResult`] — an explicit error
+/// result when the job's retry budget was exhausted by a crashing
+/// worker, the ordinary folded reports otherwise.
+///
+/// Runs OUTSIDE the worker's catch region: the decrement must happen
+/// exactly once per unit (a killed unit keeps its count and is retried
+/// or abandoned by the catching worker), and the assembly's
+/// impossible-invariant `expect`s keep their original loud-stop
+/// behavior. Exactly-once resolution follows: `units_left` reaching
+/// zero is the SOLE finalize trigger, and the `failed` flag is
+/// published (`Release`) before the failing worker's decrement, so the
+/// finalizing worker's `Acquire` load observes it through the RMW chain
+/// on `units_left`.
+fn retire_unit(acc: &Arc<SessionAccum>, res_tx: &Sender<JobResult>, shared: &Shared) {
+    // The worker retiring the last unit finalizes the job.
     if acc.units_left.fetch_sub(1, Ordering::SeqCst) != 1 {
         return;
     }
     if acc.tokens > 0 {
         shared.live_sessions.exit();
+        // Temporary guard (drops at the semicolon): never nested with
+        // the `parts` lock taken below.
+        lock_recover(&shared.live, &shared.lock_recoveries).remove(&acc.id);
+    }
+    if acc.failed.load(Ordering::Acquire) {
+        record_and_send(
+            shared,
+            res_tx,
+            JobResult {
+                id: acc.id,
+                model: acc.model.clone(),
+                substrate: acc.substrate.clone(),
+                layers: acc.layers,
+                tokens: acc.tokens,
+                dense: ModelReport::default(),
+                flows: Vec::new(),
+                cache_hits: 0,
+                cache_hit: false,
+                carry_resident: 0,
+                carry_fetched: 0,
+                wall_ns: acc.enqueued.elapsed().as_nanos() as f64,
+                error: Some(format!(
+                    "execute worker panicked; retry budget ({}) exhausted",
+                    acc.retry_budget
+                )),
+            },
+        );
+        return;
     }
     let parts =
         std::mem::take(&mut *lock_recover(&acc.parts, &shared.lock_recoveries));
@@ -2020,19 +2513,56 @@ fn exec_unit(
 /// any live session, interleaved — run the dense baseline + every
 /// requested flow on the job's substrate, and stream each [`JobResult`]
 /// as its last unit completes.
+///
+/// Crash tolerance: [`exec_unit_body`] runs inside `catch_unwind`, with
+/// a clone of the unit staged BEFORE the catch (the original is
+/// destroyed by an unwind). A dying worker retries its own unit in
+/// place while the job's budget lasts — the "logical respawn": the
+/// thread survives the catch with its deque, channel seats, and arenas
+/// intact, which is the whole restart a `recv`-loop worker needs — and
+/// abandons it (explicit error result, never silence) once the budget
+/// is spent. Retirement runs outside the catch so the countdown moves
+/// exactly once per unit.
 fn exec_worker(
+    id: usize,
     plan_rx: &Mutex<Receiver<PlannedUnit>>,
     res_tx: &Sender<JobResult>,
     shared: &Shared,
+    fault: Option<Arc<FaultPlan>>,
 ) {
     let mut report_pool: Pool<RunReport> = Pool::new(2);
     loop {
-        let unit = match lock_recover(plan_rx, &shared.lock_recoveries).recv() {
+        let mut unit = match lock_recover(plan_rx, &shared.lock_recoveries).recv() {
             Ok(p) => p,
             Err(_) => break, // plan stage closed and drained
         };
         shared.exec_q.exit();
-        exec_unit(unit, res_tx, shared, &mut report_pool);
+        loop {
+            let acc = Arc::clone(&unit.accum);
+            let retry = unit.clone_unit();
+            let died = catch_unwind(AssertUnwindSafe(|| {
+                if let Some(f) = &fault {
+                    f.check_exec(id);
+                }
+                exec_unit_body(unit, shared, &mut report_pool);
+            }))
+            .is_err();
+            if died {
+                shared.worker_deaths.fetch_add(1, Ordering::Relaxed);
+                if acc.consume_retry() {
+                    // Inline self-retry: this worker is the unit's only
+                    // holder, so handing the clone back to itself IS the
+                    // requeue (no queue re-entry, no occupancy change).
+                    shared.units_requeued.fetch_add(1, Ordering::Relaxed);
+                    unit = retry;
+                    continue;
+                }
+                shared.units_abandoned.fetch_add(1, Ordering::Relaxed);
+                acc.failed.store(true, Ordering::Release);
+            }
+            retire_unit(&acc, res_tx, shared);
+            break;
+        }
         shared.arena.absorb(report_pool.drain_stats());
     }
 }
@@ -2043,15 +2573,44 @@ fn exec_worker(
 /// from siblings when idle (see [`crate::util::deque::Worker::next`]).
 /// Returns when the pool is closed (every plan worker dropped its
 /// producer) and fully drained.
+///
+/// Crash tolerance mirrors [`exec_worker`], except a retried unit goes
+/// back through this worker's own deque ([`Worker::requeue`]
+/// [`crate::util::deque::Worker::requeue`]) — visible to siblings'
+/// steals, counted by the pool (`returns == pushes + requeues`), and
+/// re-entered into the exec-queue occupancy gauge.
 fn exec_worker_ws(
     mut units: crate::util::deque::Worker<PlannedUnit>,
     res_tx: &Sender<JobResult>,
     shared: &Shared,
+    fault: Option<Arc<FaultPlan>>,
 ) {
     let mut report_pool: Pool<RunReport> = Pool::new(2);
+    let id = units.id();
     while let Some(unit) = units.next() {
         shared.exec_q.exit();
-        exec_unit(unit, res_tx, shared, &mut report_pool);
+        let acc = Arc::clone(&unit.accum);
+        let retry = unit.clone_unit();
+        let died = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(f) = &fault {
+                f.check_exec(id);
+            }
+            exec_unit_body(unit, shared, &mut report_pool);
+        }))
+        .is_err();
+        if died {
+            shared.worker_deaths.fetch_add(1, Ordering::Relaxed);
+            if acc.consume_retry() {
+                shared.units_requeued.fetch_add(1, Ordering::Relaxed);
+                shared.exec_q.enter();
+                units.requeue(retry);
+                shared.arena.absorb(report_pool.drain_stats());
+                continue;
+            }
+            shared.units_abandoned.fetch_add(1, Ordering::Relaxed);
+            acc.failed.store(true, Ordering::Release);
+        }
+        retire_unit(&acc, res_tx, shared);
         shared.arena.absorb(report_pool.drain_stats());
     }
 }
@@ -2877,5 +3436,209 @@ mod tests {
         assert!(!h1 && !h2 && !Arc::ptr_eq(&x, &y));
         assert_eq!(off.len(), 0);
         assert!(off.is_empty());
+    }
+
+    fn crash_config(
+        queue: ExecQueueKind,
+        fault: Arc<FaultPlan>,
+    ) -> CoordinatorConfig {
+        CoordinatorConfig {
+            plan_workers: 1,
+            exec_workers: 1,
+            queue_cap: 4,
+            exec_queue: queue,
+            fault: Some(fault),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn a_dying_exec_worker_respawns_and_the_job_survives() {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let fault = Arc::new(FaultPlan::at_global_units(&[1]));
+        let coord = Coordinator::with_config(
+            sys,
+            crash_config(ExecQueueKind::SingleQueue, Arc::clone(&fault)),
+        );
+        let mut js = jobs(&spec, 2).into_iter();
+        coord.submit(js.next().unwrap()).unwrap();
+        // The first unit's execution is killed; the worker catches the
+        // unwind, re-runs its own unit, and the job completes cleanly.
+        let first = coord.results().next().expect("job must resolve");
+        assert!(first.is_ok(), "retried job must succeed: {:?}", first.error);
+        // Regression for the old `submit_with_retry` docs: a worker
+        // death is NOT permanent — the logically-respawned worker keeps
+        // accepting and serving fresh jobs.
+        coord.submit(js.next().unwrap()).expect("respawned worker serves");
+        let (results, metrics) = coord.drain();
+        assert_eq!(results.len(), 1);
+        assert!(results[0].is_ok());
+        assert_eq!(fault.fired(), 1, "exactly the planned kill fired");
+        assert_eq!(metrics.worker_deaths, 1);
+        assert_eq!(metrics.units_requeued, 1);
+        assert_eq!(metrics.units_abandoned, 0);
+        assert_eq!(metrics.jobs_submitted, 2);
+        assert_eq!(metrics.jobs_done, 2);
+        assert_eq!(metrics.jobs_failed, 0);
+    }
+
+    #[test]
+    fn an_exhausted_retry_budget_fails_the_job_explicitly() {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        // One single-unit job, killed at its 1st, 2nd, and 3rd execution
+        // attempts: the default budget (2) covers two retries, so the
+        // third kill abandons the unit and fails the job — loudly.
+        let fault = Arc::new(FaultPlan::at_global_units(&[1, 2, 3]));
+        let coord = Coordinator::with_config(
+            sys,
+            crash_config(ExecQueueKind::WorkStealing, Arc::clone(&fault)),
+        );
+        for j in jobs(&spec, 1) {
+            coord.submit(j).unwrap();
+        }
+        let (results, metrics) = coord.drain();
+        assert_eq!(results.len(), 1, "the failed job still resolves");
+        let err =
+            results[0].error.as_deref().expect("exhaustion must surface");
+        assert!(err.contains("retry budget"), "got: {err}");
+        assert_eq!(fault.fired(), 3);
+        assert_eq!(metrics.worker_deaths, 3);
+        assert_eq!(metrics.units_requeued, 2);
+        assert_eq!(metrics.units_abandoned, 1);
+        // `submitted == done + failed` stays exact even under crashes.
+        assert_eq!(metrics.jobs_submitted, 1);
+        assert_eq!(metrics.jobs_done, 0);
+        assert_eq!(metrics.jobs_failed, 1);
+        // Unit conservation including requeues: the pool returned the
+        // unit once per execution attempt.
+        assert_eq!(
+            metrics.exec_local_pops
+                + metrics.exec_injector_pops
+                + metrics.exec_steal_successes,
+            1 + metrics.units_requeued
+        );
+    }
+
+    #[test]
+    fn a_plan_stage_death_fails_that_job_and_the_worker_survives() {
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let fault = Arc::new(FaultPlan::at_plan_jobs(&[1]));
+        let coord = Coordinator::with_config(
+            sys,
+            crash_config(ExecQueueKind::WorkStealing, Arc::clone(&fault)),
+        );
+        for j in jobs(&spec, 2) {
+            coord.submit(j).unwrap();
+        }
+        let (mut results, metrics) = coord.drain();
+        results.sort_by_key(|r| r.id);
+        assert_eq!(results.len(), 2, "both jobs resolve");
+        let err = results[0].error.as_deref().expect("plan death surfaces");
+        assert!(err.contains("planning"), "got: {err}");
+        assert!(results[1].is_ok(), "the next job plans normally");
+        assert_eq!(metrics.worker_deaths, 1);
+        assert_eq!(metrics.units_requeued, 0, "plan deaths are not retried");
+        assert_eq!(metrics.jobs_done + metrics.jobs_failed, 2);
+    }
+
+    #[test]
+    fn checkpoint_tracks_live_sessions_and_empties_on_completion() {
+        use crate::trace::synth::gen_session;
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let coord = Coordinator::new(1, 4, sys);
+        assert!(coord.checkpoint().is_empty(), "idle coordinator: no sessions");
+        coord
+            .submit(Job::new(0, gen_session(&spec, 1, 0.5, 3, 0.8, 17), spec.sf))
+            .unwrap();
+        let r = coord.results().next().expect("job resolves");
+        assert!(r.is_ok());
+        // The session left the live registry before its result was sent.
+        assert!(coord.checkpoint().is_empty(), "finished session: no snapshot");
+        let (_, metrics) = coord.drain();
+        assert_eq!(metrics.jobs_done, 1);
+    }
+
+    #[test]
+    fn a_fully_checkpointed_job_resumes_bitwise_identical() {
+        use crate::trace::synth::gen_session;
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let session = gen_session(&spec, 2, 0.6, 3, 0.8, 21);
+        let run = |ckpt: Option<SessionCheckpoint>| {
+            let coord =
+                Coordinator::new(1, 4, SystemConfig::for_workload(&spec));
+            let mut job = Job::new(0, session.clone(), spec.sf);
+            if let Some(ck) = ckpt {
+                job = job.with_checkpoint(ck);
+            }
+            coord.submit(job).unwrap();
+            let (mut results, _) = coord.drain();
+            results.pop().expect("one result")
+        };
+        let undisturbed = run(None);
+        assert!(undisturbed.is_ok());
+        let ck = checkpoint::capture_prefix(
+            &session,
+            &["sata".to_string()],
+            "cim",
+            &sys,
+            spec.sf,
+            true, // carryover: Job::new's default
+            true, // prefill done
+            3,    // every step done → the resume is a single Finalize unit
+            0,
+        )
+        .expect("capture");
+        let resumed = run(Some(ck));
+        assert!(resumed.is_ok(), "resume failed: {:?}", resumed.error);
+        // Reports and carry accounting are bitwise equal to the
+        // undisturbed run; only cache_hits differ (a resume probes the
+        // cache solely for pending units — here, none).
+        assert_eq!(
+            resumed.dense.to_json().emit(),
+            undisturbed.dense.to_json().emit()
+        );
+        assert_eq!(resumed.flows.len(), undisturbed.flows.len());
+        for (a, b) in resumed.flows.iter().zip(&undisturbed.flows) {
+            assert_eq!(a.report.to_json().emit(), b.report.to_json().emit());
+            assert_eq!(a.throughput_gain, b.throughput_gain);
+            assert_eq!(a.energy_gain, b.energy_gain);
+        }
+        assert_eq!(resumed.carry_resident, undisturbed.carry_resident);
+        assert_eq!(resumed.carry_fetched, undisturbed.carry_fetched);
+        assert_eq!(resumed.cache_hits, 0);
+    }
+
+    #[test]
+    fn a_mismatched_checkpoint_is_rejected_explicitly() {
+        use crate::trace::synth::gen_session;
+        let spec = WorkloadSpec::ttst();
+        let sys = SystemConfig::for_workload(&spec);
+        let session = gen_session(&spec, 1, 0.5, 2, 0.8, 5);
+        let other = gen_session(&spec, 1, 0.5, 2, 0.8, 6);
+        let ck = checkpoint::capture_prefix(
+            &other,
+            &["sata".to_string()],
+            "cim",
+            &sys,
+            spec.sf,
+            true,
+            true,
+            1,
+            0,
+        )
+        .expect("capture");
+        let coord = Coordinator::new(1, 4, sys);
+        coord
+            .submit(Job::new(0, session, spec.sf).with_checkpoint(ck))
+            .unwrap();
+        let (results, metrics) = coord.drain();
+        let err = results[0].error.as_deref().expect("binding must fail");
+        assert!(err.contains("fingerprint"), "got: {err}");
+        assert_eq!(metrics.jobs_failed, 1);
     }
 }

@@ -1,0 +1,539 @@
+//! Seeded record/replay of a single-node serve session.
+//!
+//! `serve --record LOG` runs a **recorded** session: the workload corpus
+//! is generated from a seed (no trace files — the corpus must be
+//! reproducible from the log alone), every nondeterministic input is
+//! pinned down in a [`RecordSpec`], and the sealed log
+//! ([`crate::util::replay`]) captures the spec, the submission order,
+//! the fired fault count, a digest per job result, and the
+//! deterministic metrics counters. `sata replay LOG` re-runs the spec
+//! and compares — matching digests and counters mean the replay
+//! reproduced every job result and counter **bitwise**.
+//!
+//! Determinism boundary: wall-clock fields (`wall_ns`, histograms,
+//! throughput rates) are excluded from digests; everything else — the
+//! folded reports, carry accounting, cache hit counts (the record shape
+//! forces one plan worker, making cache traffic a deterministic replay
+//! of the submission order), and the crash-tolerance counters — must
+//! match. Injected kills use **global unit ordinals**, so the number of
+//! deaths is deterministic even though *which* unit claims a doomed
+//! ordinal races; the requeue path re-executes the killed unit with
+//! identical output, keeping the results bitwise stable. The recorder
+//! rejects more kills than the per-job retry budget: past that, *which*
+//! job fails would race, and the log could not promise a bitwise
+//! replay.
+
+use std::sync::Arc;
+
+use crate::config::{SystemConfig, WorkloadSpec};
+use crate::trace::synth::{gen_session, gen_traces};
+use crate::util::fault::FaultPlan;
+use crate::util::json::Json;
+use crate::util::replay::{hash_to_hex, line_hash, LogWriter};
+
+use super::{
+    Coordinator, CoordinatorConfig, CoordinatorMetrics, ExecQueueKind, Job,
+    JobResult,
+};
+
+/// Every nondeterministic input of a recorded serve session. Written as
+/// the log's first line; replay reconstructs the run from it alone.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecordSpec {
+    /// Canonical lowercase workload key (see [`workload_by_name`]).
+    pub workload: String,
+    /// Total jobs, alternating prefill traces and decode sessions.
+    pub jobs: usize,
+    /// Layers per decode session.
+    pub layers: usize,
+    /// Generated tokens per decode session.
+    pub steps: usize,
+    /// Per-step selection-overlap knob for the synthetic sessions.
+    pub kappa: f64,
+    /// Cross-layer overlap knob for the synthetic sessions.
+    pub rho: f64,
+    /// Corpus seed — the whole job stream derives from it.
+    pub seed: u64,
+    /// Flows each job requests.
+    pub flows: Vec<String>,
+    /// Substrate each job executes on.
+    pub substrate: String,
+    /// Execute workers (plan workers are forced to 1 — a second plan
+    /// worker would race the cache counters out of determinism).
+    pub workers: usize,
+    /// Exec queue shape: `"ws"` or `"single"`.
+    pub queue: String,
+    /// Submit→plan / plan→execute queue bound.
+    pub queue_cap: usize,
+    /// Per-job unit retry budget (see [`Job::retry_budget`]).
+    pub retry_budget: usize,
+    /// Injected kills, as global execute-unit ordinals (1-based).
+    pub kill_units: Vec<u64>,
+}
+
+impl RecordSpec {
+    /// The log's config line. The seed travels as hex text (JSON `f64`
+    /// cannot hold a `u64` exactly).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("config")),
+            ("workload", Json::str(&self.workload)),
+            ("jobs", Json::num(self.jobs as f64)),
+            ("layers", Json::num(self.layers as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("kappa", Json::num(self.kappa)),
+            ("rho", Json::num(self.rho)),
+            ("seed", Json::str(&hash_to_hex(self.seed))),
+            (
+                "flows",
+                Json::Arr(self.flows.iter().map(|f| Json::str(f)).collect()),
+            ),
+            ("substrate", Json::str(&self.substrate)),
+            ("workers", Json::num(self.workers as f64)),
+            ("queue", Json::str(&self.queue)),
+            ("queue_cap", Json::num(self.queue_cap as f64)),
+            ("retry_budget", Json::num(self.retry_budget as f64)),
+            (
+                "kill_units",
+                Json::Arr(
+                    self.kill_units.iter().map(|&k| Json::num(k as f64)).collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse the config line with explicit per-field errors.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        if v.get("kind").as_str() != Some("config") {
+            return Err("record log: first line is not a 'config' line".into());
+        }
+        let num = |k: &str| {
+            v.get(k)
+                .as_usize()
+                .ok_or_else(|| format!("record config: missing/invalid '{k}'"))
+        };
+        let real = |k: &str| {
+            v.get(k)
+                .as_f64()
+                .ok_or_else(|| format!("record config: missing/invalid '{k}'"))
+        };
+        let text = |k: &str| {
+            v.get(k)
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| format!("record config: missing/invalid '{k}'"))
+        };
+        let seed_hex = text("seed")?;
+        let seed = u64::from_str_radix(&seed_hex, 16).map_err(|_| {
+            format!("record config: 'seed' is not a 64-bit hex string: '{seed_hex}'")
+        })?;
+        let flows = v
+            .get("flows")
+            .as_arr()
+            .ok_or_else(|| "record config: missing/invalid 'flows'".to_string())?
+            .iter()
+            .map(|f| {
+                f.as_str().map(str::to_string).ok_or_else(|| {
+                    "record config: non-string flow name".to_string()
+                })
+            })
+            .collect::<Result<_, _>>()?;
+        let kill_units = v
+            .get("kill_units")
+            .as_arr()
+            .ok_or_else(|| "record config: missing/invalid 'kill_units'".to_string())?
+            .iter()
+            .map(|k| {
+                k.as_usize().map(|n| n as u64).ok_or_else(|| {
+                    "record config: non-integer kill ordinal".to_string()
+                })
+            })
+            .collect::<Result<_, _>>()?;
+        Ok(RecordSpec {
+            workload: text("workload")?,
+            jobs: num("jobs")?,
+            layers: num("layers")?,
+            steps: num("steps")?,
+            kappa: real("kappa")?,
+            rho: real("rho")?,
+            seed,
+            flows,
+            substrate: text("substrate")?,
+            workers: num("workers")?,
+            queue: text("queue")?,
+            queue_cap: num("queue_cap")?,
+            retry_budget: num("retry_budget")?,
+            kill_units,
+        })
+    }
+}
+
+/// Resolve a workload by its CLI key (the same aliases `--workload`
+/// accepts), without touching the binary's flag plumbing.
+pub fn workload_by_name(name: &str) -> Option<WorkloadSpec> {
+    match name.trim().to_lowercase().as_str() {
+        "ttst" => Some(WorkloadSpec::ttst()),
+        "kvt-tiny" | "kvt-deit-tiny" => Some(WorkloadSpec::kvt_deit_tiny()),
+        "kvt-base" | "kvt-deit-base" => Some(WorkloadSpec::kvt_deit_base()),
+        "drsformer" => Some(WorkloadSpec::drsformer()),
+        _ => None,
+    }
+}
+
+/// Digest of one job result with wall time masked out — the bitwise
+/// identity the replay compares. Hashing the emitted JSON keeps the
+/// digest sensitive to every deterministic field (reports, gains,
+/// carry, cache hits, the error string) at once.
+pub fn result_digest(r: &JobResult) -> u64 {
+    let mut masked = r.clone();
+    masked.wall_ns = 0.0;
+    line_hash(&masked.to_json().emit())
+}
+
+/// The deterministic slice of [`CoordinatorMetrics`] a recorded run
+/// pins: job accounting, result-derived totals, cache traffic (single
+/// plan worker), and the crash-tolerance counters. Wall-clock numbers
+/// and queue/steal contention counters are deliberately absent.
+fn counters_json(m: &CoordinatorMetrics) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str("counters")),
+        ("jobs_submitted", Json::num(m.jobs_submitted as f64)),
+        ("jobs_done", Json::num(m.jobs_done as f64)),
+        ("jobs_failed", Json::num(m.jobs_failed as f64)),
+        ("flow_runs", Json::num(m.flow_runs as f64)),
+        ("layers_planned", Json::num(m.layers_planned as f64)),
+        ("tokens_done", Json::num(m.tokens_done as f64)),
+        ("carry_resident_keys", Json::num(m.carry_resident_keys as f64)),
+        ("carry_fetched_keys", Json::num(m.carry_fetched_keys as f64)),
+        ("cache_hits", Json::num(m.cache_hits as f64)),
+        ("cache_misses", Json::num(m.cache_misses as f64)),
+        ("worker_deaths", Json::num(m.worker_deaths as f64)),
+        ("units_requeued", Json::num(m.units_requeued as f64)),
+        ("units_abandoned", Json::num(m.units_abandoned as f64)),
+    ])
+}
+
+/// Everything one recorded run produced.
+pub struct RecordOutcome {
+    /// The sealed log text (write with [`crate::util::replay::write_log`]).
+    pub log: String,
+    /// Job results, sorted by id.
+    pub results: Vec<JobResult>,
+    /// Final coordinator metrics.
+    pub metrics: CoordinatorMetrics,
+    /// Injected faults that actually fired.
+    pub faults_fired: usize,
+}
+
+/// Validate a spec and run it: generate the corpus, serve it through a
+/// coordinator shaped by the spec, and seal the log.
+pub fn run_recorded(spec: &RecordSpec) -> Result<RecordOutcome, String> {
+    let (results, metrics, faults_fired, shed) = run(spec)?;
+    let mut log = LogWriter::new();
+    log.record(spec.to_json());
+    for (order, (id, was_shed)) in shed.iter().enumerate() {
+        log.record(Json::obj(vec![
+            ("kind", Json::str("job")),
+            ("order", Json::num(order as f64)),
+            ("id", Json::num(*id as f64)),
+            ("shed", Json::Bool(*was_shed)),
+        ]));
+    }
+    log.record(Json::obj(vec![
+        ("kind", Json::str("faults")),
+        ("planned", Json::num(spec.kill_units.len() as f64)),
+        ("fired", Json::num(faults_fired as f64)),
+    ]));
+    for r in &results {
+        log.record(Json::obj(vec![
+            ("kind", Json::str("result")),
+            ("id", Json::num(r.id as f64)),
+            ("digest", Json::str(&hash_to_hex(result_digest(r)))),
+        ]));
+    }
+    log.record(counters_json(&metrics));
+    Ok(RecordOutcome { log: log.finish(), results, metrics, faults_fired })
+}
+
+/// The shared record/replay engine: corpus generation + one coordinator
+/// run. Returns results sorted by id, metrics, the fired-fault count,
+/// and the per-submission (id, shed) record in submission order.
+#[allow(clippy::type_complexity)]
+fn run(
+    spec: &RecordSpec,
+) -> Result<(Vec<JobResult>, CoordinatorMetrics, usize, Vec<(usize, bool)>), String>
+{
+    let wl = workload_by_name(&spec.workload).ok_or_else(|| {
+        format!(
+            "unknown workload '{}' (ttst|kvt-tiny|kvt-base|drsformer)",
+            spec.workload
+        )
+    })?;
+    if spec.jobs == 0 {
+        return Err("a recorded session needs at least one job".into());
+    }
+    if spec.kill_units.len() > spec.retry_budget {
+        return Err(format!(
+            "{} kills exceed the per-job retry budget ({}): which job \
+             exhausts its budget would race, so the log could not promise \
+             a bitwise replay — raise --retry-budget or drop kills",
+            spec.kill_units.len(),
+            spec.retry_budget
+        ));
+    }
+    let exec_queue = match spec.queue.as_str() {
+        "ws" => ExecQueueKind::WorkStealing,
+        "single" => ExecQueueKind::SingleQueue,
+        other => return Err(format!("unknown queue kind '{other}' (ws|single)")),
+    };
+
+    // Corpus: alternate standalone prefill traces and decode sessions so
+    // the recorded stream exercises both unit shapes. Fully derived from
+    // the seed — replay regenerates it bit-identically.
+    let traces = gen_traces(&wl, spec.jobs.div_ceil(2), spec.seed);
+    let mut jobs_vec: Vec<Job> = Vec::with_capacity(spec.jobs);
+    for i in 0..spec.jobs {
+        let mut job = if i % 2 == 0 {
+            let Some(trace) = traces.get(i / 2) else {
+                return Err("corpus generation shortfall".into());
+            };
+            Job::with_flows(i, trace.clone(), wl.sf, spec.flows.clone())
+        } else {
+            let session = gen_session(
+                &wl,
+                spec.layers.max(1),
+                spec.rho,
+                spec.steps.max(1),
+                spec.kappa,
+                spec.seed.wrapping_add(i as u64),
+            );
+            Job::with_flows(i, session, wl.sf, spec.flows.clone())
+        };
+        job.substrate = spec.substrate.clone();
+        jobs_vec.push(job.with_retry_budget(spec.retry_budget));
+    }
+
+    let fault = if spec.kill_units.is_empty() {
+        None
+    } else {
+        Some(Arc::new(FaultPlan::at_global_units(&spec.kill_units)))
+    };
+    let sys = SystemConfig::for_workload(&wl);
+    let coord = Coordinator::with_config(
+        sys,
+        CoordinatorConfig {
+            plan_workers: 1,
+            exec_workers: spec.workers.max(1),
+            queue_cap: spec.queue_cap.max(1),
+            exec_queue,
+            fault: fault.clone(),
+            ..Default::default()
+        },
+    );
+
+    // Single-threaded submit-then-drain: submits block on backpressure
+    // while workers drain into the unbounded results channel, so this
+    // cannot deadlock, and it keeps the plan order equal to the
+    // submission order (the cache-determinism precondition).
+    let mut shed = Vec::with_capacity(jobs_vec.len());
+    for job in jobs_vec {
+        let id = job.id;
+        let rejected = coord.submit(job).is_err();
+        shed.push((id, rejected));
+    }
+    let (mut results, metrics) = coord.drain();
+    results.sort_by_key(|r| r.id);
+    let fired = fault.as_ref().map(|f| f.fired()).unwrap_or(0);
+    Ok((results, metrics, fired, shed))
+}
+
+/// What a replay found, line by line against the recorded log.
+#[derive(Debug)]
+pub struct ReplayReport {
+    /// Jobs the recorded session submitted.
+    pub jobs: usize,
+    /// Result digests that matched bitwise.
+    pub results_matched: usize,
+    /// Job ids whose digest (or presence) diverged.
+    pub mismatched_ids: Vec<usize>,
+    /// Whether every recorded deterministic counter matched.
+    pub counters_match: bool,
+    /// Human-readable `name: recorded != replayed` lines for divergent
+    /// counters (empty when `counters_match`).
+    pub counter_diffs: Vec<String>,
+    /// Fired-fault counts: (recorded, replayed).
+    pub faults_fired: (usize, usize),
+}
+
+impl ReplayReport {
+    /// Whether the replay reproduced the recording bitwise.
+    pub fn ok(&self) -> bool {
+        self.mismatched_ids.is_empty()
+            && self.counters_match
+            && self.faults_fired.0 == self.faults_fired.1
+    }
+}
+
+/// Re-run a validated log's spec and compare: every recorded result
+/// digest, the deterministic counters, and the fired-fault count.
+/// `lines` is the payload of [`crate::util::replay::parse_log`] /
+/// [`crate::util::replay::read_log`] — checksum and truncation were
+/// already rejected there. `Err` means the log is structurally unusable;
+/// a clean run that *diverges* is reported in the [`ReplayReport`].
+pub fn replay_lines(lines: &[Json]) -> Result<ReplayReport, String> {
+    let first = lines.first().ok_or("record log has no payload lines")?;
+    let spec = RecordSpec::from_json(first)?;
+    let mut recorded_digests: Vec<(usize, String)> = Vec::new();
+    let mut recorded_counters: Option<&Json> = None;
+    let mut recorded_fired: Option<usize> = None;
+    for (i, line) in lines.iter().enumerate().skip(1) {
+        match line.get("kind").as_str() {
+            Some("job") => {} // submission order; informational
+            Some("faults") => {
+                recorded_fired = Some(line.get("fired").as_usize().ok_or_else(
+                    || format!("record log line {}: bad 'fired'", i + 1),
+                )?);
+            }
+            Some("result") => {
+                let id = line.get("id").as_usize().ok_or_else(|| {
+                    format!("record log line {}: bad result 'id'", i + 1)
+                })?;
+                let digest = line
+                    .get("digest")
+                    .as_str()
+                    .ok_or_else(|| {
+                        format!("record log line {}: bad result 'digest'", i + 1)
+                    })?
+                    .to_string();
+                recorded_digests.push((id, digest));
+            }
+            Some("counters") => recorded_counters = Some(line),
+            other => {
+                return Err(format!(
+                    "record log line {}: unknown kind {other:?}",
+                    i + 1
+                ));
+            }
+        }
+    }
+    let recorded_counters =
+        recorded_counters.ok_or("record log has no 'counters' line")?;
+    let recorded_fired = recorded_fired.ok_or("record log has no 'faults' line")?;
+
+    let (results, metrics, fired, _shed) = run(&spec)?;
+    let mut matched = 0usize;
+    let mut mismatched = Vec::new();
+    for (id, digest) in &recorded_digests {
+        let replayed = results
+            .iter()
+            .find(|r| r.id == *id)
+            .map(|r| hash_to_hex(result_digest(r)));
+        if replayed.as_deref() == Some(digest.as_str()) {
+            matched += 1;
+        } else {
+            mismatched.push(*id);
+        }
+    }
+    // Results the replay produced but the log never recorded are
+    // divergence too (a recorded run that shed them, say).
+    for r in &results {
+        if !recorded_digests.iter().any(|(id, _)| *id == r.id) {
+            mismatched.push(r.id);
+        }
+    }
+    mismatched.sort_unstable();
+    mismatched.dedup();
+
+    let replayed_counters = counters_json(&metrics);
+    let mut diffs = Vec::new();
+    if let (Some(rec), Some(rep)) =
+        (recorded_counters.as_obj(), replayed_counters.as_obj())
+    {
+        for (k, v) in rec {
+            if k == "kind" {
+                continue;
+            }
+            let got = rep.get(k);
+            if got != Some(v) {
+                diffs.push(format!(
+                    "{k}: recorded {} != replayed {}",
+                    v.emit(),
+                    got.map(Json::emit).unwrap_or_else(|| "<absent>".into())
+                ));
+            }
+        }
+    } else {
+        diffs.push("counters line is not an object".to_string());
+    }
+
+    Ok(ReplayReport {
+        jobs: spec.jobs,
+        results_matched: matched,
+        mismatched_ids: mismatched,
+        counters_match: diffs.is_empty(),
+        counter_diffs: diffs,
+        faults_fired: (recorded_fired, fired),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> RecordSpec {
+        RecordSpec {
+            workload: "ttst".into(),
+            jobs: 4,
+            layers: 1,
+            steps: 3,
+            kappa: 0.8,
+            rho: 0.5,
+            seed: 11,
+            flows: vec!["sata".into()],
+            substrate: "cim".into(),
+            workers: 2,
+            queue: "ws".into(),
+            queue_cap: 4,
+            retry_budget: 2,
+            kill_units: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn spec_round_trips_through_its_config_line() {
+        let mut spec = small_spec();
+        spec.seed = u64::MAX; // hex text must carry the full width
+        spec.kill_units = vec![2, 5];
+        let back = RecordSpec::from_json(&spec.to_json()).expect("parse");
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn recording_rejects_unreplayable_shapes() {
+        let mut spec = small_spec();
+        spec.kill_units = vec![1, 2, 3]; // budget is 2
+        let err = run_recorded(&spec).expect_err("over-budget kills");
+        assert!(err.contains("retry budget"), "got: {err}");
+        let mut spec = small_spec();
+        spec.workload = "nonsense".into();
+        assert!(run_recorded(&spec).is_err());
+        let mut spec = small_spec();
+        spec.queue = "triple".into();
+        assert!(run_recorded(&spec).is_err());
+    }
+
+    #[test]
+    fn a_recording_replays_itself_bitwise() {
+        let outcome = run_recorded(&small_spec()).expect("record run");
+        let lines =
+            crate::util::replay::parse_log(&outcome.log).expect("sealed log");
+        let report = replay_lines(&lines).expect("replay run");
+        assert!(
+            report.ok(),
+            "undisturbed replay must match: mismatched {:?}, diffs {:?}",
+            report.mismatched_ids,
+            report.counter_diffs
+        );
+        assert_eq!(report.results_matched, 4);
+    }
+}

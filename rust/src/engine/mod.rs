@@ -163,6 +163,56 @@ impl RunReport {
     pub fn ops_per_uj(&self) -> f64 {
         self.selected_pairs as f64 / (self.total_pj() * 1e-6)
     }
+
+    /// JSON object with every field, for session checkpoints. `Num`
+    /// emission is shortest-round-trip, so
+    /// [`RunReport::from_json`]`(r.to_json())` is bitwise `== r` — the
+    /// property the checkpoint/resume equivalence tests pin.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("latency_ns", Json::num(self.latency_ns)),
+            ("compute_busy_ns", Json::num(self.compute_busy_ns)),
+            ("mac_pj", Json::num(self.mac_pj)),
+            ("k_fetch_pj", Json::num(self.k_fetch_pj)),
+            ("q_load_pj", Json::num(self.q_load_pj)),
+            ("sched_pj", Json::num(self.sched_pj)),
+            ("index_pj", Json::num(self.index_pj)),
+            ("k_vec_ops", Json::num(self.k_vec_ops as f64)),
+            ("q_loads", Json::num(self.q_loads as f64)),
+            ("selected_pairs", Json::num(self.selected_pairs as f64)),
+            ("steps", Json::num(self.steps as f64)),
+        ])
+    }
+
+    /// Rebuild a report from [`RunReport::to_json`] output. Every field
+    /// is required; a missing or mistyped one is an explicit `Err`
+    /// naming it (checkpoint files are untrusted input).
+    pub fn from_json(v: &crate::util::json::Json) -> Result<Self, String> {
+        let f = |k: &str| {
+            v.get(k)
+                .as_f64()
+                .ok_or_else(|| format!("run report: missing/invalid '{k}'"))
+        };
+        let u = |k: &str| {
+            v.get(k)
+                .as_usize()
+                .ok_or_else(|| format!("run report: missing/invalid '{k}'"))
+        };
+        Ok(RunReport {
+            latency_ns: f("latency_ns")?,
+            compute_busy_ns: f("compute_busy_ns")?,
+            mac_pj: f("mac_pj")?,
+            k_fetch_pj: f("k_fetch_pj")?,
+            q_load_pj: f("q_load_pj")?,
+            sched_pj: f("sched_pj")?,
+            index_pj: f("index_pj")?,
+            k_vec_ops: u("k_vec_ops")?,
+            q_loads: u("q_loads")?,
+            selected_pairs: u("selected_pairs")?,
+            steps: u("steps")?,
+        })
+    }
 }
 
 /// Engine options.

@@ -43,12 +43,26 @@
 //! jobs (overload is *shed* loudly, never dropped silently) and
 //! `--arrival-rate R` pacing a seeded open-loop Poisson arrival stream
 //! (0 = unpaced burst).
+//!
+//! Crash tolerance (single-node serve): workers catch unit panics and
+//! retry the unit up to `--retry-budget` times per job; `--kill-units`
+//! injects seeded kills for chaos drills; `--checkpoint-dir` snapshots
+//! live decode sessions so `--resume` continues a killed serve without
+//! replanning completed steps; `--record LOG` serves a fully seeded
+//! corpus and seals a checksummed log that `sata replay LOG` re-runs
+//! and diffs bitwise (result digests, deterministic counters, fired
+//! faults).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 use sata::cluster::{Admission, Cluster, ClusterConfig, RoutePolicy};
 use sata::config::{SystemConfig, WorkloadSpec};
-use sata::coordinator::{Coordinator, CoordinatorConfig, ExecQueueKind, Job, Request};
+use sata::coordinator::{
+    checkpoint, record, Coordinator, CoordinatorConfig, ExecQueueKind, Job,
+    Request,
+};
 use sata::decode::run_session;
 use sata::engine::backend::{self, FlowBackend, PlanSet};
 use sata::engine::{gains, run_dense, run_sata, substrate, EngineOpts};
@@ -63,13 +77,14 @@ use sata::trace::synth::{
     gen_models, gen_sessions, gen_trace, gen_traces, ArrivalGen, ArrivalSpec,
 };
 use sata::trace::TraceDir;
+use sata::util::fault::FaultPlan;
 
 /// Help text. Every `--flag` mentioned here must be accepted by a
 /// subcommand in [`SUBCOMMANDS`] and vice versa — enforced by the
 /// `usage_and_accepted_flags_agree` unit test, and at run time by
 /// [`check_flags`].
 const USAGE: &str = "sata — SATA reproduction CLI
-usage: sata <trace-gen|schedule|simulate|flows|serve|e2e|bench-diff|lint> [flags]
+usage: sata <trace-gen|schedule|simulate|flows|serve|replay|e2e|bench-diff|lint> [flags]
   common: [--workload ttst|kvt-tiny|kvt-base|drsformer] [--seed N]
   trace-gen: [--count N] [--out DIR] [--layers L] [--rho R]
              [--steps S] [--kappa K]     # L>1 → model files; S>0 → sessions
@@ -82,6 +97,9 @@ usage: sata <trace-gen|schedule|simulate|flows|serve|e2e|bench-diff|lint> [flags
              [--no-delta] [--json] [--exec-queue ws|single]
              [--nodes N] [--route affinity|rr] [--admit CAP]
              [--arrival-rate R]          # fleet mode (see below)
+             [--retry-budget N] [--kill-units a,b,c]
+             [--checkpoint-dir DIR] [--resume] [--record LOG]
+  replay:    LOG                         # re-run a recorded serve, diff bitwise
   e2e:       [--artifacts DIR]           # PJRT end-to-end
   bench-diff: [--baseline DIR] [--fresh DIR]  # perf-trajectory gate
   lint:      (self-hosted static analysis; exits 1 on findings)
@@ -96,6 +114,14 @@ fleet mode: --nodes N serves through N coordinator shards routed by
   (--route rr); --admit CAP bounds per-node in-flight jobs (overload
   sheds loudly); --arrival-rate R paces a seeded Poisson arrival
   stream at R jobs/s (0 = unpaced burst)
+crash tolerance: workers catch unit panics; a killed unit is retried
+  up to --retry-budget times per job (default 2), then the job fails
+  with an explicit error; --kill-units injects seeded kills at global
+  execute-unit ordinals (chaos drills); --checkpoint-dir snapshots
+  live decode sessions every 100 ms and --resume continues a killed
+  serve from them without replanning completed steps; --record LOG
+  serves a fully seeded corpus and seals a checksummed log that
+  `sata replay LOG` re-runs and diffs bitwise
 hot path: --exec-queue picks the stage-1→stage-2 conduit — ws
   (work-stealing deques, default) or single (one bounded queue, the
   contention baseline); bench-diff compares fresh BENCH_*.json
@@ -123,9 +149,11 @@ const SUBCOMMANDS: &[(&str, &[&str])] = &[
             "workload", "seed", "jobs", "workers", "flows", "flow", "substrate",
             "repeat", "traces-dir", "layers", "rho", "steps", "kappa", "no-carry",
             "no-delta", "json", "nodes", "route", "admit", "arrival-rate",
-            "exec-queue",
+            "exec-queue", "retry-budget", "kill-units", "checkpoint-dir",
+            "resume", "record",
         ],
     ),
+    ("replay", &[]),
     ("e2e", &["artifacts", "seed"]),
     ("bench-diff", &["baseline", "fresh"]),
     ("lint", &[]),
@@ -463,12 +491,114 @@ fn main() {
                     std::process::exit(2);
                 }),
             };
+            let retry_budget = usize_flag(&flags, "retry-budget", 2);
+            let kill_units: Vec<u64> = flags
+                .get("kill-units")
+                .map(|csv| {
+                    csv.split(',')
+                        .map(str::trim)
+                        .filter(|s| !s.is_empty())
+                        .map(|s| {
+                            s.parse().unwrap_or_else(|_| {
+                                eprintln!(
+                                    "--kill-units wants comma-separated global \
+                                     unit ordinals, got '{s}'"
+                                );
+                                std::process::exit(2);
+                            })
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            let fault = if kill_units.is_empty() {
+                None
+            } else {
+                Some(Arc::new(FaultPlan::at_global_units(&kill_units)))
+            };
             let sys = SystemConfig::for_workload(&spec);
+
+            // Record mode: serve the fully seeded synthetic corpus through
+            // a deterministic pipeline shape and seal a checksummed log
+            // that `sata replay LOG` re-runs and diffs bitwise. The
+            // corpus *is* the log's config line, so external inputs
+            // (--traces-dir) and multi-node wall-clock racing (--nodes)
+            // cannot be recorded.
+            if let Some(log_path) = flags.get("record") {
+                if flags.contains_key("nodes") {
+                    eprintln!("--record needs a single-node serve (drop --nodes)");
+                    std::process::exit(2);
+                }
+                if flags.contains_key("traces-dir") {
+                    eprintln!(
+                        "--record replays a seeded synthetic corpus; it cannot \
+                         record --traces-dir input"
+                    );
+                    std::process::exit(2);
+                }
+                if flags.contains_key("checkpoint-dir") || flags.contains_key("resume")
+                {
+                    eprintln!("--record cannot combine with --checkpoint-dir/--resume");
+                    std::process::exit(2);
+                }
+                let rspec = record::RecordSpec {
+                    workload: spec.name.to_lowercase(),
+                    jobs,
+                    layers: layers.max(1),
+                    steps,
+                    kappa,
+                    rho,
+                    seed,
+                    flows: flows.clone(),
+                    substrate: sspec.name.to_string(),
+                    workers,
+                    queue: exec_queue.as_str().to_string(),
+                    queue_cap: CoordinatorConfig::default().queue_cap,
+                    retry_budget,
+                    kill_units: kill_units.clone(),
+                };
+                let out = record::run_recorded(&rspec).unwrap_or_else(|e| {
+                    eprintln!("record: {e}");
+                    std::process::exit(2);
+                });
+                if let Err(e) = sata::util::replay::write_log(
+                    std::path::Path::new(log_path),
+                    &out.log,
+                ) {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+                for r in &out.results {
+                    match &r.error {
+                        Some(e) => println!("job {:>4} {}: ERROR {e}", r.id, r.model),
+                        None => println!(
+                            "job {:>4} {} [{} {}L+{}tok]",
+                            r.id, r.model, r.substrate, r.layers, r.tokens
+                        ),
+                    }
+                }
+                println!(
+                    "recorded {} jobs ({} failed, {}/{} injected faults fired) -> {log_path}",
+                    out.results.len(),
+                    out.metrics.jobs_failed,
+                    out.faults_fired,
+                    kill_units.len(),
+                );
+                println!("verify with: sata replay {log_path}");
+                return;
+            }
 
             // Fleet mode: `--nodes` serves through the Layer-4 cluster —
             // N coordinator shards, fingerprint-affinity or round-robin
             // routing, bounded admission, Poisson-paced arrivals.
             if flags.contains_key("nodes") {
+                if flags.contains_key("checkpoint-dir") || flags.contains_key("resume")
+                {
+                    eprintln!(
+                        "--checkpoint-dir/--resume need a single-node serve \
+                         (drop --nodes)"
+                    );
+                    std::process::exit(2);
+                }
                 let n_nodes = usize_flag(&flags, "nodes", 2).max(1);
                 let route_name =
                     flags.get("route").map(String::as_str).unwrap_or("affinity");
@@ -489,6 +619,10 @@ fn main() {
                             plan_workers: workers,
                             exec_workers: workers,
                             exec_queue,
+                            // One Arc-shared plan: kill ordinals count
+                            // fleetwide, so `--kill-units` fires at most
+                            // once per ordinal across all nodes.
+                            fault: fault.clone(),
                             ..Default::default()
                         },
                     },
@@ -569,7 +703,8 @@ fn main() {
                                 Job::with_flows(id, request, spec.sf, flows.clone())
                                     .on_substrate(sspec.name)
                                     .with_carryover(carry)
-                                    .with_delta(delta);
+                                    .with_delta(delta)
+                                    .with_retry_budget(retry_budget);
                             match cluster.submit(job) {
                                 Ok(Admission::Accepted { .. }) => {}
                                 Ok(Admission::Shed { node }) => eprintln!(
@@ -634,10 +769,50 @@ fn main() {
                     plan_workers: workers,
                     exec_workers: workers,
                     exec_queue,
+                    fault: fault.clone(),
                     ..Default::default()
                 },
             );
             let t0 = std::time::Instant::now();
+
+            // Crash recovery: `--resume` reattaches the checkpoints a
+            // previous `--checkpoint-dir` serve left behind, keyed by job
+            // id (the coordinator validates the content binding —
+            // fingerprint, shape, flows, substrate — and fails the job
+            // loudly on any mismatch). Bad files are reported per file
+            // and skipped; good ones still resume.
+            let ckpt_dir = flags.get("checkpoint-dir").map(std::path::PathBuf::from);
+            let mut resume_map: BTreeMap<usize, checkpoint::SessionCheckpoint> =
+                BTreeMap::new();
+            if flags.contains_key("resume") {
+                let Some(dir) = &ckpt_dir else {
+                    eprintln!("--resume needs --checkpoint-dir");
+                    std::process::exit(2);
+                };
+                if dir.is_dir() {
+                    let (good, bad) = checkpoint::load_dir(dir).unwrap_or_else(|e| {
+                        eprintln!("{e}");
+                        std::process::exit(2);
+                    });
+                    for b in &bad {
+                        eprintln!("checkpoint SKIPPED: {b}");
+                    }
+                    for ck in good {
+                        resume_map.insert(ck.id, ck);
+                    }
+                    eprintln!(
+                        "resuming {} checkpointed session(s) ({} bad file(s) skipped)",
+                        resume_map.len(),
+                        bad.len(),
+                    );
+                } else {
+                    eprintln!(
+                        "checkpoint dir {} not found; starting fresh",
+                        dir.display()
+                    );
+                }
+            }
+            let ckpt_stop = AtomicBool::new(false);
 
             // Request source: `--traces-dir` loads files lazily (one
             // resident at a time) when submitted once; with `--repeat` the
@@ -701,13 +876,39 @@ fn main() {
             // with bounded backoff and reported loudly if it is finally
             // dropped — never lost in silence.
             std::thread::scope(|s| {
+                // Checkpointer: snapshot every live decode session to
+                // --checkpoint-dir on a 100 ms cadence (plus one final
+                // sync, which clears files for sessions that finished).
+                if let Some(dir) = &ckpt_dir {
+                    let coord = &coord;
+                    let ckpt_stop = &ckpt_stop;
+                    s.spawn(move || {
+                        let mut previous: Vec<usize> = Vec::new();
+                        loop {
+                            let ckpts = coord.checkpoint();
+                            match checkpoint::sync_dir(dir, &ckpts, &previous) {
+                                Ok(ids) => previous = ids,
+                                Err(e) => eprintln!("checkpoint: {e}"),
+                            }
+                            if ckpt_stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            std::thread::sleep(std::time::Duration::from_millis(100));
+                        }
+                    });
+                }
                 s.spawn(|| {
                     let mut id = 0;
                     let mut submit = |request: Request| {
-                        let job = Job::with_flows(id, request, spec.sf, flows.clone())
-                            .on_substrate(sspec.name)
-                            .with_carryover(carry)
-                            .with_delta(delta);
+                        let mut job =
+                            Job::with_flows(id, request, spec.sf, flows.clone())
+                                .on_substrate(sspec.name)
+                                .with_carryover(carry)
+                                .with_delta(delta)
+                                .with_retry_budget(retry_budget);
+                        if let Some(ck) = resume_map.remove(&id) {
+                            job = job.with_checkpoint(ck);
+                        }
                         id += 1;
                         match coord.submit_with_retry(
                             job,
@@ -792,6 +993,7 @@ fn main() {
                         }
                     }
                 }
+                ckpt_stop.store(true, Ordering::SeqCst);
             });
             let metrics = coord.finish();
             if json_out {
@@ -866,6 +1068,46 @@ fn main() {
                 metrics.total_latency_ns / 1e6,
                 metrics.total_energy_pj / 1e6,
             );
+        }
+        "replay" => {
+            // Positional: the log a `serve --record LOG` sealed. The
+            // checksum/truncation gate is in `util::replay::read_log`;
+            // spec validation in `record::replay_lines`; divergence is a
+            // *report*, not an error.
+            let Some(log_path) = args.get(1).filter(|a| !a.starts_with("--")) else {
+                eprintln!("usage: sata replay LOG");
+                std::process::exit(2);
+            };
+            let lines = sata::util::replay::read_log(std::path::Path::new(log_path))
+                .unwrap_or_else(|e| {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                });
+            let report = record::replay_lines(&lines).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2);
+            });
+            println!(
+                "replayed {} jobs from {log_path}: {} result digest(s) matched, \
+                 counters {}, faults fired {} recorded / {} replayed",
+                report.jobs,
+                report.results_matched,
+                if report.counters_match { "matched" } else { "DIVERGED" },
+                report.faults_fired.0,
+                report.faults_fired.1,
+            );
+            for id in &report.mismatched_ids {
+                println!("  job {id}: result digest DIVERGED");
+            }
+            for d in &report.counter_diffs {
+                println!("  counter {d}");
+            }
+            if report.ok() {
+                println!("replay: bitwise identical to the recording");
+            } else {
+                eprintln!("replay: DIVERGED from the recording");
+                std::process::exit(1);
+            }
         }
         "e2e" => {
             let dir = flags

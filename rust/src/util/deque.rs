@@ -48,11 +48,15 @@ const FULL_WAIT: Duration = Duration::from_millis(5);
 /// Snapshot of an [`ExecPool`]'s contention counters. Every unit
 /// returned by a pop is classified by where it came from, so
 /// `local_pops + injector_pops + steal_successes` equals the number of
-/// units handed to workers (and equals `pushes` once drained).
+/// units handed to workers (and equals `pushes + requeues` once
+/// drained — a requeued unit re-enters the pool and is handed out a
+/// second time).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PoolCounters {
     /// Units accepted by `push`.
     pub pushes: u64,
+    /// Units re-entered via [`Worker::requeue`] after a failed attempt.
+    pub requeues: u64,
     /// Pops served from the worker's own deque (no shared lock).
     pub local_pops: u64,
     /// Pops served directly from the shared injector.
@@ -82,6 +86,7 @@ impl PoolCounters {
 
 struct Counters {
     pushes: AtomicU64,
+    requeues: AtomicU64,
     local_pops: AtomicU64,
     injector_pops: AtomicU64,
     steal_attempts: AtomicU64,
@@ -133,6 +138,7 @@ impl<T> ExecPool<T> {
             seed,
             counters: Counters {
                 pushes: AtomicU64::new(0),
+                requeues: AtomicU64::new(0),
                 local_pops: AtomicU64::new(0),
                 injector_pops: AtomicU64::new(0),
                 steal_attempts: AtomicU64::new(0),
@@ -162,6 +168,7 @@ impl<T> ExecPool<T> {
     pub fn counters(&self) -> PoolCounters {
         PoolCounters {
             pushes: self.counters.pushes.load(Ordering::Relaxed),
+            requeues: self.counters.requeues.load(Ordering::Relaxed),
             local_pops: self.counters.local_pops.load(Ordering::Relaxed),
             injector_pops: self.counters.injector_pops.load(Ordering::Relaxed),
             steal_attempts: self.counters.steal_attempts.load(Ordering::Relaxed),
@@ -366,6 +373,22 @@ impl<T> Worker<T> {
         self.pool.pop(self.id, &mut self.rng)
     }
 
+    /// Return a unit this worker already popped back to the pool (the
+    /// crash-tolerance requeue path: the attempt to process it died and
+    /// a retry is owed). The unit lands on this worker's own deque and
+    /// re-takes a `pending` slot **bypassing the capacity CAS** — the
+    /// requeuing thread is the consumer that would drain the pool, so
+    /// blocking it on a full pool would deadlock. The transient
+    /// `pending == cap + 1` overshoot is bounded by the number of
+    /// concurrently requeueing workers and only delays producers, never
+    /// loses a slot: the requeued unit retires its slot when re-popped.
+    pub fn requeue(&self, item: T) {
+        self.pool.pending.fetch_add(1, Ordering::AcqRel);
+        lock_tolerant(&self.pool.deques[self.id]).push_back(item);
+        self.pool.counters.requeues.fetch_add(1, Ordering::Relaxed);
+        self.pool.work_cv.notify_one();
+    }
+
     /// This worker's deque index.
     pub fn id(&self) -> usize {
         self.id
@@ -513,6 +536,59 @@ mod tests {
         let total: u64 =
             handles.into_iter().map(|h| h.join().expect("worker")).sum();
         assert_eq!(total, 1);
+    }
+
+    /// A requeued unit comes back to the same worker and the counters
+    /// balance as `returns == pushes + requeues` once drained — the
+    /// conservation law the chaos tests lean on.
+    #[test]
+    fn requeue_hands_the_unit_back_and_balances_counters() {
+        let pool = Arc::new(ExecPool::<u64>::new(1, 2, 11));
+        let tx = pool.producer();
+        let mut w = pool.worker(0);
+        tx.push(1).expect("worker alive");
+        tx.push(2).expect("worker alive");
+        drop(tx);
+        let first = w.next().expect("unit available");
+        // Pretend processing `first` died: give it back.
+        w.requeue(first);
+        let mut got = Vec::new();
+        while let Some(x) = w.next() {
+            got.push(x);
+        }
+        got.sort_unstable();
+        assert_eq!(got.len(), 2, "requeued unit is handed out again");
+        assert_eq!(got, vec![1, 2]);
+        let c = pool.counters();
+        assert_eq!(c.pushes, 2);
+        assert_eq!(c.requeues, 1);
+        assert_eq!(c.returns(), c.pushes + c.requeues);
+        assert_eq!(pool.pending(), 0);
+    }
+
+    /// Requeue never blocks, even when the pool sits exactly at its
+    /// capacity bound (the requeuing worker is the drain — blocking it
+    /// would deadlock).
+    #[test]
+    fn requeue_bypasses_the_capacity_bound() {
+        let pool = Arc::new(ExecPool::<u64>::new(1, 1, 13));
+        let tx = pool.producer();
+        let mut w = pool.worker(0);
+        tx.push(7).expect("worker alive");
+        let unit = w.next().expect("unit available");
+        tx.push(8).expect("slot freed by the pop");
+        // Pool is full again (pending == cap == 1); requeue must not
+        // block on the bound.
+        w.requeue(unit);
+        assert_eq!(pool.pending(), 2, "transient overshoot is allowed");
+        drop(tx);
+        let mut got = Vec::new();
+        while let Some(x) = w.next() {
+            got.push(x);
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![7, 8]);
+        assert_eq!(pool.pending(), 0);
     }
 
     /// Many workers, tight cap, several seeds: units are conserved

@@ -1,0 +1,281 @@
+//! Seeded, deterministic fault injection for chaos testing.
+//!
+//! A [`FaultPlan`] describes *when to kill a worker*: at a worker's
+//! *n*-th unit (per-worker kills) or at the *k*-th unit started anywhere
+//! in the pipeline (global-ordinal kills). Workers consult the plan at
+//! the **start** of each unit — before any state is mutated — via
+//! [`FaultPlan::check_exec`] / [`FaultPlan::check_plan`]; a matching
+//! rule fires exactly once and kills the caller with a `panic!`, which
+//! the coordinator's `catch_unwind` isolation turns into a worker-death
+//! + requeue event (see `crate::coordinator`).
+//!
+//! Determinism: every rule fires **at most once**, and a global-ordinal
+//! rule fires on exactly the *k*-th unit start (the ordinal is claimed
+//! by one atomic increment), so the *number* of fired kills — and hence
+//! the coordinator's `worker_deaths` / `units_requeued` counters — is
+//! reproducible run to run as long as the workload reaches the rule's
+//! trigger point. Per-worker rules additionally pin *which worker* dies;
+//! whether a given worker reaches its *n*-th unit can depend on
+//! scheduling, so chaos tests assert on `fired()` rather than assuming
+//! every per-worker rule triggers.
+//!
+//! This module deliberately lives in `util` (outside the lint's hot-path
+//! modules): the kill itself is a `panic!`, which hot code is forbidden
+//! from containing.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::rng::{mix64, Rng};
+use crate::util::sync::lock_tolerant;
+
+/// Salt for [`FaultPlan::seeded`]'s (worker, nth) derivation stream.
+const FAULT_SEED_SALT: u64 = 0x4641_554C_545F_494E; // "FAULT_IN"
+
+/// One fired kill, recorded for audit/replay logs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Pipeline stage the kill hit (`"exec"` or `"plan"`).
+    pub stage: &'static str,
+    /// Worker id whose unit died.
+    pub worker: usize,
+    /// Global 1-based unit-start ordinal (within the stage) at which the
+    /// kill fired.
+    pub ordinal: u64,
+}
+
+/// Mutable trigger state: per-worker unit counts, one fired flag per
+/// rule, and the event log. Guarded by one mutex (`fault_plan` — the
+/// name is the lock-order manifest class in `crate::analysis::locks`,
+/// kept even though this file itself is outside the linted hot set).
+#[derive(Default)]
+struct FaultState {
+    exec_per_worker: HashMap<usize, u64>,
+    exec_worker_fired: Vec<bool>,
+    exec_global_fired: Vec<bool>,
+    plan_global_fired: Vec<bool>,
+    events: Vec<FaultEvent>,
+}
+
+/// A deterministic worker-kill schedule. Build with
+/// [`FaultPlan::at_worker_units`], [`FaultPlan::at_global_units`],
+/// [`FaultPlan::at_plan_jobs`], or [`FaultPlan::seeded`]; share via
+/// `Arc` through `CoordinatorConfig::fault`.
+pub struct FaultPlan {
+    /// (worker id, 1-based nth unit started by that worker) exec kills.
+    worker_kills: Vec<(usize, u64)>,
+    /// 1-based global exec unit-start ordinals to kill.
+    global_kills: Vec<u64>,
+    /// 1-based global plan job-start ordinals to kill.
+    plan_kills: Vec<u64>,
+    /// Global exec unit-start counter (claimed before the rule check).
+    exec_ordinal: AtomicU64,
+    /// Global plan job-start counter.
+    plan_ordinal: AtomicU64,
+    fault_plan: Mutex<FaultState>,
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultPlan")
+            .field("worker_kills", &self.worker_kills)
+            .field("global_kills", &self.global_kills)
+            .field("plan_kills", &self.plan_kills)
+            .field("fired", &self.fired())
+            .finish()
+    }
+}
+
+impl FaultPlan {
+    fn with_rules(
+        worker_kills: Vec<(usize, u64)>,
+        global_kills: Vec<u64>,
+        plan_kills: Vec<u64>,
+    ) -> Self {
+        let state = FaultState {
+            exec_per_worker: HashMap::new(),
+            exec_worker_fired: vec![false; worker_kills.len()],
+            exec_global_fired: vec![false; global_kills.len()],
+            plan_global_fired: vec![false; plan_kills.len()],
+            events: Vec::new(),
+        };
+        FaultPlan {
+            worker_kills,
+            global_kills,
+            plan_kills,
+            exec_ordinal: AtomicU64::new(0),
+            plan_ordinal: AtomicU64::new(0),
+            fault_plan: Mutex::new(state),
+        }
+    }
+
+    /// Kill each listed `(worker, nth)` point: execute worker `worker`
+    /// dies at the start of the `nth` unit it picks up (1-based).
+    pub fn at_worker_units(kills: &[(usize, u64)]) -> Self {
+        Self::with_rules(kills.to_vec(), Vec::new(), Vec::new())
+    }
+
+    /// Kill the `k`-th unit started anywhere in the execute stage, for
+    /// each listed 1-based ordinal `k`. Requeued units claim fresh
+    /// ordinals, so ordinals keep advancing past a kill.
+    pub fn at_global_units(ordinals: &[u64]) -> Self {
+        Self::with_rules(Vec::new(), ordinals.to_vec(), Vec::new())
+    }
+
+    /// Kill the `k`-th job a plan worker starts planning, for each
+    /// listed 1-based ordinal `k`.
+    pub fn at_plan_jobs(ordinals: &[u64]) -> Self {
+        Self::with_rules(Vec::new(), Vec::new(), ordinals.to_vec())
+    }
+
+    /// `count` seeded (worker, nth) exec kills over `workers` workers:
+    /// the same `(seed, workers, count)` always derives the same kill
+    /// points, with nth ∈ [1, 4] so kills land early in short runs.
+    pub fn seeded(seed: u64, workers: usize, count: usize) -> Self {
+        let workers = workers.max(1);
+        let mut rng = Rng::new(mix64(seed ^ FAULT_SEED_SALT));
+        let mut kills = Vec::with_capacity(count);
+        for _ in 0..count {
+            let w = rng.gen_range(workers);
+            let nth = 1 + rng.gen_range(4) as u64;
+            kills.push((w, nth));
+        }
+        Self::at_worker_units(&kills)
+    }
+
+    /// Consult the plan at the start of an execute unit on `worker`.
+    /// Panics (killing the caller) if an unfired rule matches.
+    pub fn check_exec(&self, worker: usize) {
+        let ordinal = self.exec_ordinal.fetch_add(1, Ordering::SeqCst) + 1;
+        let mut kill = false;
+        {
+            let mut st = lock_tolerant(&self.fault_plan);
+            let count = st.exec_per_worker.entry(worker).or_insert(0);
+            *count += 1;
+            let nth = *count;
+            for (i, &(w, n)) in self.worker_kills.iter().enumerate() {
+                if w == worker && n == nth && !st.exec_worker_fired[i] {
+                    st.exec_worker_fired[i] = true;
+                    kill = true;
+                    break;
+                }
+            }
+            if !kill {
+                for (i, &k) in self.global_kills.iter().enumerate() {
+                    if k == ordinal && !st.exec_global_fired[i] {
+                        st.exec_global_fired[i] = true;
+                        kill = true;
+                        break;
+                    }
+                }
+            }
+            if kill {
+                st.events.push(FaultEvent { stage: "exec", worker, ordinal });
+            }
+        }
+        if kill {
+            panic!(
+                "injected fault: killing exec worker {worker} at unit ordinal {ordinal}"
+            );
+        }
+    }
+
+    /// Consult the plan at the start of planning a job on plan worker
+    /// `worker`. Panics (killing the caller) if an unfired rule matches.
+    pub fn check_plan(&self, worker: usize) {
+        let ordinal = self.plan_ordinal.fetch_add(1, Ordering::SeqCst) + 1;
+        let mut kill = false;
+        {
+            let mut st = lock_tolerant(&self.fault_plan);
+            for (i, &k) in self.plan_kills.iter().enumerate() {
+                if k == ordinal && !st.plan_global_fired[i] {
+                    st.plan_global_fired[i] = true;
+                    kill = true;
+                    break;
+                }
+            }
+            if kill {
+                st.events.push(FaultEvent { stage: "plan", worker, ordinal });
+            }
+        }
+        if kill {
+            panic!(
+                "injected fault: killing plan worker {worker} at job ordinal {ordinal}"
+            );
+        }
+    }
+
+    /// How many rules have fired so far.
+    pub fn fired(&self) -> usize {
+        lock_tolerant(&self.fault_plan).events.len()
+    }
+
+    /// Total rules in the plan (the upper bound of [`FaultPlan::fired`]).
+    pub fn planned(&self) -> usize {
+        self.worker_kills.len() + self.global_kills.len() + self.plan_kills.len()
+    }
+
+    /// Every kill that has fired, in firing order.
+    pub fn events(&self) -> Vec<FaultEvent> {
+        lock_tolerant(&self.fault_plan).events.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn caught(f: impl FnOnce() + std::panic::UnwindSafe) -> bool {
+        std::panic::catch_unwind(f).is_err()
+    }
+
+    #[test]
+    fn worker_rule_fires_exactly_once_at_its_nth_unit() {
+        let plan = FaultPlan::at_worker_units(&[(1, 2)]);
+        assert!(!caught(|| plan.check_exec(1))); // 1st unit: survives
+        assert!(!caught(|| plan.check_exec(0))); // other worker: survives
+        assert!(caught(|| plan.check_exec(1))); // 2nd unit: dies
+        assert!(!caught(|| plan.check_exec(1))); // rule spent
+        assert_eq!(plan.fired(), 1);
+        let ev = plan.events();
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].stage, "exec");
+        assert_eq!(ev[0].worker, 1);
+    }
+
+    #[test]
+    fn global_rule_fires_on_the_kth_start_anywhere() {
+        let plan = FaultPlan::at_global_units(&[3]);
+        assert!(!caught(|| plan.check_exec(0)));
+        assert!(!caught(|| plan.check_exec(1)));
+        assert!(caught(|| plan.check_exec(2))); // 3rd start overall
+        assert!(!caught(|| plan.check_exec(0)));
+        assert_eq!(plan.fired(), 1);
+        assert_eq!(plan.events()[0].ordinal, 3);
+    }
+
+    #[test]
+    fn plan_stage_rules_are_independent_of_exec_rules() {
+        let plan = FaultPlan::at_plan_jobs(&[1]);
+        assert!(!caught(|| plan.check_exec(0))); // exec untouched
+        assert!(caught(|| plan.check_plan(0)));
+        assert!(!caught(|| plan.check_plan(0)));
+        assert_eq!(plan.fired(), 1);
+        assert_eq!(plan.events()[0].stage, "plan");
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_bounded() {
+        let a = FaultPlan::seeded(42, 4, 3);
+        let b = FaultPlan::seeded(42, 4, 3);
+        assert_eq!(a.worker_kills, b.worker_kills);
+        assert_eq!(a.planned(), 3);
+        for &(w, n) in &a.worker_kills {
+            assert!(w < 4);
+            assert!((1..=4).contains(&n));
+        }
+        let c = FaultPlan::seeded(43, 4, 3);
+        assert_ne!(a.worker_kills, c.worker_kills, "seeds must differ");
+    }
+}

@@ -6,8 +6,10 @@
 pub mod arena;
 pub mod bench;
 pub mod deque;
+pub mod fault;
 pub mod json;
 pub mod prop;
+pub mod replay;
 pub mod rng;
 pub mod stats;
 pub mod sync;

@@ -1,0 +1,248 @@
+//! Checksummed record/replay logs (JSONL + trailer).
+//!
+//! A record log is a sequence of JSON lines (one [`Json`] value per
+//! line) followed by a mandatory **end trailer** carrying the payload
+//! line count and a running checksum of the payload text:
+//!
+//! ```text
+//! {"kind":"config", ...}
+//! {"kind":"job", ...}
+//! ...
+//! {"kind":"end","count":N,"checksum":"<16 hex digits>"}
+//! ```
+//!
+//! [`LogWriter`] produces the format; [`parse_log`] validates it —
+//! every line must parse (depth-bounded, see [`Json::parse`]), the
+//! trailer must be present and last, and the recomputed checksum must
+//! match. A truncated or tampered log is an explicit `Err(String)`,
+//! never a panic, so `sata replay` can reject a bad artifact loudly.
+//!
+//! The checksum (`[line_hash]` folded over every payload line) is a
+//! corruption tripwire, not a MAC: it catches truncation, bit rot, and
+//! hand edits, which is what a determinism artifact needs.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::util::rng::mix64;
+
+/// Non-zero seed so an empty log hashes to a distinctive value.
+const LOG_HASH_SEED: u64 = 0x5245_504C_4159_4C47; // "REPLAYLG"
+
+/// Order-sensitive 64-bit hash of one line's bytes ([`mix64`]-folded).
+/// Also used by the serve recorder to digest per-job results.
+pub fn line_hash(line: &str) -> u64 {
+    let mut h = LOG_HASH_SEED;
+    for b in line.bytes() {
+        h = mix64(h ^ u64::from(b));
+    }
+    h
+}
+
+/// Fold one line's hash into the running log checksum.
+fn fold(checksum: u64, line: &str) -> u64 {
+    mix64(checksum ^ line_hash(line))
+}
+
+/// Render a u64 as the fixed-width hex string the trailer carries (JSON
+/// `f64` numbers cannot hold a u64 exactly, so hashes travel as text).
+pub fn hash_to_hex(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+/// Incremental log builder: `record` payload lines, `finish` appends the
+/// trailer and returns the complete log text.
+#[derive(Default)]
+pub struct LogWriter {
+    lines: Vec<String>,
+    checksum: u64,
+}
+
+impl LogWriter {
+    /// Empty log.
+    pub fn new() -> Self {
+        LogWriter { lines: Vec::new(), checksum: LOG_HASH_SEED }
+    }
+
+    /// Append one payload line.
+    pub fn record(&mut self, line: Json) {
+        let text = line.emit();
+        self.checksum = fold(self.checksum, &text);
+        self.lines.push(text);
+    }
+
+    /// Payload lines recorded so far.
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    /// Whether nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+
+    /// Seal the log: append the end trailer and return the full text.
+    pub fn finish(self) -> String {
+        let end = Json::obj(vec![
+            ("kind", Json::str("end")),
+            ("count", Json::num(self.lines.len() as f64)),
+            ("checksum", Json::str(&hash_to_hex(self.checksum))),
+        ]);
+        let mut out = self.lines.join("\n");
+        if !out.is_empty() {
+            out.push('\n');
+        }
+        out.push_str(&end.emit());
+        out.push('\n');
+        out
+    }
+}
+
+/// Validate a sealed log and return its payload lines (trailer
+/// excluded). Errors are explicit and name the failure: unparseable
+/// line (including over-deep nesting), missing/misplaced/duplicated
+/// trailer, count mismatch, checksum mismatch.
+pub fn parse_log(text: &str) -> Result<Vec<Json>, String> {
+    let mut payload = Vec::new();
+    let mut checksum = LOG_HASH_SEED;
+    let mut end: Option<(usize, String)> = None;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        if end.is_some() {
+            return Err(format!(
+                "replay log line {}: data after the end trailer (truncated \
+                 or concatenated log?)",
+                i + 1
+            ));
+        }
+        let v = Json::parse(line)
+            .map_err(|e| format!("replay log line {}: {e}", i + 1))?;
+        if v.get("kind").as_str() == Some("end") {
+            let count = v
+                .get("count")
+                .as_usize()
+                .ok_or_else(|| "replay log trailer: missing 'count'".to_string())?;
+            let sum = v
+                .get("checksum")
+                .as_str()
+                .ok_or_else(|| "replay log trailer: missing 'checksum'".to_string())?
+                .to_string();
+            end = Some((count, sum));
+            continue;
+        }
+        checksum = fold(checksum, line);
+        payload.push(v);
+    }
+    let Some((count, sum)) = end else {
+        return Err(
+            "replay log has no end trailer (truncated recording?)".to_string()
+        );
+    };
+    if count != payload.len() {
+        return Err(format!(
+            "replay log trailer count {count} != {} payload lines (truncated \
+             or tampered log)",
+            payload.len()
+        ));
+    }
+    if sum != hash_to_hex(checksum) {
+        return Err(format!(
+            "replay log checksum mismatch: trailer {sum}, recomputed {} \
+             (tampered log)",
+            hash_to_hex(checksum)
+        ));
+    }
+    Ok(payload)
+}
+
+/// Write a sealed log to disk.
+pub fn write_log(path: &Path, text: &str) -> Result<(), String> {
+    std::fs::write(path, text)
+        .map_err(|e| format!("cannot write replay log {}: {e}", path.display()))
+}
+
+/// Read and validate a sealed log from disk.
+pub fn read_log(path: &Path) -> Result<Vec<Json>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read replay log {}: {e}", path.display()))?;
+    parse_log(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> String {
+        let mut w = LogWriter::new();
+        w.record(Json::obj(vec![("kind", Json::str("config")), ("jobs", Json::num(2.0))]));
+        w.record(Json::obj(vec![("kind", Json::str("job")), ("id", Json::num(0.0))]));
+        w.record(Json::obj(vec![("kind", Json::str("job")), ("id", Json::num(1.0))]));
+        w.finish()
+    }
+
+    #[test]
+    fn round_trip_preserves_payload() {
+        let text = sample();
+        let lines = parse_log(&text).expect("valid log must parse");
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].get("kind").as_str(), Some("config"));
+        assert_eq!(lines[2].get("id").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn empty_payload_logs_are_valid() {
+        let text = LogWriter::new().finish();
+        assert_eq!(parse_log(&text).expect("empty log is sealed"), vec![]);
+    }
+
+    #[test]
+    fn truncation_is_an_explicit_error() {
+        let text = sample();
+        // Drop the trailer line entirely.
+        let cut = text.lines().take(3).collect::<Vec<_>>().join("\n");
+        let err = parse_log(&cut).expect_err("no trailer must fail");
+        assert!(err.contains("end trailer"), "got: {err}");
+        // Drop a payload line but keep the trailer: count mismatch.
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines.remove(1);
+        let err = parse_log(&lines.join("\n")).expect_err("count must fail");
+        assert!(err.contains("count"), "got: {err}");
+    }
+
+    #[test]
+    fn tampering_is_an_explicit_error() {
+        let tampered = sample().replace("\"id\":1", "\"id\":7");
+        let err = parse_log(&tampered).expect_err("edit must fail");
+        assert!(err.contains("checksum mismatch"), "got: {err}");
+        // A malformed payload line is a parse error, not a panic.
+        let garbled = sample().replace("{\"id\":0,", "{\"id\":0");
+        let err = parse_log(&garbled).expect_err("bad json must fail");
+        assert!(err.contains("parse error"), "got: {err}");
+    }
+
+    #[test]
+    fn data_after_trailer_is_rejected() {
+        let mut text = sample();
+        text.push_str("{\"kind\":\"job\",\"id\":9}\n");
+        let err = parse_log(&text).expect_err("trailing data must fail");
+        assert!(err.contains("after the end trailer"), "got: {err}");
+    }
+
+    #[test]
+    fn deep_nesting_in_a_log_line_is_rejected_not_overflowed() {
+        let bomb = format!("{}0{}", "[".repeat(100_000), "]".repeat(100_000));
+        let mut text = String::new();
+        text.push_str(&bomb);
+        text.push('\n');
+        let end = Json::obj(vec![
+            ("kind", Json::str("end")),
+            ("count", Json::num(1.0)),
+            ("checksum", Json::str(&hash_to_hex(fold(LOG_HASH_SEED, &bomb)))),
+        ]);
+        text.push_str(&end.emit());
+        let err = parse_log(&text).expect_err("depth bomb must fail");
+        assert!(err.contains("deep"), "got: {err}");
+    }
+}

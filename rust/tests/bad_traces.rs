@@ -1,8 +1,12 @@
-//! Crash-proof trace ingestion: a traces directory mixing valid,
-//! truncated, out-of-range-index, duplicate-index, and wrong-row-count
-//! files must yield per-file errors and completed good jobs — never a
-//! panic (the `TraceDir` iterator contract `serve --traces-dir` relies
-//! on). Plus a property test that `MaskTrace::from_json` is total over
+//! Crash-proof ingestion of hostile on-disk inputs: a traces directory
+//! mixing valid, truncated, out-of-range-index, duplicate-index, and
+//! wrong-row-count files must yield per-file errors and completed good
+//! jobs — never a panic (the `TraceDir` iterator contract
+//! `serve --traces-dir` relies on) — and a checkpoint directory
+//! (`serve --checkpoint-dir D --resume`) gets the same treatment:
+//! hostile files are per-file errors, the good checkpoints still
+//! resume, and a resumed session is bitwise equal to a cold run. Plus
+//! a property test that `MaskTrace::from_json` is total over
 //! structurally-valid JSON with arbitrary index values.
 
 use sata::config::SystemConfig;
@@ -214,6 +218,86 @@ fn lazy_ingestion_matches_tree_for_models_and_sessions() {
             .unwrap_or_else(|e| panic!("model {i}: lazy path rejected: {e}"));
         assert_eq!(lazy.fingerprint(), tree.fingerprint(), "model {i}");
     }
+}
+
+#[test]
+fn hostile_checkpoint_dir_resumes_good_sessions_and_reports_bad_files() {
+    use sata::config::WorkloadSpec;
+    use sata::coordinator::checkpoint::{capture_prefix, load_dir, sync_dir};
+    use sata::coordinator::JobResult;
+    use sata::trace::synth::gen_session;
+
+    let dir = std::env::temp_dir().join("sata_bad_checkpoints");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let spec = WorkloadSpec::ttst();
+    let sys = SystemConfig::for_workload(&spec);
+    let session = gen_session(&spec, 2, 0.6, 3, 0.8, 21);
+    // A genuinely partial prefix — prefill plus 1 of 3 decode steps —
+    // so the resume below replans and re-executes only the remainder.
+    let ck = capture_prefix(
+        &session,
+        &["sata".to_string()],
+        "cim",
+        &sys,
+        spec.sf,
+        true,
+        true,
+        1,
+        0,
+    )
+    .expect("capture a valid prefix");
+    let written = sync_dir(&dir, std::slice::from_ref(&ck), &[]).expect("sync");
+    assert_eq!(written, vec![0]);
+
+    // Hostile neighbours: truncated JSON, a depth bomb (caught by the
+    // same `util::json` recursion bound the trace loader uses), and
+    // valid JSON of the wrong kind.
+    std::fs::write(
+        dir.join("bad_truncated.json"),
+        r#"{"kind": "session-checkpoint", "id"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("bad_deep.json"), "[".repeat(1_000_000)).unwrap();
+    std::fs::write(dir.join("bad_schema.json"), r#"{"kind": "trace", "n": 4}"#)
+        .unwrap();
+
+    let (good, bad) = load_dir(&dir).expect("the dir itself is readable");
+    assert_eq!(good.len(), 1, "the good checkpoint survives its neighbours");
+    assert_eq!(good[0], ck, "the survivor round-trips bitwise");
+    assert_eq!(bad.len(), 3, "one loud error per hostile file: {bad:?}");
+    let err_for = |stem: &str| {
+        bad.iter()
+            .find(|e| e.contains(stem))
+            .unwrap_or_else(|| panic!("no error names {stem}: {bad:?}"))
+    };
+    assert!(err_for("bad_truncated").contains("parse"), "{}", err_for("bad_truncated"));
+    assert!(err_for("bad_deep").contains("deep"), "{}", err_for("bad_deep"));
+    assert!(err_for("bad_schema").contains("kind"), "{}", err_for("bad_schema"));
+
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Resume equivalence: attaching the surviving checkpoint must give
+    // the exact result a cold run computes (wall-clock masked).
+    let run = |ck: Option<sata::coordinator::checkpoint::SessionCheckpoint>| {
+        let coord = Coordinator::new(1, 4, SystemConfig::for_workload(&spec));
+        let mut job = Job::new(0, session.clone(), spec.sf);
+        if let Some(ck) = ck {
+            job = job.with_checkpoint(ck);
+        }
+        coord.submit(job).unwrap();
+        let (mut results, _) = coord.drain();
+        assert_eq!(results.len(), 1);
+        let mut r: JobResult = results.pop().unwrap();
+        assert!(r.is_ok(), "session must complete: {:?}", r.error);
+        r.wall_ns = 0.0;
+        r.to_json().emit()
+    };
+    assert_eq!(
+        run(None),
+        run(Some(good.into_iter().next().unwrap())),
+        "a resumed session diverged from the cold run"
+    );
 }
 
 #[test]

@@ -1,0 +1,231 @@
+//! Deterministic chaos harness for crash-tolerant serving: seeded
+//! worker kills ([`sata::util::fault::FaultPlan`]) across both exec
+//! queue shapes and both deployment shapes (one coordinator, two-node
+//! cluster), checking the three crash-tolerance invariants end to end:
+//!
+//! * **exactly-once resolution** — every submitted job yields exactly
+//!   one result, whether it survived a kill or exhausted its budget;
+//! * **unit conservation** — the work-stealing pool's pop counters
+//!   account for every initial unit *plus* every crash requeue;
+//! * **bitwise identity** — a disturbed run (kills within the retry
+//!   budget) produces results byte-identical to an undisturbed run of
+//!   the same seeded corpus, wall-clock aside: retries recompute, they
+//!   never corrupt.
+
+use std::sync::Arc;
+
+use sata::cluster::{Cluster, ClusterConfig, RoutePolicy};
+use sata::config::{SystemConfig, WorkloadSpec};
+use sata::coordinator::{
+    Coordinator, CoordinatorConfig, CoordinatorMetrics, ExecQueueKind, Job,
+    JobResult,
+};
+use sata::trace::synth::{gen_session, gen_traces};
+use sata::util::fault::FaultPlan;
+
+/// Mixed corpus: `n` single-unit model jobs plus one decode session
+/// (1 prefill unit + 3 step units), all seeded — two runs see the
+/// identical job stream.
+fn corpus(spec: &WorkloadSpec, n: usize) -> Vec<Job> {
+    let mut jobs: Vec<Job> = gen_traces(spec, n, 7)
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            Job::with_flows(i, t, spec.sf, vec!["sata".into(), "dense".into()])
+        })
+        .collect();
+    jobs.push(Job::with_flows(
+        n,
+        gen_session(spec, 2, 0.6, 3, 0.8, 40),
+        spec.sf,
+        vec!["sata".into()],
+    ));
+    jobs
+}
+
+/// Execute units in `corpus(_, 6)`: six 1-unit model jobs + (1 + 3)
+/// session units.
+const CORPUS_JOBS: usize = 7;
+const CORPUS_UNITS: usize = 10;
+
+/// Wall-clock-masked emitted JSON per result, sorted by id — the
+/// bitwise identity two runs are compared on.
+fn digests(results: &[JobResult]) -> Vec<(usize, String)> {
+    let mut out: Vec<(usize, String)> = results
+        .iter()
+        .map(|r| {
+            let mut masked = r.clone();
+            masked.wall_ns = 0.0;
+            (r.id, masked.to_json().emit())
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+/// Serve the corpus through one coordinator. One plan worker keeps the
+/// cache counters deterministic; two exec workers keep crashes and
+/// steals racing for real.
+fn serve(
+    queue: ExecQueueKind,
+    fault: Option<Arc<FaultPlan>>,
+) -> (Vec<JobResult>, CoordinatorMetrics) {
+    let spec = WorkloadSpec::ttst();
+    let coord = Coordinator::with_config(
+        SystemConfig::for_workload(&spec),
+        CoordinatorConfig {
+            plan_workers: 1,
+            exec_workers: 2,
+            exec_queue: queue,
+            fault,
+            ..Default::default()
+        },
+    );
+    for j in corpus(&spec, CORPUS_JOBS - 1) {
+        coord.submit(j).unwrap();
+    }
+    let (mut results, metrics) = coord.drain();
+    results.sort_by_key(|r| r.id);
+    (results, metrics)
+}
+
+#[test]
+fn seeded_kills_within_budget_leave_both_queues_bitwise_identical() {
+    for queue in [ExecQueueKind::WorkStealing, ExecQueueKind::SingleQueue] {
+        let (base_results, base_metrics) = serve(queue, None);
+        assert_eq!(base_metrics.worker_deaths, 0);
+
+        // Two kills ≤ the default per-job budget (2): even if both land
+        // on the same unit, no job can be abandoned.
+        let fault = Arc::new(FaultPlan::at_global_units(&[2, 5]));
+        let (results, metrics) = serve(queue, Some(Arc::clone(&fault)));
+
+        assert_eq!(fault.fired(), 2, "{queue:?}: both planned kills fire");
+        // Exactly-once resolution: every id, once, no extras.
+        let ids: Vec<usize> = results.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..CORPUS_JOBS).collect::<Vec<_>>(), "{queue:?}");
+        assert!(
+            results.iter().all(|r| r.is_ok()),
+            "{queue:?}: kills within budget must not fail jobs: {:?}",
+            results.iter().find(|r| !r.is_ok()).map(|r| &r.error)
+        );
+        assert_eq!(metrics.jobs_submitted, CORPUS_JOBS);
+        assert_eq!(metrics.jobs_done, CORPUS_JOBS);
+        assert_eq!(metrics.jobs_failed, 0);
+        assert_eq!(metrics.worker_deaths, 2, "{queue:?}");
+        assert_eq!(metrics.units_requeued, 2, "{queue:?}");
+        assert_eq!(metrics.units_abandoned, 0, "{queue:?}");
+
+        // Bitwise identity against the undisturbed same-seed run.
+        assert_eq!(
+            digests(&base_results),
+            digests(&results),
+            "{queue:?}: retried execution diverged from the clean run"
+        );
+
+        // Unit conservation (work-stealing pops are observable): every
+        // initial unit plus every crash requeue was popped exactly once.
+        if queue == ExecQueueKind::WorkStealing {
+            let pops = metrics.exec_local_pops
+                + metrics.exec_injector_pops
+                + metrics.exec_steal_successes;
+            assert_eq!(
+                pops,
+                CORPUS_UNITS + metrics.units_requeued,
+                "pool pops must conserve units incl. requeues"
+            );
+        }
+    }
+}
+
+#[test]
+fn a_two_node_fleet_survives_seeded_kills_bitwise() {
+    let spec = WorkloadSpec::ttst();
+    let run = |fault: Option<Arc<FaultPlan>>| {
+        let cluster = Cluster::new(
+            SystemConfig::for_workload(&spec),
+            ClusterConfig {
+                nodes: 2,
+                route: RoutePolicy::FingerprintAffinity,
+                admit_cap: None,
+                node: CoordinatorConfig {
+                    plan_workers: 1,
+                    exec_workers: 1,
+                    fault,
+                    ..Default::default()
+                },
+            },
+        );
+        for j in corpus(&spec, CORPUS_JOBS - 1) {
+            cluster.submit(j).unwrap();
+        }
+        let (node_results, metrics) = cluster.drain();
+        let mut results: Vec<JobResult> =
+            node_results.into_iter().map(|nr| nr.result).collect();
+        results.sort_by_key(|r| r.id);
+        (results, metrics)
+    };
+
+    let (base_results, _) = run(None);
+    // The fault plan Arc is shared by both nodes (ClusterConfig.node is
+    // cloned per node), so kill ordinals count fleetwide and each fires
+    // at most once across the fleet.
+    let fault = Arc::new(FaultPlan::at_global_units(&[1, 3]));
+    let (results, metrics) = run(Some(Arc::clone(&fault)));
+
+    assert_eq!(fault.fired(), 2);
+    let ids: Vec<usize> = results.iter().map(|r| r.id).collect();
+    assert_eq!(ids, (0..CORPUS_JOBS).collect::<Vec<_>>());
+    assert!(results.iter().all(|r| r.is_ok()));
+    // Fleet accounting stays exact under injected crashes.
+    assert_eq!(metrics.submitted, CORPUS_JOBS);
+    assert_eq!(metrics.completed + metrics.shed, metrics.submitted);
+    assert_eq!(metrics.shed, 0);
+    assert_eq!(metrics.worker_deaths, 2);
+    assert_eq!(metrics.units_requeued, 2);
+    assert_eq!(metrics.units_abandoned, 0);
+    // Affinity routing + per-node plan determinism: the disturbed fleet
+    // reproduces the clean fleet bitwise.
+    assert_eq!(digests(&base_results), digests(&results));
+}
+
+#[test]
+fn budget_exhaustion_fails_one_job_explicitly_and_serves_the_rest() {
+    let spec = WorkloadSpec::ttst();
+    // Three kills against a budget of 2 on a 1-unit job: submitted one
+    // at a time, the first job's unit absorbs ordinals 1–3 and is
+    // abandoned; later jobs run clean. The coordinator never hangs and
+    // never drops a result.
+    let fault = Arc::new(FaultPlan::at_global_units(&[1, 2, 3]));
+    let coord = Coordinator::with_config(
+        SystemConfig::for_workload(&spec),
+        CoordinatorConfig {
+            plan_workers: 1,
+            exec_workers: 1,
+            exec_queue: ExecQueueKind::WorkStealing,
+            fault: Some(Arc::clone(&fault)),
+            ..Default::default()
+        },
+    );
+    let traces = gen_traces(&spec, 3, 9);
+    let mut results = Vec::new();
+    let mut stream = coord.results();
+    for (id, t) in traces.into_iter().enumerate() {
+        coord.submit(Job::new(id, t, spec.sf)).unwrap();
+        results.push(stream.next().expect("every job resolves"));
+    }
+    drop(stream);
+    let (rest, metrics) = coord.drain();
+    assert!(rest.is_empty());
+    assert_eq!(results.len(), 3);
+    let err = results[0].error.as_deref().expect("exhaustion surfaces");
+    assert!(err.contains("retry budget"), "got: {err}");
+    assert!(results[1..].iter().all(|r| r.is_ok()));
+    assert_eq!(fault.fired(), 3);
+    assert_eq!(metrics.worker_deaths, 3);
+    assert_eq!(metrics.units_requeued, 2);
+    assert_eq!(metrics.units_abandoned, 1);
+    assert_eq!(metrics.jobs_submitted, 3);
+    assert_eq!(metrics.jobs_done + metrics.jobs_failed, 3);
+    assert_eq!(metrics.jobs_failed, 1);
+}

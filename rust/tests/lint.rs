@@ -102,6 +102,21 @@ fn fixture_trips_lock_discipline() {
         "coordinator/mod.rs",
         "`worker_deque` while `pool_signal`",
     );
+    // Crash-tolerance classes: the checkpoint writer outranks session
+    // parts (`Coordinator::checkpoint` nests writer → registry →
+    // parts), and the replay-log sink is innermost of all.
+    assert_finding(
+        &report,
+        Family::Lock,
+        "coordinator/mod.rs",
+        "`ckpt_writer` while `parts`",
+    );
+    assert_finding(
+        &report,
+        Family::Lock,
+        "coordinator/mod.rs",
+        "`fault_plan` while `replay_log`",
+    );
 }
 
 #[test]

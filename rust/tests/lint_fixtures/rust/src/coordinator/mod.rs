@@ -60,3 +60,24 @@ pub fn inverted_deque_order(p: &StealPool) {
     let _parked = lock_recover(&p.signal, "fixture pool signal");
     let _steal = lock_recover(&p.deques[0], "fixture deque under signal");
 }
+
+/// Crash-tolerance shape: checkpoint writer, live-session registry,
+/// per-session parts, fault plan, and replay-log sink classify like the
+/// real coordinator / `util::fault` / `util::replay` fields.
+pub struct CrashState {
+    pub ckpt: Mutex<()>,
+    pub live: Mutex<Vec<u64>>,
+    pub parts: Mutex<Vec<u64>>,
+    pub fault_plan: Mutex<u64>,
+    pub replay_log: Mutex<Vec<u64>>,
+}
+
+pub fn inverted_checkpoint_order(s: &CrashState) {
+    let _parts = lock_recover(&s.parts, "fixture session parts");
+    let _writer = lock_recover(&s.ckpt, "fixture checkpoint writer under parts");
+}
+
+pub fn inverted_replay_order(s: &CrashState) {
+    let _log = lock_recover(&s.replay_log, "fixture replay log");
+    let _plan = lock_recover(&s.fault_plan, "fixture fault plan under log");
+}

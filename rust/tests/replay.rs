@@ -1,0 +1,142 @@
+//! Record/replay determinism: a `serve --record` log
+//! ([`sata::coordinator::record`]) replays bitwise — result digests,
+//! deterministic counters, and fired-fault counts all match — with and
+//! without injected kills; and the sealed-log format
+//! ([`sata::util::replay`]) rejects truncated or tampered logs with an
+//! explicit error, never a panic and never a silently-wrong replay.
+
+use sata::coordinator::record::{replay_lines, run_recorded, RecordSpec};
+use sata::util::json::Json;
+use sata::util::replay::{parse_log, read_log, write_log};
+
+fn spec(kill_units: Vec<u64>) -> RecordSpec {
+    RecordSpec {
+        workload: "ttst".into(),
+        jobs: 4,
+        layers: 2,
+        steps: 2,
+        kappa: 0.7,
+        rho: 0.4,
+        seed: 11,
+        flows: vec!["sata".into(), "dense".into()],
+        substrate: "cim".into(),
+        workers: 2,
+        queue: "ws".into(),
+        queue_cap: 8,
+        retry_budget: 2,
+        kill_units,
+    }
+}
+
+#[test]
+fn a_clean_recording_replays_bitwise_through_a_file() {
+    let out = run_recorded(&spec(Vec::new())).expect("record");
+    assert_eq!(out.results.len(), 4);
+    assert!(out.results.iter().all(|r| r.is_ok()));
+    // Round-trip the sealed text through disk, exactly like
+    // `serve --record LOG` followed by `sata replay LOG`.
+    let path = std::env::temp_dir().join("sata_replay_clean.log");
+    write_log(&path, &out.log).expect("write");
+    let lines = read_log(&path).expect("sealed log validates");
+    std::fs::remove_file(&path).ok();
+    let report = replay_lines(&lines).expect("structurally valid log");
+    assert!(report.ok(), "clean replay diverged: {report:?}");
+    assert_eq!(report.jobs, 4);
+    assert_eq!(report.results_matched, 4);
+    assert_eq!(report.faults_fired, (0, 0));
+}
+
+#[test]
+fn a_disturbed_recording_replays_bitwise_including_its_faults() {
+    // Two kills within the per-job budget: the recorded run retried
+    // through them, and the replay re-injects the same ordinals.
+    let out = run_recorded(&spec(vec![1, 2])).expect("record with faults");
+    assert_eq!(out.faults_fired, 2);
+    assert_eq!(out.metrics.worker_deaths, 2);
+    assert_eq!(out.metrics.units_abandoned, 0);
+    assert!(out.results.iter().all(|r| r.is_ok()));
+    let lines = parse_log(&out.log).expect("sealed");
+    let report = replay_lines(&lines).expect("valid");
+    assert!(report.ok(), "disturbed replay diverged: {report:?}");
+    assert_eq!(report.faults_fired, (2, 2));
+}
+
+#[test]
+fn truncated_and_tampered_logs_error_explicitly() {
+    let out = run_recorded(&spec(Vec::new())).expect("record");
+    let lines_n = out.log.lines().count();
+
+    // Truncated: the end trailer is gone.
+    let truncated: String = out
+        .log
+        .lines()
+        .take(lines_n - 1)
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let err = parse_log(&truncated).expect_err("must reject truncation");
+    assert!(err.contains("no end trailer"), "got: {err}");
+
+    // Truncated mid-payload but trailer kept: the count catches it.
+    let gutted: String = out
+        .log
+        .lines()
+        .enumerate()
+        .filter(|(i, _)| *i != 1)
+        .map(|(_, l)| format!("{l}\n"))
+        .collect();
+    let err = parse_log(&gutted).expect_err("must reject a missing line");
+    assert!(err.contains("count"), "got: {err}");
+
+    // Tampered: same line count, one byte of payload flipped.
+    let tampered: String = out
+        .log
+        .lines()
+        .enumerate()
+        .map(|(i, l)| {
+            if i == 0 {
+                format!("{}\n", l.replace("\"ttst\"", "\"TTSL\""))
+            } else {
+                format!("{l}\n")
+            }
+        })
+        .collect();
+    assert_ne!(tampered, out.log, "the tamper must actually change a line");
+    let err = parse_log(&tampered).expect_err("must reject tampering");
+    assert!(err.contains("checksum mismatch"), "got: {err}");
+
+    // Garbage is a parse error with a line number, not a panic.
+    let err = parse_log("{\"kind\": \"config\"").expect_err("unparseable");
+    assert!(err.contains("line 1"), "got: {err}");
+}
+
+#[test]
+fn a_divergent_replay_is_reported_not_erred() {
+    // Corrupt one recorded result digest *after* checksum validation —
+    // the replay must run to completion and report the divergence
+    // (exit-1 territory for `sata replay`), not fail structurally.
+    let out = run_recorded(&spec(Vec::new())).expect("record");
+    let mut lines = parse_log(&out.log).expect("sealed");
+    let mut corrupted = false;
+    for line in &mut lines {
+        if line.get("kind").as_str() == Some("result") && !corrupted {
+            if let Json::Obj(m) = line {
+                m.insert("digest".into(), Json::str("0000000000000000"));
+                corrupted = true;
+            }
+        }
+    }
+    assert!(corrupted, "log must contain result lines");
+    let report = replay_lines(&lines).expect("still structurally valid");
+    assert!(!report.ok(), "corrupted digest must diverge");
+    assert_eq!(report.mismatched_ids.len(), 1, "{report:?}");
+    assert_eq!(report.results_matched, 3, "{report:?}");
+}
+
+#[test]
+fn recording_rejects_shapes_it_cannot_promise_to_replay() {
+    // More kills than the retry budget: *which* job exhausts its budget
+    // would race, so the recorder refuses up front.
+    let err = run_recorded(&spec(vec![1, 2, 3]))
+        .expect_err("over-budget kills are unreplayable");
+    assert!(err.contains("retry budget"), "got: {err}");
+}
